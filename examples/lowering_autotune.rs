@@ -1,0 +1,60 @@
+//! Lowering auto-tuner demo (paper Appendix A / Fig 8).
+//!
+//! ```sh
+//! cargo run --release --example lowering_autotune
+//! ```
+//!
+//! Measures all three lowering strategies *natively* on a family of
+//! conv shapes with varying input/output channel ratio d/o, prints the
+//! measured winner next to the cost-model optimizer's pick, and shows
+//! the crossover the paper reports ("when the ratio increases, type 3
+//! outperforms type 1, and vice versa").
+
+use cct::bench_util::{bench, fmt_secs, Table};
+use cct::lowering::{
+    choose_lowering, conv_forward, ConvShape, LoweringType, MachineProfile,
+};
+use cct::rng::Pcg64;
+use cct::tensor::Tensor;
+
+fn measure(shape: &ConvShape, ty: LoweringType) -> f64 {
+    let mut rng = Pcg64::new(9);
+    let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(shape.weight_shape(), 0.0, 0.1, &mut rng);
+    bench(1, 3, || {
+        let _ = conv_forward(ty, shape, &data, &w, 1);
+    })
+    .min
+}
+
+fn main() {
+    let machine = MachineProfile::one_core();
+    let mut t = Table::new(
+        "Lowering autotune: measured vs cost model (n=13, k=3, b=8, d·o = 16384)",
+        &["d", "o", "d/o", "t1", "t2", "t3", "measured best", "optimizer pick"],
+    );
+    // Sweep the channel ratio at constant d·o, the paper's Fig 8(c) axis.
+    for (d, o) in [(32usize, 512usize), (64, 256), (128, 128), (256, 64), (512, 32), (1024, 16)] {
+        let shape = ConvShape::simple(13, 3, d, o, 8);
+        let times: Vec<f64> = LoweringType::ALL.iter().map(|&ty| measure(&shape, ty)).collect();
+        let best = LoweringType::ALL[times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        let pick = choose_lowering(&shape, &machine);
+        t.row(&[
+            d.to_string(),
+            o.to_string(),
+            format!("{:.2}", d as f64 / o as f64),
+            fmt_secs(times[0]),
+            fmt_secs(times[1]),
+            fmt_secs(times[2]),
+            best.to_string(),
+            pick.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\npaper Fig 8(c): type 3 wins as d/o grows; type 1 wins as it shrinks.");
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a small Caffe-style net from a config string, trains it a few
+//! steps with the data-parallel coordinator, and asks the paper's
+//! lowering optimizer what it would do on AlexNet's conv layers.
+
+use cct::coordinator::CnnCoordinator;
+use cct::data::BlobCorpus;
+use cct::lowering::{choose_lowering, ConvShape, MachineProfile};
+use cct::net::parse_net;
+use cct::solver::SolverConfig;
+
+const NET: &str = r#"
+name: quickstart
+input: 3 16 16
+conv { name: conv1 out: 16 kernel: 3 pad: 1 std: 0.1 }
+relu { name: relu1 }
+pool { name: pool1 mode: max kernel: 2 stride: 2 }
+fc   { name: fc1 out: 10 std: 0.1 }
+softmax { name: loss }
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Parse a Caffe-style net description and build a coordinator
+    //    with 2 data-parallel workers (paper §2.2: batch partitioning).
+    let cfg = parse_net(NET)?;
+    let solver = SolverConfig { base_lr: 0.05, ..Default::default() };
+    let mut coord = CnnCoordinator::new(&cfg, /*workers=*/ 2, /*threads=*/ 2, solver, 42)?;
+
+    // 2. A learnable synthetic corpus (10 classes of structured blobs).
+    let mut corpus = BlobCorpus::generate(3, 16, 10, 256, 0.2, 7);
+
+    // 3. Train.
+    for step in 0..30 {
+        let (x, labels) = corpus.next_batch(32);
+        let loss = coord.step(&x, &labels);
+        if step % 10 == 0 {
+            println!("step {step:>3}  loss {loss:.4}");
+        }
+    }
+
+    // 4. The paper's automatic lowering optimizer (Appendix A): which
+    //    blocking would it pick per conv shape?
+    let machine = MachineProfile::one_core();
+    for (name, shape) in [
+        ("conv2-like (d/o = 0.38)", ConvShape::simple(27, 5, 96, 256, 16)),
+        ("few-output-channels (d/o = 32)", ConvShape::simple(13, 3, 512, 16, 16)),
+    ] {
+        println!("{name}: optimizer picks {}", choose_lowering(&shape, &machine));
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""AOT exporter: lower the L2 JAX functions (with their L1 Pallas
+kernels inlined) to HLO **text** artifacts the Rust runtime compiles
+and executes through PJRT.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+
+    train_step.hlo.txt   (params…, x, y) → (params'…, loss)
+    infer.hlo.txt        (params…, x)    → (logits,)
+    conv_fwd.hlo.txt     (x, w)          → (y,)   — conv2-scale Pallas conv
+    manifest.txt         one line per artifact: name, arg shapes, result arity
+
+Usage: python -m compile.aot [--out-dir DIR]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shapes_str(specs):
+    return ";".join(
+        "x".join(map(str, s.shape)) + ":" + ("i32" if s.dtype == jnp.int32 else "f32")
+        for s in specs
+    )
+
+
+# The standalone conv artifact's geometry: a conv2-scale problem
+# (Fig 7 row scaled to this testbed: d=16, o=32, n=16, k=5).
+CONV_ART = {"b": 8, "d": 16, "n": 16, "k": 5, "o": 32}
+
+
+def artifacts():
+    """(name, function, arg specs, result arity) for every artifact."""
+    ps = model.param_shapes()
+    params = [spec(ps[k]) for k in model.param_order()]
+    x = spec((model.BATCH, model.IN_CHANNELS, model.SIDE, model.SIDE))
+    y = spec((model.BATCH,), jnp.int32)
+    ca = CONV_ART
+    conv_x = spec((ca["b"], ca["d"], ca["n"], ca["n"]))
+    conv_w = spec((ca["o"], ca["d"], ca["k"], ca["k"]))
+    return [
+        ("train_step", model.train_step, [*params, x, y], len(params) + 1),
+        ("infer", model.infer, [*params, x], 1),
+        ("conv_fwd", model.conv_layer, [conv_x, conv_w], 1),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    ap.add_argument("--out-dir", default=default_out)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs, n_results in artifacts():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} args={shapes_str(specs)} results={n_results}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

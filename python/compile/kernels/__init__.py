@@ -1,0 +1,9 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .lowering import (  # noqa: F401
+    conv_type1,
+    conv_type1_mxu_utilization,
+    conv_type1_vmem_bytes,
+    conv_type3,
+    matmul_tiled,
+)

@@ -1,0 +1,242 @@
+"""L1 Pallas kernels: lowering-based convolution + tiled GEMM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU
+story is "make the lowered matrix fat enough to fill the BLAS blocking
+hierarchy"; on TPU the same insight becomes "make the lowered panel
+fill VMEM and feed the MXU systolic array". Concretely:
+
+* `conv_type1` lowers one image per grid step into a `(m², k²d)` panel
+  held in VMEM (the `BlockSpec` pins the image block), then issues a
+  single `(m², k²d) × (k²d, o)` contraction — an MXU-shaped matmul with
+  `preferred_element_type=f32`. Batching across the grid reproduces the
+  paper's batched lowering: the weight panel stays resident while the
+  data panels stream through, exactly the HBM↔VMEM schedule the paper
+  implemented with threadblock-level BLAS batching.
+* `conv_type3` is the expensive-lifting blocking: a channel-contraction
+  GEMM on the *unexpanded* input followed by the k²-tap shift-add lift.
+* `matmul_tiled` is the standalone MXU-tiled GEMM used by the FC layer
+  and the GEMM micro-benchmarks (128×128 output tiles).
+
+All kernels run `interpret=True` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU performance is estimated analytically in
+DESIGN.md §Perf from VMEM footprints and MXU tile occupancy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flip to False only when compiling for a real TPU target.
+INTERPRET = True
+
+
+# --------------------------------------------------------------------------
+# Type-1 (im2col) convolution
+# --------------------------------------------------------------------------
+
+def _conv_type1_kernel(x_ref, w_ref, o_ref, *, k, pad, stride, m):
+    """One grid step = one image: lower to (m², k²d) in VMEM, contract
+    against the resident (k²d, o) weight panel, store (o, m, m)."""
+    x = x_ref[0]                      # (d, n, n) block in VMEM
+    d = x.shape[0]
+    n = x.shape[1]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    # k² static shifted views, each (d, m, m): the im2col expansion.
+    patches = []
+    for rk in range(k):
+        for ck in range(k):
+            patches.append(
+                jax.lax.slice(
+                    x,
+                    (0, rk, ck),
+                    (d, rk + (m - 1) * stride + 1, ck + (m - 1) * stride + 1),
+                    (1, stride, stride),
+                )
+            )
+    # (k², d, m, m) → (m², d·k²) with column order (d, rk, ck)
+    stacked = jnp.stack(patches, axis=0).reshape(k, k, d, m, m)
+    lowered = jnp.transpose(stacked, (3, 4, 2, 0, 1)).reshape(m * m, d * k * k)
+    w2d = w_ref[...].reshape(-1, d * k * k)  # (o, k²d)
+    # MXU contraction; f32 accumulate.
+    r_hat = jax.lax.dot_general(
+        lowered,
+        w2d,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                         # (m², o)
+    o_ref[0] = jnp.transpose(r_hat, (1, 0)).reshape(w2d.shape[0], m, m).astype(o_ref.dtype)
+
+
+def _conv_type1_pallas(x, w, pad, stride):
+    b, d, n, _ = x.shape
+    o, dw, k, _ = w.shape
+    assert d == dw, f"channel mismatch {d} vs {dw}"
+    m = (n + 2 * pad - k) // stride + 1
+    kernel = functools.partial(_conv_type1_kernel, k=k, pad=pad, stride=stride, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d, n, n), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((o, d, k, k), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o, m, m), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o, m, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _xla_conv(x, w, pad, stride):
+    """XLA's native convolution — used only for the backward rule."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _conv_type1_op(pad, stride):
+    """custom_vjp wrapper per (pad, stride): the Pallas kernel computes
+    the forward; the backward delegates to XLA's conv adjoint (the
+    Type-1 col2im adjoint — the same math the Rust engine's
+    `conv_type1_backward` hand-implements)."""
+
+    @jax.custom_vjp
+    def op(x, w):
+        return _conv_type1_pallas(x, w, pad, stride)
+
+    def fwd(x, w):
+        return _conv_type1_pallas(x, w, pad, stride), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        _, vjp = jax.vjp(lambda xx, ww: _xla_conv(xx, ww, pad, stride), x, w)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def conv_type1(x, w, *, pad=0, stride=1):
+    """Batched Type-1 lowered convolution.
+
+    x: (b, d, n, n); w: (o, d, k, k) → (b, o, m, m). Grid over images;
+    the weight block is broadcast (index_map pins it), so it stays
+    VMEM-resident across the batch sweep. Differentiable (custom VJP).
+    """
+    return _conv_type1_op(pad, stride)(x, w)
+
+
+# --------------------------------------------------------------------------
+# Type-3 (expensive lifting) convolution — paper's formal setting only
+# --------------------------------------------------------------------------
+
+def _conv_type3_kernel(x_ref, w_ref, o_ref, *, k, m):
+    """One image: channel-contraction GEMM on the raw input (no k²
+    blow-up in VMEM — the Type-3 selling point), then k²-tap lift."""
+    x = x_ref[0]                          # (d, n, n)
+    d, n, _ = x.shape
+    o = o_ref.shape[1]
+    # D̂ (n², d): pure layout permute — zero-copy in spirit.
+    d_hat = jnp.transpose(x.reshape(d, n * n), (1, 0))
+    # K̂ (d, o·k²)
+    k_hat = jnp.transpose(w_ref[...].reshape(o, d, k * k), (1, 0, 2)).reshape(d, o * k * k)
+    r_hat = jax.lax.dot_general(
+        d_hat, k_hat, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).reshape(n, n, o, k, k)
+    # Lift: R[j, r, c] = Σ_{i,jj} R̂[r+i, c+jj, j, i, jj]
+    acc = jnp.zeros((o, m, m), dtype=jnp.float32)
+    for i in range(k):
+        for jj in range(k):
+            acc = acc + jnp.transpose(
+                jax.lax.slice(r_hat, (i, jj, 0, i, jj), (i + m, jj + m, o, i + 1, jj + 1))[
+                    :, :, :, 0, 0
+                ],
+                (2, 0, 1),
+            )
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv_type3(x, w):
+    """Batched Type-3 lowered convolution (pad=0, stride=1)."""
+    b, d, n, _ = x.shape
+    o, dw, k, _ = w.shape
+    assert d == dw
+    m = n - k + 1
+    kernel = functools.partial(_conv_type3_kernel, k=k, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d, n, n), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((o, d, k, k), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o, m, m), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o, m, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+# --------------------------------------------------------------------------
+# MXU-tiled GEMM
+# --------------------------------------------------------------------------
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul_tiled(a, b, *, block_m=128, block_n=128):
+    """C = A·B with (block_m × block_n) MXU output tiles; full-K panels
+    stream through VMEM. Shapes need not be tile multiples (pallas pads
+    edge blocks)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# VMEM budgeting (the L1 "profile" under interpret mode — see §Perf)
+# --------------------------------------------------------------------------
+
+def conv_type1_vmem_bytes(b, d, n, k, o, pad=0, stride=1, dtype_bytes=4):
+    """Estimated VMEM working set of one `conv_type1` grid step: input
+    block + lowered panel + weight panel + output block. Used by the
+    DESIGN.md §Perf roofline table (TPU VMEM budget ≈ 16 MiB/core)."""
+    m = (n + 2 * pad - k) // stride + 1
+    x_block = d * (n + 2 * pad) ** 2
+    lowered = m * m * k * k * d
+    weights = o * d * k * k
+    out = o * m * m
+    return dtype_bytes * (x_block + lowered + weights + out)
+
+
+def conv_type1_mxu_utilization(d, k, o, m):
+    """Fraction of 128×128 MXU tiles doing useful work for the per-image
+    contraction (m², k²d) × (k²d, o) — the structural efficiency number
+    reported in EXPERIMENTS.md §Perf."""
+    def tile_eff(dim):
+        tiles = -(-dim // 128)
+        return dim / (tiles * 128)
+
+    return tile_eff(m * m) * tile_eff(k * k * d) * tile_eff(o)

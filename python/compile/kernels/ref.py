@@ -1,0 +1,74 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in `lowering.py` is pytest-checked against these
+references; the references themselves are validated against hand
+computations in `python/tests/test_kernel.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_ref(x, w, *, pad=0, stride=1):
+    """Direct convolution oracle: x (b,d,n,n), w (o,d,k,k) -> (b,o,m,m).
+
+    Implemented with lax.conv_general_dilated — XLA's own convolution,
+    the gold standard the paper's systems (Caffe/CcT) are validated
+    against ("both systems produce the same output within 0.1%").
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col_ref(x, *, k, pad=0, stride=1):
+    """Type-1 lowering oracle: x (b,d,n,n) -> D-hat (b*m*m, k*k*d).
+
+    Row (bi*m*m + r*m + c), column ((ch*k + rk)*k + ck) — the layout the
+    Rust engine and the Pallas kernel share.
+    """
+    b, d, n, _ = x.shape
+    m = (n + 2 * pad - k) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    # patches[rk][ck] has shape (b, d, m, m)
+    rows = []
+    for rk in range(k):
+        for ck in range(k):
+            rows.append(xp[:, :, rk : rk + stride * m : stride, ck : ck + stride * m : stride])
+    # (k*k, b, d, m, m) -> (b, m, m, d, k*k) -> (b*m*m, d*k*k)
+    stacked = jnp.stack(rows, axis=0).reshape(k, k, b, d, m, m)
+    out = jnp.transpose(stacked, (2, 4, 5, 3, 0, 1))  # b, m, m, d, k, k
+    return out.reshape(b * m * m, d * k * k)
+
+
+def conv_via_im2col_ref(x, w, *, pad=0, stride=1):
+    """Type-1 lowered convolution in pure jnp (lower -> GEMM -> lift)."""
+    b, d, n, _ = x.shape
+    o, _, k, _ = w.shape
+    m = (n + 2 * pad - k) // stride + 1
+    lowered = im2col_ref(x, k=k, pad=pad, stride=stride)       # (b*m*m, k*k*d)
+    w2d = w.reshape(o, d * k * k)                               # (o, k*k*d)
+    r_hat = lowered @ w2d.T                                     # (b*m*m, o)
+    return jnp.transpose(r_hat.reshape(b, m * m, o), (0, 2, 1)).reshape(b, o, m, m)
+
+
+def matmul_ref(a, b):
+    """GEMM oracle."""
+    return a @ b
+
+
+def maxpool_ref(x, *, k, stride):
+    """Max-pool oracle via reduce_window (Caffe ceil-mode not needed for
+    the exported models, which use exact-fit windows)."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )

@@ -1,0 +1,92 @@
+"""L2: the JAX model — a small Caffe-style CNN whose conv layers call
+the L1 Pallas kernels, plus the SGD train step that gets AOT-lowered to
+an HLO artifact the Rust coordinator executes via PJRT.
+
+The exported net mirrors Caffe's `cifar10_quick` head (conv → pool →
+relu → fc) at a size the interpret-mode Pallas path executes quickly on
+CPU: 3×16×16 inputs, one lowered conv, 2×2 max-pool, 10-way classifier.
+The Rust side treats the artifact as a black-box `(params, batch) →
+(params', loss)` function — Python never runs at training time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_type1
+
+# ----------------------------------------------------------------------
+# Model geometry (kept in one place: aot.py embeds it in the manifest,
+# rust/src/runtime reads it back).
+# ----------------------------------------------------------------------
+BATCH = 32
+IN_CHANNELS = 3
+SIDE = 16
+CONV_OUT = 8
+KERNEL = 3
+PAD = 1
+CLASSES = 10
+POOLED = SIDE // 2  # after 2×2/2 max-pool
+FLAT = CONV_OUT * POOLED * POOLED
+LR = 0.05
+
+
+def init_params(seed=0):
+    """Gaussian init matching the Rust engine's conventions."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "conv_w": 0.1 * jax.random.normal(k0, (CONV_OUT, IN_CHANNELS, KERNEL, KERNEL), jnp.float32),
+        "conv_b": jnp.zeros((CONV_OUT,), jnp.float32),
+        "fc_w": 0.05 * jax.random.normal(k1, (CLASSES, FLAT), jnp.float32),
+        "fc_b": jnp.zeros((CLASSES,), jnp.float32),
+    }
+
+
+def param_order():
+    """Stable flattening order for the HLO artifact signature."""
+    return ["conv_w", "conv_b", "fc_w", "fc_b"]
+
+
+def param_shapes():
+    p = init_params()
+    return {k: tuple(p[k].shape) for k in param_order()}
+
+
+def forward(params, x):
+    """Logits for x (b, 3, 16, 16) — conv (Pallas) → bias → relu →
+    max-pool → fc."""
+    h = conv_type1(x, params["conv_w"], pad=PAD, stride=1)
+    h = h + params["conv_b"][None, :, None, None]
+    h = jnp.maximum(h, 0.0)
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc_w"].T + params["fc_b"]
+
+
+def loss_fn(params, x, y):
+    """Mean softmax cross-entropy; y is int32 labels (b,)."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(conv_w, conv_b, fc_w, fc_b, x, y):
+    """One SGD step with a *flat* signature (stable HLO interface):
+    (params…, x, y) → (params'…, loss)."""
+    params = {"conv_w": conv_w, "conv_b": conv_b, "fc_w": fc_w, "fc_b": fc_b}
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = [params[k] - LR * grads[k] for k in param_order()]
+    return (*new, loss)
+
+
+def infer(conv_w, conv_b, fc_w, fc_b, x):
+    """Forward-only artifact: (params…, x) → logits."""
+    params = {"conv_w": conv_w, "conv_b": conv_b, "fc_w": fc_w, "fc_b": fc_b}
+    return (forward(params, x),)
+
+
+def conv_layer(x, w):
+    """Standalone conv-layer artifact (conv2-scale, Pallas Type 1) used
+    by the runtime round-trip tests and the hybrid executor demo."""
+    return (conv_type1(x, w, pad=0, stride=1),)

@@ -1,0 +1,88 @@
+"""L2 correctness: model shapes, loss semantics, train-step descent,
+and the AOT export path (everything the Rust runtime will consume)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=0)
+
+
+def batch(seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (model.BATCH, model.IN_CHANNELS, model.SIDE, model.SIDE), jnp.float32)
+    y = jax.random.randint(ky, (model.BATCH,), 0, model.CLASSES)
+    return x, y
+
+
+class TestModel:
+    def test_forward_shape(self, params):
+        x, _ = batch()
+        logits = model.forward(params, x)
+        assert logits.shape == (model.BATCH, model.CLASSES)
+
+    def test_loss_is_log_classes_at_init_scale(self, params):
+        # Near-random logits ⇒ loss ≈ ln(10).
+        x, y = batch()
+        loss = model.loss_fn(params, x, y)
+        assert 0.5 * np.log(model.CLASSES) < float(loss) < 2.5 * np.log(model.CLASSES)
+
+    def test_train_step_signature_and_descent(self, params):
+        x, y = batch(1)
+        flat = [params[k] for k in model.param_order()]
+        out = model.train_step(*flat, x, y)
+        assert len(out) == len(flat) + 1
+        loss0 = float(out[-1])
+        # iterate a few steps on the same batch: loss must fall
+        cur = list(out[:-1])
+        for _ in range(10):
+            cur_out = model.train_step(*cur, x, y)
+            cur = list(cur_out[:-1])
+        lossN = float(cur_out[-1])
+        assert lossN < loss0, f"{loss0} -> {lossN}"
+
+    def test_infer_matches_forward(self, params):
+        x, _ = batch(2)
+        flat = [params[k] for k in model.param_order()]
+        (logits,) = model.infer(*flat, x)
+        np.testing.assert_allclose(logits, model.forward(params, x), rtol=1e-5, atol=1e-5)
+
+    def test_param_shapes_consistent(self):
+        shapes = model.param_shapes()
+        assert shapes["conv_w"] == (model.CONV_OUT, model.IN_CHANNELS, model.KERNEL, model.KERNEL)
+        assert shapes["fc_w"] == (model.CLASSES, model.FLAT)
+
+
+class TestAotExport:
+    def test_all_artifacts_lower_to_hlo_text(self, tmp_path):
+        for name, fn, specs, _ in aot.artifacts():
+            lowered = jax.jit(fn).lower(*specs)
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), f"{name}: not HLO text"
+            assert "ENTRY" in text
+            (tmp_path / f"{name}.hlo.txt").write_text(text)
+
+    def test_manifest_format(self):
+        arts = aot.artifacts()
+        names = [a[0] for a in arts]
+        assert names == ["train_step", "infer", "conv_fwd"]
+        # train_step: 4 params + x + y args, 5 results
+        assert len(arts[0][2]) == 6
+        assert arts[0][3] == 5
+
+    def test_conv_artifact_matches_oracle(self):
+        # The exact function exported as conv_fwd.hlo.txt must equal the
+        # XLA conv oracle on random inputs.
+        from compile.kernels import ref
+
+        ca = aot.CONV_ART
+        x = jax.random.normal(jax.random.PRNGKey(5), (ca["b"], ca["d"], ca["n"], ca["n"]))
+        w = jax.random.normal(jax.random.PRNGKey(6), (ca["o"], ca["d"], ca["k"], ca["k"]))
+        (got,) = model.conv_layer(x, w)
+        np.testing.assert_allclose(got, ref.conv_ref(x, w), rtol=1e-4, atol=1e-4)

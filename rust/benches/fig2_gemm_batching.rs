@@ -1,0 +1,100 @@
+//! E-fig2: Fig 2(a,b,c) — the impact of batch size and thread count on
+//! the GEMM kernel.
+//!
+//! * (a) speedup vs #threads at several batch sizes — device model
+//!   (this testbed has 1 core; the model's efficiency curve is
+//!   calibrated from the measured single-core numbers below).
+//! * (b) speedup vs batch size at 8 threads — model, plus the
+//!   *measured* single-core GFLOP/s of thin-vs-fat lowered matrices
+//!   (the mechanism).
+//! * (c) memory footprint vs batch size — exact (workspace bytes).
+//!
+//! Run: `cargo bench --bench fig2_gemm_batching`
+
+use cct::bench_util::{bench, gflops, Table};
+use cct::device::profiles;
+use cct::gemm::{gemm_flops, sgemm, GemmDims, Trans};
+use cct::lowering::{type1, ConvShape};
+use cct::rng::Pcg64;
+
+/// conv2's GEMM geometry (Fig 7): k²d = 2400, o = 256, m² = 529/image.
+const COLS: usize = 2400;
+const OUT: usize = 256;
+const ROWS_PER_IMAGE: usize = 529;
+
+fn measured_gflops(rows: usize, reps: usize) -> f64 {
+    let mut rng = Pcg64::new(41);
+    let mut a = vec![0f32; rows * COLS];
+    let mut b = vec![0f32; COLS * OUT];
+    rng.fill_uniform(&mut a, -1.0, 1.0);
+    rng.fill_uniform(&mut b, -1.0, 1.0);
+    let mut c = vec![0f32; rows * OUT];
+    let dims = GemmDims { m: rows, n: OUT, k: COLS };
+    let st = bench(1, reps, || {
+        sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c, 1);
+    });
+    gflops(gemm_flops(dims), st.min)
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_out").ok();
+    let dev = profiles::c4_4xlarge();
+    let flops_per_image = gemm_flops(GemmDims { m: ROWS_PER_IMAGE, n: OUT, k: COLS });
+
+    // ---- (a) speedup vs threads, per batch size (model) ------------
+    let mut ta = Table::new(
+        "Fig 2(a/b) model: GEMM speedup vs threads (c4.4xlarge model, conv2 GEMM)",
+        &["batch", "t=1", "t=2", "t=4", "t=8"],
+    );
+    for b in [1usize, 4, 16, 64, 256] {
+        let rows = b * ROWS_PER_IMAGE;
+        let flops = flops_per_image * b as u64;
+        let t1 = dev.gemm_seconds(flops, rows, 1);
+        let row: Vec<String> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&t| format!("{:.2}×", t1 / dev.gemm_seconds(flops, rows, t)))
+            .collect();
+        ta.row(&[b.to_string(), row[0].clone(), row[1].clone(), row[2].clone(), row[3].clone()]);
+    }
+    ta.print();
+    ta.write_csv("bench_out/fig2a_model.csv").ok();
+    println!("paper Fig 2(a): near-linear to 4 cores at b=256; Fig 2(b): smaller b ⇒ lower speedup.");
+
+    // ---- (b) measured single-core: thin vs fat lowered matrices ----
+    let mut tb = Table::new(
+        "Fig 2(b) measured (this machine, 1 core): GEMM throughput vs lowered batch",
+        &["batch (rows)", "GFLOP/s", "vs b=1"],
+    );
+    let base = measured_gflops(ROWS_PER_IMAGE, 3);
+    let mut rows_csv = Vec::new();
+    for b in [1usize, 2, 4, 8, 16] {
+        let g = if b == 1 { base } else { measured_gflops(b * ROWS_PER_IMAGE, 2) };
+        tb.row(&[
+            format!("{b} ({})", b * ROWS_PER_IMAGE),
+            format!("{g:.2}"),
+            format!("{:.2}×", g / base),
+        ]);
+        rows_csv.push((b, g));
+    }
+    tb.print();
+    tb.write_csv("bench_out/fig2b_measured.csv").ok();
+
+    // ---- (c) memory footprint vs batch (exact) ---------------------
+    let mut tc = Table::new(
+        "Fig 2(c): lowered-matrix memory footprint vs batch (conv2, exact)",
+        &["batch", "lowered MiB", "vs b=1"],
+    );
+    let bytes1 = type1::Workspace::new(&ConvShape { n: 27, k: 5, d: 96, o: 256, b: 1, pad: 2, stride: 1 }).bytes();
+    for b in [1usize, 16, 64, 128, 256] {
+        let shape = ConvShape { n: 27, k: 5, d: 96, o: 256, b, pad: 2, stride: 1 };
+        let bytes = type1::Workspace::new(&shape).bytes();
+        tc.row(&[
+            b.to_string(),
+            format!("{:.1}", bytes as f64 / (1 << 20) as f64),
+            format!("{:.0}×", bytes as f64 / bytes1 as f64),
+        ]);
+    }
+    tc.print();
+    tc.write_csv("bench_out/fig2c_footprint.csv").ok();
+    println!("paper Fig 2(c): footprint directly proportional to b.");
+}

@@ -1,0 +1,131 @@
+//! E-fig3: Fig 3 — the impact of batch partitioning on end-to-end
+//! CaffeNet execution (256 images/iteration, c4.4xlarge, 16 threads).
+//!
+//! Two components:
+//! * **model** — end-to-end conv-stack time vs partition count on the
+//!   c4.8xlarge device model: "None" is the Caffe strategy (per-image
+//!   lowering); p = 1..16 partitions of 256 images with 16/p GEMM
+//!   threads each, partitions in parallel (the paper's setup).
+//! * **measured** — real partitioned execution of a conv2-scale layer
+//!   on this machine (1 core: wall times show overhead structure, not
+//!   scaling; EXPERIMENTS.md discusses).
+//!
+//! Run: `cargo bench --bench fig3_partitions`
+
+use cct::bench_util::{fmt_secs, Table};
+use cct::coordinator::{conv_partitioned, BatchStrategy};
+use cct::device::profiles;
+use cct::lowering::{ConvShape, CostModel, LoweringType};
+use cct::net::presets;
+use cct::rng::Pcg64;
+use cct::tensor::Tensor;
+
+/// Simulated conv-stack time for `p` partitions of 256 on a 16-core
+/// machine: partitions run concurrently on 16/p cores each, so the
+/// makespan is one partition's time with threads=16/p.
+fn model_time(p: usize, per_image: bool) -> f64 {
+    let dev = profiles::c4_8xlarge();
+    let mut total = 0.0;
+    for (_, n, k, d, o) in presets::fig7_conv_geometry() {
+        let cols = (k * k * d) as u64;
+        if per_image {
+            // Caffe: 256 sequential b=1 lowerings, GEMM on all 16 threads.
+            let shape = ConvShape { n, k, d, o, b: 1, pad: 0, stride: 1 };
+            let c = CostModel::new(shape).cost(LoweringType::Type1);
+            let rows = (c.lowered_data_elems / cols) as usize;
+            let lower = (c.lower_writes * 4) as f64 / (dev.mem_gbps * 1e9);
+            total += 256.0 * (lower + dev.gemm_seconds(c.gemm_flops, rows, 16));
+        } else {
+            let bp = 256 / p;
+            let shape = ConvShape { n, k, d, o, b: bp, pad: 0, stride: 1 };
+            let c = CostModel::new(shape).cost(LoweringType::Type1);
+            let rows = (c.lowered_data_elems / cols) as usize;
+            // p partitions in parallel; each sees 16/p threads and its
+            // own lowering (lowering parallelizes with partitions —
+            // the paper's point about coarse-grained parallel lowering).
+            let threads = (16 / p).max(1);
+            // all p partitions lower concurrently, sharing bandwidth
+            let lower = (c.lower_writes * 4) as f64 / (dev.mem_gbps * 1e9 / p as f64);
+            // makespan = one partition's GEMM on its 16/p cores
+            // (gemm_seconds charges the cores/useful factor internally)
+            total += lower + dev.gemm_seconds(c.gemm_flops, rows, threads);
+        }
+    }
+    total
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_out").ok();
+
+    // ---- model sweep -----------------------------------------------
+    // Non-conv time (fc/lrn/pool/relu/data) is strategy-independent in
+    // both systems (Caffe already batches those layers). The paper pins
+    // conv at 70–90% of Caffe's execution; we take the midpoint (80%)
+    // to size the non-conv remainder and also report the bracket.
+    let caffe_conv = model_time(1, true);
+    let rest = caffe_conv * (1.0 / 0.8 - 1.0);
+    let mut t = Table::new(
+        "Fig 3 model: CaffeNet e2e, 256 images, 16 threads (c4.8xlarge model; conv = 80% of Caffe)",
+        &["partitions", "conv/iter", "e2e/iter", "e2e speedup vs Caffe(None)"],
+    );
+    t.row(&[
+        "None (Caffe)".into(),
+        fmt_secs(caffe_conv),
+        fmt_secs(caffe_conv + rest),
+        "1.00×".into(),
+    ]);
+    for p in [1usize, 2, 4, 8, 16] {
+        let conv = model_time(p, false);
+        t.row(&[
+            p.to_string(),
+            fmt_secs(conv),
+            fmt_secs(conv + rest),
+            format!("{:.2}×", (caffe_conv + rest) / (conv + rest)),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_out/fig3_model.csv").ok();
+    let e2e = |conv_frac: f64| {
+        let r = caffe_conv * (1.0 / conv_frac - 1.0);
+        (caffe_conv + r) / (model_time(1, false) + r)
+    };
+    println!(
+        "e2e speedup bracket over the paper's 70–90% conv share: {:.1}×–{:.1}× (paper: 4.5×)",
+        e2e(0.7),
+        e2e(0.9)
+    );
+    println!("paper Fig 3: all partitionings beat 'None' by ~4.5×; flat across p (GEMM-equivalent).");
+
+    // ---- measured partition strategies on this machine -------------
+    let shape = ConvShape { n: 27, k: 5, d: 96, o: 128, b: 16, pad: 2, stride: 1 };
+    let mut rng = Pcg64::new(5);
+    let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(shape.weight_shape(), 0.0, 0.05, &mut rng);
+    let mut tm = Table::new(
+        "Fig 3 measured (this machine, 1 core): conv2-scale layer, b=16",
+        &["strategy", "wall", "GFLOP/s"],
+    );
+    let flops = CostModel::new(shape).cost(LoweringType::Type1).gemm_flops;
+    for strategy in [
+        BatchStrategy::CaffeStyle,
+        BatchStrategy::FullBatch,
+        BatchStrategy::Partitions(2),
+        BatchStrategy::Partitions(4),
+        BatchStrategy::Partitions(8),
+    ] {
+        // best of 3
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let (_, stats) = conv_partitioned(&shape, &data, &w, strategy, 1);
+            best = best.min(stats.wall_s);
+        }
+        tm.row(&[
+            strategy.to_string(),
+            fmt_secs(best),
+            format!("{:.2}", flops as f64 / best / 1e9),
+        ]);
+    }
+    tm.print();
+    tm.write_csv("bench_out/fig3_measured.csv").ok();
+    println!("(1 core ⇒ partitions can't speed up; the batched-vs-per-image gap is the signal.)");
+}

@@ -1,0 +1,116 @@
+//! E-fig8 / E-fusion: Fig 8 — empirical lowering tradeoffs, *measured
+//! natively* on this machine (the shape effects are machine-local, so
+//! no simulation is needed), plus the §2.1 fusion experiment.
+//!
+//! * (a) time vs input channels d (o fixed)
+//! * (b) time vs output channels o (d fixed)
+//! * (c) Type1/Type3 ratio vs d/o — the crossover
+//! * fusion: materialized Type 1 vs fused lower+GEMM
+//!
+//! Run: `cargo bench --bench fig8_lowering`
+
+use cct::bench_util::{bench, fmt_secs, Table};
+use cct::lowering::{conv_forward, fused, ConvShape, LoweringType};
+use cct::rng::Pcg64;
+use cct::tensor::Tensor;
+
+fn measure(shape: &ConvShape, ty: LoweringType) -> f64 {
+    let mut rng = Pcg64::new(7);
+    let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(shape.weight_shape(), 0.0, 0.1, &mut rng);
+    bench(1, 3, || {
+        let _ = conv_forward(ty, shape, &data, &w, 1);
+    })
+    .min
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_out").ok();
+
+    // ---- (a) vary d, fixed o=64 (n=13, k=3, b=8) --------------------
+    let mut ta = Table::new(
+        "Fig 8(a) measured: time vs input channels d (o=64, n=13, k=3, b=8)",
+        &["d", "type1", "type2", "type3", "best"],
+    );
+    for d in [16usize, 64, 256, 512, 1024] {
+        let shape = ConvShape::simple(13, 3, d, 64, 8);
+        let ts: Vec<f64> = LoweringType::ALL.iter().map(|&ty| measure(&shape, ty)).collect();
+        let best = LoweringType::ALL[argmin(&ts)];
+        ta.row(&[d.to_string(), fmt_secs(ts[0]), fmt_secs(ts[1]), fmt_secs(ts[2]), best.to_string()]);
+    }
+    ta.print();
+    ta.write_csv("bench_out/fig8a.csv").ok();
+
+    // ---- (b) vary o, fixed d=256 ------------------------------------
+    let mut tb = Table::new(
+        "Fig 8(b) measured: time vs output channels o (d=256, n=13, k=3, b=8)",
+        &["o", "type1", "type2", "type3", "best"],
+    );
+    for o in [8usize, 32, 128, 384, 768] {
+        let shape = ConvShape::simple(13, 3, 256, o, 8);
+        let ts: Vec<f64> = LoweringType::ALL.iter().map(|&ty| measure(&shape, ty)).collect();
+        let best = LoweringType::ALL[argmin(&ts)];
+        tb.row(&[o.to_string(), fmt_secs(ts[0]), fmt_secs(ts[1]), fmt_secs(ts[2]), best.to_string()]);
+    }
+    tb.print();
+    tb.write_csv("bench_out/fig8b.csv").ok();
+
+    // ---- (c) ratio sweep at constant d·o ----------------------------
+    let mut tc = Table::new(
+        "Fig 8(c) measured: T1 vs T3 vs d/o ratio (d·o = 16384, n=13, k=3, b=8)",
+        &["d/o", "type1", "type3", "t1/t3", "winner"],
+    );
+    for (d, o) in [(16usize, 1024usize), (64, 256), (128, 128), (256, 64), (1024, 16), (2048, 8)] {
+        let shape = ConvShape::simple(13, 3, d, o, 8);
+        let t1 = measure(&shape, LoweringType::Type1);
+        let t3 = measure(&shape, LoweringType::Type3);
+        tc.row(&[
+            format!("{:.3}", d as f64 / o as f64),
+            fmt_secs(t1),
+            fmt_secs(t3),
+            format!("{:.2}", t1 / t3),
+            if t1 < t3 { "type1".into() } else { "type3".into() },
+        ]);
+    }
+    tc.print();
+    tc.write_csv("bench_out/fig8c.csv").ok();
+    println!("paper Fig 8(c): crossover as the ratio grows; band up to ~10× at the extremes.");
+
+    // ---- fusion (§2.1: "up to 60%") ----------------------------------
+    let mut tf = Table::new(
+        "Fusion (§2.1): materialized Type 1 vs fused lower+GEMM",
+        &["shape", "materialized", "fused", "fused workspace vs D̂"],
+    );
+    for (n, k, d, o, b) in [(27usize, 5usize, 96usize, 128usize, 8usize), (13, 3, 256, 384, 8)] {
+        let shape = ConvShape::simple(n, k, d, o, b);
+        let mut rng = Pcg64::new(9);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 0.1, &mut rng);
+        let t_mat = bench(1, 3, || {
+            let _ = conv_forward(LoweringType::Type1, &shape, &data, &w, 1);
+        })
+        .min;
+        let t_fused = bench(1, 3, || {
+            let _ = fused::conv_fused(&shape, &data, &w, 1);
+        })
+        .min;
+        let ws_ratio = fused::fused_workspace_bytes(&shape) as f64
+            / cct::lowering::type1::Workspace::new(&shape).bytes() as f64;
+        tf.row(&[
+            format!("n={n} k={k} d={d} o={o} b={b}"),
+            fmt_secs(t_mat),
+            fmt_secs(t_fused),
+            format!("{:.1}%", ws_ratio * 100.0),
+        ]);
+    }
+    tf.print();
+    tf.write_csv("bench_out/fig8_fusion.csv").ok();
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}

@@ -1,0 +1,221 @@
+//! Benchmark harness utilities (substrate S13).
+//!
+//! No benchmarking crate is vendored offline, so the `benches/` targets
+//! use `harness = false` with this module: warmup + repeated timing,
+//! robust statistics, aligned table printing (the paper's figures are
+//! regenerated as tables/CSV series), and CSV export for plotting.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    /// Coefficient of variation (the paper reports CV < 5%).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_of(&samples)
+}
+
+/// Run `f` repeatedly until `min_time_s` has elapsed (at least once),
+/// then report stats. Good for very fast bodies.
+pub fn bench_for<F: FnMut()>(min_time_s: f64, mut f: F) -> Stats {
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() >= min_time_s && !samples.is_empty() {
+            break;
+        }
+    }
+    stats_of(&samples)
+}
+
+fn stats_of(samples: &[f64]) -> Stats {
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Stats {
+        mean,
+        min: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max: samples.iter().copied().fold(0.0, f64::max),
+        std: var.sqrt(),
+        iters: samples.len(),
+    }
+}
+
+/// GFLOP/s given a FLOP count and seconds.
+pub fn gflops(flops: u64, seconds: f64) -> f64 {
+    flops as f64 / seconds / 1e9
+}
+
+/// An aligned plain-text table, printed in the format the paper's
+/// figures are tabulated in (EXPERIMENTS.md embeds these verbatim).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as an aligned markdown-ish table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV rendering (headers + rows) for plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV next to the bench outputs.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let st = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(st.iters, 5);
+        assert!(st.min <= st.mean && st.mean <= st.max);
+    }
+
+    #[test]
+    fn stats_sane() {
+        let st = stats_of(&[1.0, 2.0, 3.0]);
+        assert!((st.mean - 2.0).abs() < 1e-12);
+        assert!((st.min - 1.0).abs() < 1e-12);
+        assert!((st.max - 3.0).abs() < 1e-12);
+        assert!(st.cv() > 0.0);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2_000_000_000, 1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("| a "));
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,bb\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(0.002).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,238 @@
+//! L3 coordinator (the paper's §2.2–§2.3 system contribution).
+//!
+//! Three cooperating pieces:
+//!
+//! * [`partitioner`] — the batching engine: split a mini-batch into p
+//!   partitions, process partitions on parallel workers with the GEMM
+//!   thread budget divided among them (paper §2.2 / Fig 3). Includes
+//!   the Caffe-baseline strategy (per-image lowering) for comparison.
+//! * [`scheduler`] — FLOPS-proportional cross-device splitting (paper
+//!   §2.3 / Appendix B): each device gets the fraction of the batch
+//!   matching its fraction of fleet FLOPS; plus the makespan simulator
+//!   the Fig 4/5/9 benches run against.
+//! * [`CnnCoordinator`] (here) — the data-parallel training
+//!   coordinator: net replicas on worker threads, gradient
+//!   aggregation, parameter broadcast; the model is shared, only data
+//!   is partitioned — exactly the paper's "data parallelism within a
+//!   layer (the model is shared)".
+
+pub mod partitioner;
+pub mod scheduler;
+
+pub use partitioner::{conv_partitioned, BatchStrategy, PartitionStats};
+pub use scheduler::{flops_proportional_split, simulate_hybrid_conv, HybridPlan};
+
+use crate::layers::ExecCtx;
+use crate::net::config::{build_net, NetConfig};
+use crate::net::Net;
+use crate::rng::Pcg64;
+use crate::solver::{SgdSolver, SolverConfig};
+use crate::tensor::Tensor;
+
+/// Data-parallel CNN training coordinator: `workers` net replicas with
+/// identical initialization; each step partitions the batch, runs
+/// forward/backward per replica on its own OS thread, averages the
+/// gradients into replica 0, applies the solver update there, and
+/// broadcasts fresh parameters.
+pub struct CnnCoordinator {
+    replicas: Vec<Net>,
+    solver: SgdSolver,
+    /// GEMM threads each worker may use (paper: 16/p threads per
+    /// partition so all cores stay busy).
+    threads_per_worker: usize,
+    steps: usize,
+}
+
+impl CnnCoordinator {
+    /// Build `workers` identically-seeded replicas of the net.
+    pub fn new(
+        cfg: &NetConfig,
+        workers: usize,
+        total_threads: usize,
+        solver_cfg: SolverConfig,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(workers >= 1, "need at least one worker");
+        let mut replicas = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            // identical seed ⇒ identical init across replicas
+            let mut rng = Pcg64::new(seed);
+            replicas.push(build_net(cfg, &mut rng)?);
+        }
+        Ok(CnnCoordinator {
+            replicas,
+            solver: SgdSolver::new(solver_cfg),
+            threads_per_worker: (total_threads / workers).max(1),
+            steps: 0,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.steps
+    }
+
+    /// The coordinated net (replica 0) for evaluation / inspection.
+    pub fn net(&mut self) -> &mut Net {
+        &mut self.replicas[0]
+    }
+
+    /// One data-parallel training step over `(data, labels)`; returns
+    /// the batch-weighted mean loss.
+    pub fn step(&mut self, data: &Tensor, labels: &[usize]) -> f64 {
+        let b = data.shape().dim0();
+        assert_eq!(labels.len(), b);
+        let p = self.replicas.len();
+        let ranges = partitioner::split_batch(b, p);
+        let tpw = self.threads_per_worker;
+        let seed = 0x5eed ^ self.steps as u64;
+
+        // Run each replica's partition on its own thread.
+        let losses: Vec<(f64, usize)> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for (net, range) in self.replicas.iter_mut().zip(ranges.iter()) {
+                let lo = range.start;
+                let hi = range.end;
+                let part = data.slice_samples(lo, hi);
+                let part_labels = labels[lo..hi].to_vec();
+                handles.push(scope.spawn(move || {
+                    if lo == hi {
+                        return (0.0, 0);
+                    }
+                    let ctx = ExecCtx { threads: tpw, seed, ..Default::default() };
+                    let loss = net.forward_backward(&part, &part_labels, &ctx);
+                    (loss, hi - lo)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+
+        // Aggregate gradients: replica 0's grad ← mean over replicas
+        // weighted by partition size (each replica's grad is already a
+        // per-sample mean over its own partition).
+        let sizes: Vec<usize> = losses.iter().map(|&(_, n)| n).collect();
+        let total: usize = sizes.iter().sum();
+        assert_eq!(total, b);
+        {
+            let (head, tail) = self.replicas.split_at_mut(1);
+            let mut p0 = head[0].params_mut();
+            // scale replica 0 by its own weight
+            let w0 = sizes[0] as f32 / total as f32;
+            for blob in p0.iter_mut() {
+                blob.grad.scale(w0);
+            }
+            for (r, rest) in tail.iter_mut().enumerate() {
+                let w = sizes[r + 1] as f32 / total as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                for (dst, src) in p0.iter_mut().zip(rest.params_mut()) {
+                    dst.grad.axpy(w, &src.grad);
+                }
+            }
+        }
+
+        // Update replica 0, then broadcast parameters to the others.
+        self.solver.step(&mut self.replicas[0]);
+        {
+            let (head, tail) = self.replicas.split_at_mut(1);
+            let p0 = head[0].params_mut();
+            for rest in tail.iter_mut() {
+                for (src, dst) in p0.iter().zip(rest.params_mut()) {
+                    dst.data = src.data.clone();
+                    dst.zero_grad();
+                }
+            }
+        }
+
+        self.steps += 1;
+        losses.iter().map(|&(l, n)| l * n as f64).sum::<f64>() / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::config::parse_net;
+
+    const TINY: &str = r#"
+name: tiny
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+fc   { name: f1 out: 3 std: 0.1 }
+"#;
+
+    fn coordinator(workers: usize) -> CnnCoordinator {
+        let cfg = parse_net(TINY).unwrap();
+        let solver = SolverConfig { base_lr: 0.05, momentum: 0.9, weight_decay: 0.0, ..Default::default() };
+        CnnCoordinator::new(&cfg, workers, 4, solver, 7).unwrap()
+    }
+
+    fn batch(b: usize, seed: u64) -> (Tensor, Vec<usize>) {
+        let mut rng = Pcg64::new(seed);
+        let x = Tensor::randn((b, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let labels = (0..b).map(|i| i % 3).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn replicas_start_identical() {
+        let mut c = coordinator(3);
+        let p0: Vec<f32> = c.replicas[0].params_mut()[0].data.as_slice().to_vec();
+        for r in 1..3 {
+            assert_eq!(c.replicas[r].params_mut()[0].data.as_slice(), &p0[..]);
+        }
+    }
+
+    #[test]
+    fn partitioned_step_equals_single_worker_step() {
+        // The paper's claim that partitioning is (GEMM-) equivalent:
+        // gradient aggregation must give the same update as one worker
+        // on the full batch (dropout-free net, same seed).
+        let (x, labels) = batch(8, 1);
+        let mut c1 = coordinator(1);
+        let mut c4 = coordinator(4);
+        let l1 = c1.step(&x, &labels);
+        let l4 = c4.step(&x, &labels);
+        assert!((l1 - l4).abs() < 1e-5, "losses differ: {l1} vs {l4}");
+        let w1 = c1.replicas[0].params_mut()[0].data.clone();
+        let w4 = c4.replicas[0].params_mut()[0].data.clone();
+        assert!(w1.max_abs_diff(&w4) < 1e-5, "updates diverged by {}", w1.max_abs_diff(&w4));
+    }
+
+    #[test]
+    fn params_stay_synchronized() {
+        let mut c = coordinator(2);
+        for s in 0..3 {
+            let (x, labels) = batch(6, s);
+            c.step(&x, &labels);
+        }
+        let p0: Vec<f32> = c.replicas[0].params_mut()[0].data.as_slice().to_vec();
+        assert_eq!(c.replicas[1].params_mut()[0].data.as_slice(), &p0[..]);
+    }
+
+    #[test]
+    fn training_converges_on_fixed_batch() {
+        let mut c = coordinator(2);
+        let (x, labels) = batch(6, 9);
+        let first = c.step(&x, &labels);
+        let mut last = first;
+        for _ in 0..25 {
+            last = c.step(&x, &labels);
+        }
+        assert!(last < first * 0.6, "loss {first} → {last}");
+        assert_eq!(c.iterations(), 26);
+    }
+
+    #[test]
+    fn uneven_partitions_handled() {
+        let mut c = coordinator(3);
+        let (x, labels) = batch(7, 2); // 7 = 3+2+2
+        let loss = c.step(&x, &labels);
+        assert!(loss.is_finite());
+    }
+}

@@ -1,0 +1,237 @@
+//! Batch partitioner (paper §2.2, Fig 3).
+//!
+//! Caffe's convolution processes one image at a time — lowering and a
+//! (multi-threaded) GEMM per image. CcT instead lowers the whole batch
+//! (or p partitions of it) so the GEMM sees a matrix b× taller; the
+//! partitions run on parallel workers with `total_threads / p` GEMM
+//! threads each, which the paper argues is GEMM-equivalent but also
+//! parallelizes the lowering and every other layer.
+
+use crate::lowering::{type1, ConvShape};
+use crate::tensor::Tensor;
+use std::ops::Range;
+use std::time::Instant;
+
+/// How to batch a convolution over a mini-batch (Fig 3's x-axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchStrategy {
+    /// Caffe default: each image lowered + multiplied serially
+    /// (lowering batch = 1), GEMM uses all threads. Fig 3's "None".
+    CaffeStyle,
+    /// CcT: the whole batch lowered at once, one fat GEMM. Fig 3's "1".
+    FullBatch,
+    /// CcT: p partitions processed by p parallel workers, each with
+    /// total_threads/p GEMM threads. Fig 3's "2".."16".
+    Partitions(usize),
+}
+
+impl std::fmt::Display for BatchStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchStrategy::CaffeStyle => write!(f, "none(caffe)"),
+            BatchStrategy::FullBatch => write!(f, "1"),
+            BatchStrategy::Partitions(p) => write!(f, "{p}"),
+        }
+    }
+}
+
+/// Evenly split `b` samples into `p` contiguous ranges (±1).
+pub fn split_batch(b: usize, p: usize) -> Vec<Range<usize>> {
+    assert!(p >= 1);
+    let p = p.min(b.max(1));
+    let base = b / p;
+    let rem = b % p;
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < rem);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+/// Execution statistics from a partitioned convolution.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionStats {
+    pub partitions: usize,
+    pub gemm_threads_per_partition: usize,
+    /// Wall-clock of the whole operation.
+    pub wall_s: f64,
+    /// Peak lowered-buffer bytes across concurrent partitions
+    /// (the Fig 2(c) footprint).
+    pub lowered_bytes: usize,
+}
+
+/// Forward convolution under a batching strategy. Always Type-1
+/// lowering (what both systems use end-to-end, §3.2).
+pub fn conv_partitioned(
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    strategy: BatchStrategy,
+    total_threads: usize,
+) -> (Tensor, PartitionStats) {
+    let t0 = Instant::now();
+    let m = shape.m();
+    let mut out = Tensor::zeros(shape.output_shape());
+    let cols = type1::lowered_cols(shape);
+
+    let stats = match strategy {
+        BatchStrategy::CaffeStyle => {
+            // One image at a time; GEMM gets every thread.
+            let one = ConvShape { b: 1, ..*shape };
+            let mut ws = type1::Workspace::new(&one);
+            for bi in 0..shape.b {
+                let img = data.slice_samples(bi, bi + 1);
+                let r = type1::conv_type1_with(&one, &img, weights, total_threads, &mut ws);
+                out.write_samples(bi, &r);
+            }
+            PartitionStats {
+                partitions: shape.b,
+                gemm_threads_per_partition: total_threads,
+                wall_s: 0.0,
+                lowered_bytes: m * m * cols * 4,
+            }
+        }
+        BatchStrategy::FullBatch => {
+            let r = type1::conv_type1(shape, data, weights, total_threads);
+            out = r;
+            PartitionStats {
+                partitions: 1,
+                gemm_threads_per_partition: total_threads,
+                wall_s: 0.0,
+                lowered_bytes: shape.b * m * m * cols * 4,
+            }
+        }
+        BatchStrategy::Partitions(p) => {
+            assert!(p >= 1, "need at least one partition");
+            let ranges = split_batch(shape.b, p);
+            let tpw = (total_threads / ranges.len()).max(1);
+            // Each worker convolves its contiguous sample range into a
+            // disjoint slice of the output.
+            let chan = shape.o * m * m;
+            let out_slice = out.as_mut_slice();
+            std::thread::scope(|scope| {
+                let mut rest = out_slice;
+                let mut offset = 0usize;
+                for range in &ranges {
+                    let len = (range.end - range.start) * chan;
+                    let (mine, tail) = rest.split_at_mut(len);
+                    rest = tail;
+                    let lo = range.start;
+                    let hi = range.end;
+                    let _ = offset;
+                    offset += len;
+                    let part = data.slice_samples(lo, hi);
+                    scope.spawn(move || {
+                        if lo == hi {
+                            return;
+                        }
+                        let sub = ConvShape { b: hi - lo, ..*shape };
+                        let r = type1::conv_type1(&sub, &part, weights, tpw);
+                        mine.copy_from_slice(r.as_slice());
+                    });
+                }
+            });
+            PartitionStats {
+                partitions: ranges.len(),
+                gemm_threads_per_partition: tpw,
+                wall_s: 0.0,
+                lowered_bytes: ranges
+                    .iter()
+                    .map(|r| (r.end - r.start) * m * m * cols * 4)
+                    .sum(),
+            }
+        }
+    };
+
+    let wall = t0.elapsed().as_secs_f64();
+    (out, PartitionStats { wall_s: wall, ..stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowering::reference::conv_reference;
+    use crate::rng::Pcg64;
+    use crate::testing::Prop;
+
+    fn problem(b: usize) -> (ConvShape, Tensor, Tensor) {
+        let mut rng = Pcg64::new(b as u64 + 100);
+        let shape = ConvShape { n: 8, k: 3, d: 3, o: 4, b, pad: 1, stride: 1 };
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        (shape, data, w)
+    }
+
+    #[test]
+    fn split_batch_covers_exactly() {
+        for (b, p) in [(256, 4), (7, 3), (5, 8), (1, 1)] {
+            let ranges = split_batch(b, p);
+            let total: usize = ranges.iter().map(|r| r.end - r.start).sum();
+            assert_eq!(total, b, "b={b} p={p}");
+            // contiguous & ordered
+            let mut lo = 0;
+            for r in &ranges {
+                assert_eq!(r.start, lo);
+                lo = r.end;
+            }
+            // balanced ±1
+            let lens: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+            assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let (shape, data, w) = problem(6);
+        let want = conv_reference(&shape, &data, &w);
+        for strategy in [
+            BatchStrategy::CaffeStyle,
+            BatchStrategy::FullBatch,
+            BatchStrategy::Partitions(1),
+            BatchStrategy::Partitions(2),
+            BatchStrategy::Partitions(3),
+            BatchStrategy::Partitions(6),
+        ] {
+            let (got, stats) = conv_partitioned(&shape, &data, &w, strategy, 2);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "strategy {strategy} diverges by {}",
+                got.max_abs_diff(&want)
+            );
+            assert!(stats.wall_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn more_partitions_than_samples() {
+        let (shape, data, w) = problem(2);
+        let want = conv_reference(&shape, &data, &w);
+        let (got, stats) = conv_partitioned(&shape, &data, &w, BatchStrategy::Partitions(8), 4);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+        assert!(stats.partitions <= 2);
+    }
+
+    #[test]
+    fn footprint_scales_with_strategy() {
+        // Fig 2(c): Caffe-style (b=1) footprint is b× smaller than the
+        // full-batch lowering.
+        let (shape, data, w) = problem(8);
+        let (_, caffe) = conv_partitioned(&shape, &data, &w, BatchStrategy::CaffeStyle, 1);
+        let (_, full) = conv_partitioned(&shape, &data, &w, BatchStrategy::FullBatch, 1);
+        assert_eq!(full.lowered_bytes, 8 * caffe.lowered_bytes);
+    }
+
+    #[test]
+    fn property_partition_count_never_exceeds_batch() {
+        Prop::new("partition invariants", 30).run(|g| {
+            let b = g.usize_in(1, 16);
+            let p = g.usize_in(1, 20);
+            let ranges = split_batch(b, p);
+            assert!(ranges.len() <= b);
+            assert_eq!(ranges.iter().map(|r| r.end - r.start).sum::<usize>(), b);
+        });
+    }
+}

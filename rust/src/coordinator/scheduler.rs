@@ -1,0 +1,218 @@
+//! FLOPS-proportional cross-device scheduler (paper §2.3, Appendix B)
+//! and the hybrid-execution makespan simulator behind Figs 4(a), 5, 9.
+//!
+//! "The key decision is what fraction of the input to send to each
+//! device. We use a simple heuristic: each device takes a fraction p
+//! of input in which p is the fraction of total FLOPS that this device
+//! contributes." The paper finds this within 5% of the optimal split —
+//! our Fig 9 bench reproduces that by sweeping p against the simulator
+//! and comparing with the heuristic's pick.
+
+use crate::device::DeviceSpec;
+use crate::lowering::{ConvShape, LoweringType};
+
+/// Assign each of `b` samples to a device proportionally to its peak
+/// FLOPS. Largest-remainder rounding; every sample is assigned.
+pub fn flops_proportional_split(b: usize, devices: &[DeviceSpec]) -> Vec<usize> {
+    assert!(!devices.is_empty());
+    let total: f64 = devices.iter().map(|d| d.peak_gflops).sum();
+    let ideal: Vec<f64> = devices.iter().map(|d| b as f64 * d.peak_gflops / total).collect();
+    let mut counts: Vec<usize> = ideal.iter().map(|&x| x.floor() as usize).collect();
+    let mut assigned: usize = counts.iter().sum();
+    // distribute the remainder by largest fractional part
+    let mut order: Vec<usize> = (0..devices.len()).collect();
+    order.sort_by(|&a, &bi| {
+        (ideal[bi] - ideal[bi].floor())
+            .partial_cmp(&(ideal[a] - ideal[a].floor()))
+            .unwrap()
+    });
+    let mut i = 0;
+    while assigned < b {
+        counts[order[i % order.len()]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    counts
+}
+
+/// The simulated outcome of running one conv layer split across a
+/// device fleet.
+#[derive(Clone, Debug)]
+pub struct HybridPlan {
+    /// Samples per device.
+    pub assignment: Vec<usize>,
+    /// Seconds each device takes on its share (compute + transfer).
+    pub per_device_s: Vec<f64>,
+    /// max over devices — the layer's wall time under data parallelism.
+    pub makespan_s: f64,
+}
+
+/// Simulate a conv layer split across `devices` with `assignment[i]`
+/// samples on device i (batched lowering on every device).
+pub fn simulate_hybrid_conv(
+    shape: &ConvShape,
+    devices: &[DeviceSpec],
+    assignment: &[usize],
+    ty: LoweringType,
+) -> HybridPlan {
+    assert_eq!(devices.len(), assignment.len());
+    assert_eq!(assignment.iter().sum::<usize>(), shape.b, "assignment must cover the batch");
+    let per_device_s: Vec<f64> = devices
+        .iter()
+        .zip(assignment.iter())
+        .map(|(d, &bi)| {
+            if bi == 0 {
+                0.0
+            } else {
+                let sub = ConvShape { b: bi, ..*shape };
+                d.conv_seconds_with_transfer(&sub, ty)
+            }
+        })
+        .collect();
+    let makespan_s = per_device_s.iter().copied().fold(0.0, f64::max);
+    HybridPlan { assignment: assignment.to_vec(), per_device_s, makespan_s }
+}
+
+/// Schedule with the paper's heuristic and simulate.
+pub fn schedule_and_simulate(
+    shape: &ConvShape,
+    devices: &[DeviceSpec],
+    ty: LoweringType,
+) -> HybridPlan {
+    let assignment = flops_proportional_split(shape.b, devices);
+    simulate_hybrid_conv(shape, devices, &assignment, ty)
+}
+
+/// Exhaustive optimal split for a two-device fleet (Fig 9's sweep):
+/// returns (gpu_fraction, plan) minimizing makespan, where index 0 is
+/// the "GPU side" by convention of the caller's device order.
+pub fn optimal_two_device_split(
+    shape: &ConvShape,
+    devices: &[DeviceSpec; 2],
+    ty: LoweringType,
+) -> (f64, HybridPlan) {
+    let mut best: Option<(f64, HybridPlan)> = None;
+    for first in 0..=shape.b {
+        let plan = simulate_hybrid_conv(shape, devices, &[first, shape.b - first], ty);
+        if best.as_ref().map(|(_, p)| plan.makespan_s < p.makespan_s).unwrap_or(true) {
+            best = Some((first as f64 / shape.b as f64, plan));
+        }
+    }
+    best.unwrap()
+}
+
+/// Simulated end-to-end iteration time (seconds) for a whole net's
+/// conv stack on a fleet, layer by layer (data-parallel within each
+/// layer, barrier between layers — the paper's scheme). Non-conv time
+/// is charged to the host device at memory bandwidth.
+pub fn simulate_net_hybrid(
+    conv_geometry: &[(ConvShape, LoweringType)],
+    devices: &[DeviceSpec],
+    non_conv_bytes: u64,
+    host: &DeviceSpec,
+) -> f64 {
+    let mut total = 0.0;
+    for (shape, ty) in conv_geometry {
+        total += schedule_and_simulate(shape, devices, *ty).makespan_s;
+    }
+    total + non_conv_bytes as f64 / (host.mem_gbps * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::testing::Prop;
+
+    fn conv1(b: usize) -> ConvShape {
+        ConvShape { n: 227, k: 11, d: 3, o: 96, b, pad: 0, stride: 4 }
+    }
+
+    #[test]
+    fn split_respects_flops_ratio() {
+        // paper's example: CPU 1 TFLOPS + GPU 2 TFLOPS ⇒ CPU gets 1/3.
+        let mut cpu = profiles::c4_4xlarge();
+        cpu.peak_gflops = 1000.0;
+        let mut gpu = profiles::grid_k520();
+        gpu.peak_gflops = 2000.0;
+        let counts = flops_proportional_split(300, &[gpu, cpu]);
+        assert_eq!(counts, vec![200, 100]);
+    }
+
+    #[test]
+    fn split_covers_batch_exactly() {
+        Prop::new("split covers batch", 40).run(|g| {
+            let b = g.usize_in(1, 512);
+            let devs = vec![profiles::grid_k520(), profiles::g2_host_cpu(), profiles::c4_4xlarge()];
+            let counts = flops_proportional_split(b, &devs);
+            assert_eq!(counts.iter().sum::<usize>(), b);
+        });
+    }
+
+    #[test]
+    fn hybrid_beats_gpu_alone() {
+        // Fig 4(a): CcT (CPU+GPU) ≈ 1.2× Caffe (GPU) on conv1.
+        let gpu = profiles::grid_k520();
+        let cpu = profiles::g2_host_cpu();
+        let shape = conv1(256);
+        let gpu_only = simulate_hybrid_conv(&shape, &[gpu.clone()], &[256], LoweringType::Type1);
+        let hybrid = schedule_and_simulate(&shape, &[gpu.clone(), cpu.clone()], LoweringType::Type1);
+        assert!(
+            hybrid.makespan_s < gpu_only.makespan_s,
+            "hybrid {:.4}s should beat gpu-only {:.4}s",
+            hybrid.makespan_s,
+            gpu_only.makespan_s
+        );
+        let speedup = gpu_only.makespan_s / hybrid.makespan_s;
+        assert!((1.02..1.5).contains(&speedup), "hybrid speedup {speedup:.3} outside Fig 4 band");
+    }
+
+    #[test]
+    fn heuristic_within_5pct_of_optimal() {
+        // Appendix B's claim, reproduced in simulation.
+        let gpu = profiles::grid_k520();
+        let cpu = profiles::g2_host_cpu();
+        let shape = conv1(256);
+        let heuristic = schedule_and_simulate(&shape, &[gpu.clone(), cpu.clone()], LoweringType::Type1);
+        let (_, optimal) = optimal_two_device_split(&shape, &[gpu, cpu], LoweringType::Type1);
+        let gap = heuristic.makespan_s / optimal.makespan_s;
+        assert!(gap < 1.05, "heuristic is {gap:.3}× of optimal (claim: within 5%)");
+    }
+
+    #[test]
+    fn extreme_splits_worse_than_balanced() {
+        // Fig 9: p→0 or p→1 loses to the optimum.
+        let gpu = profiles::grid_k520();
+        let cpu = profiles::g2_host_cpu();
+        let shape = conv1(256);
+        let all_gpu = simulate_hybrid_conv(&shape, &[gpu.clone(), cpu.clone()], &[256, 0], LoweringType::Type1);
+        let all_cpu = simulate_hybrid_conv(&shape, &[gpu.clone(), cpu.clone()], &[0, 256], LoweringType::Type1);
+        let (_, opt) = optimal_two_device_split(&shape, &[gpu, cpu], LoweringType::Type1);
+        assert!(opt.makespan_s < all_gpu.makespan_s);
+        assert!(opt.makespan_s < all_cpu.makespan_s);
+        assert!(all_cpu.makespan_s > all_gpu.makespan_s, "CPU-only should be slowest");
+    }
+
+    #[test]
+    fn four_gpus_scale_near_linearly() {
+        // Fig 5: 4 GPUs give >3× over 1 GPU.
+        let gpu = profiles::grid_k520();
+        let shape = conv1(256);
+        let one = simulate_hybrid_conv(&shape, &[gpu.clone()], &[256], LoweringType::Type1);
+        let four_fleet = vec![gpu.clone(), gpu.clone(), gpu.clone(), gpu.clone()];
+        let four = schedule_and_simulate(&shape, &four_fleet, LoweringType::Type1);
+        let speedup = one.makespan_s / four.makespan_s;
+        assert!(speedup > 3.0, "4-GPU speedup {speedup:.2} (paper: 3.12×)");
+        assert!(speedup <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn assignment_mismatch_panics() {
+        let gpu = profiles::grid_k520();
+        let shape = conv1(8);
+        let r = std::panic::catch_unwind(|| {
+            simulate_hybrid_conv(&shape, &[gpu], &[4], LoweringType::Type1)
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Synthetic data pipeline (substrate S12) — the ImageNet substitute.
+//!
+//! The paper measures *throughput* on ImageNet-shaped batches; the
+//! pixels themselves don't matter for the systems claims, so we
+//! generate two corpora:
+//!
+//! * [`SyntheticImages`] — ImageNet-shaped random tensors (for the
+//!   throughput benches; matches the paper's 256×3×227×227 batches);
+//! * [`BlobCorpus`] — a *learnable* class-conditional dataset (each
+//!   class = a fixed Gaussian template + noise) so the end-to-end
+//!   training example exhibits a real falling loss curve.
+//!
+//! Both are deterministic given a seed.
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// ImageNet-shaped random batches.
+pub struct SyntheticImages {
+    pub channels: usize,
+    pub side: usize,
+    pub classes: usize,
+    rng: Pcg64,
+}
+
+impl SyntheticImages {
+    pub fn new(channels: usize, side: usize, classes: usize, seed: u64) -> Self {
+        SyntheticImages { channels, side, classes, rng: Pcg64::with_stream(seed, 0xda7a) }
+    }
+
+    /// ImageNet/CaffeNet-shaped source (3×227×227, 1000 classes).
+    pub fn imagenet(seed: u64) -> Self {
+        Self::new(3, 227, 1000, seed)
+    }
+
+    /// Next batch of b images + labels.
+    pub fn next_batch(&mut self, b: usize) -> (Tensor, Vec<usize>) {
+        let data = Tensor::randn((b, self.channels, self.side, self.side), 0.0, 1.0, &mut self.rng);
+        let labels = (0..b).map(|_| self.rng.below(self.classes as u64) as usize).collect();
+        (data, labels)
+    }
+}
+
+/// A finite, learnable corpus: class c's samples are `template_c +
+/// σ·noise`, so a small CNN can separate them and the training loss
+/// actually falls (the end-to-end validation requirement).
+pub struct BlobCorpus {
+    pub channels: usize,
+    pub side: usize,
+    pub classes: usize,
+    images: Tensor,
+    labels: Vec<usize>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg64,
+}
+
+impl BlobCorpus {
+    /// Generate `total` samples, evenly spread over `classes`.
+    pub fn generate(
+        channels: usize,
+        side: usize,
+        classes: usize,
+        total: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0xb10b);
+        // Per-class smooth template: sum of a few random low-frequency
+        // cosine bumps (structured, unlike white noise, so convs can
+        // pick up spatial features).
+        let mut templates = Vec::with_capacity(classes);
+        for _ in 0..classes {
+            let mut t = Tensor::zeros((channels, side, side));
+            let s = t.as_mut_slice();
+            for _ in 0..4 {
+                let fx = rng.uniform_in(0.5, 3.0);
+                let fy = rng.uniform_in(0.5, 3.0);
+                let px = rng.uniform_in(0.0, std::f32::consts::TAU);
+                let py = rng.uniform_in(0.0, std::f32::consts::TAU);
+                let amp = rng.uniform_in(0.4, 1.0);
+                let chan = rng.below(channels as u64) as usize;
+                for y in 0..side {
+                    for x in 0..side {
+                        let v = amp
+                            * ((fx * x as f32 / side as f32 * std::f32::consts::TAU + px).cos()
+                                * (fy * y as f32 / side as f32 * std::f32::consts::TAU + py).cos());
+                        s[chan * side * side + y * side + x] += v;
+                    }
+                }
+            }
+            templates.push(t);
+        }
+
+        let mut images = Tensor::zeros((total, channels, side, side));
+        let mut labels = Vec::with_capacity(total);
+        for i in 0..total {
+            let cls = i % classes;
+            labels.push(cls);
+            let dst = images.sample_mut(i);
+            for (d, &t) in dst.iter_mut().zip(templates[cls].as_slice()) {
+                *d = t + noise * rng.gaussian() as f32;
+            }
+        }
+        let order: Vec<usize> = (0..total).collect();
+        BlobCorpus { channels, side, classes, images, labels, order, cursor: 0, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Next shuffled mini-batch (reshuffles each epoch).
+    pub fn next_batch(&mut self, b: usize) -> (Tensor, Vec<usize>) {
+        assert!(b <= self.len(), "batch larger than corpus");
+        if self.cursor + b > self.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+        }
+        let mut data = Tensor::zeros((b, self.channels, self.side, self.side));
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let src = self.order[self.cursor + i];
+            data.write_samples(i, &self.images.slice_samples(src, src + 1));
+            labels.push(self.labels[src]);
+        }
+        self.cursor += b;
+        (data, labels)
+    }
+
+    /// A fixed evaluation split: the first `n` samples in corpus order.
+    pub fn eval_batch(&self, n: usize) -> (Tensor, Vec<usize>) {
+        (self.images.slice_samples(0, n), self.labels[..n].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_shapes_and_label_range() {
+        let mut src = SyntheticImages::new(3, 16, 7, 1);
+        let (x, y) = src.next_batch(5);
+        assert_eq!(x.shape().dims4(), (5, 3, 16, 16));
+        assert_eq!(y.len(), 5);
+        assert!(y.iter().all(|&l| l < 7));
+    }
+
+    #[test]
+    fn synthetic_deterministic_per_seed() {
+        let (a, _) = SyntheticImages::new(1, 8, 2, 9).next_batch(2);
+        let (b, _) = SyntheticImages::new(1, 8, 2, 9).next_batch(2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn corpus_classes_balanced() {
+        let c = BlobCorpus::generate(1, 8, 4, 40, 0.1, 1);
+        assert_eq!(c.len(), 40);
+        for cls in 0..4 {
+            assert_eq!(c.labels.iter().filter(|&&l| l == cls).count(), 10);
+        }
+    }
+
+    #[test]
+    fn corpus_is_separable() {
+        // Same-class samples must be closer than cross-class on average.
+        let c = BlobCorpus::generate(1, 8, 2, 20, 0.05, 2);
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+        };
+        let s0 = c.images.sample(0); // class 0
+        let s2 = c.images.sample(2); // class 0
+        let s1 = c.images.sample(1); // class 1
+        assert!(dist(s0, s2) < dist(s0, s1));
+    }
+
+    #[test]
+    fn batches_cycle_through_epochs() {
+        let mut c = BlobCorpus::generate(1, 4, 2, 8, 0.1, 3);
+        let mut seen = 0;
+        for _ in 0..5 {
+            let (x, y) = c.next_batch(4);
+            assert_eq!(x.shape().dim0(), 4);
+            assert_eq!(y.len(), 4);
+            seen += 4;
+        }
+        assert_eq!(seen, 20); // > 2 epochs without panic
+    }
+
+    #[test]
+    fn eval_batch_fixed() {
+        let c = BlobCorpus::generate(2, 4, 2, 10, 0.1, 4);
+        let (x1, y1) = c.eval_batch(6);
+        let (x2, y2) = c.eval_batch(6);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+}

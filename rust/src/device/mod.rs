@@ -1,0 +1,231 @@
+//! Device abstraction + calibrated simulators (substrate S9).
+//!
+//! The paper's cross-device experiments (Figs 4, 5, 9) ran on 2015 EC2
+//! hardware (Haswell CPUs, GRID K520 GPUs). This testbed is a single
+//! CPU core with no GPU, so — per DESIGN.md §Hardware-Adaptation — the
+//! *scheduling* experiments run against an analytical device model
+//! with the paper's published peak-FLOPS numbers, while the *shape*
+//! effects (GEMM efficiency vs batch) are measured natively and feed
+//! the model's efficiency curve.
+//!
+//! Key modeling choices (each tied to a paper observation):
+//!
+//! * **FLOPS proportionality** (§3.2: "the end-to-end training time for
+//!   CNNs is directly proportional to the FLOPS delivered by the
+//!   CPU") — batched execution runs at a device-independent efficiency
+//!   [`EFF_BATCHED`] of peak.
+//! * **Batch-1 penalty** (Fig 2(b), §3.2: Caffe lowers one image at a
+//!   time and loses ~4.5×) — per-call fixed overhead plus an
+//!   efficiency curve that degrades as the lowered matrix thins.
+//! * **PCIe cost** (§1: "GPUs are connected to host memory by a slow
+//!   PCI-e interconnect") — transfers are charged for off-host devices.
+
+pub mod profiles;
+
+use crate::lowering::{ConvShape, CostModel, LoweringType};
+
+/// Where a device lives relative to host memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+/// An execution device, real or simulated: peak throughput plus the
+/// constants of its timing model.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Theoretical peak single-precision GFLOP/s (the paper's numbers:
+    /// GRID K520 = 1300, c4.4xlarge socket = 700, …).
+    pub peak_gflops: f64,
+    /// Sustained memory bandwidth (GB/s) for lowering/lifting traffic.
+    pub mem_gbps: f64,
+    /// PCIe bandwidth (GB/s); `None` for host-resident devices.
+    pub pcie_gbps: Option<f64>,
+    /// Fixed cost per offloaded kernel/GEMM invocation (seconds):
+    /// launch latency for GPUs, thread-pool wake for CPUs.
+    pub call_overhead_s: f64,
+    /// Physical cores (CPU) or a comparable parallel-granularity count.
+    pub cores: usize,
+}
+
+/// Fraction of peak a well-blocked, whole-batch GEMM sustains. Shared
+/// across devices — this *is* the paper's proportionality claim.
+pub const EFF_BATCHED: f64 = 0.55;
+
+/// Efficiency floor for a 1-row-per-core sliver (our measured Fig 2(b)
+/// reproduction and the paper's end-to-end 4.5× both put the batch-1
+/// penalty at ≈ 4–5×).
+pub const EFF_FLOOR: f64 = 0.10;
+
+/// Rows-per-core at which the efficiency curve reaches half of its
+/// batched asymptote (calibrated against the measured GEMM curve, see
+/// EXPERIMENTS.md E-fig2b).
+pub const HALF_SAT_ROWS: f64 = 256.0;
+
+/// Rows-per-thread below which threads contend for cache lines (the
+/// Fig 2(b) multi-thread slowdown on thin matrices).
+pub const CONTENTION_ROWS: f64 = 150.0;
+
+impl DeviceSpec {
+    /// GEMM efficiency (fraction of peak) as a function of the rows of
+    /// the lowered matrix each participating core works on — the
+    /// thin-matrix model. Saturating curve:
+    /// `floor + (batched − floor) · r/(r + half_sat)`.
+    pub fn gemm_efficiency(&self, rows_per_core: f64) -> f64 {
+        let r = rows_per_core.max(0.0);
+        EFF_FLOOR + (EFF_BATCHED - EFF_FLOOR) * r / (r + HALF_SAT_ROWS)
+    }
+
+    /// Seconds for one GEMM of `flops` whose lowered-data matrix has
+    /// `m_rows` rows, run with `threads` workers on this device.
+    pub fn gemm_seconds(&self, flops: u64, m_rows: usize, threads: usize) -> f64 {
+        let threads = threads.clamp(1, self.cores);
+        let useful = threads.min(m_rows.max(1));
+        let eff = self.gemm_efficiency(m_rows as f64 / useful as f64);
+        // Cache-contention multiplier once per-thread strips shrink to
+        // slivers: threads fight over the same B-panel lines instead of
+        // streaming disjoint blocks. Super-linear in the sliver ratio —
+        // this is the Fig 2(b) "8 threads on b=1 is ~4× slower than 1
+        // thread" pathology.
+        let sliver = (threads as f64 * CONTENTION_ROWS / m_rows.max(1) as f64).max(1.0);
+        let contention = sliver.powf(1.4).min(8.0);
+        self.call_overhead_s
+            + contention * flops as f64 / (self.peak_gflops * 1e9 * eff)
+                * (self.cores as f64 / useful as f64)
+    }
+
+    /// Seconds to move `bytes` between host and this device (0 for
+    /// host-resident devices).
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        match self.pcie_gbps {
+            Some(bw) => bytes as f64 / (bw * 1e9),
+            None => 0.0,
+        }
+    }
+
+    /// Seconds for a full lowered convolution (lower → GEMM → lift) of
+    /// `shape` with lowering `ty`, whole-batch strategy, all cores.
+    /// Excludes transfers — see [`Self::conv_transfer_bytes`].
+    pub fn conv_seconds(&self, shape: &ConvShape, ty: LoweringType) -> f64 {
+        let c = CostModel::new(*shape).cost(ty);
+        let cols = match ty {
+            LoweringType::Type1 => shape.k * shape.k * shape.d,
+            LoweringType::Type2 => shape.k * shape.d,
+            LoweringType::Type3 => shape.d,
+        } as u64;
+        let rows = (c.lowered_data_elems / cols.max(1)).max(1) as usize;
+        let lower_s = (c.lower_writes * 4) as f64 / (self.mem_gbps * 1e9);
+        let gemm_s = self.gemm_seconds(c.gemm_flops, rows, self.cores);
+        let lift_s = (c.lift_ram_reads * 4) as f64 / (self.mem_gbps * 1e9);
+        lower_s + gemm_s + lift_s
+    }
+
+    /// Conv time under the *Caffe strategy*: one lowering + GEMM per
+    /// image (b sequential b=1 problems) — the baseline of Figs 3/4.
+    pub fn conv_seconds_per_image(&self, shape: &ConvShape, ty: LoweringType) -> f64 {
+        let one = ConvShape { b: 1, ..*shape };
+        shape.b as f64 * self.conv_seconds(&one, ty)
+    }
+
+    /// Bytes that must cross PCIe to convolve `shape` here (input +
+    /// output; the model is resident, as in the paper's data-parallel
+    /// scheme where the model is shared).
+    pub fn conv_transfer_bytes(&self, shape: &ConvShape) -> u64 {
+        let m = shape.m() as u64;
+        let input = (shape.b * shape.d * shape.n * shape.n) as u64 * 4;
+        let output = shape.b as u64 * shape.o as u64 * m * m * 4;
+        input + output
+    }
+
+    /// Total conv time including transfer (what the scheduler budgets).
+    /// Transfers are double-buffered against compute (as cuDNN-era
+    /// frameworks do), so the charge is `max(compute, transfer)` rather
+    /// than the sum — this is what keeps the paper's simple
+    /// FLOPS-proportional heuristic within 5% of optimal (Appendix B).
+    pub fn conv_seconds_with_transfer(&self, shape: &ConvShape, ty: LoweringType) -> f64 {
+        let compute = self.conv_seconds(shape, ty);
+        let transfer = self.transfer_seconds(self.conv_transfer_bytes(shape));
+        compute.max(transfer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cpu() -> DeviceSpec {
+        profiles::c4_4xlarge()
+    }
+
+    #[test]
+    fn efficiency_curve_monotone() {
+        let d = cpu();
+        let mut last = 0.0;
+        for rows in [1.0, 8.0, 64.0, 512.0, 4096.0] {
+            let e = d.gemm_efficiency(rows);
+            assert!(e > last, "efficiency must increase with rows");
+            assert!(e <= EFF_BATCHED);
+            last = e;
+        }
+        assert!(d.gemm_efficiency(1.0) < 0.15);
+        assert!(d.gemm_efficiency(1e6) > 0.5);
+    }
+
+    #[test]
+    fn batched_conv_faster_than_per_image() {
+        // The paper's headline: batching wins, substantially (≈4.5×
+        // end-to-end; more on conv layers alone).
+        let d = cpu();
+        let shape = ConvShape { n: 27, k: 5, d: 96, o: 256, b: 256, pad: 2, stride: 1 };
+        let batched = d.conv_seconds(&shape, LoweringType::Type1);
+        let per_image = d.conv_seconds_per_image(&shape, LoweringType::Type1);
+        let speedup = per_image / batched;
+        assert!(speedup > 2.0, "batching speedup only {speedup:.2}×");
+        assert!(speedup < 20.0, "batching speedup implausible: {speedup:.2}×");
+    }
+
+    #[test]
+    fn gpu_beats_8core_cpu_modestly() {
+        // Fig 4(b): Caffe GPU ≈ 1.86× CcT CPU (8 cores) on CaffeNet.
+        let cpu = cpu();
+        let gpu = profiles::grid_k520();
+        let shape = ConvShape { n: 27, k: 5, d: 96, o: 256, b: 256, pad: 2, stride: 1 };
+        let tc = cpu.conv_seconds(&shape, LoweringType::Type1);
+        let tg = gpu.conv_seconds_with_transfer(&shape, LoweringType::Type1);
+        assert!(tg < tc, "gpu {tg} should beat cpu {tc}");
+        let ratio = tc / tg;
+        assert!((1.2..3.0).contains(&ratio), "GPU/CPU ratio {ratio:.2} out of Fig 4 band");
+    }
+
+    #[test]
+    fn transfer_only_charged_offhost() {
+        let c = cpu();
+        let g = profiles::grid_k520();
+        assert_eq!(c.transfer_seconds(1 << 30), 0.0);
+        assert!(g.transfer_seconds(1 << 30) > 0.0);
+    }
+
+    #[test]
+    fn flops_proportionality_between_cpus() {
+        // §3.2: end-to-end time ∝ delivered FLOPS — two CPUs at the
+        // same efficiency must differ by roughly their peak ratio.
+        let c4 = profiles::c4_4xlarge();
+        let c8 = profiles::c4_8xlarge();
+        let shape = ConvShape { n: 27, k: 5, d: 96, o: 256, b: 256, pad: 2, stride: 1 };
+        let t4 = c4.conv_seconds(&shape, LoweringType::Type1);
+        let t8 = c8.conv_seconds(&shape, LoweringType::Type1);
+        let ratio = t4 / t8;
+        let peak_ratio = c8.peak_gflops / c4.peak_gflops;
+        assert!((ratio / peak_ratio - 1.0).abs() < 0.4, "ratio {ratio} vs peak {peak_ratio}");
+    }
+
+    #[test]
+    fn call_overhead_dominates_tiny_work() {
+        let g = profiles::grid_k520();
+        let t = g.gemm_seconds(1000, 1, 1);
+        assert!(t >= g.call_overhead_s);
+    }
+}

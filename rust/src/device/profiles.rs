@@ -1,0 +1,150 @@
+//! Device profiles for the machines the paper evaluates on (§3.1,
+//! Figs 4/5) plus this testbed. Peak numbers are the paper's own:
+//! "the GPU instance provides a peak ability of 1.3 TFLOPS, while the
+//! single-socket CPU instance provides 0.7 TFLOPS"; "NVIDIA K40
+//! (4.29 TFLOPS)"; the g2 CPU gives "4× fewer peak FLOPS than the
+//! standalone CPU instance".
+
+use super::{DeviceKind, DeviceSpec};
+
+/// c4.4xlarge: single-socket Haswell, 8 physical cores, 0.7 TFLOPS
+/// ($0.68/h in the paper's price analysis).
+pub fn c4_4xlarge() -> DeviceSpec {
+    DeviceSpec {
+        name: "c4.4xlarge".into(),
+        kind: DeviceKind::Cpu,
+        peak_gflops: 700.0,
+        mem_gbps: 50.0,
+        pcie_gbps: None,
+        call_overhead_s: 5e-6,
+        cores: 8,
+    }
+}
+
+/// c4.8xlarge: two-socket Haswell, 16 physical cores (~1.4 TFLOPS,
+/// $1.37/h).
+pub fn c4_8xlarge() -> DeviceSpec {
+    DeviceSpec {
+        name: "c4.8xlarge".into(),
+        kind: DeviceKind::Cpu,
+        peak_gflops: 1400.0,
+        mem_gbps: 90.0,
+        pcie_gbps: None,
+        call_overhead_s: 5e-6,
+        cores: 16,
+    }
+}
+
+/// The g2.2xlarge's GPU: NVIDIA GRID K520, 1.3 TFLOPS ($0.47/h
+/// instance).
+pub fn grid_k520() -> DeviceSpec {
+    DeviceSpec {
+        name: "GRID-K520".into(),
+        kind: DeviceKind::Gpu,
+        peak_gflops: 1300.0,
+        mem_gbps: 160.0,
+        pcie_gbps: Some(6.0), // PCIe 2.0 x16 effective
+        call_overhead_s: 30e-6,
+        cores: 8, // SMX count — granularity only
+    }
+}
+
+/// NVIDIA K40 (the paper's upper GPU reference): 4.29 TFLOPS.
+pub fn k40() -> DeviceSpec {
+    DeviceSpec {
+        name: "K40".into(),
+        kind: DeviceKind::Gpu,
+        peak_gflops: 4290.0,
+        mem_gbps: 288.0,
+        pcie_gbps: Some(12.0), // PCIe 3.0 x16 effective
+        call_overhead_s: 30e-6,
+        cores: 15,
+    }
+}
+
+/// The g2.2xlarge's host CPU: 4 older Ivy Bridge cores — the paper:
+/// "only provide 4× fewer peak FLOPS than the standalone CPU instance
+/// (c4.4xlarge)". 700/4 = 175 GFLOPS.
+pub fn g2_host_cpu() -> DeviceSpec {
+    DeviceSpec {
+        name: "g2-host-cpu".into(),
+        kind: DeviceKind::Cpu,
+        peak_gflops: 175.0,
+        mem_gbps: 25.0,
+        pcie_gbps: None,
+        call_overhead_s: 5e-6,
+        cores: 4,
+    }
+}
+
+/// g2.8xlarge host CPU (paper Fig 5; $2.60/h): a bigger Ivy Bridge
+/// host feeding 4 K520 GPUs. The 1-GPU+CPU run gains >15%, implying
+/// host peak ≈ 0.2 of one GPU.
+pub fn g2_8xlarge_cpu() -> DeviceSpec {
+    DeviceSpec {
+        name: "g2.8xlarge-cpu".into(),
+        kind: DeviceKind::Cpu,
+        peak_gflops: 260.0,
+        mem_gbps: 40.0,
+        pcie_gbps: None,
+        call_overhead_s: 5e-6,
+        cores: 8,
+    }
+}
+
+/// This testbed: one x86-64 core (calibrate peak with
+/// `cct bench gemm`; the default is a conservative AVX2 estimate used
+/// until calibration overwrites it).
+pub fn local_cpu() -> DeviceSpec {
+    DeviceSpec {
+        name: "local-1core".into(),
+        kind: DeviceKind::Cpu,
+        peak_gflops: 30.0,
+        mem_gbps: 10.0,
+        pcie_gbps: None,
+        call_overhead_s: 2e-6,
+        cores: 1,
+    }
+}
+
+/// All paper machines keyed by name (CLI lookup).
+pub fn by_name(name: &str) -> Option<DeviceSpec> {
+    match name {
+        "c4.4xlarge" => Some(c4_4xlarge()),
+        "c4.8xlarge" => Some(c4_8xlarge()),
+        "k520" | "grid-k520" | "g2.2xlarge-gpu" => Some(grid_k520()),
+        "k40" => Some(k40()),
+        "g2-host-cpu" => Some(g2_host_cpu()),
+        "g2.8xlarge-cpu" => Some(g2_8xlarge_cpu()),
+        "local" => Some(local_cpu()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peaks() {
+        assert_eq!(c4_4xlarge().peak_gflops, 700.0);
+        assert_eq!(grid_k520().peak_gflops, 1300.0);
+        assert_eq!(k40().peak_gflops, 4290.0);
+        // "4× fewer peak FLOPS than the standalone CPU instance"
+        assert!((c4_4xlarge().peak_gflops / g2_host_cpu().peak_gflops - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("c4.4xlarge").is_some());
+        assert!(by_name("k40").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn gpu_profiles_have_pcie() {
+        assert!(grid_k520().pcie_gbps.is_some());
+        assert!(k40().pcie_gbps.is_some());
+        assert!(c4_4xlarge().pcie_gbps.is_none());
+    }
+}

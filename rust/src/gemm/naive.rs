@@ -1,0 +1,94 @@
+//! Reference triple-loop GEMM — the correctness oracle for the blocked
+//! and threaded kernels, and the dispatch target for tiny problems.
+
+use super::{at, GemmDims, Trans};
+
+/// C ← α·op(A)·op(B) + β·C, straightforward ikj loops.
+pub fn gemm_naive(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    let GemmDims { m, n, k } = dims;
+    // β pass first so the accumulation loop is pure +=.
+    if beta == 0.0 {
+        c[..m * n].fill(0.0);
+    } else if beta != 1.0 {
+        for x in c[..m * n].iter_mut() {
+            *x *= beta;
+        }
+    }
+    for i in 0..m {
+        for p in 0..k {
+            let aip = alpha * at(ta, a, m, k, i, p);
+            if aip == 0.0 {
+                continue;
+            }
+            match tb {
+                Trans::N => {
+                    let brow = &b[p * n..(p + 1) * n];
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aip * bv;
+                    }
+                }
+                Trans::T => {
+                    for j in 0..n {
+                        c[i * n + j] += aip * b[j * k + p];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_2x2() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1f32, 2.0, 3.0, 4.0];
+        let b = [5f32, 6.0, 7.0, 8.0];
+        let mut c = [0f32; 4];
+        gemm_naive(Trans::N, Trans::N, GemmDims { m: 2, n: 2, k: 2 }, 1.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_a() {
+        // A stored 2x3 (=k x m), logical op(A) is 3x2.
+        let a = [1f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [[1,2,3],[4,5,6]]
+        let b = [1f32, 0.0, 0.0, 1.0]; // identity 2x2
+        let mut c = [0f32; 6];
+        gemm_naive(Trans::T, Trans::N, GemmDims { m: 3, n: 2, k: 2 }, 1.0, &a, &b, 0.0, &mut c);
+        // op(A) = [[1,4],[2,5],[3,6]]
+        assert_eq!(c, [1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn transpose_b() {
+        let a = [1f32, 0.0, 0.0, 1.0];
+        // B stored 2x2 (n x k): [[1,2],[3,4]]; op(B) = [[1,3],[2,4]]
+        let b = [1f32, 2.0, 3.0, 4.0];
+        let mut c = [0f32; 4];
+        gemm_naive(Trans::N, Trans::T, GemmDims { m: 2, n: 2, k: 2 }, 1.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, [1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn alpha_beta() {
+        let a = [1f32; 4];
+        let b = [1f32; 4];
+        let mut c = [1f32; 4];
+        gemm_naive(Trans::N, Trans::N, GemmDims { m: 2, n: 2, k: 2 }, 0.5, &a, &b, 3.0, &mut c);
+        // 0.5*2 + 3*1 = 4
+        assert_eq!(c, [4.0; 4]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Threaded GEMM: strip the output rows across OS threads.
+//!
+//! The paper (§2.2) notes BLAS parallelizes GEMM "by partitioning
+//! columns of B and allocating 1 thread per partition"; the dual — rows
+//! of op(A) — is what grows with the lowered batch size, so stripping M
+//! makes the thin-matrix pathology visible exactly as in Fig 2: with
+//! b=1 the strips are slivers, packing cannot amortize, and adding
+//! threads *hurts*.
+
+use super::{gemm_blocked, BlockSizes, GemmDims, Trans};
+
+/// C ← α·op(A)·op(B) + β·C with `threads` row-strips of C computed
+/// concurrently via `std::thread::scope`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_threaded(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+) {
+    let GemmDims { m, n, k } = dims;
+    let threads = threads.max(1).min(m); // never more strips than rows
+    if threads == 1 {
+        gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, BlockSizes::default());
+        return;
+    }
+
+    // Row ranges per strip (balanced to ±1 row).
+    let base = m / threads;
+    let rem = m % threads;
+    let mut strips: Vec<(usize, usize)> = Vec::with_capacity(threads);
+    let mut row = 0;
+    for t in 0..threads {
+        let rows = base + usize::from(t < rem);
+        strips.push((row, rows));
+        row += rows;
+    }
+
+    // Split C into disjoint row-contiguous chunks and hand one per
+    // thread. Each strip's A rows are read-only views computed inside.
+    std::thread::scope(|scope| {
+        let mut c_rest = &mut c[..m * n];
+        for &(row0, rows) in &strips {
+            let (c_strip, rest) = c_rest.split_at_mut(rows * n);
+            c_rest = rest;
+            scope.spawn(move || {
+                if rows == 0 {
+                    return;
+                }
+                let sub = GemmDims { m: rows, n, k };
+                match ta {
+                    Trans::N => {
+                        // op(A) rows are contiguous storage rows.
+                        let a_strip = &a[row0 * k..(row0 + rows) * k];
+                        gemm_blocked(ta, tb, sub, alpha, a_strip, b, beta, c_strip, BlockSizes::default());
+                    }
+                    Trans::T => {
+                        // op(A) rows are storage *columns*; materialize
+                        // the strip (k × rows → rows × k) once.
+                        let mut a_strip = vec![0f32; rows * k];
+                        for r in 0..rows {
+                            for kk in 0..k {
+                                a_strip[r * k + kk] = a[kk * m + (row0 + r)];
+                            }
+                        }
+                        gemm_blocked(Trans::N, tb, sub, alpha, &a_strip, b, beta, c_strip, BlockSizes::default());
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gemm_naive;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn check(m: usize, n: usize, k: usize, threads: usize, ta: Trans, tb: Trans) {
+        let mut rng = Pcg64::new((m + n * 7 + k * 13 + threads * 29) as u64);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let mut c0 = vec![0.5f32; m * n];
+        let mut c1 = c0.clone();
+        gemm_naive(ta, tb, GemmDims { m, n, k }, 1.1, &a, &b, 0.4, &mut c0);
+        gemm_threaded(ta, tb, GemmDims { m, n, k }, 1.1, &a, &b, 0.4, &mut c1, threads);
+        for (x, y) in c0.iter().zip(c1.iter()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_various_threads() {
+        for t in [1, 2, 3, 8] {
+            check(64, 48, 32, t, Trans::N, Trans::N);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        check(3, 40, 40, 16, Trans::N, Trans::N);
+    }
+
+    #[test]
+    fn transposed_operands() {
+        check(40, 30, 20, 4, Trans::T, Trans::N);
+        check(40, 30, 20, 4, Trans::N, Trans::T);
+        check(40, 30, 20, 4, Trans::T, Trans::T);
+    }
+
+    #[test]
+    fn single_row() {
+        check(1, 64, 64, 4, Trans::N, Trans::N);
+    }
+}

@@ -1,0 +1,381 @@
+//! Convolution layer — the paper's bottleneck layer, built on the
+//! lowering engine. Supports Caffe's `group` parameter (AlexNet's
+//! grouped conv2/4/5; Fig 4(a) evaluates conv1 at "grouping 1
+//! (depth=48) and 2 (depth=96)") and a bias term per output channel.
+//!
+//! The lowering blocking is chosen per call from the
+//! [`LoweringPolicy`](super::LoweringPolicy): `Fixed(Type1)` reproduces
+//! Caffe/CcT's default; `Auto` engages the paper's automatic optimizer.
+
+use super::{ExecCtx, Layer, LoweringPolicy, ParamBlob};
+use crate::lowering::{self, optimizer, ConvShape, LoweringType};
+use crate::rng::Pcg64;
+use crate::tensor::{Shape, Tensor};
+
+/// Configuration for a conv layer (Caffe's `convolution_param`).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvConfig {
+    pub out_channels: usize,
+    pub kernel: usize,
+    pub pad: usize,
+    pub stride: usize,
+    /// Channel groups (Caffe `group`): input and output channels are
+    /// split into `group` independent convolutions.
+    pub group: usize,
+    pub bias: bool,
+    /// Gaussian init std for weights (Caffe's `weight_filler`).
+    pub weight_std: f32,
+}
+
+impl Default for ConvConfig {
+    fn default() -> Self {
+        ConvConfig { out_channels: 1, kernel: 3, pad: 0, stride: 1, group: 1, bias: true, weight_std: 0.01 }
+    }
+}
+
+pub struct ConvLayer {
+    name: String,
+    cfg: ConvConfig,
+    in_channels: usize,
+    /// (o, d/g, k, k) weights.
+    weights: ParamBlob,
+    /// (o,) biases (present iff cfg.bias).
+    biases: Option<ParamBlob>,
+}
+
+impl ConvLayer {
+    /// Create with Gaussian-initialized weights. `in_channels` is the
+    /// full input channel count d; each group convolves d/g channels.
+    pub fn new(name: &str, in_channels: usize, cfg: ConvConfig, rng: &mut Pcg64) -> Self {
+        assert!(cfg.group >= 1, "group must be ≥ 1");
+        assert_eq!(in_channels % cfg.group, 0, "in_channels {in_channels} % group {} != 0", cfg.group);
+        assert_eq!(cfg.out_channels % cfg.group, 0, "out_channels % group != 0");
+        let dg = in_channels / cfg.group;
+        let w = Tensor::randn((cfg.out_channels, dg, cfg.kernel, cfg.kernel), 0.0, cfg.weight_std, rng);
+        let weights = ParamBlob::new(w, 1.0, 1.0);
+        let biases = cfg
+            .bias
+            .then(|| ParamBlob::new(Tensor::zeros(cfg.out_channels), 2.0, 0.0));
+        ConvLayer { name: name.to_string(), cfg, in_channels, weights, biases }
+    }
+
+    pub fn config(&self) -> &ConvConfig {
+        &self.cfg
+    }
+
+    /// The per-group conv geometry for a given batch/input size.
+    pub fn group_shape(&self, b: usize, n: usize) -> ConvShape {
+        ConvShape {
+            n,
+            k: self.cfg.kernel,
+            d: self.in_channels / self.cfg.group,
+            o: self.cfg.out_channels / self.cfg.group,
+            b,
+            pad: self.cfg.pad,
+            stride: self.cfg.stride,
+        }
+    }
+
+    fn pick_lowering(&self, shape: &ConvShape, policy: &LoweringPolicy) -> LoweringType {
+        match policy {
+            LoweringPolicy::Fixed(ty) => {
+                if shape.supports_all_lowerings() {
+                    *ty
+                } else {
+                    LoweringType::Type1
+                }
+            }
+            LoweringPolicy::Auto(prof) => optimizer::choose_lowering(shape, prof),
+        }
+    }
+
+    /// Split (b, d, n, n) into the channel block for group g (copies).
+    fn group_slice(&self, x: &Tensor, g: usize) -> Tensor {
+        let (b, d, h, w) = x.shape().dims4();
+        let dg = d / self.cfg.group;
+        let mut out = Tensor::zeros((b, dg, h, w));
+        let src = x.as_slice();
+        let dst = out.as_mut_slice();
+        let chan = h * w;
+        for bi in 0..b {
+            let s = &src[(bi * d + g * dg) * chan..(bi * d + (g + 1) * dg) * chan];
+            dst[bi * dg * chan..(bi + 1) * dg * chan].copy_from_slice(s);
+        }
+        out
+    }
+
+    /// Write a (b, og, m, m) group result into channels [g·og, (g+1)·og).
+    fn scatter_group(&self, dst: &mut Tensor, part: &Tensor, g: usize) {
+        let (b, o_total, m, _) = dst.shape().dims4();
+        let (_, og, _, _) = part.shape().dims4();
+        let chan = m * m;
+        let d = dst.as_mut_slice();
+        let s = part.as_slice();
+        for bi in 0..b {
+            d[(bi * o_total + g * og) * chan..(bi * o_total + (g + 1) * og) * chan]
+                .copy_from_slice(&s[bi * og * chan..(bi + 1) * og * chan]);
+        }
+    }
+
+    /// Weight sub-blob for group g: rows [g·og, (g+1)·og) of (o, dg·k²).
+    fn group_weights(&self, g: usize) -> Tensor {
+        let (o, dg, k, _) = self.weights.data.shape().dims4();
+        let og = o / self.cfg.group;
+        let row = dg * k * k;
+        Tensor::from_vec(
+            (og, dg, k, k),
+            self.weights.data.as_slice()[g * og * row..(g + 1) * og * row].to_vec(),
+        )
+    }
+}
+
+impl Layer for ConvLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> Shape {
+        let (b, d, h, w) = in_shape.dims4();
+        assert_eq!(d, self.in_channels, "{}: input channels {d} != {}", self.name, self.in_channels);
+        assert_eq!(h, w, "square inputs only");
+        let m = self.group_shape(b, h).m();
+        Shape::from((b, self.cfg.out_channels, m, m))
+    }
+
+    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let (b, _, n, _) = bottom.shape().dims4();
+        let gshape = self.group_shape(b, n);
+        let ty = self.pick_lowering(&gshape, &ctx.lowering);
+        let m = gshape.m();
+        let mut top = if self.cfg.group == 1 {
+            lowering::conv_forward(ty, &gshape, bottom, &self.weights.data, ctx.threads)
+        } else {
+            let mut top = Tensor::zeros((b, self.cfg.out_channels, m, m));
+            for g in 0..self.cfg.group {
+                let xin = self.group_slice(bottom, g);
+                let wg = self.group_weights(g);
+                let out = lowering::conv_forward(ty, &gshape, &xin, &wg, ctx.threads);
+                self.scatter_group(&mut top, &out, g);
+            }
+            top
+        };
+
+        if let Some(bias) = &self.biases {
+            let bdat = bias.data.as_slice();
+            let chan = m * m;
+            let t = top.as_mut_slice();
+            for bi in 0..b {
+                for (j, &bv) in bdat.iter().enumerate() {
+                    if bv != 0.0 {
+                        for v in &mut t[(bi * self.cfg.out_channels + j) * chan
+                            ..(bi * self.cfg.out_channels + j + 1) * chan]
+                        {
+                            *v += bv;
+                        }
+                    }
+                }
+            }
+        }
+        top
+    }
+
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let (b, _, n, _) = bottom.shape().dims4();
+        let gshape = self.group_shape(b, n);
+        let mut d_bottom = Tensor::zeros(*bottom.shape());
+
+        // Bias gradient: sum over batch and spatial dims.
+        if let Some(bias) = &mut self.biases {
+            let (_, o, m, _) = top_grad.shape().dims4();
+            let chan = m * m;
+            let g = top_grad.as_slice();
+            let bg = bias.grad.as_mut_slice();
+            for bi in 0..b {
+                for j in 0..o {
+                    let s: f32 = g[(bi * o + j) * chan..(bi * o + j + 1) * chan].iter().sum();
+                    bg[j] += s;
+                }
+            }
+        }
+
+        // Backward always uses Type 1 (the only blocking with a
+        // col2im adjoint implemented — matching Caffe).
+        if self.cfg.group == 1 {
+            let (dd, dw) = lowering::type1::conv_type1_backward(
+                &gshape,
+                bottom,
+                &self.weights.data,
+                top_grad,
+                ctx.threads,
+            );
+            self.weights.grad.axpy(1.0, &dw);
+            d_bottom = dd;
+        } else {
+            let og = self.cfg.out_channels / self.cfg.group;
+            let (o, dg, k, _) = self.weights.data.shape().dims4();
+            let row = dg * k * k;
+            let m = gshape.m();
+            for g in 0..self.cfg.group {
+                let xin = self.group_slice(bottom, g);
+                let wg = self.group_weights(g);
+                // Slice the group's top_grad channels.
+                let mut tg = Tensor::zeros((b, og, m, m));
+                {
+                    let chan = m * m;
+                    let src = top_grad.as_slice();
+                    let dst = tg.as_mut_slice();
+                    for bi in 0..b {
+                        dst[bi * og * chan..(bi + 1) * og * chan].copy_from_slice(
+                            &src[(bi * o + g * og) * chan..(bi * o + (g + 1) * og) * chan],
+                        );
+                    }
+                }
+                let (dd, dw) = lowering::type1::conv_type1_backward(&gshape, &xin, &wg, &tg, ctx.threads);
+                // Scatter d_bottom channels.
+                {
+                    let chan = n * n;
+                    let src = dd.as_slice();
+                    let dst = d_bottom.as_mut_slice();
+                    let d_total = self.in_channels;
+                    for bi in 0..b {
+                        dst[(bi * d_total + g * dg) * chan..(bi * d_total + (g + 1) * dg) * chan]
+                            .copy_from_slice(&src[bi * dg * chan..(bi + 1) * dg * chan]);
+                    }
+                }
+                // Accumulate group weight grads.
+                let wgrad = self.weights.grad.as_mut_slice();
+                for (i, v) in dw.as_slice().iter().enumerate() {
+                    wgrad[g * og * row + i] += v;
+                }
+            }
+        }
+        d_bottom
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut ParamBlob> {
+        let mut ps = vec![&mut self.weights];
+        if let Some(b) = &mut self.biases {
+            ps.push(b);
+        }
+        ps
+    }
+
+    fn params(&self) -> Vec<&ParamBlob> {
+        let mut ps = vec![&self.weights];
+        if let Some(b) = &self.biases {
+            ps.push(b);
+        }
+        ps
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        let (b, _, n, _) = in_shape.dims4();
+        let gs = self.group_shape(b, n);
+        // Per group: 2·b·og·k²·dg·m²; total = group ×.
+        let m = gs.m() as u64;
+        let per_group = 2 * gs.b as u64 * gs.o as u64 * (gs.k * gs.k * gs.d) as u64 * m * m;
+        per_group * self.cfg.group as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowering::reference::conv_reference;
+
+    fn ctx() -> ExecCtx {
+        ExecCtx::default()
+    }
+
+    #[test]
+    fn forward_matches_reference_no_bias() {
+        let mut rng = Pcg64::new(71);
+        let cfg = ConvConfig { out_channels: 4, kernel: 3, pad: 1, stride: 2, group: 1, bias: false, weight_std: 0.1 };
+        let mut layer = ConvLayer::new("c", 3, cfg, &mut rng);
+        let x = Tensor::randn((2, 3, 9, 9), 0.0, 1.0, &mut rng);
+        let top = layer.forward(&x, &ctx());
+        let shape = layer.group_shape(2, 9);
+        let want = conv_reference(&shape, &x, &layer.weights.data);
+        assert!(top.max_abs_diff(&want) < 1e-3);
+        assert_eq!(*top.shape(), layer.out_shape(x.shape()));
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut rng = Pcg64::new(72);
+        let cfg = ConvConfig { out_channels: 2, kernel: 1, bias: true, weight_std: 0.0, ..Default::default() };
+        let mut layer = ConvLayer::new("c", 1, cfg, &mut rng);
+        layer.biases.as_mut().unwrap().data.as_mut_slice().copy_from_slice(&[1.5, -2.0]);
+        let x = Tensor::zeros((1, 1, 3, 3));
+        let top = layer.forward(&x, &ctx());
+        assert!(top.sample(0)[..9].iter().all(|&v| v == 1.5));
+        assert!(top.sample(0)[9..].iter().all(|&v| v == -2.0));
+    }
+
+    #[test]
+    fn grouped_forward_matches_manual() {
+        let mut rng = Pcg64::new(73);
+        let cfg = ConvConfig { out_channels: 4, kernel: 3, group: 2, bias: false, weight_std: 0.1, ..Default::default() };
+        let mut layer = ConvLayer::new("c", 6, cfg, &mut rng);
+        let x = Tensor::randn((1, 6, 7, 7), 0.0, 1.0, &mut rng);
+        let top = layer.forward(&x, &ctx());
+        // Manually: group 0 convolves channels 0..3 with kernels 0..2.
+        let gshape = layer.group_shape(1, 7);
+        let x0 = layer.group_slice(&x, 0);
+        let w0 = layer.group_weights(0);
+        let r0 = conv_reference(&gshape, &x0, &w0);
+        let m = gshape.m();
+        for j in 0..2 {
+            for p in 0..m * m {
+                let got = top.as_slice()[(j) * m * m + p];
+                let want = r0.as_slice()[j * m * m + p];
+                assert!((got - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_grad_check() {
+        let mut rng = Pcg64::new(74);
+        let cfg = ConvConfig { out_channels: 3, kernel: 3, pad: 1, stride: 1, group: 1, bias: true, weight_std: 0.2 };
+        let mut layer = ConvLayer::new("c", 2, cfg, &mut rng);
+        let x = Tensor::randn((2, 2, 5, 5), 0.0, 1.0, &mut rng);
+        super::super::grad_check_input(&mut layer, &x, &ctx(), 1e-2, 2e-2);
+    }
+
+    #[test]
+    fn grouped_backward_grad_check() {
+        let mut rng = Pcg64::new(75);
+        let cfg = ConvConfig { out_channels: 4, kernel: 3, group: 2, bias: false, weight_std: 0.2, ..Default::default() };
+        let mut layer = ConvLayer::new("c", 4, cfg, &mut rng);
+        let x = Tensor::randn((1, 4, 6, 6), 0.0, 1.0, &mut rng);
+        super::super::grad_check_input(&mut layer, &x, &ctx(), 1e-2, 2e-2);
+    }
+
+    #[test]
+    fn weight_grad_matches_reference() {
+        let mut rng = Pcg64::new(76);
+        let cfg = ConvConfig { out_channels: 2, kernel: 3, bias: false, weight_std: 0.3, ..Default::default() };
+        let mut layer = ConvLayer::new("c", 2, cfg, &mut rng);
+        let x = Tensor::randn((2, 2, 6, 6), 0.0, 1.0, &mut rng);
+        let top_shape = layer.out_shape(x.shape());
+        let dy = Tensor::randn(top_shape, 0.0, 1.0, &mut rng);
+        layer.backward(&x, &dy, &ctx());
+        let gshape = layer.group_shape(2, 6);
+        let (_, dw_ref) =
+            crate::lowering::reference::conv_backward_reference(&gshape, &x, &layer.weights.data, &dy);
+        assert!(layer.weights.grad.max_abs_diff(&dw_ref) < 1e-3);
+    }
+
+    #[test]
+    fn flops_counts_groups() {
+        let mut rng = Pcg64::new(77);
+        let cfg1 = ConvConfig { out_channels: 8, kernel: 3, group: 1, weight_std: 0.1, ..Default::default() };
+        let cfg2 = ConvConfig { out_channels: 8, kernel: 3, group: 2, weight_std: 0.1, ..Default::default() };
+        let l1 = ConvLayer::new("a", 8, cfg1, &mut rng);
+        let l2 = ConvLayer::new("b", 8, cfg2, &mut rng);
+        let shape = Shape::from((1, 8, 9, 9));
+        // Grouping halves the FLOPs (d/2 per output channel).
+        assert_eq!(l1.flops(&shape), 2 * l2.flops(&shape));
+    }
+}

@@ -1,0 +1,128 @@
+//! Dropout (Caffe `Dropout`): at train time zero each activation with
+//! probability p and scale survivors by 1/(1−p) (inverted dropout, as
+//! Caffe does); identity at test time. The mask is drawn from the
+//! [`ExecCtx`] seed so training runs are reproducible.
+
+use super::{ExecCtx, Layer, Phase};
+use crate::tensor::{Shape, Tensor};
+
+pub struct DropoutLayer {
+    name: String,
+    p: f32,
+    /// salt mixed into the ctx seed so stacked dropouts differ.
+    salt: u64,
+    mask: Vec<bool>,
+}
+
+impl DropoutLayer {
+    pub fn new(name: &str, p: f32) -> Self {
+        assert!((0.0..1.0).contains(&p), "dropout prob must be in [0,1)");
+        let salt = name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+        DropoutLayer { name: name.to_string(), p, salt, mask: Vec::new() }
+    }
+}
+
+impl Layer for DropoutLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> Shape {
+        *in_shape
+    }
+
+    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+        if ctx.phase == Phase::Test || self.p == 0.0 {
+            return bottom.clone();
+        }
+        let mut rng = ctx.rng(self.salt);
+        let keep_scale = 1.0 / (1.0 - self.p);
+        let mut top = bottom.clone();
+        self.mask.clear();
+        self.mask.reserve(top.numel());
+        for v in top.as_mut_slice() {
+            let keep = rng.uniform() as f32 >= self.p;
+            self.mask.push(keep);
+            *v = if keep { *v * keep_scale } else { 0.0 };
+        }
+        top
+    }
+
+    fn backward(&mut self, _bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+        if ctx.phase == Phase::Test || self.p == 0.0 {
+            return top_grad.clone();
+        }
+        assert_eq!(self.mask.len(), top_grad.numel(), "backward before forward");
+        let keep_scale = 1.0 / (1.0 - self.p);
+        let mut d = top_grad.clone();
+        for (g, &keep) in d.as_mut_slice().iter_mut().zip(self.mask.iter()) {
+            *g = if keep { *g * keep_scale } else { 0.0 };
+        }
+        d
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        in_shape.numel() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn identity_at_test_time() {
+        let mut l = DropoutLayer::new("d", 0.5);
+        let mut rng = Pcg64::new(1);
+        let x = Tensor::randn((2, 8), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx { phase: Phase::Test, ..Default::default() };
+        let y = l.forward(&x, &ctx);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn drops_roughly_p_fraction() {
+        let mut l = DropoutLayer::new("d", 0.5);
+        let x = Tensor::full((1, 10_000), 1.0);
+        let y = l.forward(&x, &ExecCtx::default());
+        let zeros = y.as_slice().iter().filter(|&&v| v == 0.0).count();
+        assert!((zeros as f64 / 10_000.0 - 0.5).abs() < 0.05);
+        // survivors are scaled by 2
+        assert!(y.as_slice().iter().all(|&v| v == 0.0 || (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn expectation_preserved() {
+        let mut l = DropoutLayer::new("d", 0.3);
+        let x = Tensor::full((1, 50_000), 1.0);
+        let y = l.forward(&x, &ExecCtx::default());
+        let mean = y.sum() / y.numel() as f64;
+        assert!((mean - 1.0).abs() < 0.05, "inverted dropout must keep E[y]=E[x], got {mean}");
+    }
+
+    #[test]
+    fn backward_uses_same_mask() {
+        let mut l = DropoutLayer::new("d", 0.5);
+        let x = Tensor::full((1, 64), 1.0);
+        let y = l.forward(&x, &ExecCtx::default());
+        let dy = Tensor::full((1, 64), 1.0);
+        let dx = l.backward(&x, &dy, &ExecCtx::default());
+        for (yv, dv) in y.as_slice().iter().zip(dx.as_slice()) {
+            assert_eq!(*yv == 0.0, *dv == 0.0, "mask mismatch between fwd and bwd");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut l = DropoutLayer::new("d", 0.5);
+        let x = Tensor::full((1, 128), 1.0);
+        let ctx = ExecCtx { seed: 42, ..Default::default() };
+        let y1 = l.forward(&x, &ctx);
+        let y2 = l.forward(&x, &ctx);
+        assert_eq!(y1, y2);
+        let ctx2 = ExecCtx { seed: 43, ..Default::default() };
+        let y3 = l.forward(&x, &ctx2);
+        assert_ne!(y1, y3);
+    }
+}

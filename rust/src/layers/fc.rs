@@ -1,0 +1,196 @@
+//! Fully-connected layer (Caffe `InnerProduct`), built directly on the
+//! GEMM substrate: y = x·Wᵀ + b with x flattened to (b, features).
+
+use super::{ExecCtx, Layer, ParamBlob};
+use crate::gemm::{sgemm, GemmDims, Trans};
+use crate::rng::Pcg64;
+use crate::tensor::{Shape, Tensor};
+
+pub struct FcLayer {
+    name: String,
+    in_features: usize,
+    out_features: usize,
+    /// (out, in) weights.
+    weights: ParamBlob,
+    biases: ParamBlob,
+}
+
+impl FcLayer {
+    pub fn new(name: &str, in_features: usize, out_features: usize, weight_std: f32, rng: &mut Pcg64) -> Self {
+        let w = Tensor::randn((out_features, in_features), 0.0, weight_std, rng);
+        FcLayer {
+            name: name.to_string(),
+            in_features,
+            out_features,
+            weights: ParamBlob::new(w, 1.0, 1.0),
+            biases: ParamBlob::new(Tensor::zeros(out_features), 2.0, 0.0),
+        }
+    }
+
+    fn batch_features(&self, in_shape: &Shape) -> (usize, usize) {
+        let dims = in_shape.dims();
+        let b = dims[0];
+        let feats: usize = dims[1..].iter().product();
+        assert_eq!(
+            feats, self.in_features,
+            "{}: flattened input {feats} != in_features {}",
+            self.name, self.in_features
+        );
+        (b, feats)
+    }
+}
+
+impl Layer for FcLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> Shape {
+        let (b, _) = self.batch_features(in_shape);
+        Shape::from((b, self.out_features))
+    }
+
+    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let (b, feats) = self.batch_features(bottom.shape());
+        let mut top = Tensor::zeros((b, self.out_features));
+        // y (b, out) = x (b, in) · Wᵀ (in, out)
+        sgemm(
+            Trans::N,
+            Trans::T,
+            GemmDims { m: b, n: self.out_features, k: feats },
+            1.0,
+            bottom.as_slice(),
+            self.weights.data.as_slice(),
+            0.0,
+            top.as_mut_slice(),
+            ctx.threads,
+        );
+        let bias = self.biases.data.as_slice();
+        let t = top.as_mut_slice();
+        for bi in 0..b {
+            for (j, &bv) in bias.iter().enumerate() {
+                t[bi * self.out_features + j] += bv;
+            }
+        }
+        top
+    }
+
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let (b, feats) = self.batch_features(bottom.shape());
+        // dW (out, in) += dyᵀ (out, b) · x (b, in)
+        sgemm(
+            Trans::T,
+            Trans::N,
+            GemmDims { m: self.out_features, n: feats, k: b },
+            1.0,
+            top_grad.as_slice(),
+            bottom.as_slice(),
+            1.0,
+            self.weights.grad.as_mut_slice(),
+            ctx.threads,
+        );
+        // db += Σ_b dy
+        let dg = top_grad.as_slice();
+        let bg = self.biases.grad.as_mut_slice();
+        for bi in 0..b {
+            for j in 0..self.out_features {
+                bg[j] += dg[bi * self.out_features + j];
+            }
+        }
+        // dx (b, in) = dy (b, out) · W (out, in)
+        let mut d_bottom = Tensor::zeros(*bottom.shape());
+        sgemm(
+            Trans::N,
+            Trans::N,
+            GemmDims { m: b, n: feats, k: self.out_features },
+            1.0,
+            top_grad.as_slice(),
+            self.weights.data.as_slice(),
+            0.0,
+            d_bottom.as_mut_slice(),
+            ctx.threads,
+        );
+        d_bottom
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut ParamBlob> {
+        vec![&mut self.weights, &mut self.biases]
+    }
+
+    fn params(&self) -> Vec<&ParamBlob> {
+        vec![&self.weights, &self.biases]
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        let b = in_shape.dim0() as u64;
+        2 * b * self.in_features as u64 * self.out_features as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_known_values() {
+        let mut rng = Pcg64::new(81);
+        let mut fc = FcLayer::new("fc", 3, 2, 0.0, &mut rng);
+        fc.weights.data.as_mut_slice().copy_from_slice(&[1., 0., 0., 0., 1., 0.]);
+        fc.biases.data.as_mut_slice().copy_from_slice(&[0.5, -0.5]);
+        let x = Tensor::from_vec((2, 3), vec![1., 2., 3., 4., 5., 6.]);
+        let y = fc.forward(&x, &ExecCtx::default());
+        assert_eq!(y.as_slice(), &[1.5, 1.5, 4.5, 4.5]);
+    }
+
+    #[test]
+    fn accepts_4d_input() {
+        let mut rng = Pcg64::new(82);
+        let mut fc = FcLayer::new("fc", 2 * 3 * 3, 4, 0.01, &mut rng);
+        let x = Tensor::zeros((5, 2, 3, 3));
+        let y = fc.forward(&x, &ExecCtx::default());
+        assert_eq!(y.shape().dims2(), (5, 4));
+    }
+
+    #[test]
+    fn grad_check() {
+        let mut rng = Pcg64::new(83);
+        let mut fc = FcLayer::new("fc", 6, 4, 0.3, &mut rng);
+        let x = Tensor::randn((3, 6), 0.0, 1.0, &mut rng);
+        super::super::grad_check_input(&mut fc, &x, &ExecCtx::default(), 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn weight_grad_finite_difference() {
+        let mut rng = Pcg64::new(84);
+        let mut fc = FcLayer::new("fc", 4, 3, 0.3, &mut rng);
+        let x = Tensor::randn((2, 4), 0.0, 1.0, &mut rng);
+        let dy = Tensor::full((2, 3), 1.0);
+        fc.backward(&x, &dy, &ExecCtx::default());
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, 11] {
+            let orig = fc.weights.data.as_slice()[idx];
+            fc.weights.data.as_mut_slice()[idx] = orig + eps;
+            let fp = fc.forward(&x, &ExecCtx::default()).sum();
+            fc.weights.data.as_mut_slice()[idx] = orig - eps;
+            let fm = fc.forward(&x, &ExecCtx::default()).sum();
+            fc.weights.data.as_mut_slice()[idx] = orig;
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            let an = fc.weights.grad.as_slice()[idx];
+            assert!((fd - an).abs() < 1e-2, "dW[{idx}] fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn grad_accumulates_across_calls() {
+        let mut rng = Pcg64::new(85);
+        let mut fc = FcLayer::new("fc", 2, 2, 0.1, &mut rng);
+        let x = Tensor::full((1, 2), 1.0);
+        let dy = Tensor::full((1, 2), 1.0);
+        fc.backward(&x, &dy, &ExecCtx::default());
+        let g1 = fc.weights.grad.as_slice().to_vec();
+        fc.backward(&x, &dy, &ExecCtx::default());
+        for (a, b) in fc.weights.grad.as_slice().iter().zip(g1.iter()) {
+            assert!((a - 2.0 * b).abs() < 1e-5);
+        }
+    }
+}

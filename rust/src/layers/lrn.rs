@@ -1,0 +1,161 @@
+//! Local Response Normalization (Caffe `LRN`, cross-channel mode) —
+//! AlexNet's norm1/norm2:
+//!
+//! `y_i = x_i / (k + α/size · Σ_{j∈window(i)} x_j²)^β`
+//!
+//! with the window of `size` channels centered on i (AlexNet: size=5,
+//! α=1e-4, β=0.75, k=1). Caffe folds α/size into the scale.
+
+use super::{ExecCtx, Layer};
+use crate::tensor::{Shape, Tensor};
+
+pub struct LrnLayer {
+    name: String,
+    size: usize,
+    alpha: f32,
+    beta: f32,
+    k: f32,
+    /// scale_i = k + α/size·Σ x² cached by forward.
+    scale: Tensor,
+}
+
+impl LrnLayer {
+    pub fn new(name: &str, size: usize, alpha: f32, beta: f32, k: f32) -> Self {
+        assert!(size % 2 == 1, "LRN size must be odd");
+        LrnLayer { name: name.to_string(), size, alpha, beta, k, scale: Tensor::zeros(1usize) }
+    }
+
+    /// AlexNet's parameters.
+    pub fn alexnet(name: &str) -> Self {
+        Self::new(name, 5, 1e-4, 0.75, 1.0)
+    }
+}
+
+impl Layer for LrnLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> Shape {
+        *in_shape
+    }
+
+    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let (b, c, h, w) = bottom.shape().dims4();
+        let half = self.size / 2;
+        let a_over_n = self.alpha / self.size as f32;
+        let mut scale = Tensor::zeros(*bottom.shape());
+        let mut top = Tensor::zeros(*bottom.shape());
+        let x = bottom.as_slice();
+        let s = scale.as_mut_slice();
+        let y = top.as_mut_slice();
+        let plane = h * w;
+        for bi in 0..b {
+            for i in 0..c {
+                let lo = i.saturating_sub(half);
+                let hi = (i + half).min(c - 1);
+                for p in 0..plane {
+                    let mut acc = 0f32;
+                    for j in lo..=hi {
+                        let v = x[(bi * c + j) * plane + p];
+                        acc += v * v;
+                    }
+                    let sc = self.k + a_over_n * acc;
+                    let idx = (bi * c + i) * plane + p;
+                    s[idx] = sc;
+                    y[idx] = x[idx] * sc.powf(-self.beta);
+                }
+            }
+        }
+        self.scale = scale;
+        top
+    }
+
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        // dx_i = dy_i·s_i^{−β} − 2αβ/size · x_i · Σ_{j: i∈window(j)} dy_j·x_j·s_j^{−β−1}
+        let (b, c, h, w) = bottom.shape().dims4();
+        assert_eq!(self.scale.shape(), bottom.shape(), "backward before forward");
+        let half = self.size / 2;
+        let a_over_n = self.alpha / self.size as f32;
+        let plane = h * w;
+        let x = bottom.as_slice();
+        let dy = top_grad.as_slice();
+        let s = self.scale.as_slice();
+        let mut d_bottom = Tensor::zeros(*bottom.shape());
+        let dx = d_bottom.as_mut_slice();
+        for bi in 0..b {
+            for p in 0..plane {
+                // precompute t_j = dy_j · x_j · s_j^{−β−1} for this pixel
+                let mut t = vec![0f32; c];
+                for j in 0..c {
+                    let idx = (bi * c + j) * plane + p;
+                    t[j] = dy[idx] * x[idx] * s[idx].powf(-self.beta - 1.0);
+                }
+                for i in 0..c {
+                    let idx = (bi * c + i) * plane + p;
+                    let lo = i.saturating_sub(half);
+                    let hi = (i + half).min(c - 1);
+                    let cross: f32 = t[lo..=hi].iter().sum();
+                    dx[idx] = dy[idx] * s[idx].powf(-self.beta)
+                        - 2.0 * a_over_n * self.beta * x[idx] * cross;
+                }
+            }
+        }
+        d_bottom
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        (in_shape.numel() * (2 * self.size + 3)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn identity_when_alpha_zero() {
+        let mut l = LrnLayer::new("n", 5, 0.0, 0.75, 1.0);
+        let mut rng = Pcg64::new(91);
+        let x = Tensor::randn((1, 8, 3, 3), 0.0, 1.0, &mut rng);
+        let y = l.forward(&x, &ExecCtx::default());
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn known_single_channel() {
+        // 1 channel, size 1 window: y = x/(1 + α·x²)^β
+        let mut l = LrnLayer::new("n", 1, 2.0, 1.0, 1.0);
+        let x = Tensor::from_vec((1, 1, 1, 2), vec![1.0, 2.0]);
+        let y = l.forward(&x, &ExecCtx::default());
+        assert!((y.as_slice()[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert!((y.as_slice()[1] - 2.0 / 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn window_clips_at_edges() {
+        let mut l = LrnLayer::alexnet("n");
+        let mut rng = Pcg64::new(92);
+        let x = Tensor::randn((2, 3, 2, 2), 0.0, 1.0, &mut rng); // c < size
+        let y = l.forward(&x, &ExecCtx::default());
+        assert_eq!(y.shape(), x.shape());
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn grad_check() {
+        let mut rng = Pcg64::new(93);
+        let mut l = LrnLayer::new("n", 3, 0.5, 0.75, 1.0);
+        let x = Tensor::randn((1, 5, 2, 2), 0.0, 1.0, &mut rng);
+        super::super::grad_check_input(&mut l, &x, &ExecCtx::default(), 1e-3, 2e-2);
+    }
+
+    #[test]
+    fn normalization_shrinks_large_activations() {
+        let mut l = LrnLayer::new("n", 3, 1.0, 0.75, 1.0);
+        let x = Tensor::full((1, 3, 1, 1), 10.0);
+        let y = l.forward(&x, &ExecCtx::default());
+        assert!(y.as_slice().iter().all(|&v| v < 10.0 && v > 0.0));
+    }
+}

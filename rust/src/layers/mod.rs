@@ -1,0 +1,163 @@
+//! Layer zoo (substrate S6) — Caffe-compatible layer semantics.
+//!
+//! Every layer implements [`Layer`]: shape inference, `forward`, and
+//! `backward` (input gradient + parameter gradients). Semantics match
+//! Caffe's so that the CaffeNet/AlexNet presets are faithful: conv
+//! (with grouping), ReLU, max/avg pooling, LRN (AlexNet's
+//! cross-channel normalization), inner product, dropout, and
+//! softmax-with-loss.
+//!
+//! The paper's observation that "the bottleneck layers are the
+//! so-called convolutional layers, which consume between 70-90% of
+//! execution time" is reproduced by the per-layer timers the net keeps
+//! (see `net::Net::forward_backward_timed` and bench `fig3_partitions`).
+
+pub mod conv;
+mod dropout;
+mod fc;
+mod lrn;
+mod pool;
+mod relu;
+mod softmax;
+
+pub use conv::ConvLayer;
+pub use dropout::DropoutLayer;
+pub use fc::FcLayer;
+pub use lrn::LrnLayer;
+pub use pool::{PoolLayer, PoolMode};
+pub use relu::ReluLayer;
+pub use softmax::SoftmaxLossLayer;
+
+use crate::lowering::{LoweringType, MachineProfile};
+use crate::rng::Pcg64;
+use crate::tensor::{Shape, Tensor};
+
+/// Train vs test phase (dropout behaves differently).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Train,
+    Test,
+}
+
+/// How conv layers pick their lowering.
+#[derive(Clone, Copy, Debug)]
+pub enum LoweringPolicy {
+    /// Always use the given blocking (Caffe uses Type 1).
+    Fixed(LoweringType),
+    /// Cost-model optimizer per layer (the paper's automatic optimizer).
+    Auto(MachineProfile),
+}
+
+/// Per-call execution context threaded through the net.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecCtx {
+    /// GEMM / lowering threads for this call.
+    pub threads: usize,
+    pub phase: Phase,
+    pub lowering: LoweringPolicy,
+    /// Seed for stochastic layers (dropout); the net derives a fresh
+    /// one per step so runs are reproducible.
+    pub seed: u64,
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx {
+            threads: 1,
+            phase: Phase::Train,
+            lowering: LoweringPolicy::Fixed(LoweringType::Type1),
+            seed: 0,
+        }
+    }
+}
+
+impl ExecCtx {
+    pub fn rng(&self, salt: u64) -> Pcg64 {
+        Pcg64::with_stream(self.seed, salt)
+    }
+}
+
+/// A learnable parameter: value + gradient accumulator + solver hints.
+#[derive(Clone, Debug)]
+pub struct ParamBlob {
+    pub data: Tensor,
+    pub grad: Tensor,
+    /// Learning-rate multiplier (Caffe's `lr_mult`; biases use 2×).
+    pub lr_mult: f32,
+    /// Weight-decay multiplier (biases use 0).
+    pub decay_mult: f32,
+}
+
+impl ParamBlob {
+    pub fn new(data: Tensor, lr_mult: f32, decay_mult: f32) -> Self {
+        let grad = Tensor::zeros(*data.shape());
+        ParamBlob { data, grad, lr_mult, decay_mult }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.as_mut_slice().fill(0.0);
+    }
+}
+
+/// The layer interface (Caffe's `Layer<Dtype>` reduced to one bottom /
+/// one top, which covers the sequential nets the paper evaluates; the
+/// loss layer takes labels separately).
+pub trait Layer: Send {
+    fn name(&self) -> &str;
+
+    /// Output shape for a given input shape (panics on mismatch).
+    fn out_shape(&self, in_shape: &Shape) -> Shape;
+
+    /// Forward pass.
+    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor;
+
+    /// Backward pass: given the input and the gradient w.r.t. the
+    /// output, return the gradient w.r.t. the input and *accumulate*
+    /// parameter gradients into the blobs.
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor;
+
+    /// Learnable parameters (empty for stateless layers).
+    fn params_mut(&mut self) -> Vec<&mut ParamBlob> {
+        Vec::new()
+    }
+
+    /// Immutable view of parameters.
+    fn params(&self) -> Vec<&ParamBlob> {
+        Vec::new()
+    }
+
+    /// Approximate forward FLOPs for a given input shape (used by the
+    /// FLOPS-proportional scheduler and the Fig 3/4 analyses).
+    fn flops(&self, in_shape: &Shape) -> u64;
+}
+
+/// Finite-difference gradient checking helper shared by layer tests.
+#[cfg(test)]
+pub(crate) fn grad_check_input<L: Layer>(
+    layer: &mut L,
+    bottom: &Tensor,
+    ctx: &ExecCtx,
+    eps: f32,
+    tol: f32,
+) {
+    // Scalar loss = sum(forward(x)); analytic dx vs central differences.
+    let top = layer.forward(bottom, ctx);
+    let ones = Tensor::full(*top.shape(), 1.0);
+    let d_bottom = layer.backward(bottom, &ones, ctx);
+
+    let probes = [0usize, bottom.numel() / 2, bottom.numel() - 1];
+    for &idx in &probes {
+        let mut bp = bottom.clone();
+        bp.as_mut_slice()[idx] += eps;
+        let mut bm = bottom.clone();
+        bm.as_mut_slice()[idx] -= eps;
+        let fp = layer.forward(&bp, ctx).sum();
+        let fm = layer.forward(&bm, ctx).sum();
+        let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+        let an = d_bottom.as_slice()[idx];
+        assert!(
+            (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
+            "grad check failed at {idx}: fd={fd} analytic={an}"
+        );
+    }
+}

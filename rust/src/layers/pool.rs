@@ -1,0 +1,239 @@
+//! Spatial pooling (Caffe `Pooling`): max (AlexNet's pool1/2/5) and
+//! average, with Caffe's ceil-mode output sizing and window clipping.
+
+use super::{ExecCtx, Layer};
+use crate::tensor::{Shape, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    Max,
+    Avg,
+}
+
+pub struct PoolLayer {
+    name: String,
+    mode: PoolMode,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    /// argmax indices cached by forward for the max backward.
+    argmax: Vec<usize>,
+}
+
+impl PoolLayer {
+    pub fn new(name: &str, mode: PoolMode, kernel: usize, stride: usize, pad: usize) -> Self {
+        assert!(kernel > 0 && stride > 0);
+        PoolLayer { name: name.to_string(), mode, kernel, stride, pad, argmax: Vec::new() }
+    }
+
+    /// Caffe uses ceil sizing for pooling: m = ceil((n + 2p − k)/s) + 1,
+    /// clipping the last window to the input.
+    fn out_size(&self, n: usize) -> usize {
+        let padded = n + 2 * self.pad;
+        assert!(padded >= self.kernel, "pool kernel larger than input");
+        let mut m = (padded - self.kernel).div_ceil(self.stride) + 1;
+        if self.pad > 0 {
+            // Caffe: last window must start inside the (padded) input.
+            if (m - 1) * self.stride >= n + self.pad {
+                m -= 1;
+            }
+        }
+        m
+    }
+}
+
+impl Layer for PoolLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> Shape {
+        let (b, c, h, w) = in_shape.dims4();
+        assert_eq!(h, w);
+        let m = self.out_size(h);
+        Shape::from((b, c, m, m))
+    }
+
+    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let (b, c, n, _) = bottom.shape().dims4();
+        let m = self.out_size(n);
+        let mut top = Tensor::zeros((b, c, m, m));
+        if self.mode == PoolMode::Max {
+            self.argmax.clear();
+            self.argmax.resize(b * c * m * m, usize::MAX);
+        }
+        let src = bottom.as_slice();
+        let dst = top.as_mut_slice();
+        for bc in 0..b * c {
+            let plane = &src[bc * n * n..(bc + 1) * n * n];
+            for r in 0..m {
+                let r0 = (r * self.stride) as isize - self.pad as isize;
+                for col in 0..m {
+                    let c0 = (col * self.stride) as isize - self.pad as isize;
+                    let out_idx = bc * m * m + r * m + col;
+                    match self.mode {
+                        PoolMode::Max => {
+                            let mut best = f32::NEG_INFINITY;
+                            let mut best_idx = 0usize;
+                            for kr in 0..self.kernel {
+                                let rr = r0 + kr as isize;
+                                if rr < 0 || rr >= n as isize {
+                                    continue;
+                                }
+                                for kc in 0..self.kernel {
+                                    let cc = c0 + kc as isize;
+                                    if cc < 0 || cc >= n as isize {
+                                        continue;
+                                    }
+                                    let idx = rr as usize * n + cc as usize;
+                                    if plane[idx] > best {
+                                        best = plane[idx];
+                                        best_idx = idx;
+                                    }
+                                }
+                            }
+                            dst[out_idx] = best;
+                            self.argmax[out_idx] = bc * n * n + best_idx;
+                        }
+                        PoolMode::Avg => {
+                            let mut acc = 0f32;
+                            for kr in 0..self.kernel {
+                                let rr = r0 + kr as isize;
+                                if rr < 0 || rr >= n as isize {
+                                    continue;
+                                }
+                                for kc in 0..self.kernel {
+                                    let cc = c0 + kc as isize;
+                                    if cc < 0 || cc >= n as isize {
+                                        continue;
+                                    }
+                                    acc += plane[rr as usize * n + cc as usize];
+                                }
+                            }
+                            // Caffe divides by the full window area
+                            // (padding included).
+                            dst[out_idx] = acc / (self.kernel * self.kernel) as f32;
+                        }
+                    }
+                }
+            }
+        }
+        top
+    }
+
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let (b, c, n, _) = bottom.shape().dims4();
+        let (_, _, m, _) = top_grad.shape().dims4();
+        let mut d_bottom = Tensor::zeros(*bottom.shape());
+        let dsrc = top_grad.as_slice();
+        let ddst = d_bottom.as_mut_slice();
+        match self.mode {
+            PoolMode::Max => {
+                assert_eq!(self.argmax.len(), dsrc.len(), "backward before forward");
+                for (out_idx, &g) in dsrc.iter().enumerate() {
+                    let src_idx = self.argmax[out_idx];
+                    if src_idx != usize::MAX {
+                        ddst[src_idx] += g;
+                    }
+                }
+            }
+            PoolMode::Avg => {
+                let area = (self.kernel * self.kernel) as f32;
+                for bc in 0..b * c {
+                    for r in 0..m {
+                        let r0 = (r * self.stride) as isize - self.pad as isize;
+                        for col in 0..m {
+                            let c0 = (col * self.stride) as isize - self.pad as isize;
+                            let g = dsrc[bc * m * m + r * m + col] / area;
+                            for kr in 0..self.kernel {
+                                let rr = r0 + kr as isize;
+                                if rr < 0 || rr >= n as isize {
+                                    continue;
+                                }
+                                for kc in 0..self.kernel {
+                                    let cc = c0 + kc as isize;
+                                    if cc < 0 || cc >= n as isize {
+                                        continue;
+                                    }
+                                    ddst[bc * n * n + rr as usize * n + cc as usize] += g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        d_bottom
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        let (b, c, h, _) = in_shape.dims4();
+        let m = self.out_size(h);
+        (b * c * m * m * self.kernel * self.kernel) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_pool_sizing() {
+        // AlexNet pool1: 55 → 27 with k=3, s=2 (ceil mode).
+        let p = PoolLayer::new("p", PoolMode::Max, 3, 2, 0);
+        assert_eq!(p.out_size(55), 27);
+        // pool5: 13 → 6
+        assert_eq!(p.out_size(13), 6);
+    }
+
+    #[test]
+    fn max_pool_values() {
+        let mut p = PoolLayer::new("p", PoolMode::Max, 2, 2, 0);
+        let x = Tensor::from_vec((1, 1, 4, 4), (0..16).map(|v| v as f32).collect());
+        let y = p.forward(&x, &ExecCtx::default());
+        assert_eq!(y.as_slice(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn max_pool_backward_routes_to_argmax() {
+        let mut p = PoolLayer::new("p", PoolMode::Max, 2, 2, 0);
+        let x = Tensor::from_vec((1, 1, 2, 2), vec![1.0, 5.0, 3.0, 2.0]);
+        let _ = p.forward(&x, &ExecCtx::default());
+        let dy = Tensor::full((1, 1, 1, 1), 2.0);
+        let dx = p.backward(&x, &dy, &ExecCtx::default());
+        assert_eq!(dx.as_slice(), &[0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn avg_pool_values_and_grad() {
+        let mut p = PoolLayer::new("p", PoolMode::Avg, 2, 2, 0);
+        let x = Tensor::from_vec((1, 1, 2, 2), vec![1.0, 2.0, 3.0, 4.0]);
+        let y = p.forward(&x, &ExecCtx::default());
+        assert_eq!(y.as_slice(), &[2.5]);
+        let dy = Tensor::full((1, 1, 1, 1), 4.0);
+        let dx = p.backward(&x, &dy, &ExecCtx::default());
+        assert_eq!(dx.as_slice(), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn avg_grad_check() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(2);
+        let mut p = PoolLayer::new("p", PoolMode::Avg, 3, 2, 1);
+        let x = Tensor::randn((2, 2, 6, 6), 0.0, 1.0, &mut rng);
+        super::super::grad_check_input(&mut p, &x, &ExecCtx::default(), 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn overlapping_max_pool_grad_accumulates() {
+        // AlexNet uses overlapping pooling (k=3, s=2): one input cell
+        // can be the max of several windows.
+        let mut p = PoolLayer::new("p", PoolMode::Max, 3, 2, 0);
+        let mut x = Tensor::zeros((1, 1, 5, 5));
+        x.set4(0, 0, 2, 2, 10.0); // center wins every window
+        let _ = p.forward(&x, &ExecCtx::default());
+        let dy = Tensor::full((1, 1, 2, 2), 1.0);
+        let dx = p.backward(&x, &dy, &ExecCtx::default());
+        assert_eq!(dx.at4(0, 0, 2, 2), 4.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! ReLU activation (in Caffe: `ReLU`, computed in place; we keep it
+//! pure for the sequential net's caching simplicity).
+
+use super::{ExecCtx, Layer};
+use crate::tensor::{Shape, Tensor};
+
+pub struct ReluLayer {
+    name: String,
+}
+
+impl ReluLayer {
+    pub fn new(name: &str) -> Self {
+        ReluLayer { name: name.to_string() }
+    }
+}
+
+impl Layer for ReluLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> Shape {
+        *in_shape
+    }
+
+    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let mut top = bottom.clone();
+        for v in top.as_mut_slice() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        top
+    }
+
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let mut d = top_grad.clone();
+        for (g, &x) in d.as_mut_slice().iter_mut().zip(bottom.as_slice()) {
+            if x <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        d
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        in_shape.numel() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_negatives() {
+        let mut l = ReluLayer::new("r");
+        let x = Tensor::from_vec((1, 1, 2, 2), vec![-1.0, 2.0, 0.0, -0.5]);
+        let y = l.forward(&x, &ExecCtx::default());
+        assert_eq!(y.as_slice(), &[0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gradient_masks() {
+        let mut l = ReluLayer::new("r");
+        let x = Tensor::from_vec((1, 1, 2, 2), vec![-1.0, 2.0, 0.0, 3.0]);
+        let dy = Tensor::full((1, 1, 2, 2), 1.0);
+        let dx = l.backward(&x, &dy, &ExecCtx::default());
+        assert_eq!(dx.as_slice(), &[0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn grad_check() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(1);
+        let mut l = ReluLayer::new("r");
+        // keep away from the kink at 0
+        let mut x = Tensor::randn((2, 3, 4, 4), 0.0, 1.0, &mut rng);
+        for v in x.as_mut_slice() {
+            if v.abs() < 0.1 {
+                *v += 0.2;
+            }
+        }
+        super::super::grad_check_input(&mut l, &x, &ExecCtx::default(), 1e-3, 1e-2);
+    }
+}

@@ -1,0 +1,195 @@
+//! Softmax + multinomial logistic loss (Caffe `SoftmaxWithLoss`),
+//! fused for numerical stability: loss = −(1/b)·Σ log softmax(x)[label].
+
+use super::{ExecCtx, Layer};
+use crate::tensor::{Shape, Tensor};
+
+pub struct SoftmaxLossLayer {
+    name: String,
+    /// Integer class labels (len = batch); set before forward.
+    labels: Vec<usize>,
+    /// Cached probabilities from forward (b, classes).
+    probs: Tensor,
+    /// Loss of the last forward.
+    last_loss: f64,
+}
+
+impl SoftmaxLossLayer {
+    pub fn new(name: &str) -> Self {
+        SoftmaxLossLayer {
+            name: name.to_string(),
+            labels: Vec::new(),
+            probs: Tensor::zeros(1usize),
+            last_loss: 0.0,
+        }
+    }
+
+    pub fn set_labels(&mut self, labels: &[usize]) {
+        self.labels = labels.to_vec();
+    }
+
+    pub fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    /// Softmax probabilities of the last forward.
+    pub fn probabilities(&self) -> &Tensor {
+        &self.probs
+    }
+
+    /// Top-1 accuracy of the last forward against the stored labels.
+    pub fn accuracy(&self) -> f64 {
+        let (b, c) = self.probs.shape().dims2();
+        let mut correct = 0usize;
+        for bi in 0..b {
+            let row = &self.probs.as_slice()[bi * c..(bi + 1) * c];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == self.labels[bi] {
+                correct += 1;
+            }
+        }
+        correct as f64 / b as f64
+    }
+}
+
+impl Layer for SoftmaxLossLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, _in_shape: &Shape) -> Shape {
+        Shape::from(1usize)
+    }
+
+    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        let dims = bottom.shape().dims();
+        let b = dims[0];
+        let c: usize = dims[1..].iter().product();
+        assert_eq!(self.labels.len(), b, "{}: labels not set for batch {b}", self.name);
+        let x = bottom.as_slice();
+        let mut probs = Tensor::zeros((b, c));
+        let p = probs.as_mut_slice();
+        let mut loss = 0f64;
+        for bi in 0..b {
+            let row = &x[bi * c..(bi + 1) * c];
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f64;
+            for (j, &v) in row.iter().enumerate() {
+                let e = ((v - max) as f64).exp();
+                p[bi * c + j] = e as f32;
+                denom += e;
+            }
+            let label = self.labels[bi];
+            assert!(label < c, "label {label} out of range for {c} classes");
+            for j in 0..c {
+                p[bi * c + j] /= denom as f32;
+            }
+            loss -= (p[bi * c + label] as f64).max(1e-30).ln();
+        }
+        self.last_loss = loss / b as f64;
+        self.probs = probs;
+        Tensor::from_vec(1usize, vec![self.last_loss as f32])
+    }
+
+    fn backward(&mut self, bottom: &Tensor, _top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
+        // d/dx = (softmax(x) − onehot(label)) / b
+        let dims = bottom.shape().dims();
+        let b = dims[0];
+        let c: usize = dims[1..].iter().product();
+        let mut d = Tensor::from_vec(*bottom.shape(), self.probs.as_slice().to_vec());
+        let dd = d.as_mut_slice();
+        for bi in 0..b {
+            dd[bi * c + self.labels[bi]] -= 1.0;
+        }
+        let scale = 1.0 / b as f32;
+        for v in dd.iter_mut() {
+            *v *= scale;
+        }
+        d
+    }
+
+    fn flops(&self, in_shape: &Shape) -> u64 {
+        (in_shape.numel() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn uniform_logits_give_log_c() {
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.set_labels(&[0, 1]);
+        let x = Tensor::zeros((2, 10));
+        let loss = l.forward(&x, &ExecCtx::default());
+        assert!((loss.as_slice()[0] as f64 - (10f64).ln()).abs() < 1e-5);
+        assert!((l.last_loss() - (10f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn confident_correct_prediction_low_loss() {
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.set_labels(&[2]);
+        let x = Tensor::from_vec((1, 3), vec![0.0, 0.0, 20.0]);
+        let loss = l.forward(&x, &ExecCtx::default());
+        assert!(loss.as_slice()[0] < 1e-3);
+        assert!((l.accuracy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn numerically_stable_for_large_logits() {
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.set_labels(&[0]);
+        let x = Tensor::from_vec((1, 2), vec![1e4, 1e4 - 5.0]);
+        let loss = l.forward(&x, &ExecCtx::default());
+        assert!(loss.as_slice()[0].is_finite());
+    }
+
+    #[test]
+    fn gradient_sums_to_zero_per_sample() {
+        let mut rng = Pcg64::new(95);
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.set_labels(&[1, 3]);
+        let x = Tensor::randn((2, 5), 0.0, 2.0, &mut rng);
+        let _ = l.forward(&x, &ExecCtx::default());
+        let d = l.backward(&x, &Tensor::full(1usize, 1.0), &ExecCtx::default());
+        for bi in 0..2 {
+            let s: f32 = d.as_slice()[bi * 5..(bi + 1) * 5].iter().sum();
+            assert!(s.abs() < 1e-6, "per-sample grad must sum to 0, got {s}");
+        }
+    }
+
+    #[test]
+    fn grad_check_loss() {
+        let mut rng = Pcg64::new(96);
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.set_labels(&[0, 2, 1]);
+        let x = Tensor::randn((3, 4), 0.0, 1.0, &mut rng);
+        let _ = l.forward(&x, &ExecCtx::default());
+        let d = l.backward(&x, &Tensor::full(1usize, 1.0), &ExecCtx::default());
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, 11] {
+            let mut xp = x.clone();
+            xp.as_mut_slice()[idx] += eps;
+            let mut xm = x.clone();
+            xm.as_mut_slice()[idx] -= eps;
+            let fp = {
+                l.forward(&xp, &ExecCtx::default());
+                l.last_loss()
+            };
+            let fm = {
+                l.forward(&xm, &ExecCtx::default());
+                l.last_loss()
+            };
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - d.as_slice()[idx]).abs() < 1e-3, "fd={fd} an={}", d.as_slice()[idx]);
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # Caffe con Troll (CcT) — reproduction library
+//!
+//! A from-scratch reproduction of *"Caffe con Troll: Shallow Ideas to
+//! Speed Up Deep Learning"* (Hadjis, Abuzaid, Zhang, Ré; 2015) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's contributions, and where they live here:
+//!
+//! * **Lowering tradeoffs** (Type 1 / Type 2 / Type 3 blockings of the
+//!   convolution-as-GEMM transformation) — [`lowering`].
+//! * **Cost model + automatic lowering optimizer** — [`lowering::cost`]
+//!   and [`lowering::optimizer`].
+//! * **Batching analysis** (batch the lowering + GEMM over the whole
+//!   mini-batch, partition the batch across workers) — [`coordinator`].
+//! * **FLOPS-proportional cross-device scheduling** (CPU+GPU hybrid
+//!   within a single layer) — [`coordinator::scheduler`] over [`device`].
+//!
+//! Everything Caffe provided as a substrate is rebuilt in-tree:
+//! a BLAS-substitute GEMM ([`gemm`]), a layer zoo ([`layers`]), a
+//! net/config framework ([`net`]), an SGD solver ([`solver`]), and a
+//! data pipeline ([`data`]). The AOT-compiled JAX/Pallas model is
+//! executed through [`runtime`] (XLA PJRT).
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod gemm;
+pub mod layers;
+pub mod lowering;
+pub mod net;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod tensor;
+pub mod testing;
+
+/// Convenient result alias used across the crate.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,189 @@
+//! Analytical cost model of the three lowerings — the paper's Fig 6,
+//! parameterized by (n, k, d, o, b) with m = n − k + 1.
+//!
+//! | | Lowering 1 | Lowering 2 | Lowering 3 |
+//! |----------------------|------------|------------|------------|
+//! | Lowered data size | (k²d, m²) | (kd, mn) | (d, n²) |
+//! | Lowered kernel size | (o, k²d) | (ok, kd) | (ok², d) |
+//! | GEMM FLOPs | 2ok²dm² | 2ok²dmn | 2ok²dn² |
+//! | Lift FLOPs | 0 | m²ko | m²k²o |
+//! | Lift RAM reads | om² | okmn | ok²n² |
+//!
+//! (The paper tabulates per-image sizes; every accessor here takes the
+//! batch multiplier into account when `b > 1`.) The model feeds the
+//! automatic optimizer ([`super::optimizer`]), which converts these
+//! counts into a time estimate using a machine profile.
+
+use super::{ConvShape, LoweringType};
+
+/// Per-strategy cost counts (whole batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoweringCost {
+    /// Elements of the lowered data matrix D̂.
+    pub lowered_data_elems: u64,
+    /// Elements of the lowered kernel matrix K̂.
+    pub lowered_kernel_elems: u64,
+    /// Elements of the GEMM output R̂.
+    pub gemm_output_elems: u64,
+    /// FLOPs of the multiply phase (2·M·N·K convention, as Fig 6).
+    pub gemm_flops: u64,
+    /// FLOPs (adds) of the lifting phase.
+    pub lift_flops: u64,
+    /// RAM reads during lifting (elements of R̂ touched).
+    pub lift_ram_reads: u64,
+    /// Elements *written* during the lowering phase (data movement of
+    /// the lowering itself; Type 1's k² blow-up shows up here).
+    pub lower_writes: u64,
+}
+
+impl LoweringCost {
+    /// Working-set bytes of the lowered data + output matrices
+    /// (the Fig 2(c) memory-footprint quantity).
+    pub fn workspace_bytes(&self) -> u64 {
+        4 * (self.lowered_data_elems + self.gemm_output_elems)
+    }
+}
+
+/// The cost model over a conv shape.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub shape: ConvShape,
+}
+
+impl CostModel {
+    pub fn new(shape: ConvShape) -> Self {
+        CostModel { shape }
+    }
+
+    /// Fig 6 column for one strategy (batch-scaled).
+    pub fn cost(&self, ty: LoweringType) -> LoweringCost {
+        let s = &self.shape;
+        let (n, k, d, o, b) = (s.n as u64, s.k as u64, s.d as u64, s.o as u64, s.b as u64);
+        let m = s.m() as u64;
+        match ty {
+            LoweringType::Type1 => LoweringCost {
+                lowered_data_elems: b * m * m * k * k * d,
+                lowered_kernel_elems: o * k * k * d,
+                gemm_output_elems: b * m * m * o,
+                gemm_flops: 2 * b * o * k * k * d * m * m,
+                lift_flops: 0,
+                lift_ram_reads: b * o * m * m,
+                lower_writes: b * m * m * k * k * d,
+            },
+            LoweringType::Type2 => LoweringCost {
+                lowered_data_elems: b * n * m * k * d,
+                lowered_kernel_elems: o * k * k * d,
+                gemm_output_elems: b * n * m * k * o,
+                gemm_flops: 2 * b * o * k * k * d * m * n,
+                lift_flops: b * m * m * k * o,
+                lift_ram_reads: b * o * k * m * n,
+                lower_writes: b * n * m * k * d,
+            },
+            LoweringType::Type3 => LoweringCost {
+                lowered_data_elems: b * n * n * d,
+                lowered_kernel_elems: o * k * k * d,
+                gemm_output_elems: b * n * n * k * k * o,
+                gemm_flops: 2 * b * o * k * k * d * n * n,
+                lift_flops: b * m * m * k * k * o,
+                lift_ram_reads: b * o * k * k * n * n,
+                lower_writes: b * n * n * d,
+            },
+        }
+    }
+
+    /// FLOPs of the direct (un-lowered) convolution — the "useful work"
+    /// baseline all strategies are compared against.
+    pub fn direct_flops(&self) -> u64 {
+        let s = &self.shape;
+        let m = s.m() as u64;
+        2 * s.b as u64 * s.o as u64 * s.k as u64 * s.k as u64 * s.d as u64 * m * m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv2() -> CostModel {
+        // AlexNet conv2 (paper Fig 7): n=27, k=5, d=96, o=256.
+        CostModel::new(ConvShape::simple(27, 5, 96, 256, 1))
+    }
+
+    #[test]
+    fn type1_matches_fig6() {
+        let c = conv2().cost(LoweringType::Type1);
+        let (m, k, d, o) = (23u64, 5u64, 96u64, 256u64);
+        assert_eq!(c.lowered_data_elems, m * m * k * k * d);
+        assert_eq!(c.lowered_kernel_elems, o * k * k * d);
+        assert_eq!(c.gemm_flops, 2 * o * k * k * d * m * m);
+        assert_eq!(c.lift_flops, 0);
+        assert_eq!(c.lift_ram_reads, o * m * m);
+    }
+
+    #[test]
+    fn type2_matches_fig6() {
+        let c = conv2().cost(LoweringType::Type2);
+        let (n, m, k, d, o) = (27u64, 23u64, 5u64, 96u64, 256u64);
+        assert_eq!(c.lowered_data_elems, n * m * k * d);
+        assert_eq!(c.gemm_flops, 2 * o * k * k * d * m * n);
+        assert_eq!(c.lift_flops, m * m * k * o);
+        assert_eq!(c.lift_ram_reads, o * k * m * n);
+    }
+
+    #[test]
+    fn type3_matches_fig6() {
+        let c = conv2().cost(LoweringType::Type3);
+        let (n, m, k, d, o) = (27u64, 23u64, 5u64, 96u64, 256u64);
+        assert_eq!(c.lowered_data_elems, n * n * d);
+        assert_eq!(c.gemm_flops, 2 * o * k * k * d * n * n);
+        assert_eq!(c.lift_flops, m * m * k * k * o);
+        assert_eq!(c.lift_ram_reads, o * k * k * n * n);
+    }
+
+    #[test]
+    fn gemm_flops_ordering() {
+        // Fig 6: m ≤ mn^(1/2)... more precisely m² ≤ mn ≤ n², so
+        // FLOPs(T1) ≤ FLOPs(T2) ≤ FLOPs(T3).
+        let cm = conv2();
+        let f1 = cm.cost(LoweringType::Type1).gemm_flops;
+        let f2 = cm.cost(LoweringType::Type2).gemm_flops;
+        let f3 = cm.cost(LoweringType::Type3).gemm_flops;
+        assert!(f1 <= f2 && f2 <= f3);
+    }
+
+    #[test]
+    fn lift_cost_ordering() {
+        let cm = conv2();
+        let l1 = cm.cost(LoweringType::Type1).lift_flops;
+        let l2 = cm.cost(LoweringType::Type2).lift_flops;
+        let l3 = cm.cost(LoweringType::Type3).lift_flops;
+        assert!(l1 <= l2 && l2 <= l3);
+    }
+
+    #[test]
+    fn lowered_size_ordering() {
+        // Data blow-up: T1 (k²) > T2 (k) > T3 (1).
+        let cm = conv2();
+        let s1 = cm.cost(LoweringType::Type1).lowered_data_elems;
+        let s2 = cm.cost(LoweringType::Type2).lowered_data_elems;
+        let s3 = cm.cost(LoweringType::Type3).lowered_data_elems;
+        assert!(s1 > s2 && s2 > s3);
+    }
+
+    #[test]
+    fn batch_scales_linearly() {
+        let c1 = CostModel::new(ConvShape::simple(13, 3, 256, 384, 1)).cost(LoweringType::Type1);
+        let c8 = CostModel::new(ConvShape::simple(13, 3, 256, 384, 8)).cost(LoweringType::Type1);
+        assert_eq!(c8.gemm_flops, 8 * c1.gemm_flops);
+        assert_eq!(c8.lowered_data_elems, 8 * c1.lowered_data_elems);
+        // kernel matrix does not scale with batch
+        assert_eq!(c8.lowered_kernel_elems, c1.lowered_kernel_elems);
+    }
+
+    #[test]
+    fn type1_gemm_equals_direct() {
+        // Type 1 does no redundant multiply work.
+        let cm = conv2();
+        assert_eq!(cm.cost(LoweringType::Type1).gemm_flops, cm.direct_flops());
+    }
+}

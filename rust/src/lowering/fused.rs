@@ -1,0 +1,179 @@
+//! Fused lowering+GEMM (paper §2.1 "Fusion": "it is straightforward to
+//! fuse all three steps to avoid the materialization cost of lowering;
+//! this requires rewriting BLAS kernels … up to 60%").
+//!
+//! We implement the fusion the way a BLAS-kernel rewrite would: the
+//! GEMM's A-panel *packing* step reads directly from the image tensor
+//! (performing the im2col indexing on the fly into the packed
+//! micro-panel buffer) instead of from a materialized D̂. The packed
+//! panel is the only copy ever made, so the k²-redundant D̂ matrix
+//! (Type 1's dominant memory cost) never exists; everything else —
+//! blocking, microkernel — is identical to the blocked GEMM.
+
+use super::type1::{lift, lowered_cols, lowered_rows};
+use super::ConvShape;
+use crate::gemm::{gemm_blocked, BlockSizes, Trans};
+use crate::tensor::Tensor;
+
+/// Pack one virtual D̂ row segment [pc, pc+kc) for output position
+/// `row` directly from the image tensor, run-length-copying the
+/// contiguous (fixed channel, fixed kernel-row) spans — the same fast
+/// path the materialized im2col uses, but blocked to kc columns.
+/// row = bi·m² + r·m + c; col = (i·k + rk)·k + ck.
+#[inline]
+fn pack_dhat_row(shape: &ConvShape, data: &[f32], row: usize, pc: usize, kc: usize, dst: &mut [f32]) {
+    let &ConvShape { n, k, d, pad, stride, .. } = shape;
+    let m = shape.m();
+    let mm = m * m;
+    let bi = row / mm;
+    let pos = row % mm;
+    let (r, c) = (pos / m, pos % m);
+    let img = &data[bi * d * n * n..(bi + 1) * d * n * n];
+
+    let mut col = pc;
+    let mut idx = 0;
+    while idx < kc {
+        let i = col / (k * k);
+        let tap = col % (k * k);
+        let (rk, ck) = (tap / k, tap % k);
+        // run of consecutive ck taps in this (i, rk) span
+        let run = (k - ck).min(kc - idx);
+        let rr = (r * stride + rk) as isize - pad as isize;
+        let cc0 = (c * stride + ck) as isize - pad as isize;
+        let out = &mut dst[idx..idx + run];
+        if rr < 0 || rr >= n as isize {
+            out.fill(0.0);
+        } else if cc0 >= 0 && cc0 + run as isize <= n as isize {
+            // fully interior: straight memcpy
+            let base = i * n * n + rr as usize * n + cc0 as usize;
+            out.copy_from_slice(&img[base..base + run]);
+        } else {
+            for (t, v) in out.iter_mut().enumerate() {
+                let cc = cc0 + t as isize;
+                *v = if cc < 0 || cc >= n as isize {
+                    0.0
+                } else {
+                    img[i * n * n + rr as usize * n + cc as usize]
+                };
+            }
+        }
+        idx += run;
+        col += run;
+    }
+}
+
+/// Fused Type-1 convolution: im2col happens inside the A-panel packing
+/// of a hand-rolled blocked GEMM; D̂ is never materialized.
+pub fn conv_fused(shape: &ConvShape, data: &Tensor, weights: &Tensor, _threads: usize) -> Tensor {
+    let rows = lowered_rows(shape);
+    let cols = lowered_cols(shape);
+    let o = shape.o;
+    let src = data.as_slice();
+    let w = weights.as_slice();
+
+    // Wider strips than the GEMM default: each inner gemm_blocked call
+    // re-packs its operands, so fused blocks are sized to amortize that
+    // (workspace stays ≪ the materialized D̂).
+    let bs = BlockSizes { mc: 1024, kc: 768, ..BlockSizes::default() };
+
+    let mut r_hat = vec![0f32; rows * o];
+
+    // Goto-style outer loops; the A strip is materialized *per block*
+    // directly from the image tensor (the fused im2col) — only
+    // mc×kc elements live at a time instead of the full rows×cols D̂.
+    let mut a_strip = vec![0f32; bs.mc.min(rows) * bs.kc.min(cols)];
+    let mut wt_block = vec![0f32; bs.kc.min(cols) * o];
+    let mut c_block = vec![0f32; bs.mc.min(rows) * o];
+    let mut pc = 0;
+    while pc < cols {
+        let kc = bs.kc.min(cols - pc);
+        // W is (o, cols); transpose the kc-column block once per pc.
+        for j in 0..o {
+            for kk in 0..kc {
+                wt_block[kk * o + j] = w[j * cols + pc + kk];
+            }
+        }
+        let mut ic = 0;
+        while ic < rows {
+            let mc = bs.mc.min(rows - ic);
+            // Fused pack: the only materialization of D̂ entries.
+            for r in 0..mc {
+                pack_dhat_row(shape, src, ic + r, pc, kc, &mut a_strip[r * kc..(r + 1) * kc]);
+            }
+            gemm_blocked(
+                Trans::N,
+                Trans::N,
+                crate::gemm::GemmDims { m: mc, n: o, k: kc },
+                1.0,
+                &a_strip,
+                &wt_block,
+                0.0,
+                &mut c_block,
+                bs,
+            );
+            for r in 0..mc {
+                let dst = &mut r_hat[(ic + r) * o..(ic + r + 1) * o];
+                for (dv, sv) in dst.iter_mut().zip(&c_block[r * o..(r + 1) * o]) {
+                    *dv += sv;
+                }
+            }
+            ic += mc;
+        }
+        pc += kc;
+    }
+
+    let mut out = Tensor::zeros(shape.output_shape());
+    lift(shape, &r_hat, &mut out);
+    out
+}
+
+/// Peak extra memory (bytes) of the fused path: one packed panel + one
+/// A strip + output block, instead of the full (b·m² × k²d) D̂.
+pub fn fused_workspace_bytes(shape: &ConvShape) -> usize {
+    let bs = BlockSizes::default();
+    let cols = lowered_cols(shape);
+    let kc = bs.kc.min(cols);
+    let mc = bs.mc.min(lowered_rows(shape));
+    4 * (mc * kc * 2 + kc * shape.o + mc * shape.o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::conv_reference;
+    use super::super::type1::Workspace;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn fused_matches_reference() {
+        let mut rng = Pcg64::new(61);
+        for &(n, k, d, o, b, pad, stride) in &[
+            (8usize, 3usize, 3usize, 5usize, 2usize, 0usize, 1usize),
+            (9, 3, 2, 4, 1, 1, 2),
+            (6, 5, 4, 2, 3, 0, 1),
+        ] {
+            let shape = ConvShape { n, k, d, o, b, pad, stride };
+            let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+            let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+            let got = conv_fused(&shape, &data, &w, 1);
+            let want = conv_reference(&shape, &data, &w);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "fused mismatch {} on {shape:?}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn fused_workspace_far_smaller_than_materialized() {
+        // The point of fusion: memory footprint independent of b·m².
+        let shape = ConvShape::simple(27, 5, 96, 256, 64);
+        let materialized = Workspace::new(&shape).bytes();
+        let fused = fused_workspace_bytes(&shape);
+        assert!(
+            (fused as f64) < materialized as f64 / 20.0,
+            "fused {fused} vs materialized {materialized}"
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Lowering-based convolution (the paper's §2.1 contribution, S4/S5).
+//!
+//! A convolutional layer consumes a batch of data tensors `D ∈
+//! R^{d×n×n}` (CHW; the paper writes HWC — the math is identical) and
+//! `o` kernels `K_j ∈ R^{d×k×k}`, producing `R ∈ R^{o×m×m}` with
+//! `m = (n + 2·pad − k)/stride + 1`.
+//!
+//! *Lowering* turns the tensor contraction into a GEMM. The paper's
+//! observation is that there are (at least) three distinct matrix
+//! blockings, trading lowering-phase blow-up against lifting-phase
+//! work:
+//!
+//! | | lowered data | lowered kernel | GEMM FLOPs | lift FLOPs |
+//! |-------|--------------------|----------------|------------|------------|
+//! | Type 1 (expensive lowering) | (b·m², k²d) | (k²d, o) | 2·b·o·k²·d·m² | 0 (layout permute) |
+//! | Type 2 (balanced) | (b·n·m, k·d) | (k·d, k·o) | 2·b·o·k²·d·m·n | b·m²·k·o |
+//! | Type 3 (expensive lifting) | (b·n², d) | (d, k²·o) | 2·b·o·k²·d·n² | b·m²·k²·o |
+//!
+//! Type 1 is classic im2col (Chellapilla et al. 2006; what Caffe and
+//! cuDNN use). Types 2 and 3 shrink the lowered data matrix by a
+//! factor of k / k² at the price of redundant GEMM FLOPs (n·m/m²,
+//! n²/m² blow-up) plus a reduction during lifting. The best choice is
+//! governed by the input/output channel ratio d/o (Fig 8c), captured
+//! by [`cost`] and picked automatically by [`optimizer`].
+//!
+//! Types 2 and 3 are defined (as in the paper) for the un-padded,
+//! unit-stride convolution; Type 1 handles general pad/stride and is
+//! the blocking used by the training path's backward pass.
+
+pub mod cost;
+pub mod fused;
+pub mod optimizer;
+pub mod reference;
+pub mod type1;
+pub mod type2;
+pub mod type3;
+
+pub use cost::{CostModel, LoweringCost};
+pub use optimizer::{choose_lowering, MachineProfile};
+
+use crate::tensor::Tensor;
+
+/// Which lowering blocking to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoweringType {
+    /// Expensive lowering / trivial lifting (im2col).
+    Type1,
+    /// Balanced.
+    Type2,
+    /// Cheap lowering / expensive lifting.
+    Type3,
+}
+
+impl LoweringType {
+    pub const ALL: [LoweringType; 3] = [LoweringType::Type1, LoweringType::Type2, LoweringType::Type3];
+}
+
+impl std::fmt::Display for LoweringType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoweringType::Type1 => write!(f, "type1"),
+            LoweringType::Type2 => write!(f, "type2"),
+            LoweringType::Type3 => write!(f, "type3"),
+        }
+    }
+}
+
+/// Geometry of one convolution (square spatial dims, as in the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input spatial size (n×n).
+    pub n: usize,
+    /// Kernel spatial size (k×k).
+    pub k: usize,
+    /// Input channels.
+    pub d: usize,
+    /// Output channels (number of kernels).
+    pub o: usize,
+    /// Batch size.
+    pub b: usize,
+    /// Zero padding on each side.
+    pub pad: usize,
+    /// Stride.
+    pub stride: usize,
+}
+
+impl ConvShape {
+    /// Unit-stride, unpadded shape (the paper's formal setting).
+    pub fn simple(n: usize, k: usize, d: usize, o: usize, b: usize) -> Self {
+        ConvShape { n, k, d, o, b, pad: 0, stride: 1 }
+    }
+
+    /// Output spatial size m.
+    pub fn m(&self) -> usize {
+        assert!(
+            self.n + 2 * self.pad >= self.k,
+            "kernel {} larger than padded input {}",
+            self.k,
+            self.n + 2 * self.pad
+        );
+        (self.n + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Whether Type 2 / Type 3 blockings apply (paper setting).
+    pub fn supports_all_lowerings(&self) -> bool {
+        self.pad == 0 && self.stride == 1
+    }
+
+    /// Input tensor shape (b, d, n, n).
+    pub fn input_shape(&self) -> (usize, usize, usize, usize) {
+        (self.b, self.d, self.n, self.n)
+    }
+
+    /// Weight tensor shape (o, d, k, k) — Caffe layout.
+    pub fn weight_shape(&self) -> (usize, usize, usize, usize) {
+        (self.o, self.d, self.k, self.k)
+    }
+
+    /// Output tensor shape (b, o, m, m).
+    pub fn output_shape(&self) -> (usize, usize, usize, usize) {
+        let m = self.m();
+        (self.b, self.o, m, m)
+    }
+}
+
+/// Convolve with the given lowering strategy. Data `(b,d,n,n)`, weights
+/// `(o,d,k,k)`, returns `(b,o,m,m)`. `threads` is forwarded to the
+/// GEMM. Types 2/3 panic on padded/strided shapes — callers route
+/// those to Type 1 (as [`crate::layers`]' conv does).
+pub fn conv_forward(
+    ty: LoweringType,
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    threads: usize,
+) -> Tensor {
+    assert_eq!(data.shape().dims4(), shape.input_shape(), "data shape mismatch");
+    assert_eq!(weights.shape().dims4(), shape.weight_shape(), "weight shape mismatch");
+    match ty {
+        LoweringType::Type1 => type1::conv_type1(shape, data, weights, threads),
+        LoweringType::Type2 => type2::conv_type2(shape, data, weights, threads),
+        LoweringType::Type3 => type3::conv_type3(shape, data, weights, threads),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::Prop;
+
+    #[test]
+    fn conv_shape_m() {
+        assert_eq!(ConvShape::simple(27, 5, 96, 256, 1).m(), 23);
+        let s = ConvShape { n: 227, k: 11, d: 3, o: 96, b: 1, pad: 0, stride: 4 };
+        assert_eq!(s.m(), 55); // AlexNet conv1
+        let s2 = ConvShape { n: 27, k: 5, d: 96, o: 256, b: 1, pad: 2, stride: 1 };
+        assert_eq!(s2.m(), 27); // AlexNet conv2
+    }
+
+    #[test]
+    fn all_types_agree_with_reference() {
+        let mut rng = Pcg64::new(7);
+        let shape = ConvShape::simple(9, 3, 4, 5, 2);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let want = reference::conv_reference(&shape, &data, &w);
+        for ty in LoweringType::ALL {
+            let got = conv_forward(ty, &shape, &data, &w, 1);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "{ty} disagrees with reference by {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn property_lowerings_agree() {
+        Prop::new("lowerings agree with direct conv", 25).run(|g| {
+            let k = g.usize_in(1, 4);
+            let n = k + g.usize_in(0, 6);
+            let shape = ConvShape::simple(n, k, g.usize_in(1, 5), g.usize_in(1, 5), g.usize_in(1, 3));
+            let mut rng = Pcg64::new(g.usize_in(0, u32::MAX as usize) as u64);
+            let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+            let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+            let want = reference::conv_reference(&shape, &data, &w);
+            for ty in LoweringType::ALL {
+                let got = conv_forward(ty, &shape, &data, &w, 1);
+                assert!(got.max_abs_diff(&want) < 1e-3, "{ty} mismatch on {shape:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn type1_padded_strided_matches_reference() {
+        let mut rng = Pcg64::new(8);
+        for &(n, k, pad, stride) in &[(11usize, 3usize, 1usize, 2usize), (8, 4, 2, 3), (7, 1, 0, 2)] {
+            let shape = ConvShape { n, k, d: 3, o: 4, b: 2, pad, stride };
+            let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+            let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+            let want = reference::conv_reference(&shape, &data, &w);
+            let got = conv_forward(LoweringType::Type1, &shape, &data, &w, 1);
+            assert!(got.max_abs_diff(&want) < 1e-3, "pad={pad} stride={stride}");
+        }
+    }
+
+    #[test]
+    fn multithreaded_conv_matches() {
+        let mut rng = Pcg64::new(9);
+        let shape = ConvShape::simple(13, 3, 8, 6, 4);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let t1 = conv_forward(LoweringType::Type1, &shape, &data, &w, 1);
+        let t4 = conv_forward(LoweringType::Type1, &shape, &data, &w, 4);
+        assert!(t1.max_abs_diff(&t4) < 1e-4);
+    }
+}

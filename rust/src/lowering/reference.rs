@@ -1,0 +1,159 @@
+//! Direct (un-lowered) convolution — the correctness oracle every
+//! lowering strategy is tested against. Implements Equation 1 of the
+//! paper verbatim (plus pad/stride generalization), with no blocking
+//! tricks; O(b·o·m²·d·k²) scalar loops.
+
+use super::ConvShape;
+use crate::tensor::Tensor;
+
+/// R[bi, j, r, c] = Σ_{i,r',c'} D[bi, i, r·s + r' − p, c·s + c' − p] · K[j, i, r', c']
+/// (zero outside the input).
+pub fn conv_reference(shape: &ConvShape, data: &Tensor, weights: &Tensor) -> Tensor {
+    let &ConvShape { n, k, d, o, b, pad, stride } = shape;
+    let m = shape.m();
+    let mut out = Tensor::zeros((b, o, m, m));
+    for bi in 0..b {
+        for j in 0..o {
+            for r in 0..m {
+                for c in 0..m {
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        for rk in 0..k {
+                            let rr = (r * stride + rk) as isize - pad as isize;
+                            if rr < 0 || rr >= n as isize {
+                                continue;
+                            }
+                            for ck in 0..k {
+                                let cc = (c * stride + ck) as isize - pad as isize;
+                                if cc < 0 || cc >= n as isize {
+                                    continue;
+                                }
+                                acc += data.at4(bi, i, rr as usize, cc as usize)
+                                    * weights.at4(j, i, rk, ck);
+                            }
+                        }
+                    }
+                    out.set4(bi, j, r, c, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Direct gradients via Equation 1 — oracle for the conv backward pass.
+/// Returns (d_data, d_weights) given upstream d_out `(b,o,m,m)`.
+pub fn conv_backward_reference(
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    d_out: &Tensor,
+) -> (Tensor, Tensor) {
+    let &ConvShape { n, k, d, o, b, pad, stride } = shape;
+    let m = shape.m();
+    assert_eq!(d_out.shape().dims4(), (b, o, m, m));
+    let mut d_data = Tensor::zeros(shape.input_shape());
+    let mut d_w = Tensor::zeros(shape.weight_shape());
+    for bi in 0..b {
+        for j in 0..o {
+            for r in 0..m {
+                for c in 0..m {
+                    let g = d_out.at4(bi, j, r, c);
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for i in 0..d {
+                        for rk in 0..k {
+                            let rr = (r * stride + rk) as isize - pad as isize;
+                            if rr < 0 || rr >= n as isize {
+                                continue;
+                            }
+                            for ck in 0..k {
+                                let cc = (c * stride + ck) as isize - pad as isize;
+                                if cc < 0 || cc >= n as isize {
+                                    continue;
+                                }
+                                let (rr, cc) = (rr as usize, cc as usize);
+                                let dv = d_data.at4(bi, i, rr, cc)
+                                    + g * weights.at4(j, i, rk, ck);
+                                d_data.set4(bi, i, rr, cc, dv);
+                                let wv = d_w.at4(j, i, rk, ck) + g * data.at4(bi, i, rr, cc);
+                                d_w.set4(j, i, rk, ck, wv);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (d_data, d_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-computed 1-channel 3×3 ⊛ 2×2 valid convolution.
+    #[test]
+    fn known_small_convolution() {
+        let shape = ConvShape::simple(3, 2, 1, 1, 1);
+        let data = Tensor::from_vec((1, 1, 3, 3), vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let w = Tensor::from_vec((1, 1, 2, 2), vec![1., 0., 0., 1.]);
+        let r = conv_reference(&shape, &data, &w);
+        // Each output = top-left + bottom-right of the 2×2 window.
+        assert_eq!(r.as_slice(), &[1. + 5., 2. + 6., 4. + 8., 5. + 9.]);
+    }
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let shape = ConvShape::simple(4, 1, 2, 2, 1);
+        let data = Tensor::arange((1, 2, 4, 4));
+        // K[j,i] = δ_{ji} as 1×1 kernels
+        let w = Tensor::from_vec((2, 2, 1, 1), vec![1., 0., 0., 1.]);
+        let r = conv_reference(&shape, &data, &w);
+        assert_eq!(r.as_slice(), data.as_slice());
+    }
+
+    #[test]
+    fn padding_adds_border_zeros() {
+        let shape = ConvShape { n: 2, k: 3, d: 1, o: 1, b: 1, pad: 1, stride: 1 };
+        assert_eq!(shape.m(), 2);
+        let data = Tensor::from_vec((1, 1, 2, 2), vec![1., 2., 3., 4.]);
+        let w = Tensor::full((1, 1, 3, 3), 1.0);
+        let r = conv_reference(&shape, &data, &w);
+        // All four outputs are sums over windows clipped to the 2×2 input.
+        assert_eq!(r.as_slice(), &[10., 10., 10., 10.]);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(21);
+        let shape = ConvShape { n: 5, k: 3, d: 2, o: 2, b: 1, pad: 1, stride: 2 };
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let d_out = Tensor::full(shape.output_shape(), 1.0);
+        let (dd, dw) = conv_backward_reference(&shape, &data, &w, &d_out);
+
+        let eps = 1e-2f32;
+        let loss = |data: &Tensor, w: &Tensor| conv_reference(&shape, data, w).sum() as f32;
+        // check a few weight coords
+        for idx in [0usize, 3, 7, dw.numel() - 1] {
+            let mut wp = w.clone();
+            wp.as_mut_slice()[idx] += eps;
+            let mut wm = w.clone();
+            wm.as_mut_slice()[idx] -= eps;
+            let fd = (loss(&data, &wp) - loss(&data, &wm)) / (2.0 * eps);
+            assert!((fd - dw.as_slice()[idx]).abs() < 1e-1, "dw[{idx}]: fd={fd} an={}", dw.as_slice()[idx]);
+        }
+        // and a few data coords
+        for idx in [0usize, 11, dd.numel() - 1] {
+            let mut dp = data.clone();
+            dp.as_mut_slice()[idx] += eps;
+            let mut dm = data.clone();
+            dm.as_mut_slice()[idx] -= eps;
+            let fd = (loss(&dp, &w) - loss(&dm, &w)) / (2.0 * eps);
+            assert!((fd - dd.as_slice()[idx]).abs() < 1e-1, "dd[{idx}]: fd={fd} an={}", dd.as_slice()[idx]);
+        }
+    }
+}

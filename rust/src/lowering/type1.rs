@@ -1,0 +1,391 @@
+//! Type 1 — *Expensive Lowering* (classic batched im2col).
+//!
+//! `D̂ ∈ R^{(b·m²) × (k²d)}`: each row is the vectorized k×k×d input
+//! window for one output position of one image; the lowering makes up
+//! to k² copies of every input value. `K̂` is the weight tensor viewed
+//! as an `(o, k²d)` matrix (Caffe's native layout), used transposed in
+//! the GEMM, so `R̂ = D̂·K̂ᵀ ∈ R^{(b·m²) × o}` and lifting is a pure
+//! layout permute (HWC→CHW transpose per image) with zero FLOPs —
+//! matching the Fig 6 row (lift FLOPs = 0, RAM reads = o·m²).
+//!
+//! This is the only blocking that supports general pad/stride, and the
+//! one the backward pass uses (`col2im` scatter-add, as in Caffe).
+//!
+//! **Batching (§2.2):** `lower_batch` lowers the *entire* mini-batch
+//! into one matrix so a single fat GEMM runs over it — the CcT
+//! strategy. Caffe's per-image strategy is `b = 1` rows at a time; the
+//! coordinator reproduces it by slicing the batch (see
+//! `coordinator::partitioner`).
+
+use super::ConvShape;
+use crate::gemm::{sgemm, GemmDims, Trans};
+use crate::tensor::Tensor;
+
+/// Number of columns of the lowered data matrix.
+pub fn lowered_cols(shape: &ConvShape) -> usize {
+    shape.k * shape.k * shape.d
+}
+
+/// Number of rows of the lowered data matrix for the full batch.
+pub fn lowered_rows(shape: &ConvShape) -> usize {
+    let m = shape.m();
+    shape.b * m * m
+}
+
+/// im2col over the whole batch into `out` (len ≥ rows·cols).
+/// Row `bi·m² + r·m + c`, column `(i·k + rk)·k + ck`.
+pub fn lower_batch(shape: &ConvShape, data: &Tensor, out: &mut [f32]) {
+    let &ConvShape { n, k, d, b, pad, stride, .. } = shape;
+    let m = shape.m();
+    let cols = lowered_cols(shape);
+    assert!(out.len() >= b * m * m * cols, "lowering buffer too small");
+    let src = data.as_slice();
+    let img_stride = d * n * n;
+
+    for bi in 0..b {
+        let img = &src[bi * img_stride..(bi + 1) * img_stride];
+        let base_row = bi * m * m;
+        for r in 0..m {
+            let r0 = (r * stride) as isize - pad as isize;
+            for c in 0..m {
+                let c0 = (c * stride) as isize - pad as isize;
+                let row = &mut out[(base_row + r * m + c) * cols..(base_row + r * m + c + 1) * cols];
+                let mut idx = 0;
+                for i in 0..d {
+                    let chan = &img[i * n * n..(i + 1) * n * n];
+                    for rk in 0..k {
+                        let rr = r0 + rk as isize;
+                        if rr < 0 || rr >= n as isize {
+                            row[idx..idx + k].fill(0.0);
+                            idx += k;
+                            continue;
+                        }
+                        let rrow = &chan[rr as usize * n..(rr as usize + 1) * n];
+                        // Fast path: fully interior window row.
+                        if c0 >= 0 && c0 + k as isize <= n as isize {
+                            row[idx..idx + k].copy_from_slice(&rrow[c0 as usize..c0 as usize + k]);
+                            idx += k;
+                        } else {
+                            for ck in 0..k {
+                                let cc = c0 + ck as isize;
+                                row[idx] = if cc < 0 || cc >= n as isize {
+                                    0.0
+                                } else {
+                                    rrow[cc as usize]
+                                };
+                                idx += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`lower_batch`]: scatter-add the lowered gradient back to
+/// image space (Caffe's `col2im`). `d_lowered` is (b·m², k²d).
+pub fn col2im_batch(shape: &ConvShape, d_lowered: &[f32], d_data: &mut Tensor) {
+    let &ConvShape { n, k, d, b, pad, stride, .. } = shape;
+    let m = shape.m();
+    let cols = lowered_cols(shape);
+    assert_eq!(d_data.shape().dims4(), shape.input_shape());
+    let dst = d_data.as_mut_slice();
+    let img_stride = d * n * n;
+
+    for bi in 0..b {
+        let img = &mut dst[bi * img_stride..(bi + 1) * img_stride];
+        let base_row = bi * m * m;
+        for r in 0..m {
+            let r0 = (r * stride) as isize - pad as isize;
+            for c in 0..m {
+                let c0 = (c * stride) as isize - pad as isize;
+                let row = &d_lowered[(base_row + r * m + c) * cols..(base_row + r * m + c + 1) * cols];
+                let mut idx = 0;
+                for i in 0..d {
+                    for rk in 0..k {
+                        let rr = r0 + rk as isize;
+                        if rr < 0 || rr >= n as isize {
+                            idx += k;
+                            continue;
+                        }
+                        for ck in 0..k {
+                            let cc = c0 + ck as isize;
+                            if cc >= 0 && cc < n as isize {
+                                img[i * n * n + rr as usize * n + cc as usize] += row[idx];
+                            }
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Lift `R̂ (b·m², o)` to NCHW `(b, o, m, m)`: per-image transpose.
+pub fn lift(shape: &ConvShape, r_hat: &[f32], out: &mut Tensor) {
+    let &ConvShape { o, b, .. } = shape;
+    let m = shape.m();
+    let mm = m * m;
+    assert_eq!(out.shape().dims4(), shape.output_shape());
+    let dst = out.as_mut_slice();
+    for bi in 0..b {
+        let src_base = bi * mm * o;
+        let dst_base = bi * o * mm;
+        for pos in 0..mm {
+            let srow = &r_hat[src_base + pos * o..src_base + (pos + 1) * o];
+            for (j, &v) in srow.iter().enumerate() {
+                dst[dst_base + j * mm + pos] = v;
+            }
+        }
+    }
+}
+
+/// Inverse lift: NCHW gradient `(b,o,m,m)` → `d_R̂ (b·m², o)`.
+pub fn unlift(shape: &ConvShape, d_out: &Tensor, d_r_hat: &mut [f32]) {
+    let &ConvShape { o, b, .. } = shape;
+    let m = shape.m();
+    let mm = m * m;
+    let src = d_out.as_slice();
+    for bi in 0..b {
+        let src_base = bi * o * mm;
+        let dst_base = bi * mm * o;
+        for j in 0..o {
+            let srow = &src[src_base + j * mm..src_base + (j + 1) * mm];
+            for (pos, &v) in srow.iter().enumerate() {
+                d_r_hat[dst_base + pos * o + j] = v;
+            }
+        }
+    }
+}
+
+/// Full Type-1 forward convolution: lower → GEMM → lift.
+pub fn conv_type1(shape: &ConvShape, data: &Tensor, weights: &Tensor, threads: usize) -> Tensor {
+    let mut ws = Workspace::new(shape);
+    conv_type1_with(shape, data, weights, threads, &mut ws)
+}
+
+/// Reusable buffers for the Type-1 path (hot-loop allocation hygiene;
+/// see EXPERIMENTS.md §Perf).
+pub struct Workspace {
+    pub lowered: Vec<f32>,
+    pub r_hat: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(shape: &ConvShape) -> Self {
+        Workspace {
+            lowered: vec![0f32; lowered_rows(shape) * lowered_cols(shape)],
+            r_hat: vec![0f32; lowered_rows(shape) * shape.o],
+        }
+    }
+
+    /// Bytes held by the workspace — the Fig 2(c) memory-footprint
+    /// quantity (lowered matrix dominates).
+    pub fn bytes(&self) -> usize {
+        (self.lowered.len() + self.r_hat.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Forward with caller-provided workspace.
+pub fn conv_type1_with(
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    threads: usize,
+    ws: &mut Workspace,
+) -> Tensor {
+    let rows = lowered_rows(shape);
+    let cols = lowered_cols(shape);
+    assert!(ws.lowered.len() >= rows * cols && ws.r_hat.len() >= rows * shape.o);
+
+    lower_batch(shape, data, &mut ws.lowered);
+    // R̂ = D̂ · Wᵀ  (W is (o, k²d) row-major ⇒ Trans::T gives (k²d, o)).
+    sgemm(
+        Trans::N,
+        Trans::T,
+        GemmDims { m: rows, n: shape.o, k: cols },
+        1.0,
+        &ws.lowered,
+        weights.as_slice(),
+        0.0,
+        &mut ws.r_hat,
+        threads,
+    );
+    let mut out = Tensor::zeros(shape.output_shape());
+    lift(shape, &ws.r_hat, &mut out);
+    out
+}
+
+/// Type-1 backward: recompute D̂, then
+/// `dW = d_R̂ᵀ · D̂` and `d_D = col2im(d_R̂ · Ŵ)`.
+/// Returns `(d_data, d_weights)`.
+pub fn conv_type1_backward(
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    d_out: &Tensor,
+    threads: usize,
+) -> (Tensor, Tensor) {
+    let rows = lowered_rows(shape);
+    let cols = lowered_cols(shape);
+
+    let mut lowered = vec![0f32; rows * cols];
+    lower_batch(shape, data, &mut lowered);
+
+    let mut d_r_hat = vec![0f32; rows * shape.o];
+    unlift(shape, d_out, &mut d_r_hat);
+
+    // dW (o, k²d) = d_R̂ᵀ (o, b·m²) · D̂ (b·m², k²d)
+    let mut d_w = Tensor::zeros(shape.weight_shape());
+    sgemm(
+        Trans::T,
+        Trans::N,
+        GemmDims { m: shape.o, n: cols, k: rows },
+        1.0,
+        &d_r_hat,
+        &lowered,
+        0.0,
+        d_w.as_mut_slice(),
+        threads,
+    );
+
+    // d_D̂ (b·m², k²d) = d_R̂ (b·m², o) · Ŵ (o, k²d); reuse `lowered`.
+    sgemm(
+        Trans::N,
+        Trans::N,
+        GemmDims { m: rows, n: cols, k: shape.o },
+        1.0,
+        &d_r_hat,
+        weights.as_slice(),
+        0.0,
+        &mut lowered,
+        threads,
+    );
+    let mut d_data = Tensor::zeros(shape.input_shape());
+    col2im_batch(shape, &lowered, &mut d_data);
+    (d_data, d_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{conv_backward_reference, conv_reference};
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::Prop;
+
+    #[test]
+    fn lower_then_lift_shapes() {
+        let shape = ConvShape::simple(5, 3, 2, 4, 3);
+        assert_eq!(lowered_cols(&shape), 18);
+        assert_eq!(lowered_rows(&shape), 3 * 9);
+    }
+
+    #[test]
+    fn im2col_known_values() {
+        // 1 image, 1 channel, 3×3 input, 2×2 kernel, no pad, stride 1.
+        let shape = ConvShape::simple(3, 2, 1, 1, 1);
+        let data = Tensor::from_vec((1, 1, 3, 3), (1..=9).map(|x| x as f32).collect());
+        let mut low = vec![0f32; lowered_rows(&shape) * lowered_cols(&shape)];
+        lower_batch(&shape, &data, &mut low);
+        // Window for first output position (r=0,c=0): [1,2,4,5]
+        assert_eq!(&low[0..4], &[1., 2., 4., 5.]);
+        // Last position (r=1,c=1): [5,6,8,9]
+        assert_eq!(&low[12..16], &[5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn im2col_zero_padding() {
+        let shape = ConvShape { n: 2, k: 3, d: 1, o: 1, b: 1, pad: 1, stride: 1 };
+        let data = Tensor::from_vec((1, 1, 2, 2), vec![1., 2., 3., 4.]);
+        let mut low = vec![0f32; lowered_rows(&shape) * lowered_cols(&shape)];
+        lower_batch(&shape, &data, &mut low);
+        // Window at (0,0) covers rows/cols −1..2 ⇒ border zeros.
+        assert_eq!(&low[0..9], &[0., 0., 0., 0., 1., 2., 0., 3., 4.]);
+    }
+
+    #[test]
+    fn forward_matches_reference_batch() {
+        let mut rng = Pcg64::new(31);
+        let shape = ConvShape { n: 8, k: 3, d: 3, o: 5, b: 4, pad: 1, stride: 2 };
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let got = conv_type1(&shape, &data, &w, 1);
+        let want = conv_reference(&shape, &data, &w);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn lift_unlift_roundtrip() {
+        let shape = ConvShape::simple(6, 3, 2, 4, 2);
+        let m = shape.m();
+        let mut rng = Pcg64::new(32);
+        let t = Tensor::randn((shape.b, shape.o, m, m), 0.0, 1.0, &mut rng);
+        let mut r_hat = vec![0f32; lowered_rows(&shape) * shape.o];
+        unlift(&shape, &t, &mut r_hat);
+        let mut back = Tensor::zeros(shape.output_shape());
+        lift(&shape, &r_hat, &mut back);
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn backward_matches_reference() {
+        let mut rng = Pcg64::new(33);
+        let shape = ConvShape { n: 7, k: 3, d: 2, o: 3, b: 2, pad: 1, stride: 2 };
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let d_out = Tensor::randn(shape.output_shape(), 0.0, 1.0, &mut rng);
+        let (dd, dw) = conv_type1_backward(&shape, &data, &w, &d_out, 1);
+        let (dd_ref, dw_ref) = conv_backward_reference(&shape, &data, &w, &d_out);
+        assert!(dd.max_abs_diff(&dd_ref) < 1e-3, "d_data diff {}", dd.max_abs_diff(&dd_ref));
+        assert!(dw.max_abs_diff(&dw_ref) < 1e-3, "d_w diff {}", dw.max_abs_diff(&dw_ref));
+    }
+
+    #[test]
+    fn property_col2im_adjoint_of_im2col() {
+        // ⟨im2col(x), y⟩ = ⟨x, col2im(y)⟩ — the defining adjoint identity.
+        Prop::new("col2im is the adjoint of im2col", 20).run(|g| {
+            let k = g.usize_in(1, 3);
+            let n = k + g.usize_in(0, 4);
+            let shape = ConvShape {
+                n,
+                k,
+                d: g.usize_in(1, 3),
+                o: 1,
+                b: g.usize_in(1, 2),
+                pad: g.usize_in(0, 1),
+                stride: g.usize_in(1, 2),
+            };
+            let rows = lowered_rows(&shape);
+            let cols = lowered_cols(&shape);
+            let mut rng = Pcg64::new(g.usize_in(0, 1 << 30) as u64);
+            let x = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+            let y: Vec<f32> = {
+                let mut v = vec![0f32; rows * cols];
+                rng.fill_uniform(&mut v, -1.0, 1.0);
+                v
+            };
+            let mut ix = vec![0f32; rows * cols];
+            lower_batch(&shape, &x, &mut ix);
+            let lhs: f64 = ix.iter().zip(y.iter()).map(|(a, b)| (a * b) as f64).sum();
+            let mut cty = Tensor::zeros(shape.input_shape());
+            col2im_batch(&shape, &y, &mut cty);
+            let rhs: f64 = x
+                .as_slice()
+                .iter()
+                .zip(cty.as_slice().iter())
+                .map(|(a, b)| (a * b) as f64)
+                .sum();
+            assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "adjoint broken: {lhs} vs {rhs}");
+        });
+    }
+
+    #[test]
+    fn workspace_bytes_proportional_to_batch() {
+        // Fig 2(c): footprint of the lowered matrix scales linearly in b.
+        let s1 = Workspace::new(&ConvShape::simple(27, 5, 96, 256, 1)).bytes();
+        let s8 = Workspace::new(&ConvShape::simple(27, 5, 96, 256, 8)).bytes();
+        assert_eq!(s8, 8 * s1);
+    }
+}

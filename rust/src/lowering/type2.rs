@@ -1,0 +1,173 @@
+//! Type 2 — *Balanced* lowering.
+//!
+//! The middle point of the spectrum: lower each input **row strip**
+//! rather than each full window (Type 1) or each single position
+//! (Type 3). `D̂ ∈ R^{(b·n·m) × (k·d)}` rows hold the k-wide horizontal
+//! slice `D[:, r, c:c+k]` — a k× blow-up instead of Type 1's k². The
+//! kernels are blocked by kernel-row: `K̂ ∈ R^{(k·d) × (k·o)}` with
+//! column `(j·k + i)` holding kernel j's row i. The GEMM result
+//! `R̂ = D̂·K̂ ∈ R^{(b·n·m) × (k·o)}` contains per-kernel-row partial
+//! sums; lifting adds the k of them per output:
+//!
+//! `R[j, r, c] = Σ_{i=0}^{k-1} R̂[(r+i)·m + c, j·k + i]`
+//!
+//! Lowering/lifting take Θ(m²·k) time and space — squarely between the
+//! other two (Fig 6, middle column).
+//!
+//! Defined for the paper's formal setting: pad = 0, stride = 1.
+
+use super::ConvShape;
+use crate::gemm::{sgemm, GemmDims, Trans};
+use crate::tensor::Tensor;
+
+/// Lower the batch: `(b,d,n,n)` → `D̂ (b·n·m, k·d)`;
+/// row `bi·n·m + r·m + c`, column `ch·k + c'`.
+pub fn lower_batch(shape: &ConvShape, data: &Tensor, out: &mut [f32]) {
+    let &ConvShape { n, k, d, b, .. } = shape;
+    let m = shape.m();
+    let cols = k * d;
+    assert!(out.len() >= b * n * m * cols);
+    let src = data.as_slice();
+    for bi in 0..b {
+        let img = &src[bi * d * n * n..(bi + 1) * d * n * n];
+        let base = bi * n * m;
+        for r in 0..n {
+            for c in 0..m {
+                let row = &mut out[(base + r * m + c) * cols..(base + r * m + c + 1) * cols];
+                for ch in 0..d {
+                    let strip = &img[ch * n * n + r * n + c..ch * n * n + r * n + c + k];
+                    row[ch * k..(ch + 1) * k].copy_from_slice(strip);
+                }
+            }
+        }
+    }
+}
+
+/// Lower the kernels: `(o,d,k,k)` → `K̂ (k·d, k·o)`;
+/// `K̂[ch·k + c', j·k + i] = W[j, ch, i, c']`.
+pub fn lower_kernel(shape: &ConvShape, weights: &Tensor, out: &mut [f32]) {
+    let &ConvShape { k, d, o, .. } = shape;
+    let cols = k * o;
+    assert!(out.len() >= k * d * cols);
+    let w = weights.as_slice();
+    for j in 0..o {
+        for ch in 0..d {
+            for i in 0..k {
+                for cp in 0..k {
+                    out[(ch * k + cp) * cols + j * k + i] = w[((j * d + ch) * k + i) * k + cp];
+                }
+            }
+        }
+    }
+}
+
+/// Lift `R̂ (b·n·m, k·o)` → `(b, o, m, m)` by summing k kernel-row
+/// partials per output.
+pub fn lift(shape: &ConvShape, r_hat: &[f32], out: &mut Tensor) {
+    let &ConvShape { n, k, o, b, .. } = shape;
+    let m = shape.m();
+    let cols = k * o;
+    let dst = out.as_mut_slice();
+    for bi in 0..b {
+        let rbase = bi * n * m * cols;
+        let obase = bi * o * m * m;
+        for j in 0..o {
+            for r in 0..m {
+                for c in 0..m {
+                    let mut acc = 0f32;
+                    for i in 0..k {
+                        acc += r_hat[rbase + ((r + i) * m + c) * cols + j * k + i];
+                    }
+                    dst[obase + j * m * m + r * m + c] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Full Type-2 forward: lower → GEMM (b·n·m × k·o × k·d) → lift.
+pub fn conv_type2(shape: &ConvShape, data: &Tensor, weights: &Tensor, threads: usize) -> Tensor {
+    assert!(
+        shape.supports_all_lowerings(),
+        "Type 2 lowering requires pad=0, stride=1 (got {shape:?})"
+    );
+    let &ConvShape { n, k, d, o, b, .. } = shape;
+    let m = shape.m();
+    let dcols = k * d;
+    let kcols = k * o;
+
+    let mut d_hat = vec![0f32; b * n * m * dcols];
+    lower_batch(shape, data, &mut d_hat);
+    let mut k_hat = vec![0f32; dcols * kcols];
+    lower_kernel(shape, weights, &mut k_hat);
+
+    let mut r_hat = vec![0f32; b * n * m * kcols];
+    sgemm(
+        Trans::N,
+        Trans::N,
+        GemmDims { m: b * n * m, n: kcols, k: dcols },
+        1.0,
+        &d_hat,
+        &k_hat,
+        0.0,
+        &mut r_hat,
+        threads,
+    );
+
+    let mut out = Tensor::zeros(shape.output_shape());
+    lift(shape, &r_hat, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::conv_reference;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn lowered_row_contents() {
+        let shape = ConvShape::simple(3, 2, 1, 1, 1);
+        let data = Tensor::from_vec((1, 1, 3, 3), (1..=9).map(|x| x as f32).collect());
+        let m = shape.m(); // 2
+        let mut low = vec![0f32; 3 * m * 2];
+        lower_batch(&shape, &data, &mut low);
+        // Row (r=0, c=0) = D[0, 0, 0:2] = [1,2]
+        assert_eq!(&low[0..2], &[1., 2.]);
+        // Row (r=2, c=1) = D[0, 2, 1:3] = [8,9]
+        assert_eq!(&low[(2 * m + 1) * 2..(2 * m + 1) * 2 + 2], &[8., 9.]);
+    }
+
+    #[test]
+    fn kernel_layout() {
+        let shape = ConvShape::simple(5, 2, 2, 3, 1);
+        let w = Tensor::arange(shape.weight_shape()); // (3,2,2,2)
+        let mut kl = vec![0f32; 2 * 2 * 2 * 3];
+        lower_kernel(&shape, &w, &mut kl);
+        // K̂[ch=1·k + c'=0][j=2·k + i=1] = W[2,1,1,0] = ((2*2+1)*2+1)*2+0 = 22
+        let cols = 2 * 3;
+        assert_eq!(kl[(1 * 2 + 0) * cols + 2 * 2 + 1], 22.0);
+    }
+
+    #[test]
+    fn matches_reference() {
+        let mut rng = Pcg64::new(51);
+        for &(n, k, d, o, b) in &[(5usize, 3usize, 2usize, 4usize, 2usize), (6, 2, 3, 2, 1), (4, 4, 1, 5, 3)] {
+            let shape = ConvShape::simple(n, k, d, o, b);
+            let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+            let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+            let got = conv_type2(&shape, &data, &w, 1);
+            let want = conv_reference(&shape, &data, &w);
+            assert!(got.max_abs_diff(&want) < 1e-3, "n={n} k={k} d={d} o={o} b={b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requires pad=0")]
+    fn rejects_strided() {
+        let shape = ConvShape { n: 5, k: 3, d: 1, o: 1, b: 1, pad: 0, stride: 2 };
+        let data = Tensor::zeros(shape.input_shape());
+        let w = Tensor::zeros(shape.weight_shape());
+        conv_type2(&shape, &data, &w, 1);
+    }
+}

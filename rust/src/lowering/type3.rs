@@ -1,0 +1,169 @@
+//! Type 3 — *Expensive Lifting*.
+//!
+//! Start the contraction with the channel sum of Equation 1:
+//! `D̂ ∈ R^{(b·n²) × d}` is just the input re-laid-out with the channel
+//! index innermost (a CHW→HWC permute — **no** data blow-up), and
+//! `K̂ ∈ R^{d × (o·k²)}` carries every kernel tap as its own column.
+//! The GEMM output `R̂ = D̂·K̂ ∈ R^{(b·n²) × (o·k²)}` holds, for every
+//! *input* position, the channel-contracted product with every kernel
+//! tap; lifting sums the k² taps that each output position touches:
+//!
+//! `R[j, r, c] = Σ_{i,jj} R̂[(r+i)·n + (c+jj), j·k² + i·k + jj]`
+//!
+//! Lifting therefore costs Θ(m²·k²·o) adds — the expensive end of the
+//! spectrum — while the lowered data matrix is k² smaller than Type 1's.
+//! Wins when d ≫ o (Fig 8c: ratio d/o large).
+//!
+//! Defined for the paper's formal setting: pad = 0, stride = 1.
+
+use super::ConvShape;
+use crate::gemm::{sgemm, GemmDims, Trans};
+use crate::tensor::Tensor;
+
+/// Lower the batch: `(b,d,n,n)` CHW → `(b·n², d)` position-major.
+pub fn lower_batch(shape: &ConvShape, data: &Tensor, out: &mut [f32]) {
+    let &ConvShape { n, d, b, .. } = shape;
+    let nn = n * n;
+    assert!(out.len() >= b * nn * d);
+    let src = data.as_slice();
+    for bi in 0..b {
+        let img = &src[bi * d * nn..(bi + 1) * d * nn];
+        let dst = &mut out[bi * nn * d..(bi + 1) * nn * d];
+        for i in 0..d {
+            let chan = &img[i * nn..(i + 1) * nn];
+            for (pos, &v) in chan.iter().enumerate() {
+                dst[pos * d + i] = v;
+            }
+        }
+    }
+}
+
+/// Lower the kernels: `(o,d,k,k)` → `K̂ (d, o·k²)`, column `(j·k² + i·k + jj)`.
+pub fn lower_kernel(shape: &ConvShape, weights: &Tensor, out: &mut [f32]) {
+    let &ConvShape { k, d, o, .. } = shape;
+    let cols = o * k * k;
+    assert!(out.len() >= d * cols);
+    let w = weights.as_slice();
+    for j in 0..o {
+        for ch in 0..d {
+            for tap in 0..k * k {
+                // W[j][ch][tap] → K̂[ch][j·k² + tap]
+                out[ch * cols + j * k * k + tap] = w[(j * d + ch) * k * k + tap];
+            }
+        }
+    }
+}
+
+/// Lift `R̂ (b·n², o·k²)` → `(b, o, m, m)` by summing the k² taps.
+pub fn lift(shape: &ConvShape, r_hat: &[f32], out: &mut Tensor) {
+    let &ConvShape { n, k, o, b, .. } = shape;
+    let m = shape.m();
+    let nn = n * n;
+    let cols = o * k * k;
+    let dst = out.as_mut_slice();
+    for bi in 0..b {
+        let rbase = bi * nn * cols;
+        let obase = bi * o * m * m;
+        for j in 0..o {
+            for r in 0..m {
+                for c in 0..m {
+                    let mut acc = 0f32;
+                    for i in 0..k {
+                        let pos_base = rbase + ((r + i) * n + c) * cols + j * k * k + i * k;
+                        // Tap jj reads input position (r+i, c+jj), i.e. the
+                        // same kernel-row strip shifted by jj columns.
+                        for jj in 0..k {
+                            acc += r_hat[pos_base + jj * cols + jj];
+                        }
+                    }
+                    dst[obase + j * m * m + r * m + c] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Full Type-3 forward: permute → GEMM (b·n² × o·k² × d) → lift.
+pub fn conv_type3(shape: &ConvShape, data: &Tensor, weights: &Tensor, threads: usize) -> Tensor {
+    assert!(
+        shape.supports_all_lowerings(),
+        "Type 3 lowering requires pad=0, stride=1 (got {shape:?})"
+    );
+    let &ConvShape { n, k, d, o, b, .. } = shape;
+    let nn = n * n;
+    let cols = o * k * k;
+
+    let mut d_hat = vec![0f32; b * nn * d];
+    lower_batch(shape, data, &mut d_hat);
+    let mut k_hat = vec![0f32; d * cols];
+    lower_kernel(shape, weights, &mut k_hat);
+
+    let mut r_hat = vec![0f32; b * nn * cols];
+    sgemm(
+        Trans::N,
+        Trans::N,
+        GemmDims { m: b * nn, n: cols, k: d },
+        1.0,
+        &d_hat,
+        &k_hat,
+        0.0,
+        &mut r_hat,
+        threads,
+    );
+
+    let mut out = Tensor::zeros(shape.output_shape());
+    lift(shape, &r_hat, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::conv_reference;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn lowered_data_is_permute() {
+        let shape = ConvShape::simple(2, 1, 3, 1, 1);
+        let data = Tensor::arange((1, 3, 2, 2)); // CHW: chan i holds 4i..4i+4
+        let mut low = vec![0f32; 4 * 3];
+        lower_batch(&shape, &data, &mut low);
+        // position 0 row = [D[0,0,0], D[1,0,0], D[2,0,0]] = [0,4,8]
+        assert_eq!(&low[0..3], &[0., 4., 8.]);
+        assert_eq!(&low[9..12], &[3., 7., 11.]);
+    }
+
+    #[test]
+    fn kernel_lowering_layout() {
+        let shape = ConvShape::simple(4, 2, 2, 3, 1);
+        let w = Tensor::arange(shape.weight_shape()); // (3,2,2,2) = 24
+        let mut kl = vec![0f32; 2 * 12];
+        lower_kernel(&shape, &w, &mut kl);
+        // K̂[ch=0][j=1, tap=2] = W[1][0][tap 2] = flat (1*2+0)*4+2 = 10
+        assert_eq!(kl[0 * 12 + 1 * 4 + 2], 10.0);
+        // K̂[ch=1][j=2, tap=3] = W[2][1][3] = (2*2+1)*4+3 = 23
+        assert_eq!(kl[1 * 12 + 2 * 4 + 3], 23.0);
+    }
+
+    #[test]
+    fn matches_reference() {
+        let mut rng = Pcg64::new(41);
+        for &(n, k, d, o, b) in &[(5usize, 3usize, 2usize, 4usize, 2usize), (7, 1, 3, 2, 1), (6, 5, 1, 1, 3)] {
+            let shape = ConvShape::simple(n, k, d, o, b);
+            let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+            let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+            let got = conv_type3(&shape, &data, &w, 1);
+            let want = conv_reference(&shape, &data, &w);
+            assert!(got.max_abs_diff(&want) < 1e-3, "n={n} k={k} d={d} o={o} b={b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requires pad=0")]
+    fn rejects_padded() {
+        let shape = ConvShape { n: 5, k: 3, d: 1, o: 1, b: 1, pad: 1, stride: 1 };
+        let data = Tensor::zeros(shape.input_shape());
+        let w = Tensor::zeros(shape.weight_shape());
+        conv_type3(&shape, &data, &w, 1);
+    }
+}

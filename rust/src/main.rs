@@ -1,0 +1,249 @@
+//! `cct` — the Caffe con Troll reproduction launcher.
+//!
+//! Subcommands (hand-rolled arg parsing; no CLI crate is vendored):
+//!
+//! ```text
+//! cct info                                  # system + device profiles
+//! cct train   [--net NAME] [--steps N] [--batch B] [--workers P] [--lr F]
+//! cct xla-train [--steps N] [--artifacts DIR]   # AOT train_step via PJRT
+//! cct optimize [--batch B]                  # lowering optimizer report
+//! cct gemm    [--size N] [--iters K]        # GEMM calibration
+//! ```
+
+use anyhow::{bail, Context, Result};
+use cct::bench_util::{bench, gflops, Table};
+use cct::coordinator::CnnCoordinator;
+use cct::data::BlobCorpus;
+use cct::device::profiles;
+use cct::gemm::{sgemm, GemmDims, Trans};
+use cct::lowering::{choose_lowering, optimizer, ConvShape, LoweringType, MachineProfile};
+use cct::net::presets;
+use cct::rng::Pcg64;
+use cct::runtime::{ArtifactStore, XlaInput};
+use cct::solver::SolverConfig;
+use cct::tensor::Tensor;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{}'", argv[i]))?;
+            let val = argv.get(i + 1).with_context(|| format!("missing value for --{key}"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..])?;
+    match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "xla-train" => cmd_xla_train(&args),
+        "optimize" => cmd_optimize(&args),
+        "gemm" => cmd_gemm(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `cct help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "cct — Caffe con Troll reproduction\n\n\
+         USAGE: cct <command> [--flag value]...\n\n\
+         COMMANDS:\n\
+         \x20 info        system info + paper device profiles\n\
+         \x20 train       native-engine training (--net cifar|lenet|caffenet64, --steps, --batch, --workers, --lr, --seed)\n\
+         \x20 xla-train   train via the AOT PJRT artifact (--steps, --artifacts)\n\
+         \x20 optimize    lowering-optimizer report for CaffeNet layers (--batch)\n\
+         \x20 gemm        GEMM calibration (--size, --iters, --threads)\n"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    println!("cct — Caffe con Troll (2015) reproduction");
+    println!("three-layer stack: rust coordinator / JAX model / Pallas kernels (AOT via PJRT)\n");
+    let mut t = Table::new("Device profiles (paper §3.1)", &["name", "kind", "peak GFLOP/s", "mem GB/s", "pcie GB/s", "cores"]);
+    for d in [
+        profiles::c4_4xlarge(),
+        profiles::c4_8xlarge(),
+        profiles::grid_k520(),
+        profiles::k40(),
+        profiles::g2_host_cpu(),
+        profiles::g2_8xlarge_cpu(),
+        profiles::local_cpu(),
+    ] {
+        t.row(&[
+            d.name.clone(),
+            format!("{:?}", d.kind),
+            format!("{}", d.peak_gflops),
+            format!("{}", d.mem_gbps),
+            d.pcie_gbps.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            d.cores.to_string(),
+        ]);
+    }
+    t.print();
+    let mut rng = Pcg64::new(0);
+    let net = presets::caffenet(&mut rng);
+    println!("\nCaffeNet: {} layers, {} params", net.num_layers(), net.num_params());
+    println!("fwd FLOPs @ b=256: {:.1} GFLOP", net.flops(256) as f64 / 1e9);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let net_name = args.get_str("net", "cifar");
+    let steps: usize = args.get("steps", 100)?;
+    let batch: usize = args.get("batch", 32)?;
+    let workers: usize = args.get("workers", 1)?;
+    let lr: f32 = args.get("lr", 0.01)?;
+    let seed: u64 = args.get("seed", 42)?;
+
+    let (cfg_text, side, channels, classes) = match net_name.as_str() {
+        "cifar" => (presets::CIFAR10_QUICK, 32, 3, 10),
+        "lenet" => (presets::LENET, 28, 1, 10),
+        "caffenet64" => (presets::CAFFENET_64, 64, 3, 100),
+        other => bail!("unknown net '{other}' (cifar|lenet|caffenet64)"),
+    };
+    let cfg = cct::net::parse_net(cfg_text)?;
+    let solver = SolverConfig { base_lr: lr, ..Default::default() };
+    let mut coord = CnnCoordinator::new(&cfg, workers, workers, solver, seed)?;
+
+    println!("training {} with {} worker(s), batch {batch}, lr {lr}", cfg.name, workers);
+    let mut corpus = BlobCorpus::generate(channels, side, classes, (batch * 8).max(256), 0.25, seed);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, labels) = corpus.next_batch(batch);
+        let loss = coord.step(&x, &labels);
+        if step % 10 == 0 || step + 1 == steps {
+            let ips = batch as f64 * (step + 1) as f64 / t0.elapsed().as_secs_f64();
+            println!("step {step:>5}  loss {loss:.4}  ({ips:.1} img/s)");
+        }
+    }
+    let (ex, ey) = corpus.eval_batch(batch.min(corpus.len()));
+    let ctx = cct::layers::ExecCtx { phase: cct::layers::Phase::Test, ..Default::default() };
+    coord.net().forward_loss(&ex, &ey, &ctx);
+    println!("final train-split accuracy: {:.1}%", coord.net().last_accuracy() * 100.0);
+    Ok(())
+}
+
+fn cmd_xla_train(args: &Args) -> Result<()> {
+    let steps: usize = args.get("steps", 50)?;
+    let dir = args.get_str("artifacts", "artifacts");
+    let mut store = ArtifactStore::open(&dir)?;
+    println!("PJRT platform: {}", store.platform());
+
+    // Shapes fixed by python/compile/model.py.
+    let (b, c, s, classes) = (32usize, 3usize, 16usize, 10usize);
+    let mut rng = Pcg64::new(1);
+    let mut params: Vec<Tensor> = vec![
+        Tensor::randn((8, 3, 3, 3), 0.0, 0.1, &mut rng),
+        Tensor::zeros(8usize),
+        Tensor::randn((classes, 8 * 8 * 8), 0.0, 0.05, &mut rng),
+        Tensor::zeros(classes),
+    ];
+    let mut corpus = BlobCorpus::generate(c, s, classes, 256, 0.2, 5);
+    let art = store.load("train_step")?;
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, labels) = corpus.next_batch(b);
+        let y: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        let mut inputs: Vec<XlaInput> = params.iter().cloned().map(XlaInput::F32).collect();
+        inputs.push(XlaInput::F32(x));
+        inputs.push(XlaInput::I32(y));
+        let mut out = art.run(&inputs)?;
+        let loss = out.pop().unwrap().as_slice()[0];
+        params = out;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "{} steps in {:.2}s ({:.1} img/s) — python never ran",
+        steps,
+        t0.elapsed().as_secs_f64(),
+        (steps * b) as f64 / t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let batch: usize = args.get("batch", 16)?;
+    let prof = MachineProfile::one_core();
+    let mut t = Table::new(
+        &format!("Lowering optimizer on CaffeNet convs (b={batch})"),
+        &["layer", "n", "k", "d", "o", "d/o", "admissible", "pick", "est t1/t2/t3 (ms)"],
+    );
+    for (name, n, k, d, o) in presets::fig7_conv_geometry() {
+        let shape = ConvShape::simple(n, k, d, o, batch);
+        let pick = choose_lowering(&shape, &prof);
+        let est: Vec<String> = LoweringType::ALL
+            .iter()
+            .map(|&ty| format!("{:.1}", optimizer::estimate_seconds(&shape, ty, &prof) * 1e3))
+            .collect();
+        t.row(&[
+            name.to_string(),
+            n.to_string(),
+            k.to_string(),
+            d.to_string(),
+            o.to_string(),
+            format!("{:.2}", d as f64 / o as f64),
+            if shape.supports_all_lowerings() { "1,2,3".into() } else { "1".into() },
+            pick.to_string(),
+            est.join("/"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let size: usize = args.get("size", 512)?;
+    let iters: usize = args.get("iters", 5)?;
+    let threads: usize = args.get("threads", 1)?;
+    let mut rng = Pcg64::new(3);
+    let mut a = vec![0f32; size * size];
+    let mut b = vec![0f32; size * size];
+    let mut c = vec![0f32; size * size];
+    rng.fill_uniform(&mut a, -1.0, 1.0);
+    rng.fill_uniform(&mut b, -1.0, 1.0);
+    let dims = GemmDims { m: size, n: size, k: size };
+    let st = bench(1, iters, || {
+        sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c, threads);
+    });
+    let fl = cct::gemm::gemm_flops(dims);
+    println!(
+        "sgemm {size}³ ×{iters}: mean {:.3} ms  {:.2} GFLOP/s (threads={threads}, cv {:.1}%)",
+        st.mean * 1e3,
+        gflops(fl, st.mean),
+        st.cv() * 100.0
+    );
+    Ok(())
+}

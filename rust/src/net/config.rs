@@ -1,0 +1,291 @@
+//! prototxt-lite: a from-scratch parser for a Caffe-style net
+//! description (substrate — Caffe reads protobuf text format; no proto
+//! library is vendored, so we define a line-oriented dialect carrying
+//! the same information; the presets mirror the official
+//! `bvlc_reference_caffenet` spec).
+//!
+//! Grammar (one directive per line, `#` comments):
+//!
+//! ```text
+//! name: CaffeNet
+//! input: 3 227 227          # channels height width
+//! conv    { name: conv1 out: 96 kernel: 11 stride: 4 pad: 0 group: 1 std: 0.01 }
+//! relu    { name: relu1 }
+//! lrn     { name: norm1 size: 5 alpha: 0.0001 beta: 0.75 }
+//! pool    { name: pool1 mode: max kernel: 3 stride: 2 }
+//! fc      { name: fc6 out: 4096 std: 0.005 }
+//! dropout { name: drop6 p: 0.5 }
+//! ```
+
+use crate::layers::conv::ConvConfig;
+use crate::layers::{ConvLayer, DropoutLayer, FcLayer, Layer, LrnLayer, PoolLayer, PoolMode, ReluLayer};
+use crate::net::Net;
+use crate::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A parsed layer directive.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    pub kind: String,
+    pub attrs: HashMap<String, String>,
+}
+
+impl LayerSpec {
+    pub fn name(&self) -> String {
+        self.attrs.get("name").cloned().unwrap_or_else(|| self.kind.clone())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<usize> {
+        let v = self
+            .attrs
+            .get(key)
+            .with_context(|| format!("{} layer '{}' missing '{key}'", self.kind, self.name()))?;
+        v.parse().with_context(|| format!("bad {key}: {v}"))
+    }
+
+    fn get_usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.attrs.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.attrs.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// A parsed network description.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub name: String,
+    /// (channels, height, width) of one sample.
+    pub input: (usize, usize, usize),
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Parse the prototxt-lite text.
+pub fn parse_net(text: &str) -> Result<NetConfig> {
+    let mut name = String::from("net");
+    let mut input = None;
+    let mut layers = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| format!("line {}: {msg}: {line}", lineno + 1);
+        if let Some(rest) = line.strip_prefix("name:") {
+            name = rest.trim().trim_matches('"').to_string();
+        } else if let Some(rest) = line.strip_prefix("input:") {
+            let dims: Vec<usize> = rest
+                .split_whitespace()
+                .map(|t| t.parse().map_err(|_| anyhow::anyhow!(err("bad input dim"))))
+                .collect::<Result<_>>()?;
+            if dims.len() != 3 {
+                bail!(err("input needs 3 dims (c h w)"));
+            }
+            input = Some((dims[0], dims[1], dims[2]));
+        } else {
+            // layer directive: kind { k: v k: v ... }
+            let open = line.find('{').with_context(|| err("expected '{'"))?;
+            let close = line.rfind('}').with_context(|| err("expected '}'"))?;
+            if close < open {
+                bail!(err("'}' before '{'"));
+            }
+            let kind = line[..open].trim().to_lowercase();
+            if kind.is_empty() {
+                bail!(err("missing layer kind"));
+            }
+            let body = &line[open + 1..close];
+            let mut attrs = HashMap::new();
+            let toks: Vec<&str> = body.split_whitespace().collect();
+            let mut i = 0;
+            while i < toks.len() {
+                let key = toks[i]
+                    .strip_suffix(':')
+                    .with_context(|| err(&format!("expected 'key:' got '{}'", toks[i])))?;
+                let val = toks.get(i + 1).with_context(|| err(&format!("missing value for '{key}'")))?;
+                attrs.insert(key.to_string(), val.trim_matches('"').to_string());
+                i += 2;
+            }
+            layers.push(LayerSpec { kind, attrs });
+        }
+    }
+    Ok(NetConfig {
+        name,
+        input: input.context("net config missing 'input:' directive")?,
+        layers: {
+            if layers.is_empty() {
+                bail!("net config has no layers");
+            }
+            layers
+        },
+    })
+}
+
+/// Instantiate a [`Net`] from a parsed config. Tracks the running shape
+/// to size conv/fc layers, exactly like Caffe's net builder.
+pub fn build_net(cfg: &NetConfig, rng: &mut Pcg64) -> Result<Net> {
+    let (c0, h0, w0) = cfg.input;
+    anyhow::ensure!(h0 == w0, "square inputs only (got {h0}×{w0})");
+    let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+    let mut conv_mask = Vec::new();
+    // running sample shape
+    let mut chans = c0;
+    let mut side = h0;
+    let mut flat: Option<usize> = None; // set after first fc
+
+    for spec in &cfg.layers {
+        let lname = spec.name();
+        match spec.kind.as_str() {
+            "conv" => {
+                anyhow::ensure!(flat.is_none(), "conv '{lname}' after fc is unsupported");
+                let cc = ConvConfig {
+                    out_channels: spec.get_usize("out")?,
+                    kernel: spec.get_usize("kernel")?,
+                    pad: spec.get_usize_or("pad", 0)?,
+                    stride: spec.get_usize_or("stride", 1)?,
+                    group: spec.get_usize_or("group", 1)?,
+                    bias: spec.get_usize_or("bias", 1)? != 0,
+                    weight_std: spec.get_f32_or("std", 0.01)?,
+                };
+                let layer = ConvLayer::new(&lname, chans, cc, rng);
+                let gs = layer.group_shape(1, side);
+                side = gs.m();
+                chans = cc.out_channels;
+                layers.push(Box::new(layer));
+                conv_mask.push(true);
+            }
+            "relu" => {
+                layers.push(Box::new(ReluLayer::new(&lname)));
+                conv_mask.push(false);
+            }
+            "pool" => {
+                let mode = match spec.attrs.get("mode").map(|s| s.as_str()).unwrap_or("max") {
+                    "max" => PoolMode::Max,
+                    "avg" => PoolMode::Avg,
+                    other => bail!("pool '{lname}': unknown mode '{other}'"),
+                };
+                let kernel = spec.get_usize("kernel")?;
+                let stride = spec.get_usize_or("stride", 1)?;
+                let pad = spec.get_usize_or("pad", 0)?;
+                let layer = PoolLayer::new(&lname, mode, kernel, stride, pad);
+                let probe = layer.out_shape(&crate::tensor::Shape::from((1, chans, side, side)));
+                side = probe.dims4().2;
+                layers.push(Box::new(layer));
+                conv_mask.push(false);
+            }
+            "lrn" => {
+                let size = spec.get_usize_or("size", 5)?;
+                let alpha = spec.get_f32_or("alpha", 1e-4)?;
+                let beta = spec.get_f32_or("beta", 0.75)?;
+                let k = spec.get_f32_or("k", 1.0)?;
+                layers.push(Box::new(LrnLayer::new(&lname, size, alpha, beta, k)));
+                conv_mask.push(false);
+            }
+            "fc" => {
+                let in_features = flat.unwrap_or(chans * side * side);
+                let out = spec.get_usize("out")?;
+                let std = spec.get_f32_or("std", 0.01)?;
+                layers.push(Box::new(FcLayer::new(&lname, in_features, out, std, rng)));
+                conv_mask.push(false);
+                flat = Some(out);
+            }
+            "dropout" => {
+                let p = spec.get_f32_or("p", 0.5)?;
+                layers.push(Box::new(DropoutLayer::new(&lname, p)));
+                conv_mask.push(false);
+            }
+            "softmax" => {
+                // loss head is implicit in Net; accept & ignore for
+                // compatibility with specs that declare it.
+            }
+            other => bail!("unknown layer kind '{other}' ({lname})"),
+        }
+    }
+    Ok(Net::new(&cfg.name, cfg.input, layers, conv_mask))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"
+# a comment
+name: "tiny"
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+pool { name: p1 mode: max kernel: 2 stride: 2 }
+fc   { name: f1 out: 3 std: 0.1 }
+softmax { name: loss }
+"#;
+
+    #[test]
+    fn parses_tiny() {
+        let cfg = parse_net(TINY).unwrap();
+        assert_eq!(cfg.name, "tiny");
+        assert_eq!(cfg.input, (1, 8, 8));
+        assert_eq!(cfg.layers.len(), 5);
+        assert_eq!(cfg.layers[0].kind, "conv");
+        assert_eq!(cfg.layers[0].attrs["out"], "4");
+    }
+
+    #[test]
+    fn builds_and_runs() {
+        let cfg = parse_net(TINY).unwrap();
+        let mut rng = Pcg64::new(1);
+        let mut net = build_net(&cfg, &mut rng).unwrap();
+        let x = crate::tensor::Tensor::zeros((2, 1, 8, 8));
+        let loss = net.forward_backward(&x, &[0, 1], &crate::layers::ExecCtx::default());
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn missing_input_rejected() {
+        assert!(parse_net("name: x\nconv { out: 1 kernel: 1 }").is_err());
+    }
+
+    #[test]
+    fn empty_net_rejected() {
+        assert!(parse_net("name: x\ninput: 1 4 4").is_err());
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let cfg = parse_net("input: 1 4 4\nfrobnicate { name: z }").unwrap();
+        let mut rng = Pcg64::new(1);
+        assert!(build_net(&cfg, &mut rng).is_err());
+    }
+
+    #[test]
+    fn missing_required_attr_rejected() {
+        let cfg = parse_net("input: 1 4 4\nconv { name: c }").unwrap();
+        let mut rng = Pcg64::new(1);
+        let e = match build_net(&cfg, &mut rng) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(e.contains("missing 'out'"), "{e}");
+    }
+
+    #[test]
+    fn malformed_layer_line_rejected() {
+        assert!(parse_net("input: 1 4 4\nconv out: 4").is_err());
+        assert!(parse_net("input: 1 4 4\nconv { out 4 }").is_err());
+    }
+
+    #[test]
+    fn group_and_stride_parsed() {
+        let cfg = parse_net("input: 6 9 9\nconv { name: c out: 4 kernel: 3 group: 2 stride: 2 }").unwrap();
+        let mut rng = Pcg64::new(2);
+        let net = build_net(&cfg, &mut rng).unwrap();
+        assert_eq!(net.shapes(1)[0].dims4(), (1, 4, 4, 4));
+    }
+}

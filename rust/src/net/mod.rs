@@ -1,0 +1,315 @@
+//! Net framework (substrate S7): a sequential Caffe-style network with
+//! per-layer timing — the unit the paper benchmarks ("CcT is a fully
+//! compatible end-to-end version of Caffe that matches Caffe's output
+//! on each layer, which is the unit of computation").
+
+pub mod config;
+pub mod presets;
+
+pub use config::{parse_net, LayerSpec, NetConfig};
+
+use crate::layers::{ExecCtx, Layer, ParamBlob, SoftmaxLossLayer};
+use crate::tensor::{Shape, Tensor};
+use std::time::Instant;
+
+/// Per-layer forward/backward seconds from a timed step.
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub name: String,
+    pub forward_s: f64,
+    pub backward_s: f64,
+    /// Whether this is a convolution layer (for the 70–90% analysis).
+    pub is_conv: bool,
+}
+
+/// A sequential network: feature layers + a softmax loss head.
+pub struct Net {
+    pub name: String,
+    layers: Vec<Box<dyn Layer>>,
+    conv_mask: Vec<bool>,
+    loss: SoftmaxLossLayer,
+    /// (c, h, w) of one input sample.
+    pub input_dims: (usize, usize, usize),
+    /// Activations cached by the last forward (bottom of layer i at
+    /// index i; last entry is the loss input).
+    acts: Vec<Tensor>,
+}
+
+impl Net {
+    pub fn new(name: &str, input_dims: (usize, usize, usize), layers: Vec<Box<dyn Layer>>, conv_mask: Vec<bool>) -> Self {
+        assert_eq!(layers.len(), conv_mask.len());
+        Net {
+            name: name.to_string(),
+            layers,
+            conv_mask,
+            loss: SoftmaxLossLayer::new("loss"),
+            input_dims,
+            acts: Vec::new(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer_names(&self) -> Vec<&str> {
+        self.layers.iter().map(|l| l.name()).collect()
+    }
+
+    /// Total learnable parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.params())
+            .map(|p| p.data.numel())
+            .sum()
+    }
+
+    /// Shape walk: output shape of every layer for batch size b.
+    pub fn shapes(&self, b: usize) -> Vec<Shape> {
+        let (c, h, w) = self.input_dims;
+        let mut s = Shape::from((b, c, h, w));
+        let mut out = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            s = l.out_shape(&s);
+            out.push(s);
+        }
+        out
+    }
+
+    /// Total forward FLOPs for batch size b (scheduler input).
+    pub fn flops(&self, b: usize) -> u64 {
+        let (c, h, w) = self.input_dims;
+        let mut s = Shape::from((b, c, h, w));
+        let mut total = 0u64;
+        for l in &self.layers {
+            total += l.flops(&s);
+            s = l.out_shape(&s);
+        }
+        total
+    }
+
+    /// Forward to logits (no loss). Caches activations for backward.
+    pub fn forward(&mut self, data: &Tensor, ctx: &ExecCtx) -> Tensor {
+        self.acts.clear();
+        let mut x = data.clone();
+        for l in self.layers.iter_mut() {
+            self.acts.push(x.clone());
+            x = l.forward(&x, ctx);
+        }
+        x
+    }
+
+    /// Forward including the loss; returns mean loss.
+    pub fn forward_loss(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
+        let logits = self.forward(data, ctx);
+        self.loss.set_labels(labels);
+        self.acts.push(logits.clone());
+        let _ = self.loss.forward(&logits, ctx);
+        self.loss.last_loss()
+    }
+
+    /// Full training step computation (no update): forward + backward,
+    /// accumulating parameter gradients. Returns mean loss.
+    pub fn forward_backward(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
+        let loss = self.forward_loss(data, labels, ctx);
+        let logits = self.acts.last().unwrap().clone();
+        let mut grad = self.loss.backward(&logits, &Tensor::full(1usize, 1.0), ctx);
+        for i in (0..self.layers.len()).rev() {
+            grad = self.layers[i].backward(&self.acts[i], &grad, ctx);
+        }
+        loss
+    }
+
+    /// Like [`forward_backward`] but collects per-layer timings —
+    /// regenerates the paper's "conv layers are 70–90% of time" claim.
+    pub fn forward_backward_timed(
+        &mut self,
+        data: &Tensor,
+        labels: &[usize],
+        ctx: &ExecCtx,
+    ) -> (f64, Vec<LayerTiming>) {
+        let mut timings: Vec<LayerTiming> = Vec::with_capacity(self.layers.len());
+        self.acts.clear();
+        let mut x = data.clone();
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            self.acts.push(x.clone());
+            let t0 = Instant::now();
+            x = l.forward(&x, ctx);
+            timings.push(LayerTiming {
+                name: l.name().to_string(),
+                forward_s: t0.elapsed().as_secs_f64(),
+                backward_s: 0.0,
+                is_conv: self.conv_mask[i],
+            });
+        }
+        self.loss.set_labels(labels);
+        self.acts.push(x.clone());
+        let _ = self.loss.forward(&x, ctx);
+        let loss = self.loss.last_loss();
+
+        let mut grad = self.loss.backward(&x, &Tensor::full(1usize, 1.0), ctx);
+        for i in (0..self.layers.len()).rev() {
+            let t0 = Instant::now();
+            grad = self.layers[i].backward(&self.acts[i], &grad, ctx);
+            timings[i].backward_s = t0.elapsed().as_secs_f64();
+        }
+        (loss, timings)
+    }
+
+    /// Accuracy of the last forward pass.
+    pub fn last_accuracy(&self) -> f64 {
+        self.loss.accuracy()
+    }
+
+    /// All parameter blobs (for the solver).
+    pub fn params_mut(&mut self) -> Vec<&mut ParamBlob> {
+        self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
+    }
+
+    pub fn zero_grads(&mut self) {
+        for p in self.params_mut() {
+            p.zero_grad();
+        }
+    }
+
+    /// Serialize all parameters (checkpoint payload).
+    pub fn save_params<W: std::io::Write>(&self, w: &mut W) -> crate::Result<()> {
+        let blobs: Vec<&ParamBlob> = self.layers.iter().flat_map(|l| l.params()).collect();
+        w.write_all(&(blobs.len() as u32).to_le_bytes())?;
+        for b in blobs {
+            crate::tensor::write_tensor(w, &b.data)?;
+        }
+        Ok(())
+    }
+
+    /// Load parameters saved by [`save_params`] (shapes must match).
+    pub fn load_params<R: std::io::Read>(&mut self, r: &mut R) -> crate::Result<()> {
+        let mut cnt = [0u8; 4];
+        r.read_exact(&mut cnt)?;
+        let n = u32::from_le_bytes(cnt) as usize;
+        let mut blobs = self.params_mut();
+        anyhow::ensure!(n == blobs.len(), "checkpoint has {n} blobs, net has {}", blobs.len());
+        for b in blobs.iter_mut() {
+            let t = crate::tensor::read_tensor(r)?;
+            anyhow::ensure!(t.shape() == b.data.shape(), "blob shape mismatch");
+            b.data = t;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+    use crate::layers::{ConvLayer, FcLayer, PoolLayer, PoolMode, ReluLayer};
+    use crate::layers::conv::ConvConfig;
+    use crate::rng::Pcg64;
+
+    fn tiny_net(rng: &mut Pcg64) -> Net {
+        let conv = ConvLayer::new(
+            "conv1",
+            1,
+            ConvConfig { out_channels: 4, kernel: 3, pad: 1, weight_std: 0.1, ..Default::default() },
+            rng,
+        );
+        let layers: Vec<Box<dyn Layer>> = vec![
+            Box::new(conv),
+            Box::new(ReluLayer::new("relu1")),
+            Box::new(PoolLayer::new("pool1", PoolMode::Max, 2, 2, 0)),
+            Box::new(FcLayer::new("fc", 4 * 4 * 4, 3, 0.1, rng)),
+        ];
+        Net::new("tiny", (1, 8, 8), layers, vec![true, false, false, false])
+    }
+
+    #[test]
+    fn shape_walk() {
+        let mut rng = Pcg64::new(1);
+        let net = tiny_net(&mut rng);
+        let shapes = net.shapes(2);
+        assert_eq!(shapes[0].dims4(), (2, 4, 8, 8));
+        assert_eq!(shapes[2].dims4(), (2, 4, 4, 4));
+        assert_eq!(shapes[3].dims2(), (2, 3));
+    }
+
+    #[test]
+    fn forward_backward_runs_and_loss_finite() {
+        let mut rng = Pcg64::new(2);
+        let mut net = tiny_net(&mut rng);
+        let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let loss = net.forward_backward(&x, &[0, 2], &ExecCtx::default());
+        assert!(loss.is_finite() && loss > 0.0);
+        // gradients are populated
+        let has_grad = net
+            .params_mut()
+            .iter()
+            .any(|p| p.grad.as_slice().iter().any(|&g| g != 0.0));
+        assert!(has_grad);
+    }
+
+    #[test]
+    fn training_decreases_loss_on_fixed_batch() {
+        let mut rng = Pcg64::new(3);
+        let mut net = tiny_net(&mut rng);
+        let x = Tensor::randn((4, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let labels = [0usize, 1, 2, 0];
+        let ctx = ExecCtx::default();
+        let first = net.forward_backward(&x, &labels, &ctx);
+        // 30 plain-SGD steps on one batch must overfit it.
+        for _ in 0..30 {
+            for p in net.params_mut() {
+                let lr = 0.1 * p.lr_mult;
+                let g = p.grad.clone();
+                p.data.axpy(-lr, &g);
+                p.zero_grad();
+            }
+            let _ = net.forward_backward(&x, &labels, &ctx);
+        }
+        let last = net.forward_backward(&x, &labels, &ctx);
+        assert!(last < first * 0.7, "loss did not drop: {first} → {last}");
+    }
+
+    #[test]
+    fn timed_step_reports_all_layers() {
+        let mut rng = Pcg64::new(4);
+        let mut net = tiny_net(&mut rng);
+        let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let (_, timings) = net.forward_backward_timed(&x, &[0, 1], &ExecCtx::default());
+        assert_eq!(timings.len(), 4);
+        assert!(timings[0].is_conv && !timings[1].is_conv);
+        assert!(timings.iter().all(|t| t.forward_s >= 0.0 && t.backward_s >= 0.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut rng = Pcg64::new(5);
+        let mut net = tiny_net(&mut rng);
+        let mut buf = Vec::new();
+        net.save_params(&mut buf).unwrap();
+        // scramble, then load back
+        let before: Vec<f32> = net.params_mut()[0].data.as_slice().to_vec();
+        net.params_mut()[0].data.scale(5.0);
+        net.load_params(&mut buf.as_slice()).unwrap();
+        assert_eq!(net.params_mut()[0].data.as_slice(), &before[..]);
+    }
+
+    #[test]
+    fn caffenet_preset_shapes() {
+        // Fig 7 geometry check: conv1..conv5 output sizes.
+        let mut rng = Pcg64::new(6);
+        let net = presets::caffenet(&mut rng);
+        let shapes = net.shapes(1);
+        let names = net.layer_names().iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        let find = |n: &str| names.iter().position(|x| x == n).unwrap();
+        assert_eq!(shapes[find("conv1")].dims4(), (1, 96, 55, 55));
+        assert_eq!(shapes[find("conv2")].dims4(), (1, 256, 27, 27));
+        assert_eq!(shapes[find("conv3")].dims4(), (1, 384, 13, 13));
+        assert_eq!(shapes[find("conv5")].dims4(), (1, 256, 13, 13));
+        assert_eq!(shapes[find("pool5")].dims4(), (1, 256, 6, 6));
+        assert_eq!(shapes[find("fc8")].dims2(), (1, 1000));
+        // ~61M params like AlexNet
+        let p = net.num_params();
+        assert!((55_000_000..70_000_000).contains(&p), "param count {p}");
+    }
+}

@@ -1,0 +1,203 @@
+//! XLA/PJRT runtime (S11): load the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py`, compile them once on the PJRT
+//! CPU client, and execute them from the L3 hot path. Python is never
+//! on this path — the artifacts are self-contained HLO.
+//!
+//! Interchange format is HLO *text* (see aot.py / DESIGN.md): jax ≥0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of results in the output tuple (from the manifest).
+    pub n_results: usize,
+}
+
+impl Artifact {
+    /// Execute with the given inputs; returns the tuple elements as
+    /// tensors. Inputs are moved host→device (CPU client: no copy
+    /// semantics worth optimizing yet — see EXPERIMENTS.md §Perf).
+    pub fn run(&self, inputs: &[XlaInput]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{}'", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result.decompose_tuple()?;
+        anyhow::ensure!(
+            elems.len() == self.n_results,
+            "artifact '{}' returned {} results, manifest says {}",
+            self.name,
+            elems.len(),
+            self.n_results
+        );
+        elems.into_iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// An input value for an artifact call: f32 tensor or i32 vector
+/// (labels).
+pub enum XlaInput {
+    F32(Tensor),
+    I32(Vec<i32>),
+}
+
+impl XlaInput {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            XlaInput::F32(t) => {
+                let dims: Vec<i64> = t.shape().dims().iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(t.as_slice()).reshape(&dims)?)
+            }
+            XlaInput::I32(v) => Ok(xla::Literal::vec1(v)),
+        }
+    }
+}
+
+fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match lit.ty()? {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?,
+        xla::ElementType::S32 => lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect(),
+        other => anyhow::bail!("unsupported artifact output type {other:?}"),
+    };
+    let dims = if dims.is_empty() { vec![1usize] } else { dims };
+    Ok(Tensor::from_vec(dims.as_slice(), data))
+}
+
+/// Loads `manifest.txt` + `*.hlo.txt` from an artifacts directory and
+/// compiles them on a shared PJRT CPU client.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ManifestEntry>,
+    compiled: HashMap<String, Artifact>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Argument shapes as written by aot.py ("8x16x16x16:f32;...").
+    pub args: String,
+    pub n_results: usize,
+}
+
+/// Parse one manifest line: `name args=... results=N`.
+pub fn parse_manifest_line(line: &str) -> Result<ManifestEntry> {
+    let mut name = None;
+    let mut args = String::new();
+    let mut n_results = None;
+    for (i, tok) in line.split_whitespace().enumerate() {
+        if i == 0 {
+            name = Some(tok.to_string());
+        } else if let Some(v) = tok.strip_prefix("args=") {
+            args = v.to_string();
+        } else if let Some(v) = tok.strip_prefix("results=") {
+            n_results = Some(v.parse::<usize>().context("bad results count")?);
+        }
+    }
+    Ok(ManifestEntry {
+        name: name.context("manifest line missing name")?,
+        args,
+        n_results: n_results.context("manifest line missing results=")?,
+    })
+}
+
+impl ArtifactStore {
+    /// Open an artifacts directory (does not compile anything yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let mut manifest = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let e = parse_manifest_line(line)?;
+            manifest.insert(e.name.clone(), e);
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ArtifactStore { client, dir, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn manifest(&self, name: &str) -> Option<&ManifestEntry> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (once) and return the artifact.
+    pub fn load(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.compiled.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .with_context(|| format!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.compiled.insert(
+                name.to_string(),
+                Artifact { name: name.to_string(), exe, n_results: entry.n_results },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let e = parse_manifest_line("train_step args=8x3x16x16:f32;32:i32 results=5").unwrap();
+        assert_eq!(e.name, "train_step");
+        assert_eq!(e.n_results, 5);
+        assert!(e.args.contains("i32"));
+    }
+
+    #[test]
+    fn manifest_line_requires_results() {
+        assert!(parse_manifest_line("foo args=1:f32").is_err());
+        assert!(parse_manifest_line("").is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_fails_gracefully() {
+        let err = match ArtifactStore::open("/nonexistent/path") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    // Full round-trip tests (load + execute the real artifacts) live in
+    // rust/tests/runtime_roundtrip.rs — they need `make artifacts`.
+}

@@ -1,0 +1,97 @@
+//! Minimal binary tensor serialization (checkpoints, data caches).
+//!
+//! Format ("CCT1"): magic, rank (u32), dims (u32 × rank), payload
+//! (f32 little-endian × numel). Self-describing and endian-fixed; no
+//! external serialization crate is needed.
+
+use super::{Shape, Tensor};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"CCT1";
+
+/// Serialize a tensor to a writer.
+pub fn write_tensor<W: Write>(w: &mut W, t: &Tensor) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(t.shape().rank() as u32).to_le_bytes())?;
+    for &d in t.shape().dims() {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    // Bulk-write the payload as LE bytes.
+    let mut buf = Vec::with_capacity(t.numel() * 4);
+    for &x in t.as_slice() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Deserialize a tensor from a reader.
+pub fn read_tensor<R: Read>(r: &mut R) -> Result<Tensor> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading tensor magic")?;
+    if &magic != MAGIC {
+        bail!("bad tensor magic {:?} (expected {:?})", magic, MAGIC);
+    }
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    let rank = u32::from_le_bytes(u32buf) as usize;
+    if !(1..=4).contains(&rank) {
+        bail!("bad tensor rank {rank}");
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        r.read_exact(&mut u32buf)?;
+        dims.push(u32::from_le_bytes(u32buf) as usize);
+    }
+    let shape = Shape::new(&dims);
+    let numel = shape.numel();
+    let mut payload = vec![0u8; numel * 4];
+    r.read_exact(&mut payload).context("reading tensor payload")?;
+    let data = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::from_vec(shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_4d() {
+        let mut rng = Pcg64::new(1);
+        let t = Tensor::randn((2, 3, 5, 7), 0.0, 1.0, &mut rng);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        let back = read_tensor(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let t = Tensor::arange(13usize);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        let back = read_tensor(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &Tensor::zeros((2, 2))).unwrap();
+        buf[0] = b'X';
+        assert!(read_tensor(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &Tensor::zeros((4, 4))).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_tensor(&mut buf.as_slice()).is_err());
+    }
+}

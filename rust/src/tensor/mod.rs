@@ -1,0 +1,334 @@
+//! Dense f32 tensor library (substrate S2).
+//!
+//! Caffe's `Blob` equivalent: a contiguous, row-major (C-order) f32
+//! buffer with an NCHW interpretation for 4-D data. Deliberately simple
+//! — the compute-heavy paths (GEMM, lowering) operate on raw slices for
+//! speed; `Tensor` provides shape bookkeeping, initialization, indexed
+//! access for tests, and binary IO for checkpoints.
+
+mod io;
+mod shape;
+
+pub use io::{read_tensor, write_tensor};
+pub use shape::Shape;
+
+use crate::rng::Pcg64;
+
+/// A dense, contiguous, row-major f32 tensor of rank ≤ 4.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        Tensor { data: vec![0.0; shape.numel()], shape }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: impl Into<Shape>, value: f32) -> Self {
+        let shape = shape.into();
+        Tensor { data: vec![value; shape.numel()], shape }
+    }
+
+    /// Tensor from an existing buffer; `data.len()` must equal
+    /// `shape.numel()`.
+    pub fn from_vec(shape: impl Into<Shape>, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        assert_eq!(
+            data.len(),
+            shape.numel(),
+            "buffer length {} does not match shape {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { shape, data }
+    }
+
+    /// i.i.d. N(mean, std) entries.
+    pub fn randn(shape: impl Into<Shape>, mean: f32, std: f32, rng: &mut Pcg64) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_gaussian(&mut t.data, mean, std);
+        t
+    }
+
+    /// i.i.d. U[lo, hi) entries.
+    pub fn rand(shape: impl Into<Shape>, lo: f32, hi: f32, rng: &mut Pcg64) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_uniform(&mut t.data, lo, hi);
+        t
+    }
+
+    /// Xavier/Glorot uniform init for a weight tensor: U[-a, a] with
+    /// a = sqrt(3 / fan_in). Matches Caffe's `xavier` filler.
+    pub fn xavier(shape: impl Into<Shape>, fan_in: usize, rng: &mut Pcg64) -> Self {
+        let a = (3.0 / fan_in as f32).sqrt();
+        Self::rand(shape, -a, a, rng)
+    }
+
+    /// Sequential values 0,1,2,... — test convenience.
+    pub fn arange(shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        let data = (0..shape.numel()).map(|i| i as f32).collect();
+        Tensor { shape, data }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        assert_eq!(self.numel(), shape.numel(), "reshape changes element count");
+        self.shape = shape;
+        self
+    }
+
+    /// 4-D NCHW indexed read (tests / reference paths; hot paths use
+    /// slices directly).
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let (nn, cc, hh, ww) = self.shape.dims4();
+        debug_assert!(n < nn && c < cc && h < hh && w < ww);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// 4-D NCHW indexed write.
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let (_, cc, hh, ww) = self.shape.dims4();
+        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+    }
+
+    /// 2-D indexed read (row-major).
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let (_, cols) = self.shape.dims2();
+        self.data[r * cols + c]
+    }
+
+    /// 2-D indexed write.
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        let (_, cols) = self.shape.dims2();
+        self.data[r * cols + c] = v;
+    }
+
+    /// The contiguous sub-slice for sample `n` of an NCHW tensor.
+    pub fn sample(&self, n: usize) -> &[f32] {
+        let (nn, c, h, w) = self.shape.dims4();
+        assert!(n < nn);
+        let stride = c * h * w;
+        &self.data[n * stride..(n + 1) * stride]
+    }
+
+    /// Mutable contiguous sub-slice for sample `n`.
+    pub fn sample_mut(&mut self, n: usize) -> &mut [f32] {
+        let (nn, c, h, w) = self.shape.dims4();
+        assert!(n < nn);
+        let stride = c * h * w;
+        &mut self.data[n * stride..(n + 1) * stride]
+    }
+
+    /// View of samples [lo, hi) as a new tensor (copies).
+    pub fn slice_samples(&self, lo: usize, hi: usize) -> Tensor {
+        let (n, c, h, w) = self.shape.dims4();
+        assert!(lo <= hi && hi <= n);
+        let stride = c * h * w;
+        Tensor::from_vec(
+            (hi - lo, c, h, w),
+            self.data[lo * stride..hi * stride].to_vec(),
+        )
+    }
+
+    /// Write `src` into samples starting at `lo`.
+    pub fn write_samples(&mut self, lo: usize, src: &Tensor) {
+        let (n, c, h, w) = self.shape.dims4();
+        let (sn, sc, sh, sw) = src.shape.dims4();
+        assert_eq!((c, h, w), (sc, sh, sw), "sample shape mismatch");
+        assert!(lo + sn <= n);
+        let stride = c * h * w;
+        self.data[lo * stride..(lo + sn) * stride].copy_from_slice(&src.data);
+    }
+
+    /// Elementwise a += alpha * b (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Sum of all entries (f64 accumulator).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a-b‖ / max(‖b‖, ε).
+    pub fn rel_l2_error(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in self.data.iter().zip(other.data.iter()) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        num.sqrt() / den.sqrt().max(1e-12)
+    }
+
+    /// Assert elementwise closeness with an absolute + relative bound.
+    /// Panics with the first offending index on failure.
+    pub fn assert_allclose(&self, other: &Tensor, atol: f32, rtol: f32) {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        for (i, (a, b)) in self.data.iter().zip(other.data.iter()).enumerate() {
+            let tol = atol + rtol * b.abs();
+            assert!(
+                (a - b).abs() <= tol,
+                "tensors differ at flat index {i}: {a} vs {b} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros((2, 3, 4, 5));
+        assert_eq!(t.numel(), 120);
+        assert_eq!(t.shape().dims4(), (2, 3, 4, 5));
+        assert!(t.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn arange_indexing_nchw() {
+        let t = Tensor::arange((2, 3, 2, 2));
+        // flat index of (n=1, c=2, h=1, w=0) = ((1*3+2)*2+1)*2+0 = 22
+        assert_eq!(t.at4(1, 2, 1, 0), 22.0);
+        assert_eq!(t.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(t.at4(1, 2, 1, 1), 23.0);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut t = Tensor::zeros((1, 2, 3, 3));
+        t.set4(0, 1, 2, 2, 7.5);
+        assert_eq!(t.at4(0, 1, 2, 2), 7.5);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::arange((2, 6)).reshape((3, 4));
+        assert_eq!(t.at2(2, 3), 11.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape changes element count")]
+    fn reshape_bad_count_panics() {
+        let _ = Tensor::zeros((2, 2)).reshape((3, 2));
+    }
+
+    #[test]
+    fn sample_slicing() {
+        let t = Tensor::arange((3, 2, 2, 2));
+        let s1 = t.slice_samples(1, 3);
+        assert_eq!(s1.shape().dims4(), (2, 2, 2, 2));
+        assert_eq!(s1.at4(0, 0, 0, 0), 8.0);
+        assert_eq!(s1.at4(1, 1, 1, 1), 23.0);
+    }
+
+    #[test]
+    fn write_samples_roundtrip() {
+        let mut dst = Tensor::zeros((4, 1, 2, 2));
+        let src = Tensor::full((2, 1, 2, 2), 3.0);
+        dst.write_samples(1, &src);
+        assert_eq!(dst.sample(0), &[0.0; 4]);
+        assert_eq!(dst.sample(1), &[3.0; 4]);
+        assert_eq!(dst.sample(2), &[3.0; 4]);
+        assert_eq!(dst.sample(3), &[0.0; 4]);
+    }
+
+    #[test]
+    fn axpy_scale_sum() {
+        let mut a = Tensor::full((2, 2), 1.0);
+        let b = Tensor::full((2, 2), 2.0);
+        a.axpy(0.5, &b); // 1 + 1 = 2
+        assert_eq!(a.as_slice(), &[2.0; 4]);
+        a.scale(2.0);
+        assert_eq!(a.sum(), 16.0);
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        let a = Tensor::full((2, 2), 1.0);
+        let mut b = a.clone();
+        b.as_mut_slice()[3] = 1.0 + 1e-6;
+        a.assert_allclose(&b, 1e-5, 0.0);
+        let r = std::panic::catch_unwind(|| {
+            let c = Tensor::full((2, 2), 2.0);
+            a.assert_allclose(&c, 1e-5, 0.0)
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Pcg64::new(11);
+        let t = Tensor::randn((64, 3, 16, 16), 0.0, 0.01, &mut rng);
+        let mean = t.sum() / t.numel() as f64;
+        assert!(mean.abs() < 1e-3);
+    }
+
+    #[test]
+    fn xavier_bounds() {
+        let mut rng = Pcg64::new(12);
+        let fan_in = 27;
+        let a = (3.0 / fan_in as f32).sqrt();
+        let t = Tensor::xavier((8, 3, 3, 3), fan_in, &mut rng);
+        assert!(t.as_slice().iter().all(|&x| x >= -a && x < a));
+    }
+}

@@ -1,0 +1,135 @@
+//! Shape bookkeeping for [`super::Tensor`].
+
+/// A tensor shape of rank 1–4, stored as up-to-4 dimensions.
+///
+/// Rank-4 shapes are interpreted NCHW throughout the crate (Caffe's
+/// layout). Rank-2 shapes are (rows, cols) row-major matrices.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: [usize; 4],
+    rank: u8,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(
+            (1..=4).contains(&dims.len()),
+            "rank must be 1..=4, got {}",
+            dims.len()
+        );
+        let mut d = [1usize; 4];
+        d[..dims.len()].copy_from_slice(dims);
+        Shape { dims: d, rank: dims.len() as u8 }
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.dims[..self.rank()].iter().product()
+    }
+
+    /// Dimensions as a slice of length `rank()`.
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        &self.dims[..self.rank()]
+    }
+
+    /// Interpret as 4-D NCHW. Lower-rank shapes are padded with leading
+    /// singleton axes is NOT done implicitly — rank must be 4.
+    #[inline]
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.rank, 4, "expected rank-4 shape, got {:?}", self);
+        (self.dims[0], self.dims[1], self.dims[2], self.dims[3])
+    }
+
+    /// Interpret as a 2-D matrix.
+    #[inline]
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank, 2, "expected rank-2 shape, got {:?}", self);
+        (self.dims[0], self.dims[1])
+    }
+
+    /// First dimension (batch axis for NCHW, rows for matrices).
+    #[inline]
+    pub fn dim0(&self) -> usize {
+        self.dims[0]
+    }
+}
+
+impl std::fmt::Debug for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Shape{:?}", self.dims())
+    }
+}
+
+impl From<usize> for Shape {
+    fn from(n: usize) -> Self {
+        Shape::new(&[n])
+    }
+}
+
+impl From<(usize, usize)> for Shape {
+    fn from((a, b): (usize, usize)) -> Self {
+        Shape::new(&[a, b])
+    }
+}
+
+impl From<(usize, usize, usize)> for Shape {
+    fn from((a, b, c): (usize, usize, usize)) -> Self {
+        Shape::new(&[a, b, c])
+    }
+}
+
+impl From<(usize, usize, usize, usize)> for Shape {
+    fn from((a, b, c, d): (usize, usize, usize, usize)) -> Self {
+        Shape::new(&[a, b, c, d])
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(dims: &[usize]) -> Self {
+        Shape::new(dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_and_numel() {
+        assert_eq!(Shape::from(5).numel(), 5);
+        assert_eq!(Shape::from((2, 3)).numel(), 6);
+        assert_eq!(Shape::from((2, 3, 4)).numel(), 24);
+        assert_eq!(Shape::from((2, 3, 4, 5)).numel(), 120);
+        assert_eq!(Shape::from((2, 3, 4, 5)).rank(), 4);
+    }
+
+    #[test]
+    fn dims_accessors() {
+        let s = Shape::from((2, 3, 4, 5));
+        assert_eq!(s.dims4(), (2, 3, 4, 5));
+        assert_eq!(s.dims(), &[2, 3, 4, 5]);
+        assert_eq!(s.dim0(), 2);
+        let m = Shape::from((7, 9));
+        assert_eq!(m.dims2(), (7, 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected rank-2")]
+    fn dims2_wrong_rank_panics() {
+        Shape::from((1, 2, 3)).dims2();
+    }
+
+    #[test]
+    fn equality() {
+        assert_eq!(Shape::from((2, 3)), Shape::new(&[2, 3]));
+        assert_ne!(Shape::from((2, 3)), Shape::from((3, 2)));
+        // rank matters even when padded dims match
+        assert_ne!(Shape::from((2, 3)), Shape::from((2, 3, 1)));
+    }
+}

@@ -1,0 +1,136 @@
+//! proptest-lite (substrate S17): a tiny in-tree property-testing
+//! harness, since no property-testing crate is vendored offline.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath):
+//! ```no_run
+//! use cct::testing::{Prop, Gen};
+//! Prop::new("gemm is linear in alpha", 64).run(|g| {
+//!     let m = g.usize_in(1, 8);
+//!     assert!(m >= 1 && m <= 8);
+//! });
+//! ```
+//!
+//! Each case gets a deterministic seed derived from the property name
+//! and the case index, so failures are reproducible and reported with
+//! the failing seed. No shrinking — cases are kept small instead.
+
+use crate::rng::Pcg64;
+
+/// Case-local generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Vec of uniform f32 in [lo, hi).
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        self.rng.fill_uniform(&mut v, lo, hi);
+        v
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Access the underlying RNG for custom generation.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// A named property run over `cases` deterministic cases.
+pub struct Prop {
+    name: &'static str,
+    cases: u32,
+}
+
+impl Prop {
+    pub fn new(name: &'static str, cases: u32) -> Self {
+        Prop { name, cases }
+    }
+
+    /// Run the property; panics (with case seed) on the first failure.
+    pub fn run(&self, mut f: impl FnMut(&mut Gen)) {
+        for case in 0..self.cases {
+            let seed = fnv1a(self.name) ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut g = Gen { rng: Pcg64::new(seed) };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property '{}' failed at case {case} (seed {seed:#x}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<usize> = Vec::new();
+        Prop::new("det", 10).run(|g| first.push(g.usize_in(0, 1000)));
+        let mut second: Vec<usize> = Vec::new();
+        Prop::new("det", 10).run(|g| second.push(g.usize_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn failure_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("always-fails", 3).run(|_| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast_ref::<String>().unwrap() != String::new();
+        assert!(msg);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        Prop::new("bounds", 100).run(|g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(10, 0.0, 2.0);
+            assert_eq!(v.len(), 10);
+            assert!(v.iter().all(|&x| (0.0..2.0).contains(&x)));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+}

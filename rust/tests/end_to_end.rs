@@ -1,0 +1,135 @@
+//! End-to-end integration over the native engine: config → net →
+//! coordinator → solver on real (synthetic) data, plus checkpointing.
+//! Fast versions of what `examples/train_e2e.rs` does at full length.
+
+use cct::coordinator::CnnCoordinator;
+use cct::data::BlobCorpus;
+use cct::layers::{ExecCtx, LoweringPolicy, Phase};
+use cct::lowering::{LoweringType, MachineProfile};
+use cct::net::{config::build_net, parse_net, presets};
+use cct::rng::Pcg64;
+use cct::solver::{SgdSolver, SolverConfig};
+
+#[test]
+fn lenet_learns_blob_corpus() {
+    let cfg = parse_net(presets::LENET).unwrap();
+    let mut rng = Pcg64::new(1);
+    let mut net = build_net(&cfg, &mut rng).unwrap();
+    let mut corpus = BlobCorpus::generate(1, 28, 10, 128, 0.2, 5);
+    let mut solver = SgdSolver::new(SolverConfig { base_lr: 0.05, ..Default::default() });
+    let ctx = ExecCtx::default();
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let (x, y) = corpus.next_batch(16);
+        last = solver.train_step(&mut net, &x, &y, &ctx);
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first * 0.8, "LeNet did not learn: {first} → {last}");
+
+    // accuracy on the training distribution beats chance
+    let (ex, ey) = corpus.eval_batch(64);
+    let test_ctx = ExecCtx { phase: Phase::Test, ..Default::default() };
+    net.forward_loss(&ex, &ey, &test_ctx);
+    assert!(net.last_accuracy() > 0.2, "accuracy {}", net.last_accuracy());
+}
+
+#[test]
+fn cifar_quick_trains_under_coordinator() {
+    let cfg = parse_net(presets::CIFAR10_QUICK).unwrap();
+    let solver = SolverConfig { base_lr: 0.05, momentum: 0.9, weight_decay: 1e-4, ..Default::default() };
+    let mut coord = CnnCoordinator::new(&cfg, 2, 2, solver, 3).unwrap();
+    // few classes + low noise so the short test budget suffices (the
+    // full-length run is examples/train_e2e.rs)
+    let mut corpus = BlobCorpus::generate(3, 32, 4, 64, 0.15, 7);
+    let mut losses = Vec::new();
+    for _ in 0..40 {
+        let (x, y) = corpus.next_batch(16);
+        losses.push(coord.step(&x, &y));
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+    let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(tail < head * 0.85, "coordinator training stalled: head {head:.4} tail {tail:.4}");
+}
+
+#[test]
+fn auto_lowering_policy_matches_fixed_outputs() {
+    // A net run with the automatic optimizer must produce identical
+    // numbers to the Type-1 run (all lowerings compute the same conv).
+    let cfg = parse_net(presets::CIFAR10_QUICK).unwrap();
+    let mut rng = Pcg64::new(4);
+    let mut net_a = build_net(&cfg, &mut rng).unwrap();
+    let mut rng = Pcg64::new(4);
+    let mut net_b = build_net(&cfg, &mut rng).unwrap();
+    let mut corpus = BlobCorpus::generate(3, 32, 10, 32, 0.25, 9);
+    let (x, y) = corpus.next_batch(8);
+
+    let fixed = ExecCtx {
+        lowering: LoweringPolicy::Fixed(LoweringType::Type1),
+        phase: Phase::Test,
+        ..Default::default()
+    };
+    let auto = ExecCtx {
+        lowering: LoweringPolicy::Auto(MachineProfile::one_core()),
+        phase: Phase::Test,
+        ..Default::default()
+    };
+    let la = net_a.forward_loss(&x, &y, &fixed);
+    let lb = net_b.forward_loss(&x, &y, &auto);
+    assert!((la - lb).abs() < 1e-4, "lowering policy changed the math: {la} vs {lb}");
+}
+
+#[test]
+fn checkpoint_resume_reproduces_training() {
+    let cfg = parse_net(presets::LENET).unwrap();
+    let mut rng = Pcg64::new(8);
+    let mut net = build_net(&cfg, &mut rng).unwrap();
+    let mut corpus = BlobCorpus::generate(1, 28, 10, 64, 0.2, 11);
+    let mut solver = SgdSolver::new(SolverConfig { base_lr: 0.05, momentum: 0.0, ..Default::default() });
+    let ctx = ExecCtx::default();
+    for _ in 0..3 {
+        let (x, y) = corpus.next_batch(8);
+        solver.train_step(&mut net, &x, &y, &ctx);
+    }
+    // snapshot
+    let mut ckpt = Vec::new();
+    net.save_params(&mut ckpt).unwrap();
+
+    // two more steps from the snapshot, twice — must agree exactly
+    let run = |ckpt: &[u8]| {
+        let mut rng = Pcg64::new(8);
+        let mut net2 = build_net(&cfg, &mut rng).unwrap();
+        net2.load_params(&mut &ckpt[..]).unwrap();
+        let mut corpus2 = BlobCorpus::generate(1, 28, 10, 64, 0.2, 13);
+        let mut s2 = SgdSolver::new(SolverConfig { base_lr: 0.05, momentum: 0.0, ..Default::default() });
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let (x, y) = corpus2.next_batch(8);
+            out.push(s2.train_step(&mut net2, &x, &y, &ctx));
+        }
+        out
+    };
+    assert_eq!(run(&ckpt), run(&ckpt));
+}
+
+#[test]
+fn per_layer_timings_show_conv_dominance() {
+    // The paper: conv layers are 70–90% of execution time. On the
+    // (conv-heavy) cifar10_quick at batch 16 conv must dominate.
+    let cfg = parse_net(presets::CIFAR10_QUICK).unwrap();
+    let mut rng = Pcg64::new(10);
+    let mut net = build_net(&cfg, &mut rng).unwrap();
+    let mut corpus = BlobCorpus::generate(3, 32, 10, 32, 0.25, 15);
+    let (x, y) = corpus.next_batch(16);
+    let ctx = ExecCtx::default();
+    // warmup then measure
+    let _ = net.forward_backward_timed(&x, &y, &ctx);
+    let (_, timings) = net.forward_backward_timed(&x, &y, &ctx);
+    let conv: f64 = timings.iter().filter(|t| t.is_conv).map(|t| t.forward_s + t.backward_s).sum();
+    let total: f64 = timings.iter().map(|t| t.forward_s + t.backward_s).sum();
+    let frac = conv / total;
+    assert!(frac > 0.5, "conv fraction {frac:.2} — expected the bottleneck (paper: 0.7–0.9)");
+}

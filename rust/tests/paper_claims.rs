@@ -1,0 +1,218 @@
+//! The paper's quantitative claims, asserted against this
+//! reproduction's measured (native) or simulated (device-model)
+//! numbers. Each test cites the claim it checks. These are *shape*
+//! assertions — who wins and by roughly what factor — not absolute
+//! times (DESIGN.md §Hardware-Adaptation).
+
+use cct::coordinator::scheduler;
+use cct::device::profiles;
+use cct::gemm::{sgemm, GemmDims, Trans};
+use cct::lowering::{choose_lowering, optimizer, ConvShape, CostModel, LoweringType, MachineProfile};
+use cct::net::presets;
+use cct::rng::Pcg64;
+
+/// §3.2: "CcT outperforms Caffe by 4.5×" (c4.4xlarge, CaffeNet, b=256):
+/// simulated end-to-end with the Caffe strategy (per-image lowering)
+/// vs the CcT strategy (whole-batch lowering) on the conv stack.
+#[test]
+fn claim_end_to_end_batching_speedup() {
+    let dev = profiles::c4_4xlarge();
+    let mut caffe = 0.0;
+    let mut cct_t = 0.0;
+    for (_, n, k, d, o) in presets::fig7_conv_geometry() {
+        let shape = ConvShape { n, k, d, o, b: 256, pad: 0, stride: 1 };
+        caffe += dev.conv_seconds_per_image(&shape, LoweringType::Type1);
+        cct_t += dev.conv_seconds(&shape, LoweringType::Type1);
+    }
+    let speedup = caffe / cct_t;
+    assert!(
+        (3.0..10.0).contains(&speedup),
+        "conv-stack batching speedup {speedup:.2}× (paper: 4.5× e2e, up to 10× on conv layers)"
+    );
+}
+
+/// §3.2: "Caffe [GPU] is 1.86× faster than CcT running on 8 CPU cores,
+/// and slightly slower than CcT running on 16 CPU cores" — the
+/// FLOPS-proportionality claim across devices.
+#[test]
+fn claim_gpu_vs_cpu_proportional_to_flops() {
+    let gpu = profiles::grid_k520();
+    let cpu8 = profiles::c4_4xlarge();
+    let cpu16 = profiles::c4_8xlarge();
+    let mut t_gpu = 0.0;
+    let mut t8 = 0.0;
+    let mut t16 = 0.0;
+    for (_, n, k, d, o) in presets::fig7_conv_geometry() {
+        let shape = ConvShape { n, k, d, o, b: 256, pad: 0, stride: 1 };
+        t_gpu += gpu.conv_seconds_with_transfer(&shape, LoweringType::Type1);
+        t8 += cpu8.conv_seconds(&shape, LoweringType::Type1);
+        t16 += cpu16.conv_seconds(&shape, LoweringType::Type1);
+    }
+    let ratio8 = t8 / t_gpu;
+    assert!((1.3..2.6).contains(&ratio8), "GPU vs 8-core ratio {ratio8:.2} (paper: 1.86×)");
+    assert!(t16 < t_gpu * 1.15, "16-core CPU should be ≈ or faster than the K520 (paper: slightly faster)");
+}
+
+/// Fig 4(a): hybrid CPU+GPU is ~1.2× over GPU-only on conv1, with the
+/// GPU taking ~85% of the batch.
+#[test]
+fn claim_hybrid_conv1_speedup_and_share() {
+    let gpu = profiles::grid_k520();
+    let cpu = profiles::g2_host_cpu();
+    let shape = ConvShape { n: 227, k: 11, d: 3, o: 96, b: 256, pad: 0, stride: 4 };
+    let gpu_only = scheduler::simulate_hybrid_conv(&shape, &[gpu.clone()], &[256], LoweringType::Type1);
+    let hybrid = scheduler::schedule_and_simulate(&shape, &[gpu, cpu], LoweringType::Type1);
+    let speedup = gpu_only.makespan_s / hybrid.makespan_s;
+    let gpu_share = hybrid.assignment[0] as f64 / 256.0;
+    assert!((1.05..1.35).contains(&speedup), "hybrid speedup {speedup:.2} (paper: 1.20×)");
+    assert!((0.80..0.95).contains(&gpu_share), "gpu share {gpu_share:.2} (paper: 0.85)");
+}
+
+/// Fig 5: on g2.8xlarge, 1 GPU + CPU > 1.15×; 4 GPUs > 3× (3.12×).
+#[test]
+fn claim_multi_gpu_scaling() {
+    let gpu = profiles::grid_k520();
+    let host = profiles::g2_8xlarge_cpu();
+    let convs: Vec<ConvShape> = presets::fig7_conv_geometry()
+        .into_iter()
+        .map(|(_, n, k, d, o)| ConvShape { n, k, d, o, b: 256, pad: 0, stride: 1 })
+        .collect();
+
+    let time = |devices: &[cct::device::DeviceSpec]| -> f64 {
+        convs
+            .iter()
+            .map(|s| scheduler::schedule_and_simulate(s, devices, LoweringType::Type1).makespan_s)
+            .sum()
+    };
+    let one = time(&[gpu.clone()]);
+    let one_plus_cpu = time(&[gpu.clone(), host.clone()]);
+    let four = time(&[gpu.clone(), gpu.clone(), gpu.clone(), gpu.clone()]);
+    let s1 = one / one_plus_cpu;
+    let s4 = one / four;
+    assert!(s1 > 1.12, "1 GPU + CPU speedup {s1:.2} (paper: 1.17×)");
+    assert!(s4 > 3.0 && s4 <= 4.05, "4-GPU speedup {s4:.2} (paper: 3.12×)");
+}
+
+/// Appendix B / Fig 9: the FLOPS-proportional heuristic is within 5%
+/// of the optimal split, and extreme splits are worse.
+#[test]
+fn claim_heuristic_near_optimal() {
+    let gpu = profiles::grid_k520();
+    let cpu = profiles::g2_host_cpu();
+    for depth in [48usize, 96] {
+        let shape = ConvShape { n: 227, k: 11, d: 3, o: depth, b: 256, pad: 0, stride: 4 };
+        let heuristic = scheduler::schedule_and_simulate(&shape, &[gpu.clone(), cpu.clone()], LoweringType::Type1);
+        let (p_opt, optimal) =
+            scheduler::optimal_two_device_split(&shape, &[gpu.clone(), cpu.clone()], LoweringType::Type1);
+        let gap = heuristic.makespan_s / optimal.makespan_s;
+        assert!(gap < 1.05, "o={depth}: heuristic {gap:.3}× of optimal (claim: ≤1.05)");
+        assert!((0.7..0.95).contains(&p_opt), "optimal GPU fraction {p_opt:.2} (paper: 0.83)");
+    }
+}
+
+/// Appendix A / Fig 8(c): the optimal lowering flips from Type 1 to
+/// Type 3 as d/o grows — *measured natively* on this machine.
+#[test]
+fn claim_lowering_crossover_measured() {
+    use cct::bench_util::bench;
+    use cct::lowering::conv_forward;
+    use cct::tensor::Tensor;
+
+    let measure = |d: usize, o: usize, ty: LoweringType| -> f64 {
+        let shape = ConvShape::simple(13, 3, d, o, 4);
+        let mut rng = Pcg64::new(17);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 0.1, &mut rng);
+        bench(1, 3, || {
+            let _ = conv_forward(ty, &shape, &data, &w, 1);
+        })
+        .min
+    };
+    // d ≪ o: Type 1 must win. d ≫ o: Type 3 must win.
+    let low_ratio_t1 = measure(16, 512, LoweringType::Type1);
+    let low_ratio_t3 = measure(16, 512, LoweringType::Type3);
+    assert!(
+        low_ratio_t1 < low_ratio_t3,
+        "at d/o=0.03, T1 ({low_ratio_t1:.4}s) must beat T3 ({low_ratio_t3:.4}s)"
+    );
+    let high_ratio_t1 = measure(1024, 8, LoweringType::Type1);
+    let high_ratio_t3 = measure(1024, 8, LoweringType::Type3);
+    assert!(
+        high_ratio_t3 < high_ratio_t1,
+        "at d/o=128, T3 ({high_ratio_t3:.4}s) must beat T1 ({high_ratio_t1:.4}s)"
+    );
+}
+
+/// §3.2: "Both CcT and Caffe use only Lowering Type 1 … [Type 3 faster]
+/// only true of conv5 and the difference is small" — the optimizer must
+/// agree that Type 1 is (near-)optimal on every CaffeNet conv layer.
+#[test]
+fn claim_type1_near_optimal_on_caffenet() {
+    let prof = MachineProfile::c4_4xlarge();
+    for (name, n, k, d, o) in presets::fig7_conv_geometry() {
+        let shape = ConvShape::simple(n, k, d, o, 256);
+        let best = choose_lowering(&shape, &prof);
+        let t_best = optimizer::estimate_seconds(&shape, best, &prof);
+        let t1 = optimizer::estimate_seconds(&shape, LoweringType::Type1, &prof);
+        assert!(
+            t1 / t_best < 1.25,
+            "{name}: Type 1 is {:.2}× of best {best} — paper says the difference is small",
+            t1 / t_best
+        );
+    }
+}
+
+/// §1: "the optimal lowering contributes around 20% of the execution
+/// time for a single layer" — cost model: lowering+lifting overhead of
+/// Type 1 is a minor fraction of the GEMM on CaffeNet shapes.
+#[test]
+fn claim_lowering_overhead_minor() {
+    for (_, n, k, d, o) in presets::fig7_conv_geometry().into_iter().skip(1) {
+        let cm = CostModel::new(ConvShape::simple(n, k, d, o, 256));
+        let c = cm.cost(LoweringType::Type1);
+        // bytes moved by lower+lift vs GEMM FLOPs at ~10 FLOP/byte
+        let overhead = (c.lower_writes + c.lift_ram_reads) as f64;
+        let work = c.gemm_flops as f64;
+        assert!(overhead * 10.0 < work, "lowering traffic dominates GEMM on n={n},k={k},d={d},o={o}");
+    }
+}
+
+/// Fig 2(b)-adjacent, measured: on the *native* GEMM, a batched (tall)
+/// lowered matrix sustains materially higher throughput than the b=1
+/// slice of the same problem — the mechanism behind the 4.5×. On this
+/// single-core box the penalty concentrates at genuinely thin outputs
+/// (rows below the packing tile), e.g. a small-spatial conv per image;
+/// the thread-level pathology of Fig 2(b) is covered by the device
+/// model (see bench fig2_gemm_batching).
+#[test]
+fn claim_thin_gemm_slower_measured() {
+    // small-spatial conv per-image GEMM: 4 output rows, k²d=2400, o=64.
+    let cols = 2400usize;
+    let o = 64usize;
+    let rows1 = 4usize; // b = 1, tiny m²
+    let rows16 = 4 * 16; // b = 16
+    let mut rng = Pcg64::new(23);
+    let mut a = vec![0f32; rows16 * cols];
+    let mut b = vec![0f32; cols * o];
+    rng.fill_uniform(&mut a, -1.0, 1.0);
+    rng.fill_uniform(&mut b, -1.0, 1.0);
+    let mut c = vec![0f32; rows16 * o];
+
+    let time = |rows: usize, reps: usize, c: &mut [f32]| -> f64 {
+        let dims = GemmDims { m: rows, n: o, k: cols };
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, c, 1);
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    // warmup
+    time(rows1, 1, &mut c);
+    let per_image_16 = time(rows1, 32, &mut c) * 16.0; // 16 thin GEMMs
+    let batched_16 = time(rows16, 8, &mut c); // 1 fat GEMM
+    let ratio = per_image_16 / batched_16;
+    assert!(
+        ratio > 1.05,
+        "fat GEMM must beat 16 thin GEMMs (got ratio {ratio:.3})"
+    );
+}

@@ -1,0 +1,214 @@
+//! Substrate property tests + failure injection (coverage widening):
+//! algebraic identities the compute substrates must satisfy, and
+//! graceful-failure behaviour on malformed inputs.
+
+use cct::gemm::{gemm_naive, sgemm, GemmDims, Trans};
+use cct::lowering::{conv_forward, ConvShape, LoweringType};
+use cct::net::{config::build_net, parse_net};
+use cct::rng::Pcg64;
+use cct::runtime::parse_manifest_line;
+use cct::tensor::{read_tensor, write_tensor, Tensor};
+use cct::testing::Prop;
+
+// ---------------------------------------------------------------- GEMM
+
+#[test]
+fn gemm_linear_in_alpha() {
+    Prop::new("sgemm is linear in alpha", 20).run(|g| {
+        let (m, n, k) = (g.usize_in(1, 24), g.usize_in(1, 24), g.usize_in(1, 24));
+        let a = g.vec_f32(m * k, -1.0, 1.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        let alpha = g.f32_in(-2.0, 2.0);
+        let dims = GemmDims { m, n, k };
+        let mut c1 = vec![0f32; m * n];
+        let mut c2 = vec![0f32; m * n];
+        sgemm(Trans::N, Trans::N, dims, alpha, &a, &b, 0.0, &mut c1, 1);
+        sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c2, 1);
+        for (x, y) in c1.iter().zip(c2.iter()) {
+            assert!((x - alpha * y).abs() < 1e-3, "{x} vs α·{y}");
+        }
+    });
+}
+
+#[test]
+fn gemm_transpose_identity() {
+    // (A·B)ᵀ = Bᵀ·Aᵀ — exercised through the Trans flags.
+    Prop::new("(AB)^T = B^T A^T", 15).run(|g| {
+        let (m, n, k) = (g.usize_in(1, 16), g.usize_in(1, 16), g.usize_in(1, 16));
+        let a = g.vec_f32(m * k, -1.0, 1.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        let mut ab = vec![0f32; m * n];
+        gemm_naive(Trans::N, Trans::N, GemmDims { m, n, k }, 1.0, &a, &b, 0.0, &mut ab);
+        // Bᵀ·Aᵀ with row-major storage: use stored B as op(A)=Bᵀ (n×k),
+        // stored A as op(B)=Aᵀ (k×m).
+        let mut btat = vec![0f32; n * m];
+        gemm_naive(Trans::T, Trans::T, GemmDims { m: n, n: m, k }, 1.0, &b, &a, 0.0, &mut btat);
+        for i in 0..m {
+            for j in 0..n {
+                let x = ab[i * n + j];
+                let y = btat[j * m + i];
+                assert!((x - y).abs() < 1e-3, "({i},{j}): {x} vs {y}");
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_distributes_over_addition() {
+    Prop::new("A(B+C) = AB + AC", 15).run(|g| {
+        let (m, n, k) = (g.usize_in(1, 12), g.usize_in(1, 12), g.usize_in(1, 12));
+        let a = g.vec_f32(m * k, -1.0, 1.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        let c: Vec<f32> = g.vec_f32(k * n, -1.0, 1.0);
+        let bc: Vec<f32> = b.iter().zip(&c).map(|(x, y)| x + y).collect();
+        let dims = GemmDims { m, n, k };
+        let mut lhs = vec![0f32; m * n];
+        gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &bc, 0.0, &mut lhs);
+        let mut rhs = vec![0f32; m * n];
+        gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut rhs);
+        gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &c, 1.0, &mut rhs);
+        for (x, y) in lhs.iter().zip(rhs.iter()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    });
+}
+
+// ---------------------------------------------------------------- conv
+
+#[test]
+fn conv_linear_in_input() {
+    Prop::new("conv(x+y) = conv(x) + conv(y)", 10).run(|g| {
+        let k = g.usize_in(1, 3);
+        let n = k + g.usize_in(0, 4);
+        let shape = ConvShape::simple(n, k, g.usize_in(1, 3), g.usize_in(1, 3), 1);
+        let mut rng = Pcg64::new(g.usize_in(0, 1 << 20) as u64);
+        let x = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let y = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let mut xy = x.clone();
+        xy.axpy(1.0, &y);
+        let lhs = conv_forward(LoweringType::Type1, &shape, &xy, &w, 1);
+        let mut rhs = conv_forward(LoweringType::Type1, &shape, &x, &w, 1);
+        rhs.axpy(1.0, &conv_forward(LoweringType::Type1, &shape, &y, &w, 1));
+        assert!(lhs.max_abs_diff(&rhs) < 1e-3);
+    });
+}
+
+#[test]
+fn conv_translation_equivariance() {
+    // Shifting the input down-right by 1 shifts the (valid, stride-1)
+    // output identically in its interior.
+    let shape = ConvShape::simple(8, 3, 1, 1, 1);
+    let mut rng = Pcg64::new(77);
+    let x = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+    let mut shifted = Tensor::zeros(shape.input_shape());
+    for r in 1..8 {
+        for c in 1..8 {
+            shifted.set4(0, 0, r, c, x.at4(0, 0, r - 1, c - 1));
+        }
+    }
+    let y = conv_forward(LoweringType::Type1, &shape, &x, &w, 1);
+    let ys = conv_forward(LoweringType::Type1, &shape, &shifted, &w, 1);
+    let m = shape.m();
+    for r in 1..m {
+        for c in 1..m {
+            let a = y.at4(0, 0, r - 1, c - 1);
+            let b = ys.at4(0, 0, r, c);
+            assert!((a - b).abs() < 1e-4, "shift equivariance broken at ({r},{c})");
+        }
+    }
+}
+
+#[test]
+fn conv_1x1_is_channel_matmul() {
+    // A 1×1 convolution is a per-pixel channel mixing — check against
+    // an explicit matmul.
+    let shape = ConvShape::simple(5, 1, 3, 2, 2);
+    let mut rng = Pcg64::new(78);
+    let x = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+    let y = conv_forward(LoweringType::Type2, &shape, &x, &w, 1);
+    for bi in 0..2 {
+        for j in 0..2 {
+            for p in 0..25 {
+                let mut want = 0f32;
+                for i in 0..3 {
+                    want += w.at4(j, i, 0, 0) * x.as_slice()[(bi * 3 + i) * 25 + p];
+                }
+                let got = y.as_slice()[(bi * 2 + j) * 25 + p];
+                assert!((got - want).abs() < 1e-4);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ failure paths
+
+#[test]
+fn tensor_io_rejects_garbage() {
+    // random bytes must never parse (or panic)
+    Prop::new("tensor reader rejects noise", 20).run(|g| {
+        let len = g.usize_in(0, 64);
+        let noise: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        assert!(read_tensor(&mut noise.as_slice()).is_err());
+    });
+}
+
+#[test]
+fn tensor_io_rejects_bit_flips_in_header() {
+    let t = Tensor::arange((3, 4));
+    let mut buf = Vec::new();
+    write_tensor(&mut buf, &t).unwrap();
+    // flip the rank field to an invalid value
+    buf[4] = 200;
+    assert!(read_tensor(&mut buf.as_slice()).is_err());
+}
+
+#[test]
+fn net_parser_never_panics_on_noise() {
+    Prop::new("prototxt-lite parser total on noise", 40).run(|g| {
+        let len = g.usize_in(0, 80);
+        let charset: Vec<char> = "abc{}:#\n 0123456789\"".chars().collect();
+        let s: String = (0..len).map(|_| *g.choose(&charset)).collect();
+        // must return Ok or Err — never panic
+        let _ = parse_net(&s);
+    });
+}
+
+#[test]
+fn build_rejects_shape_underflow() {
+    // a kernel larger than the running spatial size must fail cleanly
+    let cfg = parse_net("input: 1 4 4\nconv { name: c out: 2 kernel: 9 }").unwrap();
+    let mut rng = Pcg64::new(1);
+    let r = std::panic::catch_unwind(move || build_net(&cfg, &mut rng));
+    // either an Err or a descriptive panic from shape checking — but
+    // never a silent success
+    match r {
+        Ok(Ok(_)) => panic!("9×9 kernel on 4×4 input must not build"),
+        _ => {}
+    }
+}
+
+#[test]
+fn manifest_rejects_malformed_lines() {
+    assert!(parse_manifest_line("name args=x:f32 results=notanumber").is_err());
+    assert!(parse_manifest_line("   ").is_err());
+    assert!(parse_manifest_line("name args=a:f32").is_err());
+    let ok = parse_manifest_line("n args=1:f32 results=2").unwrap();
+    assert_eq!(ok.n_results, 2);
+}
+
+#[test]
+fn checkpoint_blob_count_mismatch_rejected() {
+    let cfg = parse_net("input: 1 6 6\nfc { name: f out: 2 std: 0.1 }").unwrap();
+    let mut rng = Pcg64::new(2);
+    let mut small = build_net(&cfg, &mut rng).unwrap();
+    let cfg2 =
+        parse_net("input: 1 6 6\nfc { name: f out: 2 std: 0.1 }\nfc { name: g out: 2 std: 0.1 }")
+            .unwrap();
+    let big = build_net(&cfg2, &mut rng).unwrap();
+    let mut ckpt = Vec::new();
+    big.save_params(&mut ckpt).unwrap();
+    assert!(small.load_params(&mut ckpt.as_slice()).is_err());
+}
