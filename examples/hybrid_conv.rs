@@ -22,7 +22,7 @@ use cct::lowering::{ConvShape, LoweringType};
 use cct::rng::Pcg64;
 use cct::tensor::Tensor;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cct::Result<()> {
     // --- Part 1: measured batching strategies on this machine ------
     let shape = ConvShape { n: 27, k: 5, d: 96, o: 64, b: 16, pad: 2, stride: 1 };
     let mut rng = Pcg64::new(1);

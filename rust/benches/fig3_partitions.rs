@@ -8,7 +8,11 @@
 //!   threads each, partitions in parallel (the paper's setup).
 //! * **measured** — real partitioned execution of a conv2-scale layer
 //!   on this machine (1 core: wall times show overhead structure, not
-//!   scaling; EXPERIMENTS.md discusses).
+//!   scaling; EXPERIMENTS.md discusses). Partition workers run through
+//!   the buffer-writing `conv_type1_into` entry point: each worker
+//!   lowers straight out of the shared input slice and writes its
+//!   disjoint output slice — no staging copies, no allocator
+//!   contention between workers.
 //!
 //! Run: `cargo bench --bench fig3_partitions`
 

@@ -22,9 +22,10 @@ pub mod scheduler;
 pub use partitioner::{conv_partitioned, BatchStrategy, PartitionStats};
 pub use scheduler::{flops_proportional_split, simulate_hybrid_conv, HybridPlan};
 
+use crate::ensure;
 use crate::layers::ExecCtx;
 use crate::net::config::{build_net, NetConfig};
-use crate::net::Net;
+use crate::net::{Net, Workspace};
 use crate::rng::Pcg64;
 use crate::solver::{SgdSolver, SolverConfig};
 use crate::tensor::Tensor;
@@ -34,8 +35,17 @@ use crate::tensor::Tensor;
 /// forward/backward per replica on its own OS thread, averages the
 /// gradients into replica 0, applies the solver update there, and
 /// broadcasts fresh parameters.
+///
+/// Each partition owns a planned [`Workspace`] (sized for its slice of
+/// the batch on the first step), so the parallel workers are
+/// allocation-free and never contend on the allocator — the property
+/// the paper's batch-partitioning (Fig 3) relies on to scale.
 pub struct CnnCoordinator {
     replicas: Vec<Net>,
+    /// One planned workspace per active partition (parallel to the
+    /// `split_batch` ranges; re-planned when the batch size changes).
+    workspaces: Vec<Workspace>,
+    planned_batch: usize,
     solver: SgdSolver,
     /// GEMM threads each worker may use (paper: 16/p threads per
     /// partition so all cores stay busy).
@@ -52,7 +62,7 @@ impl CnnCoordinator {
         solver_cfg: SolverConfig,
         seed: u64,
     ) -> crate::Result<Self> {
-        anyhow::ensure!(workers >= 1, "need at least one worker");
+        ensure!(workers >= 1, "need at least one worker");
         let mut replicas = Vec::with_capacity(workers);
         for _ in 0..workers {
             // identical seed ⇒ identical init across replicas
@@ -61,6 +71,8 @@ impl CnnCoordinator {
         }
         Ok(CnnCoordinator {
             replicas,
+            workspaces: Vec::new(),
+            planned_batch: 0,
             solver: SgdSolver::new(solver_cfg),
             threads_per_worker: (total_threads / workers).max(1),
             steps: 0,
@@ -81,7 +93,8 @@ impl CnnCoordinator {
     }
 
     /// One data-parallel training step over `(data, labels)`; returns
-    /// the batch-weighted mean loss.
+    /// the batch-weighted mean loss. Allocation-free in the workers
+    /// after the first step at a fixed batch size.
     pub fn step(&mut self, data: &Tensor, labels: &[usize]) -> f64 {
         let b = data.shape().dim0();
         assert_eq!(labels.len(), b);
@@ -90,20 +103,33 @@ impl CnnCoordinator {
         let tpw = self.threads_per_worker;
         let seed = 0x5eed ^ self.steps as u64;
 
-        // Run each replica's partition on its own thread.
+        // Plan once per batch size: one workspace per active partition.
+        if self.planned_batch != b || self.workspaces.len() != ranges.len() {
+            self.workspaces = self
+                .replicas
+                .iter()
+                .zip(ranges.iter())
+                .map(|(net, r)| net.plan((r.end - r.start).max(1)))
+                .collect();
+            self.planned_batch = b;
+        }
+
+        // Run each replica's partition on its own thread, in its own
+        // workspace.
         let losses: Vec<(f64, usize)> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(p);
-            for (net, range) in self.replicas.iter_mut().zip(ranges.iter()) {
+            let mut handles = Vec::with_capacity(ranges.len());
+            let workers = self.replicas.iter_mut().zip(self.workspaces.iter_mut());
+            for ((net, ws), range) in workers.zip(ranges.iter()) {
                 let lo = range.start;
                 let hi = range.end;
-                let part = data.slice_samples(lo, hi);
-                let part_labels = labels[lo..hi].to_vec();
+                let part_labels = &labels[lo..hi];
                 handles.push(scope.spawn(move || {
                     if lo == hi {
                         return (0.0, 0);
                     }
+                    ws.load_input_range(data, lo);
                     let ctx = ExecCtx { threads: tpw, seed, ..Default::default() };
-                    let loss = net.forward_backward(&part, &part_labels, &ctx);
+                    let loss = net.forward_backward_in(ws, part_labels, &ctx);
                     (loss, hi - lo)
                 }));
             }
@@ -125,7 +151,7 @@ impl CnnCoordinator {
                 blob.grad.scale(w0);
             }
             for (r, rest) in tail.iter_mut().enumerate() {
-                let w = sizes[r + 1] as f32 / total as f32;
+                let w = sizes.get(r + 1).copied().unwrap_or(0) as f32 / total as f32;
                 if w == 0.0 {
                     continue;
                 }
@@ -135,14 +161,15 @@ impl CnnCoordinator {
             }
         }
 
-        // Update replica 0, then broadcast parameters to the others.
+        // Update replica 0, then broadcast parameters to the others
+        // (in-place copy — no tensor churn).
         self.solver.step(&mut self.replicas[0]);
         {
             let (head, tail) = self.replicas.split_at_mut(1);
             let p0 = head[0].params_mut();
             for rest in tail.iter_mut() {
                 for (src, dst) in p0.iter().zip(rest.params_mut()) {
-                    dst.data = src.data.clone();
+                    dst.data.as_mut_slice().copy_from_slice(src.data.as_slice());
                     dst.zero_grad();
                 }
             }

@@ -73,19 +73,34 @@ pub fn conv_partitioned(
     total_threads: usize,
 ) -> (Tensor, PartitionStats) {
     let t0 = Instant::now();
+    assert_eq!(data.shape().dims4(), shape.input_shape(), "data shape mismatch");
+    assert_eq!(weights.shape().dims4(), shape.weight_shape(), "weight shape mismatch");
     let m = shape.m();
     let mut out = Tensor::zeros(shape.output_shape());
     let cols = type1::lowered_cols(shape);
 
+    let img_stride = shape.d * shape.n * shape.n;
+    let weights_s = weights.as_slice();
     let stats = match strategy {
         BatchStrategy::CaffeStyle => {
-            // One image at a time; GEMM gets every thread.
+            // One image at a time; GEMM gets every thread. The lowering
+            // workspace is reused across images and each result lands
+            // straight in its output slice — the per-image strategy's
+            // cost is the thin GEMM, not allocator churn.
             let one = ConvShape { b: 1, ..*shape };
+            let chan = shape.o * m * m;
             let mut ws = type1::Workspace::new(&one);
+            let src = data.as_slice();
+            let dst = out.as_mut_slice();
             for bi in 0..shape.b {
-                let img = data.slice_samples(bi, bi + 1);
-                let r = type1::conv_type1_with(&one, &img, weights, total_threads, &mut ws);
-                out.write_samples(bi, &r);
+                type1::conv_type1_into(
+                    &one,
+                    &src[bi * img_stride..(bi + 1) * img_stride],
+                    weights_s,
+                    total_threads,
+                    &mut ws,
+                    &mut dst[bi * chan..(bi + 1) * chan],
+                );
             }
             PartitionStats {
                 partitions: shape.b,
@@ -95,8 +110,15 @@ pub fn conv_partitioned(
             }
         }
         BatchStrategy::FullBatch => {
-            let r = type1::conv_type1(shape, data, weights, total_threads);
-            out = r;
+            let mut ws = type1::Workspace::new(shape);
+            type1::conv_type1_into(
+                shape,
+                data.as_slice(),
+                weights_s,
+                total_threads,
+                &mut ws,
+                out.as_mut_slice(),
+            );
             PartitionStats {
                 partitions: 1,
                 gemm_threads_per_partition: total_threads,
@@ -108,29 +130,40 @@ pub fn conv_partitioned(
             assert!(p >= 1, "need at least one partition");
             let ranges = split_batch(shape.b, p);
             let tpw = (total_threads / ranges.len()).max(1);
-            // Each worker convolves its contiguous sample range into a
-            // disjoint slice of the output.
+            // Each worker convolves its contiguous sample range from
+            // the shared input slice into a disjoint slice of the
+            // output — no staging copies on either side.
             let chan = shape.o * m * m;
+            let src = data.as_slice();
             let out_slice = out.as_mut_slice();
+            // Pre-plan one lowering workspace per partition on the
+            // coordinating thread, so the workers themselves never
+            // touch the allocator (no contention between partitions).
+            let mut workspaces: Vec<type1::Workspace> = ranges
+                .iter()
+                .map(|r| type1::Workspace::new(&ConvShape { b: (r.end - r.start).max(1), ..*shape }))
+                .collect();
             std::thread::scope(|scope| {
                 let mut rest = out_slice;
-                let mut offset = 0usize;
-                for range in &ranges {
+                for (range, ws) in ranges.iter().zip(workspaces.iter_mut()) {
                     let len = (range.end - range.start) * chan;
                     let (mine, tail) = rest.split_at_mut(len);
                     rest = tail;
                     let lo = range.start;
                     let hi = range.end;
-                    let _ = offset;
-                    offset += len;
-                    let part = data.slice_samples(lo, hi);
                     scope.spawn(move || {
                         if lo == hi {
                             return;
                         }
                         let sub = ConvShape { b: hi - lo, ..*shape };
-                        let r = type1::conv_type1(&sub, &part, weights, tpw);
-                        mine.copy_from_slice(r.as_slice());
+                        type1::conv_type1_into(
+                            &sub,
+                            &src[lo * img_stride..hi * img_stride],
+                            weights_s,
+                            tpw,
+                            ws,
+                            mine,
+                        );
                     });
                 }
             });

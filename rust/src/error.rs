@@ -1,0 +1,168 @@
+//! In-tree error handling (substrate S1b) — an `anyhow` substitute.
+//!
+//! The crate is dependency-free so it builds in hermetic/offline
+//! environments; this module provides the small slice of `anyhow` the
+//! codebase needs: a string-y [`Error`] with a context chain, a
+//! [`Result`] alias, a [`Context`] extension trait for `Result`/
+//! `Option`, and the [`err!`](crate::err)/[`bail!`](crate::bail)/
+//! [`ensure!`](crate::ensure) macros.
+//!
+//! `Display` prints the full context chain (`outer: inner: root`), so
+//! error messages stay actionable without a backtrace.
+
+use std::fmt;
+
+/// A chainable, message-carrying error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context(self, msg: impl Into<String>) -> Self {
+        Error { msg: msg.into(), source: Some(Box::new(self)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context`-style extension: attach a message to the error
+/// path of a `Result` or to a `None`.
+pub trait Context<T> {
+    /// Replace/wrap the failure with `msg` (the original error becomes
+    /// the chained source).
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+
+    /// Like [`Context::context`] but lazily built.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (`anyhow::anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] (`anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds
+/// (`anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "no such file");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e = fail_io().unwrap_err();
+        assert!(e.to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn context_chains_in_display() {
+        let r: std::result::Result<(), String> = Err("root cause".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause");
+        // alternate format is identical (chain is always printed)
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(4).unwrap(), 8);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(101).unwrap_err().to_string().contains("too big"));
+        let e = err!("custom {}", 42);
+        assert_eq!(e.to_string(), "custom 42");
+    }
+}

@@ -6,9 +6,17 @@
 //! The lowering blocking is chosen per call from the
 //! [`LoweringPolicy`](super::LoweringPolicy): `Fixed(Type1)` reproduces
 //! Caffe/CcT's default; `Auto` engages the paper's automatic optimizer.
+//!
+//! Execution is allocation-free on the Type-1 path: the im2col matrix,
+//! GEMM result, and (for grouped convs) the per-group staging buffers
+//! all live in the planned [`LayerScratch`], and the weight gradient is
+//! accumulated straight into the [`ParamBlob`] by a β=1 GEMM. The
+//! Type-2/3 blockings (reachable via `Auto` or a non-default `Fixed`
+//! policy on unpadded unit-stride shapes) fall back to the allocating
+//! kernels — they are analysis/bench paths, not the training default.
 
-use super::{ExecCtx, Layer, LoweringPolicy, ParamBlob};
-use crate::lowering::{self, optimizer, ConvShape, LoweringType};
+use super::{ExecCtx, GroupScratch, Layer, LayerScratch, LoweringPolicy, ParamBlob};
+use crate::lowering::{self, optimizer, type1, ConvShape, LoweringType};
 use crate::rng::Pcg64;
 use crate::tensor::{Shape, Tensor};
 
@@ -89,35 +97,51 @@ impl ConvLayer {
         }
     }
 
-    /// Split (b, d, n, n) into the channel block for group g (copies).
-    fn group_slice(&self, x: &Tensor, g: usize) -> Tensor {
-        let (b, d, h, w) = x.shape().dims4();
+    /// Copy the channel block for group g of NCHW `src` into `dst`
+    /// (`(b, d/g, n, n)` layout).
+    fn gather_group(&self, src: &[f32], b: usize, chan: usize, g: usize, dst: &mut [f32]) {
+        let d = self.in_channels;
         let dg = d / self.cfg.group;
-        let mut out = Tensor::zeros((b, dg, h, w));
-        let src = x.as_slice();
-        let dst = out.as_mut_slice();
-        let chan = h * w;
         for bi in 0..b {
             let s = &src[(bi * d + g * dg) * chan..(bi * d + (g + 1) * dg) * chan];
             dst[bi * dg * chan..(bi + 1) * dg * chan].copy_from_slice(s);
         }
-        out
     }
 
-    /// Write a (b, og, m, m) group result into channels [g·og, (g+1)·og).
-    fn scatter_group(&self, dst: &mut Tensor, part: &Tensor, g: usize) {
-        let (b, o_total, m, _) = dst.shape().dims4();
-        let (_, og, _, _) = part.shape().dims4();
-        let chan = m * m;
-        let d = dst.as_mut_slice();
-        let s = part.as_slice();
+    /// Copy a `(b, o/g, m, m)` group block into the full NCHW `dst`'s
+    /// channels `[g·o/g, (g+1)·o/g)`.
+    fn scatter_group_out(&self, dst: &mut [f32], part: &[f32], b: usize, chan: usize, g: usize) {
+        let o = self.cfg.out_channels;
+        let og = o / self.cfg.group;
         for bi in 0..b {
-            d[(bi * o_total + g * og) * chan..(bi * o_total + (g + 1) * og) * chan]
-                .copy_from_slice(&s[bi * og * chan..(bi + 1) * og * chan]);
+            dst[(bi * o + g * og) * chan..(bi * o + (g + 1) * og) * chan]
+                .copy_from_slice(&part[bi * og * chan..(bi + 1) * og * chan]);
         }
     }
 
-    /// Weight sub-blob for group g: rows [g·og, (g+1)·og) of (o, dg·k²).
+    /// Inverse of [`Self::scatter_group_out`]: gather the group-g
+    /// channels of NCHW `src` into a `(b, o/g, m, m)` block.
+    fn gather_group_out(&self, src: &[f32], b: usize, chan: usize, g: usize, dst: &mut [f32]) {
+        let o = self.cfg.out_channels;
+        let og = o / self.cfg.group;
+        for bi in 0..b {
+            dst[bi * og * chan..(bi + 1) * og * chan]
+                .copy_from_slice(&src[(bi * o + g * og) * chan..(bi * o + (g + 1) * og) * chan]);
+        }
+    }
+
+    /// Split (b, d, n, n) into the channel block for group g (copies;
+    /// allocating helper for the Type-2/3 fallback and tests).
+    fn group_slice(&self, x: &Tensor, g: usize) -> Tensor {
+        let (b, d, h, w) = x.shape().dims4();
+        let dg = d / self.cfg.group;
+        let mut out = Tensor::zeros((b, dg, h, w));
+        self.gather_group(x.as_slice(), b, h * w, g, out.as_mut_slice());
+        out
+    }
+
+    /// Weight sub-blob for group g: rows [g·og, (g+1)·og) of (o, dg·k²)
+    /// (allocating helper for the Type-2/3 fallback and tests).
     fn group_weights(&self, g: usize) -> Tensor {
         let (o, dg, k, _) = self.weights.data.shape().dims4();
         let og = o / self.cfg.group;
@@ -126,6 +150,45 @@ impl ConvLayer {
             (og, dg, k, k),
             self.weights.data.as_slice()[g * og * row..(g + 1) * og * row].to_vec(),
         )
+    }
+
+    /// Grow the group staging buffers to fit this geometry (no-op once
+    /// planned).
+    fn ensure_group_scratch(gs: &mut GroupScratch, gshape: &ConvShape) {
+        let m = gshape.m();
+        let in_len = gshape.b * gshape.d * gshape.n * gshape.n;
+        let w_len = gshape.o * gshape.d * gshape.k * gshape.k;
+        let out_len = gshape.b * gshape.o * m * m;
+        if gs.gx.len() < in_len {
+            gs.gx.resize(in_len, 0.0);
+        }
+        if gs.gw.len() < w_len {
+            gs.gw.resize(w_len, 0.0);
+        }
+        if gs.gtop.len() < out_len {
+            gs.gtop.resize(out_len, 0.0);
+        }
+        if gs.gdx.len() < in_len {
+            gs.gdx.resize(in_len, 0.0);
+        }
+    }
+
+    fn add_bias(&self, top: &mut Tensor, b: usize, chan: usize) {
+        if let Some(bias) = &self.biases {
+            let bdat = bias.data.as_slice();
+            let t = top.as_mut_slice();
+            for bi in 0..b {
+                for (j, &bv) in bdat.iter().enumerate() {
+                    if bv != 0.0 {
+                        for v in &mut t[(bi * self.cfg.out_channels + j) * chan
+                            ..(bi * self.cfg.out_channels + j + 1) * chan]
+                        {
+                            *v += bv;
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -142,47 +205,90 @@ impl Layer for ConvLayer {
         Shape::from((b, self.cfg.out_channels, m, m))
     }
 
-    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+    fn plan_scratch(&self, in_shape: &Shape) -> LayerScratch {
+        let (b, _, h, _) = in_shape.dims4();
+        let gshape = self.group_shape(b, h);
+        let mut scratch = LayerScratch {
+            conv: Some(type1::Workspace::new(&gshape)),
+            ..Default::default()
+        };
+        if self.cfg.group > 1 {
+            let mut gs = GroupScratch::default();
+            Self::ensure_group_scratch(&mut gs, &gshape);
+            scratch.group = Some(gs);
+        }
+        scratch
+    }
+
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
         let (b, _, n, _) = bottom.shape().dims4();
         let gshape = self.group_shape(b, n);
         let ty = self.pick_lowering(&gshape, &ctx.lowering);
         let m = gshape.m();
-        let mut top = if self.cfg.group == 1 {
-            lowering::conv_forward(ty, &gshape, bottom, &self.weights.data, ctx.threads)
-        } else {
-            let mut top = Tensor::zeros((b, self.cfg.out_channels, m, m));
-            for g in 0..self.cfg.group {
-                let xin = self.group_slice(bottom, g);
-                let wg = self.group_weights(g);
-                let out = lowering::conv_forward(ty, &gshape, &xin, &wg, ctx.threads);
-                self.scatter_group(&mut top, &out, g);
-            }
-            top
-        };
+        debug_assert_eq!(*top.shape(), self.out_shape(bottom.shape()));
 
-        if let Some(bias) = &self.biases {
-            let bdat = bias.data.as_slice();
-            let chan = m * m;
-            let t = top.as_mut_slice();
-            for bi in 0..b {
-                for (j, &bv) in bdat.iter().enumerate() {
-                    if bv != 0.0 {
-                        for v in &mut t[(bi * self.cfg.out_channels + j) * chan
-                            ..(bi * self.cfg.out_channels + j + 1) * chan]
-                        {
-                            *v += bv;
-                        }
-                    }
+        if ty == LoweringType::Type1 {
+            let LayerScratch { conv, group, .. } = scratch;
+            let ws = conv.get_or_insert_with(|| type1::Workspace::new(&gshape));
+            if self.cfg.group == 1 {
+                type1::conv_type1_into(
+                    &gshape,
+                    bottom.as_slice(),
+                    self.weights.data.as_slice(),
+                    ctx.threads,
+                    ws,
+                    top.as_mut_slice(),
+                );
+            } else {
+                let gs = group.get_or_insert_with(GroupScratch::default);
+                Self::ensure_group_scratch(gs, &gshape);
+                let (o, dg, k, _) = self.weights.data.shape().dims4();
+                let og = o / self.cfg.group;
+                let row = dg * k * k;
+                for g in 0..self.cfg.group {
+                    self.gather_group(bottom.as_slice(), b, n * n, g, &mut gs.gx);
+                    gs.gw[..og * row].copy_from_slice(
+                        &self.weights.data.as_slice()[g * og * row..(g + 1) * og * row],
+                    );
+                    type1::conv_type1_into(&gshape, &gs.gx, &gs.gw, ctx.threads, ws, &mut gs.gtop);
+                    self.scatter_group_out(top.as_mut_slice(), &gs.gtop, b, m * m, g);
+                }
+            }
+        } else {
+            // Type-2/3 fallback (allocating; analysis/bench path).
+            if self.cfg.group == 1 {
+                let r = lowering::conv_forward(ty, &gshape, bottom, &self.weights.data, ctx.threads);
+                top.as_mut_slice().copy_from_slice(r.as_slice());
+            } else {
+                for g in 0..self.cfg.group {
+                    let xin = self.group_slice(bottom, g);
+                    let wg = self.group_weights(g);
+                    let out = lowering::conv_forward(ty, &gshape, &xin, &wg, ctx.threads);
+                    self.scatter_group_out(top.as_mut_slice(), out.as_slice(), b, m * m, g);
                 }
             }
         }
-        top
+
+        self.add_bias(top, b, m * m);
     }
 
-    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
         let (b, _, n, _) = bottom.shape().dims4();
         let gshape = self.group_shape(b, n);
-        let mut d_bottom = Tensor::zeros(*bottom.shape());
+        debug_assert_eq!(d_bottom.shape(), bottom.shape());
 
         // Bias gradient: sum over batch and spatial dims.
         if let Some(bias) = &mut self.biases {
@@ -200,56 +306,52 @@ impl Layer for ConvLayer {
 
         // Backward always uses Type 1 (the only blocking with a
         // col2im adjoint implemented — matching Caffe).
+        let LayerScratch { conv, group, .. } = scratch;
+        let ws = conv.get_or_insert_with(|| type1::Workspace::new(&gshape));
         if self.cfg.group == 1 {
-            let (dd, dw) = lowering::type1::conv_type1_backward(
+            type1::conv_type1_backward_into(
                 &gshape,
-                bottom,
-                &self.weights.data,
-                top_grad,
+                bottom.as_slice(),
+                self.weights.data.as_slice(),
+                top_grad.as_slice(),
                 ctx.threads,
+                ws,
+                d_bottom.as_mut_slice(),
+                self.weights.grad.as_mut_slice(),
             );
-            self.weights.grad.axpy(1.0, &dw);
-            d_bottom = dd;
         } else {
-            let og = self.cfg.out_channels / self.cfg.group;
+            let gs = group.get_or_insert_with(GroupScratch::default);
+            Self::ensure_group_scratch(gs, &gshape);
             let (o, dg, k, _) = self.weights.data.shape().dims4();
+            let og = o / self.cfg.group;
             let row = dg * k * k;
             let m = gshape.m();
+            let d_total = self.in_channels;
             for g in 0..self.cfg.group {
-                let xin = self.group_slice(bottom, g);
-                let wg = self.group_weights(g);
-                // Slice the group's top_grad channels.
-                let mut tg = Tensor::zeros((b, og, m, m));
-                {
-                    let chan = m * m;
-                    let src = top_grad.as_slice();
-                    let dst = tg.as_mut_slice();
-                    for bi in 0..b {
-                        dst[bi * og * chan..(bi + 1) * og * chan].copy_from_slice(
-                            &src[(bi * o + g * og) * chan..(bi * o + (g + 1) * og) * chan],
-                        );
-                    }
-                }
-                let (dd, dw) = lowering::type1::conv_type1_backward(&gshape, &xin, &wg, &tg, ctx.threads);
-                // Scatter d_bottom channels.
-                {
-                    let chan = n * n;
-                    let src = dd.as_slice();
-                    let dst = d_bottom.as_mut_slice();
-                    let d_total = self.in_channels;
-                    for bi in 0..b {
-                        dst[(bi * d_total + g * dg) * chan..(bi * d_total + (g + 1) * dg) * chan]
-                            .copy_from_slice(&src[bi * dg * chan..(bi + 1) * dg * chan]);
-                    }
-                }
-                // Accumulate group weight grads.
-                let wgrad = self.weights.grad.as_mut_slice();
-                for (i, v) in dw.as_slice().iter().enumerate() {
-                    wgrad[g * og * row + i] += v;
+                self.gather_group(bottom.as_slice(), b, n * n, g, &mut gs.gx);
+                gs.gw[..og * row].copy_from_slice(
+                    &self.weights.data.as_slice()[g * og * row..(g + 1) * og * row],
+                );
+                self.gather_group_out(top_grad.as_slice(), b, m * m, g, &mut gs.gtop);
+                type1::conv_type1_backward_into(
+                    &gshape,
+                    &gs.gx,
+                    &gs.gw,
+                    &gs.gtop,
+                    ctx.threads,
+                    ws,
+                    &mut gs.gdx,
+                    &mut self.weights.grad.as_mut_slice()[g * og * row..(g + 1) * og * row],
+                );
+                // Scatter the group's input gradient into its channels.
+                let chan = n * n;
+                let dst = d_bottom.as_mut_slice();
+                for bi in 0..b {
+                    dst[(bi * d_total + g * dg) * chan..(bi * d_total + (g + 1) * dg) * chan]
+                        .copy_from_slice(&gs.gdx[bi * dg * chan..(bi + 1) * dg * chan]);
                 }
             }
         }
-        d_bottom
     }
 
     fn params_mut(&mut self) -> Vec<&mut ParamBlob> {
@@ -365,6 +467,24 @@ mod tests {
         let (_, dw_ref) =
             crate::lowering::reference::conv_backward_reference(&gshape, &x, &layer.weights.data, &dy);
         assert!(layer.weights.grad.max_abs_diff(&dw_ref) < 1e-3);
+    }
+
+    #[test]
+    fn planned_scratch_forward_matches_allocating_path() {
+        // The workspace path must be bit-identical to the allocating
+        // wrapper — both run the same lower→GEMM→lift.
+        let mut rng = Pcg64::new(78);
+        let cfg = ConvConfig { out_channels: 4, kernel: 3, pad: 1, group: 2, bias: true, weight_std: 0.1, ..Default::default() };
+        let mut layer = ConvLayer::new("c", 4, cfg, &mut rng);
+        let x = Tensor::randn((2, 4, 6, 6), 0.0, 1.0, &mut rng);
+        let want = layer.forward(&x, &ctx());
+        let mut scratch = layer.plan_scratch(x.shape());
+        let mut top = Tensor::zeros(layer.out_shape(x.shape()));
+        layer.forward_into(&x, &mut top, &mut scratch, &ctx());
+        assert_eq!(top.as_slice(), want.as_slice());
+        // And the scratch is actually planned (conv workspace present).
+        assert!(scratch.conv.is_some() && scratch.group.is_some());
+        assert!(scratch.bytes() > 0);
     }
 
     #[test]

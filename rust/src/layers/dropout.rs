@@ -2,8 +2,13 @@
 //! probability p and scale survivors by 1/(1−p) (inverted dropout, as
 //! Caffe does); identity at test time. The mask is drawn from the
 //! [`ExecCtx`] seed so training runs are reproducible.
+//!
+//! Declares [`Layer::in_place`]: a planned workspace applies the mask
+//! directly in the activation slot. Backward keys off the stored mask
+//! (never the activation values), so it is correct in in-place chains
+//! regardless of what later layers wrote into the shared slot.
 
-use super::{ExecCtx, Layer, Phase};
+use super::{ExecCtx, Layer, LayerScratch, Phase};
 use crate::tensor::{Shape, Tensor};
 
 pub struct DropoutLayer {
@@ -31,34 +36,63 @@ impl Layer for DropoutLayer {
         *in_shape
     }
 
-    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+    fn in_place(&self) -> bool {
+        true
+    }
+
+    fn forward_inplace(&mut self, x: &mut Tensor, _scratch: &mut LayerScratch, ctx: &ExecCtx) {
         if ctx.phase == Phase::Test || self.p == 0.0 {
-            return bottom.clone();
+            return;
         }
         let mut rng = ctx.rng(self.salt);
         let keep_scale = 1.0 / (1.0 - self.p);
-        let mut top = bottom.clone();
         self.mask.clear();
-        self.mask.reserve(top.numel());
-        for v in top.as_mut_slice() {
+        self.mask.reserve(x.numel());
+        for v in x.as_mut_slice() {
             let keep = rng.uniform() as f32 >= self.p;
             self.mask.push(keep);
             *v = if keep { *v * keep_scale } else { 0.0 };
         }
-        top
     }
 
-    fn backward(&mut self, _bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+    fn backward_inplace(
+        &mut self,
+        _act: &Tensor,
+        grad: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
         if ctx.phase == Phase::Test || self.p == 0.0 {
-            return top_grad.clone();
+            return;
         }
-        assert_eq!(self.mask.len(), top_grad.numel(), "backward before forward");
+        assert_eq!(self.mask.len(), grad.numel(), "backward before forward");
         let keep_scale = 1.0 / (1.0 - self.p);
-        let mut d = top_grad.clone();
-        for (g, &keep) in d.as_mut_slice().iter_mut().zip(self.mask.iter()) {
+        for (g, &keep) in grad.as_mut_slice().iter_mut().zip(self.mask.iter()) {
             *g = if keep { *g * keep_scale } else { 0.0 };
         }
-        d
+    }
+
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
+        top.as_mut_slice().copy_from_slice(bottom.as_slice());
+        self.forward_inplace(top, scratch, ctx);
+    }
+
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
+        d_bottom.as_mut_slice().copy_from_slice(top_grad.as_slice());
+        self.backward_inplace(bottom, d_bottom, scratch, ctx);
     }
 
     fn flops(&self, in_shape: &Shape) -> u64 {
@@ -124,5 +158,34 @@ mod tests {
         let ctx2 = ExecCtx { seed: 43, ..Default::default() };
         let y3 = l.forward(&x, &ctx2);
         assert_ne!(y1, y3);
+    }
+
+    #[test]
+    fn inplace_matches_out_of_place() {
+        let mut l = DropoutLayer::new("d", 0.4);
+        let mut rng = Pcg64::new(5);
+        let x = Tensor::randn((2, 64), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx { seed: 9, ..Default::default() };
+        let y = l.forward(&x, &ctx);
+        let mut scratch = l.plan_scratch(x.shape());
+        let mut xi = x.clone();
+        l.forward_inplace(&mut xi, &mut scratch, &ctx);
+        assert_eq!(xi.as_slice(), y.as_slice());
+        let dy = Tensor::full(*x.shape(), 1.0);
+        let dx = l.backward(&x, &dy, &ctx);
+        let mut gi = dy.clone();
+        l.backward_inplace(&xi, &mut gi, &mut scratch, &ctx);
+        assert_eq!(gi.as_slice(), dx.as_slice());
+    }
+
+    #[test]
+    fn grad_check_inplace_path() {
+        // y = mask·x/(1−p) is linear given a fixed seed, so finite
+        // differences match the in-place backward exactly.
+        let mut rng = Pcg64::new(6);
+        let mut l = DropoutLayer::new("d", 0.5);
+        let x = Tensor::randn((2, 32), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx { seed: 11, ..Default::default() };
+        super::super::grad_check_inplace(&mut l, &x, &ctx, 1e-3, 1e-2);
     }
 }

@@ -1,7 +1,9 @@
 //! Fully-connected layer (Caffe `InnerProduct`), built directly on the
 //! GEMM substrate: y = x·Wᵀ + b with x flattened to (b, features).
+//! Allocation-free: forward writes straight into the caller's top
+//! buffer and backward accumulates dW with a β=1 GEMM into the blob.
 
-use super::{ExecCtx, Layer, ParamBlob};
+use super::{ExecCtx, Layer, LayerScratch, ParamBlob};
 use crate::gemm::{sgemm, GemmDims, Trans};
 use crate::rng::Pcg64;
 use crate::tensor::{Shape, Tensor};
@@ -50,9 +52,15 @@ impl Layer for FcLayer {
         Shape::from((b, self.out_features))
     }
 
-    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
         let (b, feats) = self.batch_features(bottom.shape());
-        let mut top = Tensor::zeros((b, self.out_features));
+        debug_assert_eq!(top.shape().dims2(), (b, self.out_features));
         // y (b, out) = x (b, in) · Wᵀ (in, out)
         sgemm(
             Trans::N,
@@ -72,10 +80,16 @@ impl Layer for FcLayer {
                 t[bi * self.out_features + j] += bv;
             }
         }
-        top
     }
 
-    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
         let (b, feats) = self.batch_features(bottom.shape());
         // dW (out, in) += dyᵀ (out, b) · x (b, in)
         sgemm(
@@ -98,7 +112,6 @@ impl Layer for FcLayer {
             }
         }
         // dx (b, in) = dy (b, out) · W (out, in)
-        let mut d_bottom = Tensor::zeros(*bottom.shape());
         sgemm(
             Trans::N,
             Trans::N,
@@ -110,7 +123,6 @@ impl Layer for FcLayer {
             d_bottom.as_mut_slice(),
             ctx.threads,
         );
-        d_bottom
     }
 
     fn params_mut(&mut self) -> Vec<&mut ParamBlob> {

@@ -6,7 +6,7 @@
 //! with the window of `size` channels centered on i (AlexNet: size=5,
 //! α=1e-4, β=0.75, k=1). Caffe folds α/size into the scale.
 
-use super::{ExecCtx, Layer};
+use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
 pub struct LrnLayer {
@@ -15,7 +15,8 @@ pub struct LrnLayer {
     alpha: f32,
     beta: f32,
     k: f32,
-    /// scale_i = k + α/size·Σ x² cached by forward.
+    /// scale_i = k + α/size·Σ x² cached by forward (shape-checked
+    /// reuse: reallocated only when the input shape changes).
     scale: Tensor,
 }
 
@@ -40,14 +41,27 @@ impl Layer for LrnLayer {
         *in_shape
     }
 
-    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
+    fn plan_scratch(&self, in_shape: &Shape) -> LayerScratch {
+        // per-pixel backward temporaries: one f32 per channel
+        let (_, c, _, _) = in_shape.dims4();
+        LayerScratch { aux: vec![0.0; c], ..Default::default() }
+    }
+
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
         let (b, c, h, w) = bottom.shape().dims4();
         let half = self.size / 2;
         let a_over_n = self.alpha / self.size as f32;
-        let mut scale = Tensor::zeros(*bottom.shape());
-        let mut top = Tensor::zeros(*bottom.shape());
+        if self.scale.shape() != bottom.shape() {
+            self.scale = Tensor::zeros(*bottom.shape());
+        }
         let x = bottom.as_slice();
-        let s = scale.as_mut_slice();
+        let s = self.scale.as_mut_slice();
         let y = top.as_mut_slice();
         let plane = h * w;
         for bi in 0..b {
@@ -67,11 +81,16 @@ impl Layer for LrnLayer {
                 }
             }
         }
-        self.scale = scale;
-        top
     }
 
-    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
         // dx_i = dy_i·s_i^{−β} − 2αβ/size · x_i · Σ_{j: i∈window(j)} dy_j·x_j·s_j^{−β−1}
         let (b, c, h, w) = bottom.shape().dims4();
         assert_eq!(self.scale.shape(), bottom.shape(), "backward before forward");
@@ -81,15 +100,17 @@ impl Layer for LrnLayer {
         let x = bottom.as_slice();
         let dy = top_grad.as_slice();
         let s = self.scale.as_slice();
-        let mut d_bottom = Tensor::zeros(*bottom.shape());
         let dx = d_bottom.as_mut_slice();
+        if scratch.aux.len() < c {
+            scratch.aux.resize(c, 0.0);
+        }
+        let t = &mut scratch.aux[..c];
         for bi in 0..b {
             for p in 0..plane {
-                // precompute t_j = dy_j · x_j · s_j^{−β−1} for this pixel
-                let mut t = vec![0f32; c];
-                for j in 0..c {
+                // t_j = dy_j · x_j · s_j^{−β−1} for this pixel
+                for (j, tj) in t.iter_mut().enumerate() {
                     let idx = (bi * c + j) * plane + p;
-                    t[j] = dy[idx] * x[idx] * s[idx].powf(-self.beta - 1.0);
+                    *tj = dy[idx] * x[idx] * s[idx].powf(-self.beta - 1.0);
                 }
                 for i in 0..c {
                     let idx = (bi * c + i) * plane + p;
@@ -101,7 +122,6 @@ impl Layer for LrnLayer {
                 }
             }
         }
-        d_bottom
     }
 
     fn flops(&self, in_shape: &Shape) -> u64 {

@@ -1,11 +1,30 @@
-//! Layer zoo (substrate S6) — Caffe-compatible layer semantics.
+//! Layer zoo (substrate S6) — Caffe-compatible layer semantics on a
+//! buffer-writing execution API.
 //!
-//! Every layer implements [`Layer`]: shape inference, `forward`, and
-//! `backward` (input gradient + parameter gradients). Semantics match
-//! Caffe's so that the CaffeNet/AlexNet presets are faithful: conv
-//! (with grouping), ReLU, max/avg pooling, LRN (AlexNet's
-//! cross-channel normalization), inner product, dropout, and
-//! softmax-with-loss.
+//! Every layer implements [`Layer`]: shape inference plus the
+//! plan-once / run-many execution methods
+//!
+//! * [`Layer::plan_scratch`] — size the layer's reusable scratch
+//!   (im2col buffers, group staging, caches) for a given input shape;
+//!   called once at [`crate::net::Workspace`] planning time;
+//! * [`Layer::forward_into`] / [`Layer::backward_into`] — write the
+//!   output / input-gradient into caller-owned buffers, allocating
+//!   nothing; parameter gradients are *accumulated* into the blobs;
+//! * [`Layer::forward_inplace`] / [`Layer::backward_inplace`] — for
+//!   layers that declare [`Layer::in_place`] (ReLU, dropout), run
+//!   directly in the activation slot, halving arena traffic — exactly
+//!   Caffe's in-place `Blob` sharing.
+//!
+//! The allocating [`Layer::forward`] / [`Layer::backward`] wrappers
+//! remain as conveniences for tests and one-off calls; the training
+//! hot loop (`net::Net::forward_backward` and friends) runs entirely
+//! through the `_into`/`_inplace` methods and performs **zero tensor
+//! allocations** after workspace planning (see `tensor::alloc_stats`).
+//!
+//! Semantics match Caffe's so that the CaffeNet/AlexNet presets are
+//! faithful: conv (with grouping), ReLU, max/avg pooling, LRN
+//! (AlexNet's cross-channel normalization), inner product, dropout,
+//! and softmax-with-loss.
 //!
 //! The paper's observation that "the bottleneck layers are the
 //! so-called convolutional layers, which consume between 70-90% of
@@ -28,7 +47,7 @@ pub use pool::{PoolLayer, PoolMode};
 pub use relu::ReluLayer;
 pub use softmax::SoftmaxLossLayer;
 
-use crate::lowering::{LoweringType, MachineProfile};
+use crate::lowering::{type1, LoweringType, MachineProfile};
 use crate::rng::Pcg64;
 use crate::tensor::{Shape, Tensor};
 
@@ -77,6 +96,48 @@ impl ExecCtx {
     }
 }
 
+/// Grouped-convolution staging buffers (one channel-group at a time).
+#[derive(Default)]
+pub struct GroupScratch {
+    /// One group's input channels (b, d/g, n, n).
+    pub gx: Vec<f32>,
+    /// One group's weight rows (o/g, d/g, k, k).
+    pub gw: Vec<f32>,
+    /// One group's output / top-gradient channels (b, o/g, m, m).
+    pub gtop: Vec<f32>,
+    /// One group's input-gradient channels (b, d/g, n, n).
+    pub gdx: Vec<f32>,
+}
+
+/// Reusable per-layer scratch, planned once per `(layer, input shape)`
+/// by [`Layer::plan_scratch`] and threaded through every
+/// `forward_into`/`backward_into` call. Layers use only the fields
+/// they need; all buffers are grown on demand (a planned workspace
+/// never grows — `rust/tests/workspace_parity.rs` asserts it).
+#[derive(Default)]
+pub struct LayerScratch {
+    /// Type-1 lowering workspace: im2col matrix + GEMM result
+    /// (conv layers; sized per channel-group).
+    pub conv: Option<type1::Workspace>,
+    /// Grouped-conv staging (conv layers with `group > 1`).
+    pub group: Option<GroupScratch>,
+    /// Generic f32 scratch (LRN: per-pixel backward temporaries).
+    pub aux: Vec<f32>,
+}
+
+impl LayerScratch {
+    /// Bytes held by this scratch — the per-layer share of the
+    /// Fig 2(c) memory-footprint quantity.
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let conv = self.conv.as_ref().map_or(0, |w| w.bytes());
+        let group = self.group.as_ref().map_or(0, |g| {
+            (g.gx.len() + g.gw.len() + g.gtop.len() + g.gdx.len()) * f
+        });
+        conv + group + self.aux.len() * f
+    }
+}
+
 /// A learnable parameter: value + gradient accumulator + solver hints.
 #[derive(Clone, Debug)]
 pub struct ParamBlob {
@@ -102,19 +163,89 @@ impl ParamBlob {
 /// The layer interface (Caffe's `Layer<Dtype>` reduced to one bottom /
 /// one top, which covers the sequential nets the paper evaluates; the
 /// loss layer takes labels separately).
+///
+/// The required methods are the buffer-writing `_into` pair; the
+/// allocating [`Layer::forward`]/[`Layer::backward`] are provided
+/// wrappers ("the old path" — gradient checks and parity tests drive
+/// them). In-place-capable layers additionally override
+/// [`Layer::in_place`] and the `_inplace` pair.
 pub trait Layer: Send {
     fn name(&self) -> &str;
 
     /// Output shape for a given input shape (panics on mismatch).
     fn out_shape(&self, in_shape: &Shape) -> Shape;
 
-    /// Forward pass.
-    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor;
+    /// Whether this layer may run with its top aliasing its bottom
+    /// (same arena slot). Requires `out_shape(s) == s`.
+    fn in_place(&self) -> bool {
+        false
+    }
+
+    /// Size this layer's reusable scratch for `in_shape` (called once
+    /// at workspace-planning time).
+    fn plan_scratch(&self, _in_shape: &Shape) -> LayerScratch {
+        LayerScratch::default()
+    }
+
+    /// Forward pass writing into `top` (preallocated to
+    /// `out_shape(bottom)`); must not allocate tensors.
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    );
 
     /// Backward pass: given the input and the gradient w.r.t. the
-    /// output, return the gradient w.r.t. the input and *accumulate*
-    /// parameter gradients into the blobs.
-    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor;
+    /// output, write the input gradient into `d_bottom` (preallocated,
+    /// overwritten) and *accumulate* parameter gradients into the
+    /// blobs; must not allocate tensors.
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    );
+
+    /// In-place forward: `x` is both bottom and top. Only called when
+    /// [`Layer::in_place`] is true.
+    fn forward_inplace(&mut self, _x: &mut Tensor, _scratch: &mut LayerScratch, _ctx: &ExecCtx) {
+        panic!("layer '{}' does not support in-place execution", self.name());
+    }
+
+    /// In-place backward: `grad` holds the top gradient on entry and
+    /// the bottom gradient on exit. `act` is the shared activation
+    /// slot (for in-place chains it holds the *post*-activation value;
+    /// in-place layers' masks must be insensitive to that — ReLU's
+    /// `y > 0 ⇔ x > 0`, dropout keys off its stored mask).
+    fn backward_inplace(
+        &mut self,
+        _act: &Tensor,
+        _grad: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
+        panic!("layer '{}' does not support in-place execution", self.name());
+    }
+
+    /// Allocating forward convenience (plans throwaway scratch).
+    fn forward(&mut self, bottom: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let mut top = Tensor::zeros(self.out_shape(bottom.shape()));
+        let mut scratch = self.plan_scratch(bottom.shape());
+        self.forward_into(bottom, &mut top, &mut scratch, ctx);
+        top
+    }
+
+    /// Allocating backward convenience (plans throwaway scratch).
+    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let mut d_bottom = Tensor::zeros(*bottom.shape());
+        let mut scratch = self.plan_scratch(bottom.shape());
+        self.backward_into(bottom, top_grad, &mut d_bottom, &mut scratch, ctx);
+        d_bottom
+    }
 
     /// Learnable parameters (empty for stateless layers).
     fn params_mut(&mut self) -> Vec<&mut ParamBlob> {
@@ -131,7 +262,8 @@ pub trait Layer: Send {
     fn flops(&self, in_shape: &Shape) -> u64;
 }
 
-/// Finite-difference gradient checking helper shared by layer tests.
+/// Finite-difference gradient checking helper shared by layer tests
+/// (drives the allocating wrappers, i.e. the out-of-place path).
 #[cfg(test)]
 pub(crate) fn grad_check_input<L: Layer>(
     layer: &mut L,
@@ -158,6 +290,53 @@ pub(crate) fn grad_check_input<L: Layer>(
         assert!(
             (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
             "grad check failed at {idx}: fd={fd} analytic={an}"
+        );
+    }
+}
+
+/// Finite-difference gradient check through the **in-place** execution
+/// path (`forward_inplace` + `backward_inplace`) — the path the
+/// workspace drives for ReLU/dropout. The layer must be deterministic
+/// for a fixed `ctx` (dropout: fixed seed).
+#[cfg(test)]
+pub(crate) fn grad_check_inplace<L: Layer>(
+    layer: &mut L,
+    bottom: &Tensor,
+    ctx: &ExecCtx,
+    eps: f32,
+    tol: f32,
+) {
+    assert!(layer.in_place(), "grad_check_inplace needs an in-place layer");
+    let mut scratch = layer.plan_scratch(bottom.shape());
+
+    // In-place forward loss: overwrite a copy of x, sum the result.
+    let fwd_sum = |layer: &mut L, scratch: &mut LayerScratch, x: &Tensor| -> f64 {
+        let mut act = x.clone();
+        layer.forward_inplace(&mut act, scratch, ctx);
+        act.sum()
+    };
+
+    // Analytic gradient through the in-place pair: act holds the
+    // post-activation value (as it does in a workspace slot), grad is
+    // seeded with ones and masked in place.
+    let mut act = bottom.clone();
+    layer.forward_inplace(&mut act, &mut scratch, ctx);
+    let mut grad = Tensor::full(*bottom.shape(), 1.0);
+    layer.backward_inplace(&act, &mut grad, &mut scratch, ctx);
+
+    let probes = [0usize, bottom.numel() / 2, bottom.numel() - 1];
+    for &idx in &probes {
+        let mut bp = bottom.clone();
+        bp.as_mut_slice()[idx] += eps;
+        let mut bm = bottom.clone();
+        bm.as_mut_slice()[idx] -= eps;
+        let fp = fwd_sum(layer, &mut scratch, &bp);
+        let fm = fwd_sum(layer, &mut scratch, &bm);
+        let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+        let an = grad.as_slice()[idx];
+        assert!(
+            (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
+            "in-place grad check failed at {idx}: fd={fd} analytic={an}"
         );
     }
 }

@@ -1,7 +1,7 @@
 //! Spatial pooling (Caffe `Pooling`): max (AlexNet's pool1/2/5) and
 //! average, with Caffe's ceil-mode output sizing and window clipping.
 
-use super::{ExecCtx, Layer};
+use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,10 +54,16 @@ impl Layer for PoolLayer {
         Shape::from((b, c, m, m))
     }
 
-    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
         let (b, c, n, _) = bottom.shape().dims4();
         let m = self.out_size(n);
-        let mut top = Tensor::zeros((b, c, m, m));
+        debug_assert_eq!(top.shape().dims4(), (b, c, m, m));
         if self.mode == PoolMode::Max {
             self.argmax.clear();
             self.argmax.resize(b * c * m * m, usize::MAX);
@@ -118,15 +124,21 @@ impl Layer for PoolLayer {
                 }
             }
         }
-        top
     }
 
-    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
         let (b, c, n, _) = bottom.shape().dims4();
         let (_, _, m, _) = top_grad.shape().dims4();
-        let mut d_bottom = Tensor::zeros(*bottom.shape());
         let dsrc = top_grad.as_slice();
         let ddst = d_bottom.as_mut_slice();
+        ddst.fill(0.0);
         match self.mode {
             PoolMode::Max => {
                 assert_eq!(self.argmax.len(), dsrc.len(), "backward before forward");
@@ -163,7 +175,6 @@ impl Layer for PoolLayer {
                 }
             }
         }
-        d_bottom
     }
 
     fn flops(&self, in_shape: &Shape) -> u64 {

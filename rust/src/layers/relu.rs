@@ -1,7 +1,14 @@
-//! ReLU activation (in Caffe: `ReLU`, computed in place; we keep it
-//! pure for the sequential net's caching simplicity).
+//! ReLU activation (Caffe `ReLU`). Declares [`Layer::in_place`], so a
+//! planned workspace runs it directly in its input slot — Caffe's
+//! in-place `Blob` sharing — and the out-of-place `forward_into` path
+//! remains for standalone use.
+//!
+//! The backward mask is `act > 0`, which is insensitive to whether the
+//! shared slot holds the pre-activation `x` (out-of-place) or the
+//! post-activation `y = max(0, x)` (in-place): `y > 0 ⇔ x > 0`, and at
+//! the kink both conventions zero the gradient.
 
-use super::{ExecCtx, Layer};
+use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
 pub struct ReluLayer {
@@ -23,24 +30,53 @@ impl Layer for ReluLayer {
         *in_shape
     }
 
-    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        let mut top = bottom.clone();
-        for v in top.as_mut_slice() {
+    fn in_place(&self) -> bool {
+        true
+    }
+
+    fn forward_inplace(&mut self, x: &mut Tensor, _scratch: &mut LayerScratch, _ctx: &ExecCtx) {
+        for v in x.as_mut_slice() {
             if *v < 0.0 {
                 *v = 0.0;
             }
         }
-        top
     }
 
-    fn backward(&mut self, bottom: &Tensor, top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        let mut d = top_grad.clone();
-        for (g, &x) in d.as_mut_slice().iter_mut().zip(bottom.as_slice()) {
-            if x <= 0.0 {
+    fn backward_inplace(
+        &mut self,
+        act: &Tensor,
+        grad: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
+        for (g, &a) in grad.as_mut_slice().iter_mut().zip(act.as_slice()) {
+            if a <= 0.0 {
                 *g = 0.0;
             }
         }
-        d
+    }
+
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
+        top.as_mut_slice().copy_from_slice(bottom.as_slice());
+        self.forward_inplace(top, scratch, ctx);
+    }
+
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        scratch: &mut LayerScratch,
+        ctx: &ExecCtx,
+    ) {
+        d_bottom.as_mut_slice().copy_from_slice(top_grad.as_slice());
+        self.backward_inplace(bottom, d_bottom, scratch, ctx);
     }
 
     fn flops(&self, in_shape: &Shape) -> u64 {
@@ -70,6 +106,27 @@ mod tests {
     }
 
     #[test]
+    fn inplace_matches_out_of_place() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(7);
+        let mut l = ReluLayer::new("r");
+        let ctx = ExecCtx::default();
+        let x = Tensor::randn((2, 3, 4, 4), 0.0, 1.0, &mut rng);
+        let y = l.forward(&x, &ctx);
+        let mut scratch = l.plan_scratch(x.shape());
+        let mut xi = x.clone();
+        l.forward_inplace(&mut xi, &mut scratch, &ctx);
+        assert_eq!(xi.as_slice(), y.as_slice());
+        // backward: masking by the post-activation slot equals masking
+        // by the pre-activation input
+        let dy = Tensor::full(*x.shape(), 1.0);
+        let dx = l.backward(&x, &dy, &ctx);
+        let mut gi = dy.clone();
+        l.backward_inplace(&xi, &mut gi, &mut scratch, &ctx);
+        assert_eq!(gi.as_slice(), dx.as_slice());
+    }
+
+    #[test]
     fn grad_check() {
         use crate::rng::Pcg64;
         let mut rng = Pcg64::new(1);
@@ -82,5 +139,19 @@ mod tests {
             }
         }
         super::super::grad_check_input(&mut l, &x, &ExecCtx::default(), 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn grad_check_inplace_path() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(2);
+        let mut l = ReluLayer::new("r");
+        let mut x = Tensor::randn((2, 3, 4, 4), 0.0, 1.0, &mut rng);
+        for v in x.as_mut_slice() {
+            if v.abs() < 0.1 {
+                *v += 0.2;
+            }
+        }
+        super::super::grad_check_inplace(&mut l, &x, &ExecCtx::default(), 1e-3, 1e-2);
     }
 }

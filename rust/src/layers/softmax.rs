@@ -1,14 +1,21 @@
 //! Softmax + multinomial logistic loss (Caffe `SoftmaxWithLoss`),
 //! fused for numerical stability: loss = −(1/b)·Σ log softmax(x)[label].
+//!
+//! The net drives this layer through the scalar API
+//! ([`SoftmaxLossLayer::forward_loss`] / [`SoftmaxLossLayer::backward_logits`]),
+//! which reuses the internal probability buffer (shape-checked, so a
+//! fixed batch size never reallocates). The [`Layer`] impl wraps the
+//! same computation for standalone/test use.
 
-use super::{ExecCtx, Layer};
+use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
 pub struct SoftmaxLossLayer {
     name: String,
     /// Integer class labels (len = batch); set before forward.
     labels: Vec<usize>,
-    /// Cached probabilities from forward (b, classes).
+    /// Cached probabilities from forward (b, classes); shape-checked
+    /// reuse, reallocated only when the batch geometry changes.
     probs: Tensor,
     /// Loss of the last forward.
     last_loss: f64,
@@ -25,7 +32,8 @@ impl SoftmaxLossLayer {
     }
 
     pub fn set_labels(&mut self, labels: &[usize]) {
-        self.labels = labels.to_vec();
+        self.labels.clear();
+        self.labels.extend_from_slice(labels);
     }
 
     pub fn last_loss(&self) -> f64 {
@@ -35,6 +43,62 @@ impl SoftmaxLossLayer {
     /// Softmax probabilities of the last forward.
     pub fn probabilities(&self) -> &Tensor {
         &self.probs
+    }
+
+    /// Compute softmax probabilities + mean loss for `bottom` logits
+    /// against the stored labels. Allocation-free once the probability
+    /// buffer matches the batch geometry.
+    pub fn forward_loss(&mut self, bottom: &Tensor) -> f64 {
+        let dims = bottom.shape().dims();
+        let b = dims[0];
+        let c: usize = dims[1..].iter().product();
+        assert_eq!(self.labels.len(), b, "{}: labels not set for batch {b}", self.name);
+        if *self.probs.shape() != Shape::from((b, c)) {
+            self.probs = Tensor::zeros((b, c));
+        }
+        let x = bottom.as_slice();
+        let p = self.probs.as_mut_slice();
+        let mut loss = 0f64;
+        for bi in 0..b {
+            let row = &x[bi * c..(bi + 1) * c];
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f64;
+            for (j, &v) in row.iter().enumerate() {
+                let e = ((v - max) as f64).exp();
+                p[bi * c + j] = e as f32;
+                denom += e;
+            }
+            let label = self.labels[bi];
+            assert!(label < c, "label {label} out of range for {c} classes");
+            for j in 0..c {
+                p[bi * c + j] /= denom as f32;
+            }
+            loss -= (p[bi * c + label] as f64).max(1e-30).ln();
+        }
+        self.last_loss = loss / b as f64;
+        self.last_loss
+    }
+
+    /// Write the logit gradient `(softmax(x) − onehot(label)) / b` of
+    /// the last [`Self::forward_loss`] into `d_logits` (overwritten;
+    /// same batch geometry as the logits). Allocation-free.
+    pub fn backward_logits(&mut self, d_logits: &mut Tensor) {
+        let (b, c) = self.probs.shape().dims2();
+        assert_eq!(
+            d_logits.numel(),
+            b * c,
+            "{}: gradient buffer mismatches cached probabilities",
+            self.name
+        );
+        let dd = d_logits.as_mut_slice();
+        dd.copy_from_slice(self.probs.as_slice());
+        let scale = 1.0 / b as f32;
+        for bi in 0..b {
+            dd[bi * c + self.labels[bi]] -= 1.0;
+        }
+        for v in dd.iter_mut() {
+            *v *= scale;
+        }
     }
 
     /// Top-1 accuracy of the last forward against the stored labels.
@@ -66,51 +130,27 @@ impl Layer for SoftmaxLossLayer {
         Shape::from(1usize)
     }
 
-    fn forward(&mut self, bottom: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        let dims = bottom.shape().dims();
-        let b = dims[0];
-        let c: usize = dims[1..].iter().product();
-        assert_eq!(self.labels.len(), b, "{}: labels not set for batch {b}", self.name);
-        let x = bottom.as_slice();
-        let mut probs = Tensor::zeros((b, c));
-        let p = probs.as_mut_slice();
-        let mut loss = 0f64;
-        for bi in 0..b {
-            let row = &x[bi * c..(bi + 1) * c];
-            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let mut denom = 0f64;
-            for (j, &v) in row.iter().enumerate() {
-                let e = ((v - max) as f64).exp();
-                p[bi * c + j] = e as f32;
-                denom += e;
-            }
-            let label = self.labels[bi];
-            assert!(label < c, "label {label} out of range for {c} classes");
-            for j in 0..c {
-                p[bi * c + j] /= denom as f32;
-            }
-            loss -= (p[bi * c + label] as f64).max(1e-30).ln();
-        }
-        self.last_loss = loss / b as f64;
-        self.probs = probs;
-        Tensor::from_vec(1usize, vec![self.last_loss as f32])
+    fn forward_into(
+        &mut self,
+        bottom: &Tensor,
+        top: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
+        let loss = self.forward_loss(bottom);
+        top.as_mut_slice()[0] = loss as f32;
     }
 
-    fn backward(&mut self, bottom: &Tensor, _top_grad: &Tensor, _ctx: &ExecCtx) -> Tensor {
-        // d/dx = (softmax(x) − onehot(label)) / b
-        let dims = bottom.shape().dims();
-        let b = dims[0];
-        let c: usize = dims[1..].iter().product();
-        let mut d = Tensor::from_vec(*bottom.shape(), self.probs.as_slice().to_vec());
-        let dd = d.as_mut_slice();
-        for bi in 0..b {
-            dd[bi * c + self.labels[bi]] -= 1.0;
-        }
-        let scale = 1.0 / b as f32;
-        for v in dd.iter_mut() {
-            *v *= scale;
-        }
-        d
+    fn backward_into(
+        &mut self,
+        bottom: &Tensor,
+        _top_grad: &Tensor,
+        d_bottom: &mut Tensor,
+        _scratch: &mut LayerScratch,
+        _ctx: &ExecCtx,
+    ) {
+        debug_assert_eq!(d_bottom.shape(), bottom.shape());
+        self.backward_logits(d_bottom);
     }
 
     fn flops(&self, in_shape: &Shape) -> u64 {
@@ -164,6 +204,21 @@ mod tests {
             let s: f32 = d.as_slice()[bi * 5..(bi + 1) * 5].iter().sum();
             assert!(s.abs() < 1e-6, "per-sample grad must sum to 0, got {s}");
         }
+    }
+
+    #[test]
+    fn scalar_api_matches_layer_api() {
+        let mut rng = Pcg64::new(97);
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.set_labels(&[0, 2]);
+        let x = Tensor::randn((2, 4), 0.0, 1.0, &mut rng);
+        let via_layer = l.forward(&x, &ExecCtx::default()).as_slice()[0] as f64;
+        let via_scalar = l.forward_loss(&x);
+        assert!((via_layer - via_scalar).abs() < 1e-6);
+        let d_layer = l.backward(&x, &Tensor::full(1usize, 1.0), &ExecCtx::default());
+        let mut d_scalar = Tensor::zeros(*x.shape());
+        l.backward_logits(&mut d_scalar);
+        assert_eq!(d_layer.as_slice(), d_scalar.as_slice());
     }
 
     #[test]

@@ -15,16 +15,33 @@
 //! * **FLOPS-proportional cross-device scheduling** (CPU+GPU hybrid
 //!   within a single layer) — [`coordinator::scheduler`] over [`device`].
 //!
-//! Everything Caffe provided as a substrate is rebuilt in-tree:
+//! Everything Caffe provided as a substrate is rebuilt in-tree, with
+//! zero external crates (offline-friendly): an error chain ([`error`]),
 //! a BLAS-substitute GEMM ([`gemm`]), a layer zoo ([`layers`]), a
 //! net/config framework ([`net`]), an SGD solver ([`solver`]), and a
-//! data pipeline ([`data`]). The AOT-compiled JAX/Pallas model is
-//! executed through [`runtime`] (XLA PJRT).
+//! data pipeline ([`data`]). AOT-compiled JAX/Pallas artifacts are
+//! described by [`runtime`] (manifest parsing; executing them needs a
+//! PJRT-enabled build — see that module's docs).
+//!
+//! ## Execution model: plan once, run many
+//!
+//! Caffe wires preallocated, reused `Blob`s at net-setup time; this
+//! crate mirrors that architecture. A [`net::Workspace`] is planned
+//! once per `(net, batch size)` — activation arena, gradient arena, and
+//! per-layer lowering scratch, all sized by the shape walk — and every
+//! subsequent training step runs inside it with **zero tensor
+//! allocations** (asserted by `tensor::alloc_stats` in the test suite).
+//! Layers implement buffer-writing [`layers::Layer::forward_into`] /
+//! [`layers::Layer::backward_into`] methods; ReLU and dropout declare
+//! [`layers::Layer::in_place`] and run directly in their input slot,
+//! halving activation traffic. See `examples/quickstart.rs` for the
+//! plan-once / run-many API in a dozen lines.
 
 pub mod bench_util;
 pub mod coordinator;
 pub mod data;
 pub mod device;
+pub mod error;
 pub mod gemm;
 pub mod layers;
 pub mod lowering;
@@ -36,4 +53,4 @@ pub mod tensor;
 pub mod testing;
 
 /// Convenient result alias used across the crate.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;

@@ -143,6 +143,39 @@ pub fn conv_forward(
     }
 }
 
+/// Buffer-writing variant of [`conv_forward`] for the plan-once /
+/// run-many execution path. The Type-1 blocking (the training default)
+/// runs entirely in the caller's workspace + output buffers; Types 2/3
+/// keep their allocating kernels (analysis paths) and copy into `out`.
+pub fn conv_forward_into(
+    ty: LoweringType,
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    threads: usize,
+    ws: &mut type1::Workspace,
+    out: &mut Tensor,
+) {
+    assert_eq!(out.shape().dims4(), shape.output_shape(), "output shape mismatch");
+    match ty {
+        LoweringType::Type1 => {
+            assert_eq!(data.shape().dims4(), shape.input_shape(), "data shape mismatch");
+            type1::conv_type1_into(
+                shape,
+                data.as_slice(),
+                weights.as_slice(),
+                threads,
+                ws,
+                out.as_mut_slice(),
+            );
+        }
+        _ => {
+            let r = conv_forward(ty, shape, data, weights, threads);
+            out.as_mut_slice().copy_from_slice(r.as_slice());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +235,21 @@ mod tests {
             let want = reference::conv_reference(&shape, &data, &w);
             let got = conv_forward(LoweringType::Type1, &shape, &data, &w, 1);
             assert!(got.max_abs_diff(&want) < 1e-3, "pad={pad} stride={stride}");
+        }
+    }
+
+    #[test]
+    fn conv_forward_into_matches_allocating() {
+        let mut rng = Pcg64::new(10);
+        let shape = ConvShape::simple(9, 3, 4, 5, 2);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let mut ws = type1::Workspace::new(&shape);
+        let mut out = Tensor::zeros(shape.output_shape());
+        for ty in LoweringType::ALL {
+            let want = conv_forward(ty, &shape, &data, &w, 1);
+            conv_forward_into(ty, &shape, &data, &w, 1, &mut ws, &mut out);
+            assert_eq!(out.as_slice(), want.as_slice(), "{ty} into-path diverged");
         }
     }
 

@@ -35,11 +35,20 @@ pub fn lowered_rows(shape: &ConvShape) -> usize {
 /// im2col over the whole batch into `out` (len ≥ rows·cols).
 /// Row `bi·m² + r·m + c`, column `(i·k + rk)·k + ck`.
 pub fn lower_batch(shape: &ConvShape, data: &Tensor, out: &mut [f32]) {
+    assert_eq!(data.shape().dims4(), shape.input_shape(), "data shape mismatch");
+    lower_batch_slice(shape, data.as_slice(), out);
+}
+
+/// Slice-core of [`lower_batch`]: `src` is the NCHW input buffer
+/// (len = b·d·n²). Lets grouped-conv staging and batch-partition
+/// workers lower straight out of a larger arena without copying into a
+/// temporary `Tensor`.
+pub fn lower_batch_slice(shape: &ConvShape, src: &[f32], out: &mut [f32]) {
     let &ConvShape { n, k, d, b, pad, stride, .. } = shape;
     let m = shape.m();
     let cols = lowered_cols(shape);
     assert!(out.len() >= b * m * m * cols, "lowering buffer too small");
-    let src = data.as_slice();
+    assert!(src.len() >= b * d * n * n, "input buffer too small");
     let img_stride = d * n * n;
 
     for bi in 0..b {
@@ -86,11 +95,18 @@ pub fn lower_batch(shape: &ConvShape, data: &Tensor, out: &mut [f32]) {
 /// Inverse of [`lower_batch`]: scatter-add the lowered gradient back to
 /// image space (Caffe's `col2im`). `d_lowered` is (b·m², k²d).
 pub fn col2im_batch(shape: &ConvShape, d_lowered: &[f32], d_data: &mut Tensor) {
+    assert_eq!(d_data.shape().dims4(), shape.input_shape());
+    col2im_batch_slice(shape, d_lowered, d_data.as_mut_slice());
+}
+
+/// Slice-core of [`col2im_batch`] (scatter-add into `dst`, which the
+/// caller is responsible for zeroing when overwrite semantics are
+/// wanted).
+pub fn col2im_batch_slice(shape: &ConvShape, d_lowered: &[f32], dst: &mut [f32]) {
     let &ConvShape { n, k, d, b, pad, stride, .. } = shape;
     let m = shape.m();
     let cols = lowered_cols(shape);
-    assert_eq!(d_data.shape().dims4(), shape.input_shape());
-    let dst = d_data.as_mut_slice();
+    assert!(dst.len() >= b * d * n * n, "gradient buffer too small");
     let img_stride = d * n * n;
 
     for bi in 0..b {
@@ -125,11 +141,16 @@ pub fn col2im_batch(shape: &ConvShape, d_lowered: &[f32], d_data: &mut Tensor) {
 
 /// Lift `R̂ (b·m², o)` to NCHW `(b, o, m, m)`: per-image transpose.
 pub fn lift(shape: &ConvShape, r_hat: &[f32], out: &mut Tensor) {
+    assert_eq!(out.shape().dims4(), shape.output_shape());
+    lift_slice(shape, r_hat, out.as_mut_slice());
+}
+
+/// Slice-core of [`lift`].
+pub fn lift_slice(shape: &ConvShape, r_hat: &[f32], dst: &mut [f32]) {
     let &ConvShape { o, b, .. } = shape;
     let m = shape.m();
     let mm = m * m;
-    assert_eq!(out.shape().dims4(), shape.output_shape());
-    let dst = out.as_mut_slice();
+    assert!(dst.len() >= b * o * mm, "output buffer too small");
     for bi in 0..b {
         let src_base = bi * mm * o;
         let dst_base = bi * o * mm;
@@ -144,10 +165,16 @@ pub fn lift(shape: &ConvShape, r_hat: &[f32], out: &mut Tensor) {
 
 /// Inverse lift: NCHW gradient `(b,o,m,m)` → `d_R̂ (b·m², o)`.
 pub fn unlift(shape: &ConvShape, d_out: &Tensor, d_r_hat: &mut [f32]) {
+    assert_eq!(d_out.shape().dims4(), shape.output_shape());
+    unlift_slice(shape, d_out.as_slice(), d_r_hat);
+}
+
+/// Slice-core of [`unlift`].
+pub fn unlift_slice(shape: &ConvShape, src: &[f32], d_r_hat: &mut [f32]) {
     let &ConvShape { o, b, .. } = shape;
     let m = shape.m();
     let mm = m * m;
-    let src = d_out.as_slice();
+    assert!(src.len() >= b * o * mm && d_r_hat.len() >= b * mm * o);
     for bi in 0..b {
         let src_base = bi * o * mm;
         let dst_base = bi * mm * o;
@@ -166,8 +193,12 @@ pub fn conv_type1(shape: &ConvShape, data: &Tensor, weights: &Tensor, threads: u
     conv_type1_with(shape, data, weights, threads, &mut ws)
 }
 
-/// Reusable buffers for the Type-1 path (hot-loop allocation hygiene;
-/// see EXPERIMENTS.md §Perf).
+/// Reusable buffers for the Type-1 path (hot-loop allocation hygiene):
+/// the im2col matrix `D̂` and the GEMM result `R̂`. Forward and
+/// backward need exactly the same two buffers, so one workspace per
+/// conv geometry serves a whole training step; `layers::LayerScratch`
+/// embeds one per conv layer and the net's `Workspace` plans them all
+/// up front.
 pub struct Workspace {
     pub lowered: Vec<f32>,
     pub r_hat: Vec<f32>,
@@ -175,9 +206,22 @@ pub struct Workspace {
 
 impl Workspace {
     pub fn new(shape: &ConvShape) -> Self {
-        Workspace {
-            lowered: vec![0f32; lowered_rows(shape) * lowered_cols(shape)],
-            r_hat: vec![0f32; lowered_rows(shape) * shape.o],
+        let mut ws = Workspace { lowered: Vec::new(), r_hat: Vec::new() };
+        ws.ensure(shape);
+        ws
+    }
+
+    /// Grow the buffers to fit `shape` (no-op once planned; a planned
+    /// workspace driven at its planned geometry never reallocates).
+    pub fn ensure(&mut self, shape: &ConvShape) {
+        let rows = lowered_rows(shape);
+        let need_lowered = rows * lowered_cols(shape);
+        let need_r_hat = rows * shape.o;
+        if self.lowered.len() < need_lowered {
+            self.lowered.resize(need_lowered, 0.0);
+        }
+        if self.r_hat.len() < need_r_hat {
+            self.r_hat.resize(need_r_hat, 0.0);
         }
     }
 
@@ -188,7 +232,7 @@ impl Workspace {
     }
 }
 
-/// Forward with caller-provided workspace.
+/// Forward with caller-provided workspace (allocates the output).
 pub fn conv_type1_with(
     shape: &ConvShape,
     data: &Tensor,
@@ -196,11 +240,28 @@ pub fn conv_type1_with(
     threads: usize,
     ws: &mut Workspace,
 ) -> Tensor {
+    assert_eq!(data.shape().dims4(), shape.input_shape(), "data shape mismatch");
+    let mut out = Tensor::zeros(shape.output_shape());
+    conv_type1_into(shape, data.as_slice(), weights.as_slice(), threads, ws, out.as_mut_slice());
+    out
+}
+
+/// Allocation-free Type-1 forward: lower → GEMM → lift, entirely in
+/// caller-owned buffers. `out` must hold b·o·m² elements (NCHW).
+pub fn conv_type1_into(
+    shape: &ConvShape,
+    data: &[f32],
+    weights: &[f32],
+    threads: usize,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
     let rows = lowered_rows(shape);
     let cols = lowered_cols(shape);
-    assert!(ws.lowered.len() >= rows * cols && ws.r_hat.len() >= rows * shape.o);
+    ws.ensure(shape);
+    assert!(weights.len() >= shape.o * cols, "weight buffer too small");
 
-    lower_batch(shape, data, &mut ws.lowered);
+    lower_batch_slice(shape, data, &mut ws.lowered);
     // R̂ = D̂ · Wᵀ  (W is (o, k²d) row-major ⇒ Trans::T gives (k²d, o)).
     sgemm(
         Trans::N,
@@ -208,14 +269,12 @@ pub fn conv_type1_with(
         GemmDims { m: rows, n: shape.o, k: cols },
         1.0,
         &ws.lowered,
-        weights.as_slice(),
+        weights,
         0.0,
         &mut ws.r_hat,
         threads,
     );
-    let mut out = Tensor::zeros(shape.output_shape());
-    lift(shape, &ws.r_hat, &mut out);
-    out
+    lift_slice(shape, &ws.r_hat, out);
 }
 
 /// Type-1 backward: recompute D̂, then
@@ -228,26 +287,57 @@ pub fn conv_type1_backward(
     d_out: &Tensor,
     threads: usize,
 ) -> (Tensor, Tensor) {
+    let mut ws = Workspace::new(shape);
+    let mut d_data = Tensor::zeros(shape.input_shape());
+    let mut d_w = Tensor::zeros(shape.weight_shape());
+    conv_type1_backward_into(
+        shape,
+        data.as_slice(),
+        weights.as_slice(),
+        d_out.as_slice(),
+        threads,
+        &mut ws,
+        d_data.as_mut_slice(),
+        d_w.as_mut_slice(),
+    );
+    (d_data, d_w)
+}
+
+/// Allocation-free Type-1 backward. Writes the input gradient into
+/// `d_data` (overwritten) and **accumulates** the weight gradient into
+/// `d_w` (`+=`, via a β=1 GEMM — so the caller can point this straight
+/// at a `ParamBlob` gradient). Reuses the same workspace buffers as
+/// the forward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_type1_backward_into(
+    shape: &ConvShape,
+    data: &[f32],
+    weights: &[f32],
+    d_out: &[f32],
+    threads: usize,
+    ws: &mut Workspace,
+    d_data: &mut [f32],
+    d_w: &mut [f32],
+) {
     let rows = lowered_rows(shape);
     let cols = lowered_cols(shape);
+    ws.ensure(shape);
+    assert!(d_w.len() >= shape.o * cols, "weight-gradient buffer too small");
+    assert!(d_data.len() >= shape.b * shape.d * shape.n * shape.n);
 
-    let mut lowered = vec![0f32; rows * cols];
-    lower_batch(shape, data, &mut lowered);
+    lower_batch_slice(shape, data, &mut ws.lowered);
+    unlift_slice(shape, d_out, &mut ws.r_hat);
 
-    let mut d_r_hat = vec![0f32; rows * shape.o];
-    unlift(shape, d_out, &mut d_r_hat);
-
-    // dW (o, k²d) = d_R̂ᵀ (o, b·m²) · D̂ (b·m², k²d)
-    let mut d_w = Tensor::zeros(shape.weight_shape());
+    // dW (o, k²d) += d_R̂ᵀ (o, b·m²) · D̂ (b·m², k²d)
     sgemm(
         Trans::T,
         Trans::N,
         GemmDims { m: shape.o, n: cols, k: rows },
         1.0,
-        &d_r_hat,
-        &lowered,
-        0.0,
-        d_w.as_mut_slice(),
+        &ws.r_hat,
+        &ws.lowered,
+        1.0,
+        d_w,
         threads,
     );
 
@@ -257,15 +347,15 @@ pub fn conv_type1_backward(
         Trans::N,
         GemmDims { m: rows, n: cols, k: shape.o },
         1.0,
-        &d_r_hat,
-        weights.as_slice(),
+        &ws.r_hat,
+        weights,
         0.0,
-        &mut lowered,
+        &mut ws.lowered,
         threads,
     );
-    let mut d_data = Tensor::zeros(shape.input_shape());
-    col2im_batch(shape, &lowered, &mut d_data);
-    (d_data, d_w)
+    let img = shape.d * shape.n * shape.n;
+    d_data[..shape.b * img].fill(0.0);
+    col2im_batch_slice(shape, &ws.lowered, d_data);
 }
 
 #[cfg(test)]

@@ -10,8 +10,9 @@
 //! cct gemm    [--size N] [--iters K]        # GEMM calibration
 //! ```
 
-use anyhow::{bail, Context, Result};
+use cct::bail;
 use cct::bench_util::{bench, gflops, Table};
+use cct::error::{Context, Result};
 use cct::coordinator::CnnCoordinator;
 use cct::data::BlobCorpus;
 use cct::device::profiles;
@@ -47,7 +48,7 @@ impl Args {
         match self.flags.get(key) {
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+                .map_err(|_| cct::err!("bad value for --{key}: {v}")),
             None => Ok(default),
         }
     }

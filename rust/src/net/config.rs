@@ -21,7 +21,8 @@ use crate::layers::conv::ConvConfig;
 use crate::layers::{ConvLayer, DropoutLayer, FcLayer, Layer, LrnLayer, PoolLayer, PoolMode, ReluLayer};
 use crate::net::Net;
 use crate::rng::Pcg64;
-use anyhow::{bail, Context, Result};
+use crate::{bail, ensure};
+use crate::error::{Context, Error, Result};
 use std::collections::HashMap;
 
 /// A parsed layer directive.
@@ -85,7 +86,7 @@ pub fn parse_net(text: &str) -> Result<NetConfig> {
         } else if let Some(rest) = line.strip_prefix("input:") {
             let dims: Vec<usize> = rest
                 .split_whitespace()
-                .map(|t| t.parse().map_err(|_| anyhow::anyhow!(err("bad input dim"))))
+                .map(|t| t.parse().map_err(|_| Error::msg(err("bad input dim"))))
                 .collect::<Result<_>>()?;
             if dims.len() != 3 {
                 bail!(err("input needs 3 dims (c h w)"));
@@ -133,7 +134,7 @@ pub fn parse_net(text: &str) -> Result<NetConfig> {
 /// to size conv/fc layers, exactly like Caffe's net builder.
 pub fn build_net(cfg: &NetConfig, rng: &mut Pcg64) -> Result<Net> {
     let (c0, h0, w0) = cfg.input;
-    anyhow::ensure!(h0 == w0, "square inputs only (got {h0}×{w0})");
+    ensure!(h0 == w0, "square inputs only (got {h0}×{w0})");
     let mut layers: Vec<Box<dyn Layer>> = Vec::new();
     let mut conv_mask = Vec::new();
     // running sample shape
@@ -145,7 +146,7 @@ pub fn build_net(cfg: &NetConfig, rng: &mut Pcg64) -> Result<Net> {
         let lname = spec.name();
         match spec.kind.as_str() {
             "conv" => {
-                anyhow::ensure!(flat.is_none(), "conv '{lname}' after fc is unsupported");
+                ensure!(flat.is_none(), "conv '{lname}' after fc is unsupported");
                 let cc = ConvConfig {
                     out_channels: spec.get_usize("out")?,
                     kernel: spec.get_usize("kernel")?,

@@ -2,13 +2,34 @@
 //! per-layer timing — the unit the paper benchmarks ("CcT is a fully
 //! compatible end-to-end version of Caffe that matches Caffe's output
 //! on each layer, which is the unit of computation").
+//!
+//! ## Plan once, run many
+//!
+//! Execution follows Caffe's preallocated-`Blob` architecture: a
+//! [`Workspace`] is planned once per `(net, batch size)` — via the
+//! existing `out_shape` walk — and holds
+//!
+//! * the **activation arena**: one buffer per layer boundary, with
+//!   in-place layers (ReLU, dropout) sharing their input's slot,
+//! * the **gradient arena**: a mirror of the activation slots,
+//! * **per-layer scratch**: im2col/lowering buffers sized from each
+//!   [`ConvLayer`](crate::layers::ConvLayer), group staging, etc.
+//!
+//! [`Net::forward_backward_in`] then runs a full training-step
+//! computation with **zero tensor allocations** — the property the
+//! paper's batch-partitioned workers (Fig 3/4) need to scale without
+//! fighting over the allocator. The classic entry points
+//! ([`Net::forward_backward`] & friends) are thin wrappers that keep a
+//! lazily planned workspace inside the net, so existing callers get
+//! the allocation-free hot loop for free after the first step.
 
 pub mod config;
 pub mod presets;
 
 pub use config::{parse_net, LayerSpec, NetConfig};
 
-use crate::layers::{ExecCtx, Layer, ParamBlob, SoftmaxLossLayer};
+use crate::ensure;
+use crate::layers::{ExecCtx, Layer, LayerScratch, ParamBlob, SoftmaxLossLayer};
 use crate::tensor::{Shape, Tensor};
 use std::time::Instant;
 
@@ -22,6 +43,123 @@ pub struct LayerTiming {
     pub is_conv: bool,
 }
 
+/// A planned execution arena for one `(net, batch size)` pair: the
+/// activation + gradient slots and every layer's scratch, allocated at
+/// [`Net::plan`] time and reused by every subsequent step.
+///
+/// Slot sharing: layer `i` reads slot `bound[i]` and writes slot
+/// `bound[i + 1]`; an in-place layer has `bound[i + 1] == bound[i]`.
+pub struct Workspace {
+    batch: usize,
+    /// Unique activation buffers (slot 0 is the input).
+    slots: Vec<Tensor>,
+    /// Gradient buffers mirroring `slots`.
+    grads: Vec<Tensor>,
+    /// Layer boundary → slot index (`layers.len() + 1` entries).
+    bound: Vec<usize>,
+    /// Per-layer reusable scratch.
+    scratch: Vec<LayerScratch>,
+}
+
+impl Workspace {
+    /// Batch size this workspace was planned for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The input slot (copy a batch in before calling the `_in` entry
+    /// points, or use [`Workspace::load_input`]).
+    pub fn input_mut(&mut self) -> &mut Tensor {
+        &mut self.slots[0]
+    }
+
+    /// Copy a full batch into the input slot (shapes must match).
+    pub fn load_input(&mut self, data: &Tensor) {
+        assert_eq!(
+            data.shape(),
+            self.slots[0].shape(),
+            "workspace planned for batch {}, got {:?}",
+            self.batch,
+            data.shape()
+        );
+        self.slots[0].as_mut_slice().copy_from_slice(data.as_slice());
+    }
+
+    /// Copy samples `[lo, lo + batch)` of a larger batch into the
+    /// input slot — how a batch-partition worker feeds its slice
+    /// without materializing a sub-tensor.
+    pub fn load_input_range(&mut self, data: &Tensor, lo: usize) {
+        let (n, c, h, w) = data.shape().dims4();
+        let (b, sc, sh, sw) = self.slots[0].shape().dims4();
+        assert_eq!((c, h, w), (sc, sh, sw), "sample shape mismatch");
+        assert!(lo + b <= n, "range [{lo}, {}) out of batch {n}", lo + b);
+        let stride = c * h * w;
+        self.slots[0]
+            .as_mut_slice()
+            .copy_from_slice(&data.as_slice()[lo * stride..(lo + b) * stride]);
+    }
+
+    /// The logits slot (output of the last layer, last forward).
+    pub fn logits(&self) -> &Tensor {
+        &self.slots[*self.bound.last().unwrap()]
+    }
+
+    /// Arena + scratch footprint in bytes (activations, gradients, and
+    /// per-layer lowering buffers — the planned-memory quantity).
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let acts: usize = self.slots.iter().map(|t| t.numel() * f).sum();
+        let grads: usize = self.grads.iter().map(|t| t.numel() * f).sum();
+        let scratch: usize = self.scratch.iter().map(|s| s.bytes()).sum();
+        acts + grads + scratch
+    }
+
+    /// Number of unique activation buffers (in-place layers share, so
+    /// this is smaller than the layer count on nets with ReLU/dropout).
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Run layer `l` forward between slots `a` (bottom) and `b` (top);
+/// `a == b` is the in-place path. The single home of the
+/// aliasing-critical slot dispatch — every forward driver (plain and
+/// timed) goes through here.
+fn run_forward_layer(
+    l: &mut dyn Layer,
+    slots: &mut [Tensor],
+    a: usize,
+    b: usize,
+    scratch: &mut LayerScratch,
+    ctx: &ExecCtx,
+) {
+    if a == b {
+        l.forward_inplace(&mut slots[a], scratch, ctx);
+    } else {
+        let (lo, hi) = slots.split_at_mut(b);
+        l.forward_into(&lo[a], &mut hi[0], scratch, ctx);
+    }
+}
+
+/// Backward counterpart of [`run_forward_layer`]: top gradient lives
+/// in `grads[b]`, the bottom gradient is written to `grads[a]`.
+fn run_backward_layer(
+    l: &mut dyn Layer,
+    slots: &[Tensor],
+    grads: &mut [Tensor],
+    a: usize,
+    b: usize,
+    scratch: &mut LayerScratch,
+    ctx: &ExecCtx,
+) {
+    if a == b {
+        l.backward_inplace(&slots[a], &mut grads[a], scratch, ctx);
+    } else {
+        let (lo, hi) = grads.split_at_mut(b);
+        l.backward_into(&slots[a], &hi[0], &mut lo[a], scratch, ctx);
+    }
+}
+
 /// A sequential network: feature layers + a softmax loss head.
 pub struct Net {
     pub name: String,
@@ -30,9 +168,9 @@ pub struct Net {
     loss: SoftmaxLossLayer,
     /// (c, h, w) of one input sample.
     pub input_dims: (usize, usize, usize),
-    /// Activations cached by the last forward (bottom of layer i at
-    /// index i; last entry is the loss input).
-    acts: Vec<Tensor>,
+    /// Lazily planned workspace backing the classic (non-`_in`) entry
+    /// points; replanned when the batch size changes.
+    ws: Option<Workspace>,
 }
 
 impl Net {
@@ -44,7 +182,7 @@ impl Net {
             conv_mask,
             loss: SoftmaxLossLayer::new("loss"),
             input_dims,
-            acts: Vec::new(),
+            ws: None,
         }
     }
 
@@ -89,53 +227,99 @@ impl Net {
         total
     }
 
-    /// Forward to logits (no loss). Caches activations for backward.
-    pub fn forward(&mut self, data: &Tensor, ctx: &ExecCtx) -> Tensor {
-        self.acts.clear();
-        let mut x = data.clone();
-        for l in self.layers.iter_mut() {
-            self.acts.push(x.clone());
-            x = l.forward(&x, ctx);
+    /// Plan a [`Workspace`] for batch size `b`: walk the shapes once,
+    /// allocate the activation/gradient arenas (in-place layers share
+    /// slots), and size every layer's scratch. All allocation for a
+    /// training step happens here.
+    pub fn plan(&self, b: usize) -> Workspace {
+        let (c, h, w) = self.input_dims;
+        let mut cur = Shape::from((b, c, h, w));
+        let mut slots = vec![Tensor::zeros(cur)];
+        let mut bound = Vec::with_capacity(self.layers.len() + 1);
+        bound.push(0);
+        let mut scratch = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            scratch.push(l.plan_scratch(&cur));
+            let out = l.out_shape(&cur);
+            if l.in_place() {
+                assert_eq!(out, cur, "in-place layer '{}' must preserve shape", l.name());
+                bound.push(*bound.last().unwrap());
+            } else {
+                slots.push(Tensor::zeros(out));
+                bound.push(slots.len() - 1);
+            }
+            cur = out;
         }
-        x
+        let grads = slots.iter().map(|t| Tensor::zeros(*t.shape())).collect();
+        Workspace { batch: b, slots, grads, bound, scratch }
+    }
+
+    fn check_ws(&self, ws: &Workspace) {
+        assert_eq!(
+            ws.bound.len(),
+            self.layers.len() + 1,
+            "workspace was planned for a different net"
+        );
+    }
+
+    /// Forward through the feature layers inside a planned workspace
+    /// (input already loaded). The logits land in [`Workspace::logits`].
+    pub fn forward_in(&mut self, ws: &mut Workspace, ctx: &ExecCtx) {
+        self.check_ws(ws);
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            let (a, b) = (ws.bound[i], ws.bound[i + 1]);
+            run_forward_layer(l.as_mut(), &mut ws.slots, a, b, &mut ws.scratch[i], ctx);
+        }
     }
 
     /// Forward including the loss; returns mean loss.
-    pub fn forward_loss(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
-        let logits = self.forward(data, ctx);
+    pub fn forward_loss_in(&mut self, ws: &mut Workspace, labels: &[usize], ctx: &ExecCtx) -> f64 {
+        self.forward_in(ws, ctx);
         self.loss.set_labels(labels);
-        self.acts.push(logits.clone());
-        let _ = self.loss.forward(&logits, ctx);
-        self.loss.last_loss()
+        self.loss.forward_loss(&ws.slots[*ws.bound.last().unwrap()])
     }
 
-    /// Full training step computation (no update): forward + backward,
-    /// accumulating parameter gradients. Returns mean loss.
-    pub fn forward_backward(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
-        let loss = self.forward_loss(data, labels, ctx);
-        let logits = self.acts.last().unwrap().clone();
-        let mut grad = self.loss.backward(&logits, &Tensor::full(1usize, 1.0), ctx);
-        for i in (0..self.layers.len()).rev() {
-            grad = self.layers[i].backward(&self.acts[i], &grad, ctx);
-        }
+    /// Full training-step computation (no update) inside a planned
+    /// workspace: forward + backward, accumulating parameter
+    /// gradients. Zero tensor allocations. Returns mean loss.
+    pub fn forward_backward_in(&mut self, ws: &mut Workspace, labels: &[usize], ctx: &ExecCtx) -> f64 {
+        let loss = self.forward_loss_in(ws, labels, ctx);
+        self.backward_in(ws, ctx);
         loss
     }
 
-    /// Like [`forward_backward`] but collects per-layer timings —
-    /// regenerates the paper's "conv layers are 70–90% of time" claim.
-    pub fn forward_backward_timed(
+    fn backward_in(&mut self, ws: &mut Workspace, ctx: &ExecCtx) {
+        let logit_slot = *ws.bound.last().unwrap();
+        self.loss.backward_logits(&mut ws.grads[logit_slot]);
+        for i in (0..self.layers.len()).rev() {
+            let (a, b) = (ws.bound[i], ws.bound[i + 1]);
+            run_backward_layer(
+                self.layers[i].as_mut(),
+                &ws.slots,
+                &mut ws.grads,
+                a,
+                b,
+                &mut ws.scratch[i],
+                ctx,
+            );
+        }
+    }
+
+    /// Like [`Net::forward_backward_in`] but collects per-layer
+    /// timings — regenerates the paper's "conv layers are 70–90% of
+    /// time" claim.
+    pub fn forward_backward_timed_in(
         &mut self,
-        data: &Tensor,
+        ws: &mut Workspace,
         labels: &[usize],
         ctx: &ExecCtx,
     ) -> (f64, Vec<LayerTiming>) {
+        self.check_ws(ws);
         let mut timings: Vec<LayerTiming> = Vec::with_capacity(self.layers.len());
-        self.acts.clear();
-        let mut x = data.clone();
         for (i, l) in self.layers.iter_mut().enumerate() {
-            self.acts.push(x.clone());
+            let (a, b) = (ws.bound[i], ws.bound[i + 1]);
             let t0 = Instant::now();
-            x = l.forward(&x, ctx);
+            run_forward_layer(l.as_mut(), &mut ws.slots, a, b, &mut ws.scratch[i], ctx);
             timings.push(LayerTiming {
                 name: l.name().to_string(),
                 forward_s: t0.elapsed().as_secs_f64(),
@@ -144,17 +328,81 @@ impl Net {
             });
         }
         self.loss.set_labels(labels);
-        self.acts.push(x.clone());
-        let _ = self.loss.forward(&x, ctx);
-        let loss = self.loss.last_loss();
+        let logit_slot = *ws.bound.last().unwrap();
+        let loss = self.loss.forward_loss(&ws.slots[logit_slot]);
 
-        let mut grad = self.loss.backward(&x, &Tensor::full(1usize, 1.0), ctx);
+        self.loss.backward_logits(&mut ws.grads[logit_slot]);
         for i in (0..self.layers.len()).rev() {
+            let (a, b) = (ws.bound[i], ws.bound[i + 1]);
             let t0 = Instant::now();
-            grad = self.layers[i].backward(&self.acts[i], &grad, ctx);
+            run_backward_layer(
+                self.layers[i].as_mut(),
+                &ws.slots,
+                &mut ws.grads,
+                a,
+                b,
+                &mut ws.scratch[i],
+                ctx,
+            );
             timings[i].backward_s = t0.elapsed().as_secs_f64();
         }
         (loss, timings)
+    }
+
+    /// Take the internal workspace if it matches batch `b`, else plan
+    /// a fresh one (the only allocating step of the classic API).
+    fn take_ws(&mut self, b: usize) -> Workspace {
+        match self.ws.take() {
+            Some(ws) if ws.batch == b && ws.bound.len() == self.layers.len() + 1 => ws,
+            _ => self.plan(b),
+        }
+    }
+
+    /// Forward to logits (no loss). Classic allocating entry point —
+    /// returns a copy of the logits; the arena itself is reused.
+    pub fn forward(&mut self, data: &Tensor, ctx: &ExecCtx) -> Tensor {
+        let mut ws = self.take_ws(data.shape().dim0());
+        ws.load_input(data);
+        self.forward_in(&mut ws, ctx);
+        let logits = ws.logits().clone();
+        self.ws = Some(ws);
+        logits
+    }
+
+    /// Forward including the loss; returns mean loss. Allocation-free
+    /// after the first call at a given batch size.
+    pub fn forward_loss(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
+        let mut ws = self.take_ws(data.shape().dim0());
+        ws.load_input(data);
+        let loss = self.forward_loss_in(&mut ws, labels, ctx);
+        self.ws = Some(ws);
+        loss
+    }
+
+    /// Full training step computation (no update): forward + backward,
+    /// accumulating parameter gradients. Returns mean loss.
+    /// Allocation-free after the first call at a given batch size
+    /// (asserted by `rust/tests/workspace_parity.rs`).
+    pub fn forward_backward(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
+        let mut ws = self.take_ws(data.shape().dim0());
+        ws.load_input(data);
+        let loss = self.forward_backward_in(&mut ws, labels, ctx);
+        self.ws = Some(ws);
+        loss
+    }
+
+    /// Like [`Net::forward_backward`] but collects per-layer timings.
+    pub fn forward_backward_timed(
+        &mut self,
+        data: &Tensor,
+        labels: &[usize],
+        ctx: &ExecCtx,
+    ) -> (f64, Vec<LayerTiming>) {
+        let mut ws = self.take_ws(data.shape().dim0());
+        ws.load_input(data);
+        let out = self.forward_backward_timed_in(&mut ws, labels, ctx);
+        self.ws = Some(ws);
+        out
     }
 
     /// Accuracy of the last forward pass.
@@ -183,16 +431,17 @@ impl Net {
         Ok(())
     }
 
-    /// Load parameters saved by [`save_params`] (shapes must match).
+    /// Load parameters saved by [`save_params`](Net::save_params)
+    /// (shapes must match).
     pub fn load_params<R: std::io::Read>(&mut self, r: &mut R) -> crate::Result<()> {
         let mut cnt = [0u8; 4];
         r.read_exact(&mut cnt)?;
         let n = u32::from_le_bytes(cnt) as usize;
         let mut blobs = self.params_mut();
-        anyhow::ensure!(n == blobs.len(), "checkpoint has {n} blobs, net has {}", blobs.len());
+        ensure!(n == blobs.len(), "checkpoint has {n} blobs, net has {}", blobs.len());
         for b in blobs.iter_mut() {
             let t = crate::tensor::read_tensor(r)?;
-            anyhow::ensure!(t.shape() == b.data.shape(), "blob shape mismatch");
+            ensure!(t.shape() == b.data.shape(), "blob shape mismatch");
             b.data = t;
         }
         Ok(())
@@ -203,8 +452,8 @@ impl Net {
 mod tests {
     use super::presets;
     use super::*;
-    use crate::layers::{ConvLayer, FcLayer, PoolLayer, PoolMode, ReluLayer};
     use crate::layers::conv::ConvConfig;
+    use crate::layers::{ConvLayer, DropoutLayer, FcLayer, PoolLayer, PoolMode, ReluLayer};
     use crate::rng::Pcg64;
 
     fn tiny_net(rng: &mut Pcg64) -> Net {
@@ -223,6 +472,25 @@ mod tests {
         Net::new("tiny", (1, 8, 8), layers, vec![true, false, false, false])
     }
 
+    /// Same as [`tiny_net`] plus a dropout (exercises both in-place
+    /// layer kinds and an in-place chain in the slot planner).
+    fn tiny_dropout_net(rng: &mut Pcg64) -> Net {
+        let conv = ConvLayer::new(
+            "conv1",
+            1,
+            ConvConfig { out_channels: 4, kernel: 3, pad: 1, weight_std: 0.1, ..Default::default() },
+            rng,
+        );
+        let layers: Vec<Box<dyn Layer>> = vec![
+            Box::new(conv),
+            Box::new(ReluLayer::new("relu1")),
+            Box::new(DropoutLayer::new("drop1", 0.3)),
+            Box::new(PoolLayer::new("pool1", PoolMode::Max, 2, 2, 0)),
+            Box::new(FcLayer::new("fc", 4 * 4 * 4, 3, 0.1, rng)),
+        ];
+        Net::new("tinydrop", (1, 8, 8), layers, vec![true, false, false, false, false])
+    }
+
     #[test]
     fn shape_walk() {
         let mut rng = Pcg64::new(1);
@@ -231,6 +499,21 @@ mod tests {
         assert_eq!(shapes[0].dims4(), (2, 4, 8, 8));
         assert_eq!(shapes[2].dims4(), (2, 4, 4, 4));
         assert_eq!(shapes[3].dims2(), (2, 3));
+    }
+
+    #[test]
+    fn plan_shares_slots_for_inplace_layers() {
+        let mut rng = Pcg64::new(11);
+        let net = tiny_dropout_net(&mut rng);
+        let ws = net.plan(2);
+        // boundaries: input, conv-out, relu(=conv-out), drop(=conv-out),
+        // pool-out, fc-out → 4 unique slots for 6 boundaries
+        assert_eq!(ws.bound.len(), 6);
+        assert_eq!(ws.num_slots(), 4);
+        assert_eq!(ws.bound[1], ws.bound[2]);
+        assert_eq!(ws.bound[2], ws.bound[3]);
+        assert!(ws.bytes() > 0);
+        assert_eq!(ws.batch(), 2);
     }
 
     #[test]
@@ -246,6 +529,25 @@ mod tests {
             .iter()
             .any(|p| p.grad.as_slice().iter().any(|&g| g != 0.0));
         assert!(has_grad);
+    }
+
+    #[test]
+    fn explicit_workspace_matches_classic_entry_point() {
+        let mut rng = Pcg64::new(12);
+        let mut net_a = tiny_dropout_net(&mut rng);
+        let mut rng2 = Pcg64::new(12);
+        let mut net_b = tiny_dropout_net(&mut rng2);
+        let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx { seed: 5, ..Default::default() };
+
+        let la = net_a.forward_backward(&x, &[0, 2], &ctx);
+        let mut ws = net_b.plan(2);
+        ws.load_input(&x);
+        let lb = net_b.forward_backward_in(&mut ws, &[0, 2], &ctx);
+        assert_eq!(la.to_bits(), lb.to_bits(), "losses differ: {la} vs {lb}");
+        for (pa, pb) in net_a.params_mut().iter().zip(net_b.params_mut().iter()) {
+            assert_eq!(pa.grad.as_slice(), pb.grad.as_slice());
+        }
     }
 
     #[test]
@@ -268,6 +570,18 @@ mod tests {
         }
         let last = net.forward_backward(&x, &labels, &ctx);
         assert!(last < first * 0.7, "loss did not drop: {first} → {last}");
+    }
+
+    #[test]
+    fn batch_size_change_replans() {
+        let mut rng = Pcg64::new(13);
+        let mut net = tiny_net(&mut rng);
+        let x2 = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let x4 = Tensor::randn((4, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx::default();
+        assert!(net.forward_backward(&x2, &[0, 1], &ctx).is_finite());
+        assert!(net.forward_backward(&x4, &[0, 1, 2, 0], &ctx).is_finite());
+        assert!(net.forward_backward(&x2, &[0, 1], &ctx).is_finite());
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! SGD solver (substrate S8) — Caffe's solver semantics: momentum,
 //! L2 weight decay, per-blob lr/decay multipliers, and the standard
 //! learning-rate policies (`fixed`, `step`, `inv`).
+//!
+//! The update itself is allocation-free after the first step (momentum
+//! buffers are planned on first use), and [`SgdSolver::train_step_in`]
+//! composes with a planned [`Workspace`] so the whole
+//! forward/backward/update cycle performs zero tensor allocations.
 
 use crate::layers::ExecCtx;
-use crate::net::Net;
+use crate::net::{Net, Workspace};
 use crate::tensor::Tensor;
 
 /// Learning-rate schedule (Caffe `lr_policy`).
@@ -84,11 +89,30 @@ impl SgdSolver {
         self.iter += 1;
     }
 
-    /// forward_backward + step; returns the loss.
+    /// forward_backward + step; returns the loss. Uses the net's
+    /// internally cached workspace (allocation-free after the first
+    /// call at a fixed batch size).
     pub fn train_step(&mut self, net: &mut Net, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
         let mut step_ctx = *ctx;
         step_ctx.seed = ctx.seed.wrapping_add(self.iter as u64); // fresh dropout mask per step
         let loss = net.forward_backward(data, labels, &step_ctx);
+        self.step(net);
+        loss
+    }
+
+    /// Plan-once / run-many variant of [`SgdSolver::train_step`]: the
+    /// caller owns the [`Workspace`] (input must already be loaded, see
+    /// [`Workspace::load_input`]).
+    pub fn train_step_in(
+        &mut self,
+        net: &mut Net,
+        ws: &mut Workspace,
+        labels: &[usize],
+        ctx: &ExecCtx,
+    ) -> f64 {
+        let mut step_ctx = *ctx;
+        step_ctx.seed = ctx.seed.wrapping_add(self.iter as u64);
+        let loss = net.forward_backward_in(ws, labels, &step_ctx);
         self.step(net);
         loss
     }
@@ -188,6 +212,29 @@ mod tests {
         let b1 = net.params_mut()[1].data.as_slice()[0];
         // biases use lr_mult 2 ⇒ Δ = 0.2
         assert!((b1 - (b0 - 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn train_step_in_matches_train_step() {
+        let mut rng = Pcg64::new(6);
+        let mut net_a = linear_net(&mut rng);
+        let mut rng2 = Pcg64::new(6);
+        let mut net_b = linear_net(&mut rng2);
+        let cfg = SolverConfig { base_lr: 0.1, ..Default::default() };
+        let mut sa = SgdSolver::new(cfg);
+        let mut sb = SgdSolver::new(cfg);
+        let x = Tensor::randn((4, 1, 2, 2), 0.0, 1.0, &mut rng);
+        let labels = [0usize, 1, 2, 0];
+        let ctx = ExecCtx::default();
+        let mut ws = net_b.plan(4);
+        for _ in 0..3 {
+            let la = sa.train_step(&mut net_a, &x, &labels, &ctx);
+            ws.load_input(&x);
+            let lb = sb.train_step_in(&mut net_b, &mut ws, &labels, &ctx);
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        let wa = net_a.params_mut()[0].data.as_slice().to_vec();
+        assert_eq!(net_b.params_mut()[0].data.as_slice(), &wa[..]);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! external serialization crate is needed.
 
 use super::{Shape, Tensor};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 4] = b"CCT1";

@@ -14,23 +14,66 @@ pub use shape::Shape;
 
 use crate::rng::Pcg64;
 
+/// Tensor-allocation accounting — the test hook behind the workspace
+/// redesign's "zero allocations in the hot loop" guarantee.
+///
+/// Every [`Tensor`] construction that materializes a buffer (zeros,
+/// full, from_vec, arange, clone, …) bumps a **thread-local** counter.
+/// Planned-workspace execution must leave the calling thread's counter
+/// untouched after warm-up; `rust/tests/workspace_parity.rs` asserts
+/// exactly that. Thread-locality keeps the numbers deterministic under
+/// `cargo test`'s parallel test threads, and the cost — one
+/// thread-local increment per tensor, not per element — is free
+/// relative to any real workload, so the hook stays on in release
+/// builds.
+pub mod alloc_stats {
+    use std::cell::Cell;
+
+    thread_local! {
+        static TENSOR_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Tensors materialized by the *current thread* so far.
+    pub fn tensor_allocs() -> u64 {
+        TENSOR_ALLOCS.with(|c| c.get())
+    }
+
+    /// This thread's allocations since a previously captured snapshot.
+    pub fn allocs_since(snapshot: u64) -> u64 {
+        tensor_allocs().saturating_sub(snapshot)
+    }
+
+    pub(super) fn record() {
+        TENSOR_ALLOCS.with(|c| c.set(c.get() + 1));
+    }
+}
+
 /// A dense, contiguous, row-major f32 tensor of rank ≤ 4.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct Tensor {
     shape: Shape,
     data: Vec<f32>,
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Self {
+        alloc_stats::record();
+        Tensor { shape: self.shape, data: self.data.clone() }
+    }
 }
 
 impl Tensor {
     /// Zero-filled tensor.
     pub fn zeros(shape: impl Into<Shape>) -> Self {
         let shape = shape.into();
+        alloc_stats::record();
         Tensor { data: vec![0.0; shape.numel()], shape }
     }
 
     /// Constant-filled tensor.
     pub fn full(shape: impl Into<Shape>, value: f32) -> Self {
         let shape = shape.into();
+        alloc_stats::record();
         Tensor { data: vec![value; shape.numel()], shape }
     }
 
@@ -45,6 +88,7 @@ impl Tensor {
             data.len(),
             shape
         );
+        alloc_stats::record();
         Tensor { shape, data }
     }
 
@@ -73,7 +117,7 @@ impl Tensor {
     pub fn arange(shape: impl Into<Shape>) -> Self {
         let shape = shape.into();
         let data = (0..shape.numel()).map(|i| i as f32).collect();
-        Tensor { shape, data }
+        Tensor::from_vec(shape, data)
     }
 
     #[inline]
@@ -321,6 +365,22 @@ mod tests {
         let t = Tensor::randn((64, 3, 16, 16), 0.0, 0.01, &mut rng);
         let mean = t.sum() / t.numel() as f64;
         assert!(mean.abs() < 1e-3);
+    }
+
+    #[test]
+    fn alloc_hook_counts_constructions() {
+        let snap = alloc_stats::tensor_allocs();
+        let a = Tensor::zeros((2, 2));
+        let _b = a.clone();
+        let _c = Tensor::from_vec(4usize, vec![0.0; 4]);
+        assert!(alloc_stats::allocs_since(snap) >= 3);
+        // in-place mutation does not count
+        let snap2 = alloc_stats::tensor_allocs();
+        let mut d = Tensor::zeros(8usize);
+        let before = alloc_stats::allocs_since(snap2); // the alloc above
+        d.as_mut_slice().fill(3.0);
+        d.scale(0.5);
+        assert_eq!(alloc_stats::allocs_since(snap2), before);
     }
 
     #[test]

@@ -184,9 +184,8 @@ fn build_rejects_shape_underflow() {
     let r = std::panic::catch_unwind(move || build_net(&cfg, &mut rng));
     // either an Err or a descriptive panic from shape checking — but
     // never a silent success
-    match r {
-        Ok(Ok(_)) => panic!("9×9 kernel on 4×4 input must not build"),
-        _ => {}
+    if let Ok(Ok(_)) = r {
+        panic!("9×9 kernel on 4×4 input must not build");
     }
 }
 

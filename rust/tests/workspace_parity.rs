@@ -1,0 +1,225 @@
+//! Workspace-execution guarantees:
+//!
+//! 1. **Parity** — the planned-workspace path produces bit-identical
+//!    results (forward activations, loss, every parameter gradient) to
+//!    the classic allocating path (driving each layer's `forward` /
+//!    `backward` wrapper by hand, the pre-workspace algorithm).
+//! 2. **No growth** — two consecutive steps reuse the same arena: same
+//!    byte footprint, same buffer addresses.
+//! 3. **Zero allocation** — `Net::forward_backward` (and a full
+//!    solver step) performs zero tensor allocations after the first
+//!    step at a fixed batch size, asserted via the
+//!    `tensor::alloc_stats` hook.
+
+use cct::layers::conv::ConvConfig;
+use cct::layers::{
+    ConvLayer, DropoutLayer, ExecCtx, FcLayer, Layer, LrnLayer, PoolLayer, PoolMode, ReluLayer,
+    SoftmaxLossLayer,
+};
+use cct::net::{parse_net, config::build_net, Net};
+use cct::rng::Pcg64;
+use cct::solver::{SgdSolver, SolverConfig};
+use cct::tensor::{alloc_stats, Tensor};
+
+/// The tiny test architecture, built twice from identical seeds: once
+/// as loose layers (manual drive) and once as a [`Net`].
+fn tiny_layers(seed: u64) -> (ConvLayer, ReluLayer, DropoutLayer, PoolLayer, FcLayer) {
+    let mut rng = Pcg64::new(seed);
+    let conv = ConvLayer::new(
+        "conv1",
+        1,
+        ConvConfig { out_channels: 4, kernel: 3, pad: 1, weight_std: 0.1, ..Default::default() },
+        &mut rng,
+    );
+    let fc = FcLayer::new("fc", 4 * 4 * 4, 3, 0.1, &mut rng);
+    (
+        conv,
+        ReluLayer::new("relu1"),
+        DropoutLayer::new("drop1", 0.3),
+        PoolLayer::new("pool1", PoolMode::Max, 2, 2, 0),
+        fc,
+    )
+}
+
+fn tiny_net(seed: u64) -> Net {
+    let (conv, relu, drop, pool, fc) = tiny_layers(seed);
+    let layers: Vec<Box<dyn Layer>> = vec![
+        Box::new(conv),
+        Box::new(relu),
+        Box::new(drop),
+        Box::new(pool),
+        Box::new(fc),
+    ];
+    Net::new("tiny", (1, 8, 8), layers, vec![true, false, false, false, false])
+}
+
+#[test]
+fn workspace_path_matches_allocating_path_bit_for_bit() {
+    let ctx = ExecCtx { seed: 17, ..Default::default() };
+    let mut rng = Pcg64::new(99);
+    let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+    let labels = [0usize, 2];
+
+    // --- workspace path (the Net) --------------------------------
+    let mut net = tiny_net(42);
+    let net_loss = net.forward_backward(&x, &labels, &ctx);
+    let net_logits = net.forward(&x, &ctx);
+
+    // --- classic allocating path (manual layer drive) ------------
+    let (mut conv, mut relu, mut drop, mut pool, mut fc) = tiny_layers(42);
+    let mut loss_layer = SoftmaxLossLayer::new("loss");
+    let a1 = conv.forward(&x, &ctx);
+    let a2 = relu.forward(&a1, &ctx);
+    let a3 = drop.forward(&a2, &ctx);
+    let a4 = pool.forward(&a3, &ctx);
+    let logits = fc.forward(&a4, &ctx);
+    loss_layer.set_labels(&labels);
+    let manual_loss = loss_layer.forward_loss(&logits);
+    let mut g = Tensor::zeros(*logits.shape());
+    loss_layer.backward_logits(&mut g);
+    let g = fc.backward(&a4, &g, &ctx);
+    let g = pool.backward(&a3, &g, &ctx);
+    let g = drop.backward(&a2, &g, &ctx);
+    let g = relu.backward(&a1, &g, &ctx);
+    let _ = conv.backward(&x, &g, &ctx);
+
+    // --- bit-for-bit comparison ----------------------------------
+    assert_eq!(net_loss.to_bits(), manual_loss.to_bits(), "{net_loss} vs {manual_loss}");
+    assert_eq!(net_logits.as_slice(), logits.as_slice(), "forward activations diverge");
+    let manual_params: Vec<Vec<f32>> = [
+        conv.params(), fc.params(),
+    ]
+    .iter()
+    .flatten()
+    .map(|p| p.grad.as_slice().to_vec())
+    .collect();
+    let mut net_params = net.params_mut();
+    assert_eq!(net_params.len(), manual_params.len());
+    for (np, mp) in net_params.iter_mut().zip(manual_params.iter()) {
+        assert_eq!(np.grad.as_slice(), &mp[..], "parameter gradients diverge");
+    }
+}
+
+#[test]
+fn consecutive_steps_reuse_the_arena() {
+    let ctx = ExecCtx { seed: 3, ..Default::default() };
+    let mut rng = Pcg64::new(7);
+    let x = Tensor::randn((4, 1, 8, 8), 0.0, 1.0, &mut rng);
+    let labels = [0usize, 1, 2, 0];
+
+    let mut net = tiny_net(5);
+    let mut ws = net.plan(4);
+    ws.load_input(&x);
+    let bytes0 = ws.bytes();
+    let slots0 = ws.num_slots();
+    let ptr0 = ws.logits().as_slice().as_ptr();
+    let l1 = net.forward_backward_in(&mut ws, &labels, &ctx);
+    let l2 = net.forward_backward_in(&mut ws, &labels, &ctx);
+    assert!(l1.is_finite() && l2.is_finite());
+    assert_eq!(ws.bytes(), bytes0, "arena grew across steps");
+    assert_eq!(ws.num_slots(), slots0);
+    assert_eq!(ws.logits().as_slice().as_ptr(), ptr0, "arena buffers were reallocated");
+}
+
+#[test]
+fn forward_backward_is_allocation_free_after_first_step() {
+    // The acceptance criterion: zero tensor allocations after the
+    // first step for a fixed batch size — including the solver update,
+    // and on a net exercising every layer kind (conv, relu, lrn, pool,
+    // fc, dropout + the softmax loss).
+    const NET: &str = "
+name: alllayers
+input: 3 16 16
+conv { name: c1 out: 8 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+lrn  { name: n1 size: 3 }
+pool { name: p1 mode: max kernel: 2 stride: 2 }
+fc   { name: f1 out: 16 std: 0.1 }
+relu { name: r2 }
+dropout { name: d1 p: 0.5 }
+fc   { name: f2 out: 5 std: 0.1 }
+softmax { name: loss }
+";
+    let cfg = parse_net(NET).unwrap();
+    let mut rng = Pcg64::new(21);
+    let mut net = build_net(&cfg, &mut rng).unwrap();
+    let mut solver = SgdSolver::new(SolverConfig::default());
+    let x = Tensor::randn((4, 3, 16, 16), 0.0, 1.0, &mut rng);
+    let labels = [0usize, 1, 2, 3];
+    let ctx = ExecCtx::default();
+
+    // first step plans the workspace (+ solver momentum buffers)
+    solver.train_step(&mut net, &x, &labels, &ctx);
+    // second step: steady state
+    solver.train_step(&mut net, &x, &labels, &ctx);
+
+    let snap = alloc_stats::tensor_allocs();
+    for _ in 0..3 {
+        solver.train_step(&mut net, &x, &labels, &ctx);
+    }
+    assert_eq!(
+        alloc_stats::allocs_since(snap),
+        0,
+        "training hot loop allocated tensors after warm-up"
+    );
+
+    // changing the batch size re-plans (allocates), then settles again
+    let x2 = Tensor::randn((2, 3, 16, 16), 0.0, 1.0, &mut rng);
+    net.forward_backward(&x2, &[0, 1], &ctx);
+    net.forward_backward(&x2, &[0, 1], &ctx);
+    let snap2 = alloc_stats::tensor_allocs();
+    net.forward_backward(&x2, &[0, 1], &ctx);
+    assert_eq!(alloc_stats::allocs_since(snap2), 0);
+}
+
+#[test]
+fn inplace_layers_share_slots_and_still_learn() {
+    // A net dominated by in-place layers must still converge — guards
+    // against aliasing bugs in the shared-slot backward chain
+    // (relu→dropout sharing one activation slot).
+    let mut net = tiny_net(11);
+    let mut rng = Pcg64::new(13);
+    let x = Tensor::randn((6, 1, 8, 8), 0.0, 1.0, &mut rng);
+    let labels = [0usize, 1, 2, 0, 1, 2];
+    let mut solver = SgdSolver::new(SolverConfig {
+        base_lr: 0.05,
+        momentum: 0.9,
+        weight_decay: 0.0,
+        ..Default::default()
+    });
+    let mut ws = net.plan(6);
+    let ctx = ExecCtx { seed: 1, ..Default::default() };
+    ws.load_input(&x);
+    let first = solver.train_step_in(&mut net, &mut ws, &labels, &ctx);
+    let mut last = first;
+    for _ in 0..40 {
+        ws.load_input(&x);
+        last = solver.train_step_in(&mut net, &mut ws, &labels, &ctx);
+    }
+    assert!(last < first * 0.7, "in-place net did not learn: {first} → {last}");
+}
+
+#[test]
+fn lrn_backward_through_workspace_matches_wrapper() {
+    // LRN caches its scale tensor between forward and backward; make
+    // sure the workspace drive (scratch-planned) agrees with the
+    // allocating wrapper drive.
+    let mut rng = Pcg64::new(31);
+    let x = Tensor::randn((2, 5, 3, 3), 0.0, 1.0, &mut rng);
+    let dy = Tensor::randn(*x.shape(), 0.0, 1.0, &mut rng);
+    let ctx = ExecCtx::default();
+
+    let mut a = LrnLayer::new("n", 3, 0.5, 0.75, 1.0);
+    let ya = a.forward(&x, &ctx);
+    let da = a.backward(&x, &dy, &ctx);
+
+    let mut b = LrnLayer::new("n", 3, 0.5, 0.75, 1.0);
+    let mut scratch = b.plan_scratch(x.shape());
+    let mut yb = Tensor::zeros(*x.shape());
+    b.forward_into(&x, &mut yb, &mut scratch, &ctx);
+    let mut db = Tensor::zeros(*x.shape());
+    b.backward_into(&x, &dy, &mut db, &mut scratch, &ctx);
+
+    assert_eq!(ya.as_slice(), yb.as_slice());
+    assert_eq!(da.as_slice(), db.as_slice());
+}
