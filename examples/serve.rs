@@ -1,0 +1,89 @@
+//! Serving quickstart: the dynamic micro-batching inference engine in
+//! ~60 lines.
+//!
+//! ```sh
+//! cargo run --release --example serve
+//! ```
+//!
+//! Starts a [`ServeEngine`] over a small net, drives it from a few
+//! concurrent client threads (blocking and non-blocking submission,
+//! including the backpressure path), then shuts down and prints the
+//! latency/throughput report.
+
+use cct::device::profiles;
+use cct::net::parse_net;
+use cct::serve::{plan_bucket_ladder, worker_placement, ServeConfig, ServeEngine, SubmitError};
+
+const NET: &str = r#"
+name: servedemo
+input: 3 16 16
+conv { name: conv1 out: 16 kernel: 3 pad: 1 std: 0.1 }
+relu { name: relu1 }
+pool { name: pool1 mode: max kernel: 2 stride: 2 }
+fc   { name: fc1 out: 10 std: 0.1 }
+"#;
+
+fn main() -> cct::Result<()> {
+    // 1. Start the engine: 2 workers, micro-batches of up to 8, a
+    //    request waits at most 1 ms for company. Each worker pre-plans
+    //    forward-only workspaces at every bucket size, so the serving
+    //    steady state allocates no tensors.
+    let cfg = parse_net(NET)?;
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig { workers: 2, max_batch: 8, max_wait_us: 1_000, ..Default::default() },
+    )?;
+    println!("bucket ladder: {:?}", engine.buckets());
+
+    // 2. Concurrent clients. Blocking `infer` applies backpressure by
+    //    waiting; `try_infer` rejects immediately when the bounded
+    //    queue is full — shed load instead of growing memory.
+    std::thread::scope(|scope| {
+        for client in 0..4 {
+            let handle = engine.handle();
+            let sample_len = engine.sample_len();
+            scope.spawn(move || {
+                let sample = vec![0.1 * (client as f32 + 1.0); sample_len];
+                for i in 0..50 {
+                    if i % 10 == 9 {
+                        // Non-blocking path with explicit rejection handling.
+                        match handle.try_infer(&sample) {
+                            Ok(pending) => {
+                                let reply = pending.wait().expect("engine answered");
+                                assert!(reply.class < 10);
+                            }
+                            Err(SubmitError::QueueFull) => { /* shed this request */ }
+                            Err(_) => return, // engine closed / bad input
+                        }
+                    } else {
+                        let reply = handle.infer(&sample).expect("engine answered");
+                        assert_eq!(reply.logits.len(), 10);
+                    }
+                }
+            });
+        }
+    });
+
+    // 3. Shut down and read the report.
+    let report = engine.shutdown();
+    println!(
+        "served {} requests in {:.2}s ({:.0} req/s), mean batch {:.2}, {} rejected",
+        report.completed, report.wall_s, report.throughput_rps, report.mean_batch, report.rejected
+    );
+    println!(
+        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms",
+        report.latency.p50_us / 1e3,
+        report.latency.p95_us / 1e3,
+        report.latency.p99_us / 1e3
+    );
+    println!("steady-state tensor allocs per worker: {:?}", report.worker_steady_allocs);
+
+    // 4. The planning helpers on their own: a cost-model bucket ladder
+    //    and FLOPS-proportional worker placement (paper §2.2/§2.3).
+    let dev = profiles::c4_4xlarge();
+    let ladder = plan_bucket_ladder(50_000_000, 64, 64, &dev, 4);
+    println!("cost-model ladder for a 50 MFLOP/image net on c4.4xlarge (4 threads): {ladder:?}");
+    let fleet = [profiles::grid_k520(), profiles::g2_host_cpu()];
+    println!("8 workers over [K520, host CPU]: {:?}", worker_placement(8, &fleet));
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! E-serve: dynamic micro-batching serving throughput.
+//!
+//! The paper's Fig 2 shows CNN throughput tracking delivered FLOPS
+//! once batching amortizes lowering and per-call overhead. A server
+//! sees that same curve as a **latency-vs-throughput tradeoff**: the
+//! `max_batch` knob trades per-request wait (p95/p99 latency) for
+//! amortization (requests/s). This bench sweeps `max_batch` under a
+//! closed-loop load generator at a fixed worker count and reports both
+//! sides, on two nets:
+//!
+//! * `tinyserve` — a very small net where the per-request dispatch
+//!   overhead dominates; micro-batching must amortize it away
+//!   (acceptance: ≥ 3× the batch-1 request throughput at the same
+//!   worker count).
+//! * `convserve` — a conv-heavier net where the GEMM-efficiency side
+//!   of the curve shows as well.
+//!
+//! Also asserts the plan-once invariant end-to-end: every worker's
+//! steady-state tensor-allocation count must be 0.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use cct::bench_util::Table;
+use cct::net::parse_net;
+use cct::serve::{closed_loop, ServeConfig, ServeEngine, ServeReport};
+
+const TINY: &str = "
+name: tinyserve
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+pool { name: p1 mode: max kernel: 2 stride: 2 }
+fc   { name: f1 out: 10 std: 0.1 }
+";
+
+const CONV: &str = "
+name: convserve
+input: 3 16 16
+conv { name: conv1 out: 16 kernel: 3 pad: 1 std: 0.1 }
+relu { name: relu1 }
+pool { name: pool1 mode: max kernel: 2 stride: 2 }
+conv { name: conv2 out: 16 kernel: 3 pad: 1 std: 0.1 }
+relu { name: relu2 }
+pool { name: pool2 mode: max kernel: 2 stride: 2 }
+fc   { name: fc1 out: 10 std: 0.1 }
+";
+
+const WORKERS: usize = 2;
+const CLIENTS: usize = 32;
+const REQUESTS: usize = 2_000;
+
+fn sweep(name: &str, cfg_text: &str) -> Vec<(usize, f64, ServeReport)> {
+    let cfg = parse_net(cfg_text).expect("net parses");
+    let mut t = Table::new(
+        &format!(
+            "Serving latency vs throughput: {name} ({WORKERS} workers, {CLIENTS} closed-loop clients, {REQUESTS} requests/config)"
+        ),
+        &["max_batch", "buckets", "req/s", "vs b=1", "mean batch", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    let mut series: Vec<(usize, f64, ServeReport)> = Vec::new();
+    for max_batch in [1usize, 2, 4, 8, 16, 32] {
+        let config = ServeConfig {
+            workers: WORKERS,
+            max_batch,
+            max_wait_us: if max_batch == 1 { 0 } else { 2_000 },
+            queue_cap: 1024,
+            ..Default::default()
+        };
+        // Warm the process (caches, allocator, code paths) on a
+        // throwaway engine so the measured engine's report covers
+        // exactly the measured load — no warmup samples in the
+        // percentiles, same denominator for every column.
+        {
+            let warm = ServeEngine::start(&cfg, config.clone()).expect("warmup engine starts");
+            let _ = closed_loop(&warm, 8, 200);
+            warm.shutdown();
+        }
+        let engine = ServeEngine::start(&cfg, config).expect("engine starts");
+        let buckets = engine
+            .buckets()
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        let wall = closed_loop(&engine, CLIENTS, REQUESTS);
+        let report = engine.shutdown();
+        let rate = REQUESTS as f64 / wall;
+        let base = series.first().map(|&(_, r, _)| r).unwrap_or(rate);
+        t.row(&[
+            max_batch.to_string(),
+            buckets,
+            format!("{rate:.0}"),
+            format!("{:.2}×", rate / base),
+            format!("{:.2}", report.mean_batch),
+            format!("{:.2}", report.latency.p50_us / 1e3),
+            format!("{:.2}", report.latency.p95_us / 1e3),
+            format!("{:.2}", report.latency.p99_us / 1e3),
+        ]);
+        series.push((max_batch, rate, report));
+    }
+    t.print();
+    t.write_csv(&format!("bench_out/serve_throughput_{name}.csv")).ok();
+    series
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_out").ok();
+    let mut all_zero_allocs = true;
+    for (name, cfg) in [("tinyserve", TINY), ("convserve", CONV)] {
+        let series = sweep(name, cfg);
+        let base = series[0].1;
+        let (best_b, best_rate) = series
+            .iter()
+            .map(|&(b, r, _)| (b, r))
+            .fold((1, 0.0), |acc, x| if x.1 > acc.1 { x } else { acc });
+        println!(
+            "{name}: best micro-batched throughput {best_rate:.0} req/s at max_batch={best_b} — {:.2}× batch-1 ({base:.0} req/s) at the same {WORKERS} workers (acceptance: ≥3×)",
+            best_rate / base
+        );
+        for (b, _, report) in &series {
+            if report.worker_steady_allocs.iter().any(|&a| a != 0) {
+                all_zero_allocs = false;
+                println!(
+                    "  REGRESSION: max_batch={b} worker steady-state allocs {:?} (expected all 0)",
+                    report.worker_steady_allocs
+                );
+            }
+        }
+    }
+    println!(
+        "steady-state serve-loop tensor allocations: {}",
+        if all_zero_allocs { "0 across every config (plan-once holds)" } else { "NONZERO — see above" }
+    );
+}

@@ -10,10 +10,15 @@ use std::time::Instant;
 /// Timing statistics over repeated runs (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {
+    /// Mean seconds per run.
     pub mean: f64,
+    /// Fastest run.
     pub min: f64,
+    /// Slowest run.
     pub max: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Measured runs (excluding warmup).
     pub iters: usize,
 }
 
@@ -86,6 +91,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty titled table with the given column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -94,6 +100,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());

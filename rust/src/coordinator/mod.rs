@@ -79,10 +79,12 @@ impl CnnCoordinator {
         })
     }
 
+    /// Number of worker replicas.
     pub fn workers(&self) -> usize {
         self.replicas.len()
     }
 
+    /// Training steps taken so far.
     pub fn iterations(&self) -> usize {
         self.steps
     }

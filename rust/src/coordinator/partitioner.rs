@@ -54,7 +54,9 @@ pub fn split_batch(b: usize, p: usize) -> Vec<Range<usize>> {
 /// Execution statistics from a partitioned convolution.
 #[derive(Clone, Copy, Debug)]
 pub struct PartitionStats {
+    /// Partitions actually executed (≤ requested; capped by the batch).
     pub partitions: usize,
+    /// GEMM threads each partition's worker used.
     pub gemm_threads_per_partition: usize,
     /// Wall-clock of the whole operation.
     pub wall_s: f64,

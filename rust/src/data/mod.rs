@@ -17,13 +17,17 @@ use crate::tensor::Tensor;
 
 /// ImageNet-shaped random batches.
 pub struct SyntheticImages {
+    /// Channels per image.
     pub channels: usize,
+    /// Spatial size (side × side).
     pub side: usize,
+    /// Label range.
     pub classes: usize,
     rng: Pcg64,
 }
 
 impl SyntheticImages {
+    /// A deterministic random-image source.
     pub fn new(channels: usize, side: usize, classes: usize, seed: u64) -> Self {
         SyntheticImages { channels, side, classes, rng: Pcg64::with_stream(seed, 0xda7a) }
     }
@@ -45,8 +49,11 @@ impl SyntheticImages {
 /// σ·noise`, so a small CNN can separate them and the training loss
 /// actually falls (the end-to-end validation requirement).
 pub struct BlobCorpus {
+    /// Channels per sample.
     pub channels: usize,
+    /// Spatial size (side × side).
     pub side: usize,
+    /// Number of classes (templates).
     pub classes: usize,
     images: Tensor,
     labels: Vec<usize>,
@@ -106,10 +113,12 @@ impl BlobCorpus {
         BlobCorpus { channels, side, classes, images, labels, order, cursor: 0, rng }
     }
 
+    /// Total samples in the corpus.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// Whether the corpus has no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }

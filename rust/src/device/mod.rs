@@ -27,7 +27,9 @@ use crate::lowering::{ConvShape, CostModel, LoweringType};
 /// Where a device lives relative to host memory.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DeviceKind {
+    /// Host-resident CPU socket.
     Cpu,
+    /// PCIe-attached GPU.
     Gpu,
 }
 
@@ -35,7 +37,9 @@ pub enum DeviceKind {
 /// constants of its timing model.
 #[derive(Clone, Debug)]
 pub struct DeviceSpec {
+    /// Device name (the paper's instance names).
     pub name: String,
+    /// CPU or GPU (decides whether transfers are charged).
     pub kind: DeviceKind,
     /// Theoretical peak single-precision GFLOP/s (the paper's numbers:
     /// GRID K520 = 1300, c4.4xlarge socket = 700, …).

@@ -13,16 +13,20 @@
 
 use super::{at, GemmDims, Trans};
 
-/// Register microtile: MR×NR accumulators.
+/// Register microtile rows: MR×NR accumulators.
 pub const MR: usize = 8;
+/// Register microtile columns.
 pub const NR: usize = 32;
 
 /// Cache-blocking parameters (tunable; defaults sized for a ~32 KiB L1 /
 /// 1 MiB L2 / shared L3 x86 cache hierarchy).
 #[derive(Clone, Copy, Debug)]
 pub struct BlockSizes {
+    /// M-panel rows (A panel resident in L2).
     pub mc: usize,
+    /// K-panel depth (shared by the A and B panels).
     pub kc: usize,
+    /// N-panel columns (B panel resident in L3).
     pub nc: usize,
 }
 

@@ -34,7 +34,9 @@ pub use threaded::gemm_threaded;
 /// means the *logical* operand is the transpose of the stored matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trans {
+    /// Use the operand as stored.
     N,
+    /// Use the transpose of the stored operand.
     T,
 }
 
@@ -42,8 +44,11 @@ pub enum Trans {
 /// op(A) is m×k, op(B) is k×n, C is m×n, all row-major.
 #[derive(Clone, Copy, Debug)]
 pub struct GemmDims {
+    /// Rows of op(A) and C.
     pub m: usize,
+    /// Columns of op(B) and C.
     pub n: usize,
+    /// Inner (contraction) dimension.
     pub k: usize,
 }
 

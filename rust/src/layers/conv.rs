@@ -23,13 +23,18 @@ use crate::tensor::{Shape, Tensor};
 /// Configuration for a conv layer (Caffe's `convolution_param`).
 #[derive(Clone, Copy, Debug)]
 pub struct ConvConfig {
+    /// Output channels (number of kernels o).
     pub out_channels: usize,
+    /// Square kernel size k.
     pub kernel: usize,
+    /// Zero padding on each side.
     pub pad: usize,
+    /// Stride.
     pub stride: usize,
     /// Channel groups (Caffe `group`): input and output channels are
     /// split into `group` independent convolutions.
     pub group: usize,
+    /// Whether to add a per-output-channel bias.
     pub bias: bool,
     /// Gaussian init std for weights (Caffe's `weight_filler`).
     pub weight_std: f32,
@@ -41,6 +46,7 @@ impl Default for ConvConfig {
     }
 }
 
+/// Convolution layer (Caffe `Convolution`) over the lowering engine.
 pub struct ConvLayer {
     name: String,
     cfg: ConvConfig,
@@ -67,6 +73,7 @@ impl ConvLayer {
         ConvLayer { name: name.to_string(), cfg, in_channels, weights, biases }
     }
 
+    /// The layer's configuration.
     pub fn config(&self) -> &ConvConfig {
         &self.cfg
     }

@@ -11,6 +11,7 @@
 use super::{ExecCtx, Layer, LayerScratch, Phase};
 use crate::tensor::{Shape, Tensor};
 
+/// Inverted dropout layer (Caffe `Dropout`).
 pub struct DropoutLayer {
     name: String,
     p: f32,
@@ -20,6 +21,7 @@ pub struct DropoutLayer {
 }
 
 impl DropoutLayer {
+    /// Dropout with drop probability `p` in `[0, 1)`.
     pub fn new(name: &str, p: f32) -> Self {
         assert!((0.0..1.0).contains(&p), "dropout prob must be in [0,1)");
         let salt = name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));

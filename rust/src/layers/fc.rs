@@ -8,6 +8,7 @@ use crate::gemm::{sgemm, GemmDims, Trans};
 use crate::rng::Pcg64;
 use crate::tensor::{Shape, Tensor};
 
+/// Fully-connected layer (Caffe `InnerProduct`).
 pub struct FcLayer {
     name: String,
     in_features: usize,
@@ -18,6 +19,7 @@ pub struct FcLayer {
 }
 
 impl FcLayer {
+    /// An FC layer with Gaussian-initialized weights and zero biases.
     pub fn new(name: &str, in_features: usize, out_features: usize, weight_std: f32, rng: &mut Pcg64) -> Self {
         let w = Tensor::randn((out_features, in_features), 0.0, weight_std, rng);
         FcLayer {

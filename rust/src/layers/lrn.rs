@@ -9,21 +9,35 @@
 use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
+/// Cross-channel local response normalization (Caffe `LRN`).
 pub struct LrnLayer {
     name: String,
     size: usize,
     alpha: f32,
     beta: f32,
     k: f32,
-    /// scale_i = k + α/size·Σ x² cached by forward (shape-checked
-    /// reuse: reallocated only when the input shape changes).
-    scale: Tensor,
+    /// scale_i = k + α/size·Σ x² cached by forward for backward. A
+    /// plain grow-only buffer (+ the shape it currently describes), so
+    /// alternating batch sizes — a serving worker hopping between
+    /// workspace buckets — never reallocates once the largest shape
+    /// has been seen.
+    scale: Vec<f32>,
+    scale_shape: Shape,
 }
 
 impl LrnLayer {
+    /// LRN over a window of `size` channels (must be odd).
     pub fn new(name: &str, size: usize, alpha: f32, beta: f32, k: f32) -> Self {
         assert!(size % 2 == 1, "LRN size must be odd");
-        LrnLayer { name: name.to_string(), size, alpha, beta, k, scale: Tensor::zeros(1usize) }
+        LrnLayer {
+            name: name.to_string(),
+            size,
+            alpha,
+            beta,
+            k,
+            scale: Vec::new(),
+            scale_shape: Shape::from(1usize),
+        }
     }
 
     /// AlexNet's parameters.
@@ -57,11 +71,12 @@ impl Layer for LrnLayer {
         let (b, c, h, w) = bottom.shape().dims4();
         let half = self.size / 2;
         let a_over_n = self.alpha / self.size as f32;
-        if self.scale.shape() != bottom.shape() {
-            self.scale = Tensor::zeros(*bottom.shape());
+        if self.scale.len() < bottom.numel() {
+            self.scale.resize(bottom.numel(), 0.0);
         }
+        self.scale_shape = *bottom.shape();
         let x = bottom.as_slice();
-        let s = self.scale.as_mut_slice();
+        let s = &mut self.scale[..x.len()];
         let y = top.as_mut_slice();
         let plane = h * w;
         for bi in 0..b {
@@ -93,13 +108,13 @@ impl Layer for LrnLayer {
     ) {
         // dx_i = dy_i·s_i^{−β} − 2αβ/size · x_i · Σ_{j: i∈window(j)} dy_j·x_j·s_j^{−β−1}
         let (b, c, h, w) = bottom.shape().dims4();
-        assert_eq!(self.scale.shape(), bottom.shape(), "backward before forward");
+        assert_eq!(self.scale_shape, *bottom.shape(), "backward before forward");
         let half = self.size / 2;
         let a_over_n = self.alpha / self.size as f32;
         let plane = h * w;
         let x = bottom.as_slice();
         let dy = top_grad.as_slice();
-        let s = self.scale.as_slice();
+        let s = &self.scale[..x.len()];
         let dx = d_bottom.as_mut_slice();
         if scratch.aux.len() < c {
             scratch.aux.resize(c, 0.0);

@@ -54,7 +54,9 @@ use crate::tensor::{Shape, Tensor};
 /// Train vs test phase (dropout behaves differently).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Training: dropout masks active.
     Train,
+    /// Inference: dropout is the identity.
     Test,
 }
 
@@ -72,7 +74,9 @@ pub enum LoweringPolicy {
 pub struct ExecCtx {
     /// GEMM / lowering threads for this call.
     pub threads: usize,
+    /// Train or test semantics (dropout).
     pub phase: Phase,
+    /// How conv layers pick their lowering blocking.
     pub lowering: LoweringPolicy,
     /// Seed for stochastic layers (dropout); the net derives a fresh
     /// one per step so runs are reproducible.
@@ -91,6 +95,7 @@ impl Default for ExecCtx {
 }
 
 impl ExecCtx {
+    /// A deterministic RNG for this call, `salt`-separated per layer.
     pub fn rng(&self, salt: u64) -> Pcg64 {
         Pcg64::with_stream(self.seed, salt)
     }
@@ -141,7 +146,9 @@ impl LayerScratch {
 /// A learnable parameter: value + gradient accumulator + solver hints.
 #[derive(Clone, Debug)]
 pub struct ParamBlob {
+    /// The parameter values.
     pub data: Tensor,
+    /// Accumulated gradient (same shape as `data`).
     pub grad: Tensor,
     /// Learning-rate multiplier (Caffe's `lr_mult`; biases use 2×).
     pub lr_mult: f32,
@@ -150,11 +157,13 @@ pub struct ParamBlob {
 }
 
 impl ParamBlob {
+    /// A blob with a zeroed gradient accumulator.
     pub fn new(data: Tensor, lr_mult: f32, decay_mult: f32) -> Self {
         let grad = Tensor::zeros(*data.shape());
         ParamBlob { data, grad, lr_mult, decay_mult }
     }
 
+    /// Reset the gradient accumulator to zero.
     pub fn zero_grad(&mut self) {
         self.grad.as_mut_slice().fill(0.0);
     }
@@ -170,6 +179,7 @@ impl ParamBlob {
 /// them). In-place-capable layers additionally override
 /// [`Layer::in_place`] and the `_inplace` pair.
 pub trait Layer: Send {
+    /// The layer's configured name.
     fn name(&self) -> &str;
 
     /// Output shape for a given input shape (panics on mismatch).

@@ -4,12 +4,16 @@
 use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
+/// Pooling operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PoolMode {
+    /// Max pooling (gradient routed to the argmax).
     Max,
+    /// Average pooling over the clipped window.
     Avg,
 }
 
+/// Spatial pooling layer (Caffe `Pooling`).
 pub struct PoolLayer {
     name: String,
     mode: PoolMode,
@@ -21,6 +25,7 @@ pub struct PoolLayer {
 }
 
 impl PoolLayer {
+    /// A pooling layer with a square `kernel`×`kernel` window.
     pub fn new(name: &str, mode: PoolMode, kernel: usize, stride: usize, pad: usize) -> Self {
         assert!(kernel > 0 && stride > 0);
         PoolLayer { name: name.to_string(), mode, kernel, stride, pad, argmax: Vec::new() }

@@ -11,11 +11,13 @@
 use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
+/// ReLU activation layer (in-place capable).
 pub struct ReluLayer {
     name: String,
 }
 
 impl ReluLayer {
+    /// A named ReLU.
     pub fn new(name: &str) -> Self {
         ReluLayer { name: name.to_string() }
     }

@@ -10,6 +10,7 @@
 use super::{ExecCtx, Layer, LayerScratch};
 use crate::tensor::{Shape, Tensor};
 
+/// Fused softmax + multinomial logistic loss (Caffe `SoftmaxWithLoss`).
 pub struct SoftmaxLossLayer {
     name: String,
     /// Integer class labels (len = batch); set before forward.
@@ -22,6 +23,7 @@ pub struct SoftmaxLossLayer {
 }
 
 impl SoftmaxLossLayer {
+    /// A named loss head (labels are set per batch).
     pub fn new(name: &str) -> Self {
         SoftmaxLossLayer {
             name: name.to_string(),
@@ -31,11 +33,13 @@ impl SoftmaxLossLayer {
         }
     }
 
+    /// Set the ground-truth labels for the next forward (len = batch).
     pub fn set_labels(&mut self, labels: &[usize]) {
         self.labels.clear();
         self.labels.extend_from_slice(labels);
     }
 
+    /// Mean loss of the last forward.
     pub fn last_loss(&self) -> f64 {
         self.last_loss
     }

@@ -36,6 +36,19 @@
 //! [`layers::Layer::in_place`] and run directly in their input slot,
 //! halving activation traffic. See `examples/quickstart.rs` for the
 //! plan-once / run-many API in a dozen lines.
+//!
+//! ## Serving: dynamic micro-batching on plan-once workspaces
+//!
+//! The [`serve`] module puts an inference service on top of the same
+//! execution model: single-sample requests enter a bounded queue, a
+//! micro-batcher assembles them under a max-batch / max-wait policy,
+//! and a worker pool runs them in **forward-only** workspaces
+//! pre-planned at a ladder of bucketed batch sizes — re-creating at
+//! the queue the batching the paper shows GEMM efficiency depends on,
+//! while keeping the steady state allocation-free. See
+//! `examples/serve.rs` and the `serve-bench` CLI subcommand.
+
+#![warn(missing_docs)]
 
 pub mod bench_util;
 pub mod coordinator;
@@ -48,6 +61,7 @@ pub mod lowering;
 pub mod net;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod tensor;
 pub mod testing;

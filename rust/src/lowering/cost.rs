@@ -47,10 +47,12 @@ impl LoweringCost {
 /// The cost model over a conv shape.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
+    /// The convolution geometry being costed.
     pub shape: ConvShape,
 }
 
 impl CostModel {
+    /// Cost model for one conv geometry.
     pub fn new(shape: ConvShape) -> Self {
         CostModel { shape }
     }

@@ -52,6 +52,7 @@ pub enum LoweringType {
 }
 
 impl LoweringType {
+    /// All three blockings, in paper order (optimizer/bench sweeps).
     pub const ALL: [LoweringType; 3] = [LoweringType::Type1, LoweringType::Type2, LoweringType::Type3];
 }
 

@@ -200,11 +200,14 @@ pub fn conv_type1(shape: &ConvShape, data: &Tensor, weights: &Tensor, threads: u
 /// embeds one per conv layer and the net's `Workspace` plans them all
 /// up front.
 pub struct Workspace {
+    /// The im2col matrix D̂ (rows × k²d).
     pub lowered: Vec<f32>,
+    /// The GEMM result R̂ (rows × o).
     pub r_hat: Vec<f32>,
 }
 
 impl Workspace {
+    /// Buffers sized for `shape` (the only allocating step).
     pub fn new(shape: &ConvShape) -> Self {
         let mut ws = Workspace { lowered: Vec::new(), r_hat: Vec::new() };
         ws.ensure(shape);

@@ -8,6 +8,8 @@
 //! cct xla-train [--steps N] [--artifacts DIR]   # AOT train_step via PJRT
 //! cct optimize [--batch B]                  # lowering optimizer report
 //! cct gemm    [--size N] [--iters K]        # GEMM calibration
+//! cct serve-bench [--workers P] [--clients C] [--requests N] [--max-batch B]
+//!                                           # micro-batched vs batch-1 serving
 //! ```
 
 use cct::bail;
@@ -21,6 +23,7 @@ use cct::lowering::{choose_lowering, optimizer, ConvShape, LoweringType, Machine
 use cct::net::presets;
 use cct::rng::Pcg64;
 use cct::runtime::{ArtifactStore, XlaInput};
+use cct::serve::{closed_loop, worker_placement, ServeConfig, ServeEngine};
 use cct::solver::SolverConfig;
 use cct::tensor::Tensor;
 
@@ -68,6 +71,7 @@ fn main() -> Result<()> {
         "xla-train" => cmd_xla_train(&args),
         "optimize" => cmd_optimize(&args),
         "gemm" => cmd_gemm(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -85,7 +89,9 @@ fn print_help() {
          \x20 train       native-engine training (--net cifar|lenet|caffenet64, --steps, --batch, --workers, --lr, --seed)\n\
          \x20 xla-train   train via the AOT PJRT artifact (--steps, --artifacts)\n\
          \x20 optimize    lowering-optimizer report for CaffeNet layers (--batch)\n\
-         \x20 gemm        GEMM calibration (--size, --iters, --threads)\n"
+         \x20 gemm        GEMM calibration (--size, --iters, --threads)\n\
+         \x20 serve-bench micro-batched vs batch-1 inference serving (--net tiny|cifar, \n\
+         \x20             --workers, --clients, --requests, --max-batch, --wait-us, --queue)\n"
     );
 }
 
@@ -222,6 +228,86 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// The small serving net `serve-bench` defaults to: fast enough that
+/// the per-request dispatch overhead micro-batching amortizes is
+/// clearly visible next to the forward pass.
+const SERVE_TINY: &str = "
+name: tinyserve
+input: 3 16 16
+conv { name: conv1 out: 16 kernel: 3 pad: 1 std: 0.1 }
+relu { name: relu1 }
+pool { name: pool1 mode: max kernel: 2 stride: 2 }
+fc   { name: fc1 out: 10 std: 0.1 }
+";
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let workers: usize = args.get("workers", 2)?;
+    let clients: usize = args.get("clients", 16)?;
+    let requests: usize = args.get("requests", 2_000)?;
+    let max_batch: usize = args.get("max-batch", 16)?;
+    let wait_us: u64 = args.get("wait-us", 2_000)?;
+    let queue: usize = args.get("queue", 256)?;
+    let net_name = args.get_str("net", "tiny");
+    let cfg_text = match net_name.as_str() {
+        "tiny" => SERVE_TINY,
+        "cifar" => presets::CIFAR10_QUICK,
+        other => bail!("unknown net '{other}' (tiny|cifar)"),
+    };
+    let cfg = cct::net::parse_net(cfg_text)?;
+
+    let mut t = Table::new(
+        &format!(
+            "Dynamic micro-batching serving: {} ({workers} workers, {clients} closed-loop clients, {requests} requests)",
+            cfg.name
+        ),
+        &["config", "buckets", "req/s", "mean batch", "p50 ms", "p95 ms", "p99 ms", "rejected", "steady allocs"],
+    );
+    let mut rates = Vec::new();
+    for (label, mb, wait) in [("batch-1", 1usize, 0u64), ("micro-batch", max_batch, wait_us)] {
+        let engine = ServeEngine::start(
+            &cfg,
+            ServeConfig {
+                workers,
+                max_batch: mb,
+                max_wait_us: wait,
+                queue_cap: queue,
+                ..Default::default()
+            },
+        )?;
+        let buckets = engine.buckets().to_vec();
+        let wall = closed_loop(&engine, clients, requests);
+        let report = engine.shutdown();
+        let rate = report.completed as f64 / wall;
+        rates.push(rate);
+        t.row(&[
+            label.to_string(),
+            buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("/"),
+            format!("{rate:.0}"),
+            format!("{:.2}", report.mean_batch),
+            format!("{:.2}", report.latency.p50_us / 1e3),
+            format!("{:.2}", report.latency.p95_us / 1e3),
+            format!("{:.2}", report.latency.p99_us / 1e3),
+            report.rejected.to_string(),
+            format!("{:?}", report.worker_steady_allocs),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmicro-batching speedup at equal worker count: {:.2}×",
+        rates[1] / rates[0].max(1e-12)
+    );
+
+    // Where would those workers go on the paper's hybrid fleet? (§2.3
+    // FLOPS-proportional heuristic, reused for serving placement.)
+    let fleet = [profiles::grid_k520(), profiles::g2_host_cpu()];
+    let placement = worker_placement(workers.max(2), &fleet);
+    println!(
+        "FLOPS-proportional placement of {} workers on [GRID K520, g2 host CPU]: {placement:?}",
+        workers.max(2)
+    );
     Ok(())
 }
 

@@ -28,11 +28,14 @@ use std::collections::HashMap;
 /// A parsed layer directive.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerSpec {
+    /// Layer kind keyword (`conv`, `relu`, `pool`, …).
     pub kind: String,
+    /// The directive's `key: value` attributes.
     pub attrs: HashMap<String, String>,
 }
 
 impl LayerSpec {
+    /// The layer's `name:` attribute (falls back to the kind keyword).
     pub fn name(&self) -> String {
         self.attrs.get("name").cloned().unwrap_or_else(|| self.kind.clone())
     }
@@ -63,9 +66,11 @@ impl LayerSpec {
 /// A parsed network description.
 #[derive(Clone, Debug)]
 pub struct NetConfig {
+    /// Network name.
     pub name: String,
     /// (channels, height, width) of one sample.
     pub input: (usize, usize, usize),
+    /// Layer directives in execution order.
     pub layers: Vec<LayerSpec>,
 }
 

@@ -36,8 +36,11 @@ use std::time::Instant;
 /// Per-layer forward/backward seconds from a timed step.
 #[derive(Clone, Debug)]
 pub struct LayerTiming {
+    /// Layer name (as configured).
     pub name: String,
+    /// Seconds spent in this layer's forward pass.
     pub forward_s: f64,
+    /// Seconds spent in this layer's backward pass.
     pub backward_s: f64,
     /// Whether this is a convolution layer (for the 70–90% analysis).
     pub is_conv: bool,
@@ -45,15 +48,23 @@ pub struct LayerTiming {
 
 /// A planned execution arena for one `(net, batch size)` pair: the
 /// activation + gradient slots and every layer's scratch, allocated at
-/// [`Net::plan`] time and reused by every subsequent step.
+/// [`Net::plan`] (or [`Net::plan_forward`]) time and reused by every
+/// subsequent step.
 ///
 /// Slot sharing: layer `i` reads slot `bound[i]` and writes slot
 /// `bound[i + 1]`; an in-place layer has `bound[i + 1] == bound[i]`.
+///
+/// A workspace planned by [`Net::plan_forward`] is *forward-only*: no
+/// gradient arena is allocated ([`Workspace::has_gradient_arena`]
+/// returns `false`), roughly halving the arena footprint — the mode an
+/// inference server wants. Driving a backward pass through a
+/// forward-only workspace panics.
 pub struct Workspace {
     batch: usize,
     /// Unique activation buffers (slot 0 is the input).
     slots: Vec<Tensor>,
-    /// Gradient buffers mirroring `slots`.
+    /// Gradient buffers mirroring `slots`; empty for forward-only
+    /// workspaces.
     grads: Vec<Tensor>,
     /// Layer boundary → slot index (`layers.len() + 1` entries).
     bound: Vec<usize>,
@@ -109,9 +120,22 @@ impl Workspace {
     pub fn bytes(&self) -> usize {
         let f = std::mem::size_of::<f32>();
         let acts: usize = self.slots.iter().map(|t| t.numel() * f).sum();
-        let grads: usize = self.grads.iter().map(|t| t.numel() * f).sum();
         let scratch: usize = self.scratch.iter().map(|s| s.bytes()).sum();
-        acts + grads + scratch
+        acts + self.grad_bytes() + scratch
+    }
+
+    /// Bytes held by the gradient arena alone (0 for a workspace
+    /// planned with [`Net::plan_forward`]).
+    pub fn grad_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.grads.iter().map(|t| t.numel() * f).sum()
+    }
+
+    /// Whether this workspace carries a gradient arena (true for
+    /// [`Net::plan`], false for [`Net::plan_forward`]). Backward passes
+    /// require it.
+    pub fn has_gradient_arena(&self) -> bool {
+        !self.grads.is_empty()
     }
 
     /// Number of unique activation buffers (in-place layers share, so
@@ -162,6 +186,7 @@ fn run_backward_layer(
 
 /// A sequential network: feature layers + a softmax loss head.
 pub struct Net {
+    /// Network name (from the config's `name:` directive).
     pub name: String,
     layers: Vec<Box<dyn Layer>>,
     conv_mask: Vec<bool>,
@@ -174,6 +199,8 @@ pub struct Net {
 }
 
 impl Net {
+    /// Assemble a net from feature layers; `conv_mask[i]` marks layer
+    /// `i` as a convolution (for the per-layer timing analysis).
     pub fn new(name: &str, input_dims: (usize, usize, usize), layers: Vec<Box<dyn Layer>>, conv_mask: Vec<bool>) -> Self {
         assert_eq!(layers.len(), conv_mask.len());
         Net {
@@ -186,10 +213,12 @@ impl Net {
         }
     }
 
+    /// Number of feature layers (excluding the loss head).
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
 
+    /// Names of the feature layers, in execution order.
     pub fn layer_names(&self) -> Vec<&str> {
         self.layers.iter().map(|l| l.name()).collect()
     }
@@ -231,7 +260,51 @@ impl Net {
     /// allocate the activation/gradient arenas (in-place layers share
     /// slots), and size every layer's scratch. All allocation for a
     /// training step happens here.
+    ///
+    /// Plan-once / run-many training step:
+    ///
+    /// ```
+    /// use cct::layers::ExecCtx;
+    /// use cct::net::{config::build_net, parse_net};
+    /// use cct::rng::Pcg64;
+    /// use cct::solver::{SgdSolver, SolverConfig};
+    /// use cct::tensor::Tensor;
+    ///
+    /// let cfg = parse_net(
+    ///     "name: tiny\n\
+    ///      input: 1 8 8\n\
+    ///      conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }\n\
+    ///      relu { name: r1 }\n\
+    ///      fc   { name: f1 out: 3 std: 0.1 }\n",
+    /// )
+    /// .unwrap();
+    /// let mut rng = Pcg64::new(7);
+    /// let mut net = build_net(&cfg, &mut rng).unwrap();
+    ///
+    /// let mut ws = net.plan(2); // plan once: all allocation happens here
+    /// let mut solver = SgdSolver::new(SolverConfig::default());
+    /// let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+    /// for _ in 0..3 {
+    ///     ws.load_input(&x); // run many: zero tensor allocations per step
+    ///     let loss = solver.train_step_in(&mut net, &mut ws, &[0, 1], &ExecCtx::default());
+    ///     assert!(loss.is_finite());
+    /// }
+    /// ```
     pub fn plan(&self, b: usize) -> Workspace {
+        self.plan_impl(b, true)
+    }
+
+    /// Plan a *forward-only* [`Workspace`] for batch size `b`: same
+    /// activation arena and layer scratch as [`Net::plan`], but **no
+    /// gradient arena** — the mode the inference path
+    /// ([`crate::serve`]) uses, roughly halving the arena footprint.
+    /// Running a backward pass through such a workspace panics
+    /// (checked via [`Workspace::has_gradient_arena`]).
+    pub fn plan_forward(&self, b: usize) -> Workspace {
+        self.plan_impl(b, false)
+    }
+
+    fn plan_impl(&self, b: usize, with_grads: bool) -> Workspace {
         let (c, h, w) = self.input_dims;
         let mut cur = Shape::from((b, c, h, w));
         let mut slots = vec![Tensor::zeros(cur)];
@@ -250,7 +323,11 @@ impl Net {
             }
             cur = out;
         }
-        let grads = slots.iter().map(|t| Tensor::zeros(*t.shape())).collect();
+        let grads = if with_grads {
+            slots.iter().map(|t| Tensor::zeros(*t.shape())).collect()
+        } else {
+            Vec::new()
+        };
         Workspace { batch: b, slots, grads, bound, scratch }
     }
 
@@ -289,6 +366,10 @@ impl Net {
     }
 
     fn backward_in(&mut self, ws: &mut Workspace, ctx: &ExecCtx) {
+        assert!(
+            ws.has_gradient_arena(),
+            "backward pass through a forward-only workspace (plan with Net::plan, not Net::plan_forward)"
+        );
         let logit_slot = *ws.bound.last().unwrap();
         self.loss.backward_logits(&mut ws.grads[logit_slot]);
         for i in (0..self.layers.len()).rev() {
@@ -315,6 +396,10 @@ impl Net {
         ctx: &ExecCtx,
     ) -> (f64, Vec<LayerTiming>) {
         self.check_ws(ws);
+        assert!(
+            ws.has_gradient_arena(),
+            "timed training step through a forward-only workspace (plan with Net::plan)"
+        );
         let mut timings: Vec<LayerTiming> = Vec::with_capacity(self.layers.len());
         for (i, l) in self.layers.iter_mut().enumerate() {
             let (a, b) = (ws.bound[i], ws.bound[i + 1]);
@@ -349,19 +434,31 @@ impl Net {
         (loss, timings)
     }
 
-    /// Take the internal workspace if it matches batch `b`, else plan
-    /// a fresh one (the only allocating step of the classic API).
-    fn take_ws(&mut self, b: usize) -> Workspace {
+    /// Take the internal workspace if it matches batch `b` (and has a
+    /// gradient arena when one is needed), else plan a fresh one (the
+    /// only allocating step of the classic API). A cached training
+    /// workspace serves forward-only calls too; the reverse requires a
+    /// re-plan.
+    fn take_ws(&mut self, b: usize, needs_grads: bool) -> Workspace {
         match self.ws.take() {
-            Some(ws) if ws.batch == b && ws.bound.len() == self.layers.len() + 1 => ws,
-            _ => self.plan(b),
+            Some(ws)
+                if ws.batch == b
+                    && ws.bound.len() == self.layers.len() + 1
+                    && (!needs_grads || ws.has_gradient_arena()) =>
+            {
+                ws
+            }
+            _ if needs_grads => self.plan(b),
+            _ => self.plan_forward(b),
         }
     }
 
     /// Forward to logits (no loss). Classic allocating entry point —
     /// returns a copy of the logits; the arena itself is reused.
+    /// Plans a forward-only workspace (no gradient arena) when no
+    /// compatible training workspace is cached.
     pub fn forward(&mut self, data: &Tensor, ctx: &ExecCtx) -> Tensor {
-        let mut ws = self.take_ws(data.shape().dim0());
+        let mut ws = self.take_ws(data.shape().dim0(), false);
         ws.load_input(data);
         self.forward_in(&mut ws, ctx);
         let logits = ws.logits().clone();
@@ -372,7 +469,7 @@ impl Net {
     /// Forward including the loss; returns mean loss. Allocation-free
     /// after the first call at a given batch size.
     pub fn forward_loss(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
-        let mut ws = self.take_ws(data.shape().dim0());
+        let mut ws = self.take_ws(data.shape().dim0(), false);
         ws.load_input(data);
         let loss = self.forward_loss_in(&mut ws, labels, ctx);
         self.ws = Some(ws);
@@ -384,7 +481,7 @@ impl Net {
     /// Allocation-free after the first call at a given batch size
     /// (asserted by `rust/tests/workspace_parity.rs`).
     pub fn forward_backward(&mut self, data: &Tensor, labels: &[usize], ctx: &ExecCtx) -> f64 {
-        let mut ws = self.take_ws(data.shape().dim0());
+        let mut ws = self.take_ws(data.shape().dim0(), true);
         ws.load_input(data);
         let loss = self.forward_backward_in(&mut ws, labels, ctx);
         self.ws = Some(ws);
@@ -398,7 +495,7 @@ impl Net {
         labels: &[usize],
         ctx: &ExecCtx,
     ) -> (f64, Vec<LayerTiming>) {
-        let mut ws = self.take_ws(data.shape().dim0());
+        let mut ws = self.take_ws(data.shape().dim0(), true);
         ws.load_input(data);
         let out = self.forward_backward_timed_in(&mut ws, labels, ctx);
         self.ws = Some(ws);
@@ -415,6 +512,7 @@ impl Net {
         self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
     }
 
+    /// Reset every parameter's gradient accumulator to zero.
     pub fn zero_grads(&mut self) {
         for p in self.params_mut() {
             p.zero_grad();
@@ -514,6 +612,55 @@ mod tests {
         assert_eq!(ws.bound[2], ws.bound[3]);
         assert!(ws.bytes() > 0);
         assert_eq!(ws.batch(), 2);
+    }
+
+    #[test]
+    fn forward_only_plan_has_no_gradient_arena() {
+        let mut rng = Pcg64::new(21);
+        let mut net = tiny_net(&mut rng);
+        let full = net.plan(2);
+        let fwd = net.plan_forward(2);
+        assert!(full.has_gradient_arena());
+        assert!(!fwd.has_gradient_arena());
+        assert_eq!(fwd.grad_bytes(), 0, "forward-only plan allocated gradients");
+        assert!(full.grad_bytes() > 0);
+        assert_eq!(fwd.bytes() + full.grad_bytes(), full.bytes());
+        assert_eq!(fwd.num_slots(), full.num_slots());
+
+        // The forward pass runs fine in a forward-only workspace and
+        // matches the full plan's logits bit-for-bit.
+        let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx { phase: crate::layers::Phase::Test, ..Default::default() };
+        let mut fwd = fwd;
+        fwd.load_input(&x);
+        net.forward_in(&mut fwd, &ctx);
+        let want = net.forward(&x, &ctx);
+        assert_eq!(fwd.logits().as_slice(), want.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "forward-only workspace")]
+    fn backward_through_forward_only_workspace_panics() {
+        let mut rng = Pcg64::new(22);
+        let mut net = tiny_net(&mut rng);
+        let mut ws = net.plan_forward(2);
+        let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        ws.load_input(&x);
+        net.forward_backward_in(&mut ws, &[0, 1], &ExecCtx::default());
+    }
+
+    #[test]
+    fn classic_forward_then_train_replans_with_gradients() {
+        // Net::forward caches a forward-only workspace; a subsequent
+        // forward_backward at the same batch size must re-plan a full
+        // one rather than panic.
+        let mut rng = Pcg64::new(23);
+        let mut net = tiny_net(&mut rng);
+        let x = Tensor::randn((2, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let ctx = ExecCtx::default();
+        let _ = net.forward(&x, &ctx);
+        let loss = net.forward_backward(&x, &[0, 1], &ctx);
+        assert!(loss.is_finite());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 
 /// A loaded artifact, ready to execute (when a PJRT backend is linked).
 pub struct Artifact {
+    /// Entry-point name (manifest key).
     pub name: String,
     /// Number of results in the output tuple (from the manifest).
     pub n_results: usize,
@@ -47,7 +48,9 @@ impl Artifact {
 /// An input value for an artifact call: f32 tensor or i32 vector
 /// (labels).
 pub enum XlaInput {
+    /// A dense f32 tensor argument.
     F32(Tensor),
+    /// An i32 vector argument (labels).
     I32(Vec<i32>),
 }
 
@@ -58,11 +61,14 @@ pub struct ArtifactStore {
     manifest: HashMap<String, ManifestEntry>,
 }
 
+/// One manifest line: an exported entry point's signature.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ManifestEntry {
+    /// Entry-point name.
     pub name: String,
     /// Argument shapes as written by aot.py ("8x16x16x16:f32;...").
     pub args: String,
+    /// Number of results in the output tuple.
     pub n_results: usize,
 }
 
@@ -103,10 +109,12 @@ impl ArtifactStore {
         Ok(ArtifactStore { dir, manifest })
     }
 
+    /// Names of all declared entry points.
     pub fn names(&self) -> Vec<&str> {
         self.manifest.keys().map(|s| s.as_str()).collect()
     }
 
+    /// The manifest entry for `name`, if declared.
     pub fn manifest(&self, name: &str) -> Option<&ManifestEntry> {
         self.manifest.get(name)
     }
@@ -129,6 +137,8 @@ impl ArtifactStore {
         )
     }
 
+    /// The PJRT platform name (a placeholder in this backend-free
+    /// build).
     pub fn platform(&self) -> String {
         "none (no PJRT backend linked)".to_string()
     }

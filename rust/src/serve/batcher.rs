@@ -1,0 +1,161 @@
+//! Dynamic micro-batcher: pulls single-sample requests off the bounded
+//! submit queue and assembles them into micro-batches under a
+//! max-batch / max-wait policy.
+//!
+//! The policy is the serving-side knob of the paper's batching
+//! analysis (§2.2 / Fig 2): a bigger batch amortizes lowering and
+//! restores GEMM efficiency, but a request that arrives alone should
+//! not wait forever for company — `max_wait_us` bounds the time a
+//! partially filled batch is held open, and an expired wait flushes
+//! whatever has accumulated (tested in `rust/tests/serve_policy.rs`).
+
+use super::InferRequest;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Micro-batching policy: how full and how stale a batch may get
+/// before it is dispatched.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap on real samples per micro-batch; a full batch is
+    /// dispatched immediately.
+    pub max_batch: usize,
+    /// How long (µs) to hold an under-full batch open for stragglers
+    /// after its first request arrives; an expired wait flushes the
+    /// partial batch.
+    pub max_wait_us: u64,
+}
+
+/// A batch of requests on its way to a worker.
+pub(crate) struct MicroBatch {
+    pub(crate) requests: Vec<InferRequest>,
+}
+
+/// How often an idle batcher re-checks the stop flag.
+const IDLE_TICK: Duration = Duration::from_millis(20);
+
+/// How long a draining batcher waits for straggling in-flight sends
+/// after `stop` is raised. Handles refuse new work once `stop` is set,
+/// so only a `try_send` that began before the flag flipped can still
+/// land — and it lands in well under this window.
+const DRAIN_GRACE: Duration = Duration::from_millis(5);
+
+/// Batcher thread body: assemble micro-batches until shutdown.
+///
+/// Shutdown protocol: when `stop` is raised the batcher drains whatever
+/// is still queued (flushing partial batches without waiting out the
+/// policy clock, allowing [`DRAIN_GRACE`] for in-flight sends to land),
+/// then exits and drops the work sender, which terminates the worker
+/// pool. A disconnected submit queue (all handles and the engine
+/// dropped) ends the loop the same way.
+pub(crate) fn run(
+    rx: Receiver<InferRequest>,
+    tx: SyncSender<MicroBatch>,
+    policy: BatchPolicy,
+    stop: Arc<AtomicBool>,
+) {
+    assert!(policy.max_batch >= 1);
+    'outer: loop {
+        // Wait for the first request of the next micro-batch.
+        let first = loop {
+            if stop.load(Ordering::Relaxed) {
+                match rx.recv_timeout(DRAIN_GRACE) {
+                    Ok(r) => break r,
+                    Err(_) => break 'outer,
+                }
+            }
+            match rx.recv_timeout(IDLE_TICK) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break 'outer,
+            }
+        };
+        let mut requests = Vec::with_capacity(policy.max_batch);
+        requests.push(first);
+        let deadline = Instant::now() + Duration::from_micros(policy.max_wait_us);
+        while requests.len() < policy.max_batch {
+            if stop.load(Ordering::Relaxed) {
+                // Draining: take what is queued or lands within the
+                // grace window, but don't wait out the policy clock.
+                match rx.recv_timeout(DRAIN_GRACE) {
+                    Ok(r) => {
+                        requests.push(r);
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => requests.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if tx.send(MicroBatch { requests }).is_err() {
+            break; // worker pool is gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn request() -> (InferRequest, mpsc::Receiver<super::super::InferReply>) {
+        let (reply, rx) = mpsc::channel();
+        (InferRequest { sample: vec![0.0; 4], reply, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn full_batch_dispatches_without_waiting_out_the_clock() {
+        let (in_tx, in_rx) = mpsc::sync_channel(16);
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut reply_rxs = Vec::new();
+        for _ in 0..4 {
+            let (r, keep) = request();
+            reply_rxs.push(keep);
+            in_tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 2, max_wait_us: 60_000_000 };
+        let stop2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || run(in_rx, out_tx, policy, stop2));
+        // Despite a 60 s max wait, two full batches of 2 must arrive fast.
+        let t0 = Instant::now();
+        let b1 = out_rx.recv_timeout(Duration::from_secs(5)).expect("batch 1");
+        let b2 = out_rx.recv_timeout(Duration::from_secs(5)).expect("batch 2");
+        assert_eq!(b1.requests.len(), 2);
+        assert_eq!(b2.requests.len(), 2);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        stop.store(true, Ordering::Relaxed);
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stop_flag_drains_and_exits() {
+        let (in_tx, in_rx) = mpsc::sync_channel(16);
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (r, _rx1) = request();
+        in_tx.send(r).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        let policy = BatchPolicy { max_batch: 8, max_wait_us: 60_000_000 };
+        let h = std::thread::spawn(move || run(in_rx, out_tx, policy, stop));
+        // The queued request is flushed as a partial batch immediately
+        // (no 60 s wait), then the batcher exits.
+        let b = out_rx.recv_timeout(Duration::from_secs(5)).expect("drained batch");
+        assert_eq!(b.requests.len(), 1);
+        h.join().unwrap();
+        assert!(out_rx.recv().is_err(), "work channel should be closed");
+        drop(in_tx);
+    }
+}

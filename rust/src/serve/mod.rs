@@ -1,0 +1,663 @@
+//! Dynamic micro-batching inference service on plan-once workspaces
+//! (the serving layer the ROADMAP's "heavy traffic" north star asks
+//! for).
+//!
+//! The paper's central result is that CNN throughput tracks delivered
+//! FLOPS once *batching* amortizes lowering and restores GEMM
+//! efficiency (§2.2, Fig 2). Training gets that batching for free —
+//! mini-batches arrive pre-formed. A server does not: requests arrive
+//! one sample at a time, so this module re-creates the batch at the
+//! queue:
+//!
+//! 1. **Bounded submit queue** — single-sample requests enter a
+//!    bounded MPSC queue ([`ServeHandle::try_infer`] rejects cleanly
+//!    with [`SubmitError::QueueFull`] when it is full — backpressure
+//!    instead of unbounded memory growth).
+//! 2. **Micro-batcher** — one thread assembles requests into batches
+//!    under a [`BatchPolicy`]: dispatch at `max_batch`, or when the
+//!    oldest queued request has waited `max_wait_us`.
+//! 3. **Worker pool** — each worker owns a [`Net`] replica and a
+//!    ladder of **forward-only** workspaces pre-planned at bucketed
+//!    batch sizes (e.g. 1/4/16); a batch of n runs in the smallest
+//!    bucket ≥ n. Planning happened up front, so the steady-state
+//!    serve loop performs **zero tensor allocations**
+//!    (`tensor::alloc_stats`-verified, like the training hot loop).
+//! 4. **Stats** — end-to-end latency percentiles (p50/p95/p99),
+//!    batch-shape accounting, and rejection counts in a
+//!    [`ServeReport`].
+//!
+//! Padding to a bucket is sound because every layer computes samples
+//! independently in forward mode; a padded row changes nothing about
+//! the real rows (bit-identical — asserted by
+//! `rust/tests/serve_policy.rs`).
+//!
+//! The bucket ladder itself comes from the paper's device cost model
+//! ([`plan_bucket_ladder`]): a rung is added only while the modeled
+//! per-image GEMM cost keeps improving, and
+//! [`worker_placement`] reuses the coordinator's FLOPS-proportional
+//! heuristic to spread workers over a device fleet.
+
+mod batcher;
+mod stats;
+
+pub use batcher::BatchPolicy;
+pub use stats::{percentile, LatencySummary, ServeReport};
+
+use crate::coordinator::flops_proportional_split;
+use crate::device::DeviceSpec;
+use crate::ensure;
+use crate::layers::{ExecCtx, Phase};
+use crate::net::config::{build_net, NetConfig};
+use crate::net::{Net, Workspace};
+use crate::rng::Pcg64;
+use crate::tensor::alloc_stats;
+use batcher::MicroBatch;
+use stats::Recorder;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Engine configuration; `Default` gives a small general-purpose setup
+/// (2 workers, micro-batches up to 16, 2 ms max wait, cost-model
+/// bucket ladder).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads; each owns a net replica and its own workspace
+    /// ladder.
+    pub workers: usize,
+    /// GEMM/lowering threads each worker may use.
+    pub threads_per_worker: usize,
+    /// Hard cap on real samples per micro-batch.
+    pub max_batch: usize,
+    /// Max µs an under-full micro-batch waits for stragglers.
+    pub max_wait_us: u64,
+    /// Bounded submit-queue capacity (requests beyond it are rejected).
+    pub queue_cap: usize,
+    /// Bucketed batch sizes to pre-plan workspaces for (ascending).
+    /// Empty → derive a ladder from the device cost model
+    /// ([`plan_bucket_ladder`]).
+    pub buckets: Vec<usize>,
+    /// Seed for the (identical) worker net replicas.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            threads_per_worker: 1,
+            max_batch: 16,
+            max_wait_us: 2_000,
+            queue_cap: 256,
+            buckets: Vec::new(),
+            seed: 42,
+        }
+    }
+}
+
+/// Why a non-blocking submission was not accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded request queue is full (backpressure) — retry later
+    /// or shed load.
+    QueueFull,
+    /// The engine has shut down.
+    Closed,
+    /// The sample's flattened length (first field) does not match the
+    /// net's input length (second field).
+    BadSample(usize, usize),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "serve queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "serve engine is shut down"),
+            SubmitError::BadSample(got, want) => {
+                write!(f, "sample length {got} does not match the net's input ({want})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One queued inference request: a flattened `(c, h, w)` sample plus
+/// the reply channel and the enqueue timestamp latency is measured
+/// from.
+pub(crate) struct InferRequest {
+    pub(crate) sample: Vec<f32>,
+    pub(crate) reply: mpsc::Sender<InferReply>,
+    pub(crate) enqueued: Instant,
+}
+
+/// The answer to one inference request.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    /// The logits row for this sample.
+    pub logits: Vec<f32>,
+    /// `argmax(logits)` — the predicted class.
+    pub class: usize,
+    /// End-to-end seconds from enqueue to reply.
+    pub latency_s: f64,
+    /// Real samples in the micro-batch this request rode in.
+    pub batch_real: usize,
+    /// Bucket (planned batch size) the micro-batch executed at.
+    pub bucket: usize,
+}
+
+/// An in-flight request: wait on it for the [`InferReply`].
+pub struct PendingInference {
+    rx: mpsc::Receiver<InferReply>,
+}
+
+impl PendingInference {
+    /// Block until the reply arrives; errors if the engine shuts down
+    /// before answering.
+    pub fn wait(self) -> crate::Result<InferReply> {
+        self.rx
+            .recv()
+            .map_err(|_| crate::err!("serve engine shut down before answering"))
+    }
+}
+
+/// A cloneable client handle onto the engine's submit queue. Once the
+/// engine's shutdown begins, submissions are refused immediately
+/// ([`SubmitError::Closed`]) so no accepted request can race the
+/// draining batcher.
+#[derive(Clone)]
+pub struct ServeHandle {
+    submit: SyncSender<InferRequest>,
+    sample_len: usize,
+    stats: Arc<Recorder>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServeHandle {
+    /// Shared validation + request construction for both submission
+    /// paths: checks the sample length and the shutdown flag, then
+    /// wraps the sample with a fresh reply channel.
+    fn build_request(
+        &self,
+        sample: &[f32],
+    ) -> Result<(InferRequest, mpsc::Receiver<InferReply>), SubmitError> {
+        if sample.len() != self.sample_len {
+            return Err(SubmitError::BadSample(sample.len(), self.sample_len));
+        }
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(SubmitError::Closed);
+        }
+        let (reply, rx) = mpsc::channel();
+        Ok((InferRequest { sample: sample.to_vec(), reply, enqueued: Instant::now() }, rx))
+    }
+
+    /// Non-blocking submission: enqueue one flattened `(c, h, w)`
+    /// sample, or reject immediately — when the bounded queue is full
+    /// ([`SubmitError::QueueFull`], the backpressure path), when the
+    /// engine is shutting down ([`SubmitError::Closed`]), or when the
+    /// sample length is wrong ([`SubmitError::BadSample`]).
+    pub fn try_infer(&self, sample: &[f32]) -> Result<PendingInference, SubmitError> {
+        let (req, rx) = self.build_request(sample)?;
+        match self.submit.try_send(req) {
+            Ok(()) => Ok(PendingInference { rx }),
+            Err(TrySendError::Full(_)) => {
+                self.stats.record_rejected();
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking submission: wait for queue space (backpressure by
+    /// blocking), then wait for the reply. Errors on a mis-sized
+    /// sample or an engine that is (or finishes) shutting down.
+    pub fn infer(&self, sample: &[f32]) -> crate::Result<InferReply> {
+        let (req, rx) = self.build_request(sample).map_err(|e| crate::err!("{e}"))?;
+        self.submit
+            .send(req)
+            .map_err(|_| crate::err!("serve engine is shut down"))?;
+        PendingInference { rx }.wait()
+    }
+}
+
+/// The dynamic micro-batching inference engine: bounded queue →
+/// batcher → worker pool, all running on background threads until
+/// [`ServeEngine::shutdown`].
+///
+/// ```
+/// use cct::net::parse_net;
+/// use cct::serve::{ServeConfig, ServeEngine};
+///
+/// let cfg = parse_net(
+///     "name: tiny\n\
+///      input: 1 8 8\n\
+///      conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }\n\
+///      relu { name: r1 }\n\
+///      fc   { name: f1 out: 3 std: 0.1 }\n",
+/// )
+/// .unwrap();
+/// let engine = ServeEngine::start(
+///     &cfg,
+///     ServeConfig { workers: 1, max_batch: 4, max_wait_us: 500, ..Default::default() },
+/// )
+/// .unwrap();
+///
+/// let handle = engine.handle();
+/// let sample = vec![0.5f32; 64]; // one flattened 1×8×8 sample
+/// let reply = handle.infer(&sample).unwrap();
+/// assert_eq!(reply.logits.len(), 3);
+/// assert!(reply.class < 3);
+///
+/// let report = engine.shutdown();
+/// assert_eq!(report.completed, 1);
+/// assert!(report.worker_steady_allocs.iter().all(|&a| a == 0));
+/// ```
+pub struct ServeEngine {
+    submit: SyncSender<InferRequest>,
+    stop: Arc<AtomicBool>,
+    batcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Recorder>,
+    sample_len: usize,
+    buckets: Vec<usize>,
+}
+
+impl ServeEngine {
+    /// Build the worker pool (identically seeded net replicas with
+    /// pre-planned forward-only workspace ladders), start the batcher,
+    /// and open the submit queue. All workspace allocation happens
+    /// here; the serving steady state allocates no tensors.
+    pub fn start(cfg: &NetConfig, serve: ServeConfig) -> crate::Result<ServeEngine> {
+        ensure!(serve.workers >= 1, "need at least one serve worker");
+        ensure!(serve.max_batch >= 1, "max_batch must be ≥ 1");
+        ensure!(serve.queue_cap >= 1, "queue_cap must be ≥ 1");
+
+        // One net replica per worker, identically seeded (bit-identical
+        // parameters, like the coordinator's replicas).
+        let mut nets = Vec::with_capacity(serve.workers);
+        for _ in 0..serve.workers {
+            let mut rng = Pcg64::new(serve.seed);
+            nets.push(build_net(cfg, &mut rng)?);
+        }
+
+        // Resolve the bucket ladder: user-provided, or derived from the
+        // device cost model on the local profile.
+        let mut buckets = if serve.buckets.is_empty() {
+            let dev = crate::device::profiles::local_cpu();
+            let flops = nets[0].flops(1).max(1);
+            let rows = first_layer_rows(&nets[0]);
+            plan_bucket_ladder(
+                flops,
+                rows,
+                serve.max_batch,
+                &dev,
+                serve.threads_per_worker.max(1),
+            )
+        } else {
+            serve.buckets.clone()
+        };
+        buckets.sort_unstable();
+        buckets.dedup();
+        ensure!(buckets.iter().all(|&b| b >= 1), "buckets must be ≥ 1");
+        ensure!(
+            *buckets.last().unwrap() >= serve.max_batch,
+            "bucket ladder (max {}) must cover max_batch {}",
+            buckets.last().unwrap(),
+            serve.max_batch
+        );
+        // Drop rungs above the first one that already covers max_batch.
+        if let Some(pos) = buckets.iter().position(|&b| b >= serve.max_batch) {
+            buckets.truncate(pos + 1);
+        }
+
+        let (c, h, w) = cfg.input;
+        let sample_len = c * h * w;
+
+        let (submit, submit_rx) = mpsc::sync_channel::<InferRequest>(serve.queue_cap);
+        let (work_tx, work_rx) = mpsc::sync_channel::<MicroBatch>(serve.workers);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Recorder::new());
+
+        let mut workers = Vec::with_capacity(serve.workers);
+        for (w_id, mut net) in nets.into_iter().enumerate() {
+            // Plan the ladder up front on this thread; the worker
+            // thread itself never allocates a tensor.
+            let workspaces: Vec<(usize, Workspace)> =
+                buckets.iter().map(|&b| (b, net.plan_forward(b))).collect();
+            let ctx = ExecCtx {
+                threads: serve.threads_per_worker.max(1),
+                phase: Phase::Test,
+                ..Default::default()
+            };
+            let rx = Arc::clone(&work_rx);
+            let st = Arc::clone(&stats);
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{w_id}"))
+                .spawn(move || worker_loop(&mut net, workspaces, sample_len, &rx, &st, &ctx))
+                .map_err(|e| crate::err!("spawning serve worker: {e}"))?;
+            workers.push(handle);
+        }
+
+        let policy = BatchPolicy { max_batch: serve.max_batch, max_wait_us: serve.max_wait_us };
+        let stop_b = Arc::clone(&stop);
+        let batcher = std::thread::Builder::new()
+            .name("serve-batcher".to_string())
+            .spawn(move || batcher::run(submit_rx, work_tx, policy, stop_b))
+            .map_err(|e| crate::err!("spawning serve batcher: {e}"))?;
+
+        Ok(ServeEngine { submit, stop, batcher, workers, stats, sample_len, buckets })
+    }
+
+    /// A new client handle onto the submit queue (cloneable; hand one
+    /// to each load-generator thread).
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            submit: self.submit.clone(),
+            sample_len: self.sample_len,
+            stats: Arc::clone(&self.stats),
+            stop: Arc::clone(&self.stop),
+        }
+    }
+
+    /// The resolved bucket ladder workspaces were planned at.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Flattened sample length (`c·h·w`) requests must carry.
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    /// Snapshot of the serving statistics so far (the engine keeps
+    /// running).
+    pub fn stats(&self) -> ServeReport {
+        self.stats.report()
+    }
+
+    /// Stop accepting work, drain the queue, join every thread, and
+    /// return the final [`ServeReport`]. In-flight and queued requests
+    /// are answered before workers exit.
+    pub fn shutdown(self) -> ServeReport {
+        let ServeEngine { submit, stop, batcher, workers, stats, .. } = self;
+        stop.store(true, Ordering::Relaxed);
+        drop(submit);
+        let _ = batcher.join();
+        for h in workers {
+            let _ = h.join();
+        }
+        stats.report()
+    }
+}
+
+/// Worker thread body: pull micro-batches off the shared work queue,
+/// run them in the smallest covering bucket, and answer each request.
+fn worker_loop(
+    net: &mut Net,
+    mut workspaces: Vec<(usize, Workspace)>,
+    sample_len: usize,
+    rx: &Arc<Mutex<Receiver<MicroBatch>>>,
+    stats: &Arc<Recorder>,
+    ctx: &ExecCtx,
+) {
+    // This thread's tensor-allocation counter starts at its current
+    // value (planning happened on the spawning thread): everything the
+    // loop below allocates is steady-state serving cost, and must be 0.
+    let baseline = alloc_stats::tensor_allocs();
+    loop {
+        // Hold the mutex while waiting: only one idle worker blocks on
+        // recv, the rest queue on the lock (the std worker-pool idiom).
+        let job = { rx.lock().expect("serve work queue poisoned").recv() };
+        let Ok(mut batch) = job else { break };
+        let n = batch.requests.len();
+        let idx = workspaces
+            .iter()
+            .position(|(b, _)| *b >= n)
+            .expect("bucket ladder covers max_batch");
+        let (bucket, ws) = &mut workspaces[idx];
+        let bucket = *bucket;
+        {
+            let input = ws.input_mut().as_mut_slice();
+            for (i, req) in batch.requests.iter().enumerate() {
+                input[i * sample_len..(i + 1) * sample_len].copy_from_slice(&req.sample);
+            }
+            // Padding rows keep whatever the previous batch left there:
+            // forward layers compute samples independently, so stale
+            // padding cannot affect the real rows (asserted bit-for-bit
+            // by rust/tests/serve_policy.rs).
+        }
+        net.forward_in(ws, ctx);
+        let logits = ws.logits().as_slice();
+        let classes = logits.len() / bucket;
+        stats.record_batch(n, bucket);
+        for (i, req) in batch.requests.drain(..).enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut class = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[class] {
+                    class = j;
+                }
+            }
+            let latency_s = req.enqueued.elapsed().as_secs_f64();
+            stats.record_request(latency_s * 1e6);
+            // A client that gave up (dropped its receiver) is fine.
+            let _ = req.reply.send(InferReply {
+                logits: row.to_vec(),
+                class,
+                latency_s,
+                batch_real: n,
+                bucket,
+            });
+        }
+    }
+    stats.record_worker_allocs(alloc_stats::allocs_since(baseline));
+}
+
+/// Rows the first layer's lowered GEMM sees per image — the ladder
+/// heuristic's "how thin is a batch-1 matrix" input (spatial output
+/// elements for a conv head, 1 for an fc head).
+fn first_layer_rows(net: &Net) -> usize {
+    match net.shapes(1).first() {
+        Some(s) if s.rank() == 4 => {
+            let (_, _, h, w) = s.dims4();
+            (h * w).max(1)
+        }
+        _ => 1,
+    }
+}
+
+/// Pick a bucketed batch-size ladder from the paper's device cost
+/// model: starting at 1 and doubling, a rung is kept while the modeled
+/// per-image GEMM cost still improves by ≥ 5% over the previous rung
+/// (the Fig 2(b) efficiency curve flattening out), and the ladder
+/// always ends at a rung covering `max_batch`.
+///
+/// `flops_per_image` and `rows_per_image` describe the per-sample GEMM
+/// work (e.g. `net.flops(1)` and the first conv's m²); `threads` is
+/// the GEMM thread count a worker will actually run with, so the
+/// ladder is tuned for the deployed configuration rather than a
+/// fully-threaded ideal.
+pub fn plan_bucket_ladder(
+    flops_per_image: u64,
+    rows_per_image: usize,
+    max_batch: usize,
+    dev: &DeviceSpec,
+    threads: usize,
+) -> Vec<usize> {
+    assert!(max_batch >= 1);
+    let rows_per_image = rows_per_image.max(1);
+    let threads = threads.clamp(1, dev.cores);
+    let per_image = |b: usize| -> f64 {
+        dev.gemm_seconds(flops_per_image * b as u64, rows_per_image * b, threads) / b as f64
+    };
+    let mut buckets = vec![1usize];
+    let mut b = 1usize;
+    while b < max_batch {
+        b = (b * 2).min(max_batch);
+        let last = *buckets.last().unwrap();
+        if b == max_batch || per_image(b) < per_image(last) * 0.95 {
+            buckets.push(b);
+        }
+    }
+    buckets.dedup();
+    buckets
+}
+
+/// Spread `workers` serving workers across a device fleet in
+/// proportion to each device's peak FLOPS — the paper's §2.3
+/// scheduling heuristic reused for worker placement (returns the
+/// worker count per device, summing to `workers`).
+pub fn worker_placement(workers: usize, devices: &[DeviceSpec]) -> Vec<usize> {
+    flops_proportional_split(workers, devices)
+}
+
+/// Closed-loop load generator (the `serve-bench` CLI and the
+/// `serve_throughput` bench drive the engine with this): `clients`
+/// threads submit blocking single-sample requests until `total` have
+/// been claimed, each client reusing one fixed random sample. Returns
+/// the wall-clock seconds the run took.
+pub fn closed_loop(engine: &ServeEngine, clients: usize, total: usize) -> f64 {
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let len = engine.sample_len();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients.max(1) {
+            let handle = engine.handle();
+            let next = &next;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(0xc11e47 + c as u64);
+                let mut sample = vec![0f32; len];
+                rng.fill_uniform(&mut sample, -1.0, 1.0);
+                while next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) < total {
+                    handle.infer(&sample).expect("inference request failed");
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::net::parse_net;
+
+    const TINY: &str = "
+name: tinyserve
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+pool { name: p1 mode: max kernel: 2 stride: 2 }
+fc   { name: f1 out: 3 std: 0.1 }
+";
+
+    fn tiny_cfg() -> NetConfig {
+        parse_net(TINY).unwrap()
+    }
+
+    #[test]
+    fn bucket_ladder_shape() {
+        let dev = profiles::c4_4xlarge();
+        for threads in [1usize, dev.cores] {
+            let ladder = plan_bucket_ladder(1_000_000, 64, 16, &dev, threads);
+            assert_eq!(ladder[0], 1, "threads={threads}");
+            assert_eq!(*ladder.last().unwrap(), 16, "threads={threads}");
+            assert!(
+                ladder.windows(2).all(|w| w[0] < w[1]),
+                "ladder not ascending (threads={threads}): {ladder:?}"
+            );
+        }
+        assert_eq!(plan_bucket_ladder(1_000_000, 64, 1, &dev, 1), vec![1]);
+    }
+
+    #[test]
+    fn worker_placement_covers_all_workers() {
+        let fleet = [profiles::grid_k520(), profiles::g2_host_cpu()];
+        let placement = worker_placement(8, &fleet);
+        assert_eq!(placement.iter().sum::<usize>(), 8);
+        assert!(placement[0] > placement[1], "faster device should host more workers");
+    }
+
+    fn test_handle(cap: usize) -> (ServeHandle, Receiver<InferRequest>, Arc<Recorder>) {
+        let (submit, rx) = mpsc::sync_channel::<InferRequest>(cap);
+        let stats = Arc::new(Recorder::new());
+        let handle = ServeHandle {
+            submit,
+            sample_len: 4,
+            stats: Arc::clone(&stats),
+            stop: Arc::new(AtomicBool::new(false)),
+        };
+        (handle, rx, stats)
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        // A handle over a bounded queue with no consumer: the first
+        // submissions fill the queue, the next is rejected cleanly.
+        let (handle, _rx, stats) = test_handle(2);
+        let sample = [0.0f32; 4];
+        assert!(handle.try_infer(&sample).is_ok());
+        assert!(handle.try_infer(&sample).is_ok());
+        assert_eq!(handle.try_infer(&sample).unwrap_err(), SubmitError::QueueFull);
+        assert_eq!(stats.report().rejected, 1);
+    }
+
+    #[test]
+    fn submit_to_closed_engine_errors() {
+        let (handle, rx, _stats) = test_handle(2);
+        drop(rx);
+        assert_eq!(handle.try_infer(&[0.0; 4]).unwrap_err(), SubmitError::Closed);
+        assert!(handle.infer(&[0.0; 4]).is_err());
+        // A raised stop flag refuses work even while the queue exists.
+        let (handle, _rx, _stats) = test_handle(2);
+        handle.stop.store(true, Ordering::Relaxed);
+        assert_eq!(handle.try_infer(&[0.0; 4]).unwrap_err(), SubmitError::Closed);
+        assert!(handle.infer(&[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn mis_sized_sample_is_an_error_not_a_panic() {
+        let (handle, _rx, _stats) = test_handle(2);
+        assert_eq!(
+            handle.try_infer(&[0.0; 3]).unwrap_err(),
+            SubmitError::BadSample(3, 4)
+        );
+        assert!(handle.infer(&[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn engine_round_trip_and_shutdown() {
+        let engine = ServeEngine::start(
+            &tiny_cfg(),
+            ServeConfig { workers: 2, max_batch: 4, max_wait_us: 500, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(engine.sample_len(), 64);
+        assert_eq!(engine.buckets().first(), Some(&1));
+        let handle = engine.handle();
+        let sample = vec![0.25f32; 64];
+        let mut pending = Vec::new();
+        for _ in 0..8 {
+            pending.push(handle.infer(&sample).unwrap());
+        }
+        for reply in &pending {
+            assert_eq!(reply.logits.len(), 3);
+            assert!(reply.class < 3);
+            assert!(reply.latency_s >= 0.0);
+            assert!(reply.batch_real >= 1 && reply.batch_real <= reply.bucket);
+        }
+        // Identically seeded replicas + identical input ⇒ identical logits.
+        for reply in &pending[1..] {
+            assert_eq!(reply.logits, pending[0].logits);
+        }
+        let report = engine.shutdown();
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.rejected, 0);
+        assert!(report.batches >= 1);
+        assert!(report.latency.p99_us >= report.latency.p50_us);
+    }
+}

@@ -1,0 +1,272 @@
+//! Serving statistics: end-to-end latency percentiles (p50/p95/p99),
+//! micro-batch shape accounting, backpressure rejections, and the
+//! per-worker steady-state allocation counters that extend PR 1's
+//! zero-allocation guarantee to the serving hot loop.
+//!
+//! All recording goes through a shared [`Recorder`] behind one mutex;
+//! the recording calls are tiny (a push / a few counter bumps) and sit
+//! outside the forward pass, so contention is negligible next to even
+//! a small net's inference cost.
+
+use crate::rng::Pcg64;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency samples kept for percentile estimation. Counts, mean, and
+/// max stay exact; percentiles come from a uniform reservoir of this
+/// size (Vitter's Algorithm R), so a long-running engine neither grows
+/// memory without bound nor sorts an ever-longer history per snapshot.
+const RESERVOIR_CAP: usize = 65_536;
+
+/// Latency distribution summary in microseconds (end-to-end: enqueue
+/// at the submit queue → reply sent).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    /// Median latency.
+    pub p50_us: f64,
+    /// 95th-percentile latency.
+    pub p95_us: f64,
+    /// 99th-percentile latency.
+    pub p99_us: f64,
+    /// Mean latency.
+    pub mean_us: f64,
+    /// Maximum observed latency.
+    pub max_us: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a sample set (sorts a copy; empty input → all zeros).
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            p50_us: percentile(&sorted, 50.0),
+            p95_us: percentile(&sorted, 95.0),
+            p99_us: percentile(&sorted, 99.0),
+            mean_us: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            max_us: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice; `p` in
+/// `[0, 100]`. Empty input returns 0.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// End-of-run serving statistics, returned by
+/// [`ServeEngine::shutdown`](super::ServeEngine::shutdown).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests answered.
+    pub completed: u64,
+    /// Requests rejected by backpressure (bounded queue full).
+    pub rejected: u64,
+    /// Micro-batches dispatched to workers.
+    pub batches: u64,
+    /// Mean *real* samples per dispatched micro-batch.
+    pub mean_batch: f64,
+    /// Total padded slots executed (bucket size − real samples, summed
+    /// over all micro-batches) — the cost of bucketed planning.
+    pub padded_slots: u64,
+    /// Wall-clock seconds from engine start to shutdown.
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub throughput_rps: f64,
+    /// End-to-end request latency distribution (`mean_us`/`max_us`
+    /// exact; percentiles estimated from a 64 Ki reservoir sample).
+    pub latency: LatencySummary,
+    /// Tensor allocations each worker performed *after* its workspaces
+    /// were planned — the steady-state serve loop must report all
+    /// zeros (the `tensor::alloc_stats` invariant).
+    pub worker_steady_allocs: Vec<u64>,
+}
+
+struct Inner {
+    /// Uniform latency sample (Algorithm R), capped at
+    /// [`RESERVOIR_CAP`].
+    lat_sample: Vec<f64>,
+    lat_count: u64,
+    lat_sum: f64,
+    lat_max: f64,
+    rng: Pcg64,
+    rejected: u64,
+    batches: u64,
+    real_samples: u64,
+    padded_slots: u64,
+    worker_allocs: Vec<u64>,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            lat_sample: Vec::new(),
+            lat_count: 0,
+            lat_sum: 0.0,
+            lat_max: 0.0,
+            rng: Pcg64::with_stream(0x57a7, 0x1a7e),
+            rejected: 0,
+            batches: 0,
+            real_samples: 0,
+            padded_slots: 0,
+            worker_allocs: Vec::new(),
+        }
+    }
+}
+
+/// Shared, mutex-guarded recording sink for the engine's threads.
+pub(crate) struct Recorder {
+    started: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    pub(crate) fn new() -> Self {
+        Recorder { started: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    pub(crate) fn record_request(&self, latency_us: f64) {
+        let mut g = self.inner.lock().expect("stats poisoned");
+        g.lat_count += 1;
+        g.lat_sum += latency_us;
+        if latency_us > g.lat_max {
+            g.lat_max = latency_us;
+        }
+        if g.lat_sample.len() < RESERVOIR_CAP {
+            g.lat_sample.push(latency_us);
+        } else {
+            // Algorithm R: keep each of the n seen so far with
+            // probability CAP/n.
+            let j = g.rng.below(g.lat_count) as usize;
+            if j < RESERVOIR_CAP {
+                g.lat_sample[j] = latency_us;
+            }
+        }
+    }
+
+    pub(crate) fn record_rejected(&self) {
+        self.inner.lock().expect("stats poisoned").rejected += 1;
+    }
+
+    pub(crate) fn record_batch(&self, real: usize, bucket: usize) {
+        let mut g = self.inner.lock().expect("stats poisoned");
+        g.batches += 1;
+        g.real_samples += real as u64;
+        g.padded_slots += (bucket - real) as u64;
+    }
+
+    pub(crate) fn record_worker_allocs(&self, allocs: u64) {
+        self.inner.lock().expect("stats poisoned").worker_allocs.push(allocs);
+    }
+
+    pub(crate) fn report(&self) -> ServeReport {
+        // Copy the raw numbers out under the lock, then sort/summarize
+        // outside it — a live `stats()` snapshot must not stall the
+        // workers' recording calls for the duration of a 64 Ki sort.
+        let (lat_sample, completed, lat_sum, lat_max, rejected, batches, real, padded, allocs) = {
+            let g = self.inner.lock().expect("stats poisoned");
+            (
+                g.lat_sample.clone(),
+                g.lat_count,
+                g.lat_sum,
+                g.lat_max,
+                g.rejected,
+                g.batches,
+                g.real_samples,
+                g.padded_slots,
+                g.worker_allocs.clone(),
+            )
+        };
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let mut latency = LatencySummary::from_samples(&lat_sample);
+        if completed > 0 {
+            // Exact where exact is cheap; the reservoir only serves
+            // the percentiles.
+            latency.mean_us = lat_sum / completed as f64;
+            latency.max_us = lat_max;
+        }
+        ServeReport {
+            completed,
+            rejected,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { real as f64 / batches as f64 },
+            padded_slots: padded,
+            wall_s,
+            throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+            latency,
+            worker_steady_allocs: allocs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 100.0);
+        assert!((percentile(&s, 50.0) - 51.0).abs() <= 1.0);
+        assert!(percentile(&s, 95.0) >= 94.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_of_uniform_samples() {
+        let s: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let sum = LatencySummary::from_samples(&s);
+        assert!((sum.mean_us - 500.5).abs() < 1e-9);
+        assert_eq!(sum.max_us, 1000.0);
+        assert!(sum.p50_us <= sum.p95_us && sum.p95_us <= sum.p99_us);
+        assert!((sum.p99_us - 990.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn reservoir_keeps_counts_exact_beyond_cap() {
+        let r = Recorder::new();
+        let n = RESERVOIR_CAP + 1_000;
+        for i in 0..n {
+            r.record_request(i as f64);
+        }
+        let rep = r.report();
+        // Count, mean, and max are exact even past the reservoir cap…
+        assert_eq!(rep.completed, n as u64);
+        assert_eq!(rep.latency.max_us, (n - 1) as f64);
+        let exact_mean = (n - 1) as f64 / 2.0;
+        assert!((rep.latency.mean_us - exact_mean).abs() < 1e-6);
+        // …and the sampled percentiles stay ordered and in range.
+        assert!(rep.latency.p50_us <= rep.latency.p95_us);
+        assert!(rep.latency.p95_us <= rep.latency.p99_us);
+        assert!(rep.latency.p99_us <= rep.latency.max_us);
+        assert!((rep.latency.p50_us - exact_mean).abs() < n as f64 * 0.05);
+    }
+
+    #[test]
+    fn recorder_aggregates() {
+        let r = Recorder::new();
+        r.record_batch(3, 4);
+        r.record_batch(1, 1);
+        r.record_request(100.0);
+        r.record_request(300.0);
+        r.record_rejected();
+        r.record_worker_allocs(0);
+        let rep = r.report();
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.batches, 2);
+        assert_eq!(rep.padded_slots, 1);
+        assert!((rep.mean_batch - 2.0).abs() < 1e-12);
+        assert_eq!(rep.worker_steady_allocs, vec![0]);
+        assert!((rep.latency.mean_us - 200.0).abs() < 1e-9);
+    }
+}

@@ -25,9 +25,13 @@ pub enum LrPolicy {
 /// Solver hyper-parameters (Caffe `SolverParameter`).
 #[derive(Clone, Copy, Debug)]
 pub struct SolverConfig {
+    /// Base learning rate (per-blob `lr_mult` scales it).
     pub base_lr: f32,
+    /// Momentum coefficient μ.
     pub momentum: f32,
+    /// L2 weight decay λ (per-blob `decay_mult` scales it).
     pub weight_decay: f32,
+    /// Learning-rate schedule.
     pub policy: LrPolicy,
 }
 
@@ -52,13 +56,16 @@ impl SolverConfig {
 
 /// Momentum-SGD over a [`Net`].
 pub struct SgdSolver {
+    /// Hyper-parameters.
     pub cfg: SolverConfig,
+    /// Updates applied so far (drives the LR schedule).
     pub iter: usize,
     /// Momentum buffers, one per parameter blob.
     history: Vec<Tensor>,
 }
 
 impl SgdSolver {
+    /// A fresh solver (momentum buffers are planned on first use).
     pub fn new(cfg: SolverConfig) -> Self {
         SgdSolver { cfg, iter: 0, history: Vec::new() }
     }

@@ -120,21 +120,25 @@ impl Tensor {
         Tensor::from_vec(shape, data)
     }
 
+    /// The tensor's shape.
     #[inline]
     pub fn shape(&self) -> &Shape {
         &self.shape
     }
 
+    /// Total element count.
     #[inline]
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// The underlying contiguous buffer (row-major).
     #[inline]
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable view of the underlying contiguous buffer.
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
         &mut self.data

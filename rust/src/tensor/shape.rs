@@ -11,6 +11,7 @@ pub struct Shape {
 }
 
 impl Shape {
+    /// Build a shape from a dimension slice (rank 1–4).
     pub fn new(dims: &[usize]) -> Self {
         assert!(
             (1..=4).contains(&dims.len()),
@@ -22,11 +23,13 @@ impl Shape {
         Shape { dims: d, rank: dims.len() as u8 }
     }
 
+    /// Number of dimensions (1–4).
     #[inline]
     pub fn rank(&self) -> usize {
         self.rank as usize
     }
 
+    /// Total element count (product of the dimensions).
     #[inline]
     pub fn numel(&self) -> usize {
         self.dims[..self.rank()].iter().product()

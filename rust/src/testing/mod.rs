@@ -63,6 +63,7 @@ pub struct Prop {
 }
 
 impl Prop {
+    /// A property named `name`, checked over `cases` generated cases.
     pub fn new(name: &'static str, cases: u32) -> Self {
         Prop { name, cases }
     }
