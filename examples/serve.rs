@@ -7,12 +7,19 @@
 //!
 //! Starts a [`ServeEngine`] over a small net, drives it from a few
 //! concurrent client threads (blocking and non-blocking submission,
-//! including the backpressure path), then shuts down and prints the
-//! latency/throughput report.
+//! including the backpressure path), exercises the QoS surface
+//! (priority lanes, deadlines, shedding), then shuts down and prints
+//! the latency/throughput report.
+//!
+//! For the HTTP transport in front of the same engine, run
+//! `cargo run --release -- serve` and POST to `/infer`.
 
 use cct::device::profiles;
 use cct::net::parse_net;
-use cct::serve::{plan_bucket_ladder, worker_placement, ServeConfig, ServeEngine, SubmitError};
+use cct::serve::{
+    plan_bucket_ladder, worker_placement, InferOptions, InferOutcome, Lane, ServeConfig,
+    ServeEngine, SubmitError,
+};
 
 const NET: &str = r#"
 name: servedemo
@@ -64,21 +71,47 @@ fn main() -> cct::Result<()> {
         }
     });
 
-    // 3. Shut down and read the report.
+    // 3. The QoS surface. Best-effort requests fill leftover batch
+    //    capacity; a deadline bounds how stale a request may get
+    //    before it is shed instead of executed.
+    let handle = engine.handle();
+    let sample = vec![0.3f32; engine.sample_len()];
+    let be = handle
+        .infer_with(&sample, InferOptions::best_effort())
+        .expect("best-effort request answered");
+    println!("best-effort reply: class {} on lane {:?}", be.class, be.lane);
+    // A zero deadline is expired on arrival — the engine answers
+    // `Expired` without spending a single FLOP on it.
+    let doomed = handle
+        .try_infer_with(&sample, InferOptions::default().with_deadline_us(0))
+        .expect("queue has room");
+    match doomed.wait_outcome().expect("engine answers sheds too") {
+        InferOutcome::Expired => println!("zero-deadline request was shed (as intended)"),
+        InferOutcome::Reply(r) => println!("unexpectedly served: class {}", r.class),
+    }
+
+    // 4. Shut down and read the report.
     let report = engine.shutdown();
     println!(
-        "served {} requests in {:.2}s ({:.0} req/s), mean batch {:.2}, {} rejected",
-        report.completed, report.wall_s, report.throughput_rps, report.mean_batch, report.rejected
+        "served {} requests in {:.2}s ({:.0} req/s), mean batch {:.2}, {} rejected, {} expired",
+        report.completed,
+        report.wall_s,
+        report.throughput_rps,
+        report.mean_batch,
+        report.rejected,
+        report.expired
     );
     println!(
-        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms",
+        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms  (interactive p99 {:.2} ms, best-effort p99 {:.2} ms)",
         report.latency.p50_us / 1e3,
         report.latency.p95_us / 1e3,
-        report.latency.p99_us / 1e3
+        report.latency.p99_us / 1e3,
+        report.lane(Lane::Interactive).latency.p99_us / 1e3,
+        report.lane(Lane::BestEffort).latency.p99_us / 1e3
     );
     println!("steady-state tensor allocs per worker: {:?}", report.worker_steady_allocs);
 
-    // 4. The planning helpers on their own: a cost-model bucket ladder
+    // 5. The planning helpers on their own: a cost-model bucket ladder
     //    and FLOPS-proportional worker placement (paper §2.2/§2.3).
     let dev = profiles::c4_4xlarge();
     let ladder = plan_bucket_ladder(50_000_000, 64, 64, &dev, 4);

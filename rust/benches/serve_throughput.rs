@@ -15,6 +15,13 @@
 //! * `convserve` — a conv-heavier net where the GEMM-efficiency side
 //!   of the curve shows as well.
 //!
+//! A third section drives an **overload QoS scenario**: a best-effort
+//! flood (half of it carrying tight deadlines) against an interactive
+//! trickle on one worker. Acceptance: expired requests are shed
+//! *before* the forward pass (shed count > 0, batches only contain
+//! live requests), and the interactive lane's p99 stays below the
+//! best-effort p99.
+//!
 //! Also asserts the plan-once invariant end-to-end: every worker's
 //! steady-state tensor-allocation count must be 0.
 //!
@@ -22,7 +29,10 @@
 
 use cct::bench_util::Table;
 use cct::net::parse_net;
-use cct::serve::{closed_loop, ServeConfig, ServeEngine, ServeReport};
+use cct::rng::Pcg64;
+use cct::serve::{
+    closed_loop, InferOptions, Lane, ServeConfig, ServeEngine, ServeReport, SubmitError,
+};
 
 const TINY: &str = "
 name: tinyserve
@@ -103,6 +113,115 @@ fn sweep(name: &str, cfg_text: &str) -> Vec<(usize, f64, ServeReport)> {
     series
 }
 
+/// Overload QoS: one worker, a best-effort flood (every other client
+/// with a tight deadline), an interactive trickle. Returns whether the
+/// acceptance criteria held.
+fn overload_qos() -> bool {
+    let cfg = parse_net(CONV).expect("net parses");
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 2_000,
+            queue_cap: 256,
+            adaptive_wait: true,
+            ..Default::default()
+        },
+    )
+    .expect("engine starts");
+    let len = engine.sample_len();
+
+    const BE_CLIENTS: usize = 8;
+    const BE_PER_CLIENT: usize = 300;
+    const IA_CLIENTS: usize = 2;
+    const IA_PER_CLIENT: usize = 60;
+
+    std::thread::scope(|scope| {
+        for c in 0..BE_CLIENTS {
+            let handle = engine.handle();
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(0xbe + c as u64);
+                let mut sample = vec![0f32; len];
+                rng.fill_uniform(&mut sample, -1.0, 1.0);
+                // Even clients carry a deadline far tighter than the
+                // backlog's queueing delay — their requests expire in
+                // the queue and must be shed; odd clients ride the
+                // backlog out and define the best-effort latency tail.
+                let opts = if c % 2 == 0 {
+                    InferOptions::best_effort().with_deadline_us(1_500)
+                } else {
+                    InferOptions::best_effort()
+                };
+                let mut pending = Vec::new();
+                for _ in 0..BE_PER_CLIENT {
+                    match handle.try_infer_with(&sample, opts) {
+                        Ok(p) => pending.push(p),
+                        Err(SubmitError::QueueFull) => {} // shed at the door
+                        Err(_) => break,
+                    }
+                }
+                for p in pending {
+                    let _ = p.wait_outcome();
+                }
+            });
+        }
+        for c in 0..IA_CLIENTS {
+            let handle = engine.handle();
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(0x1a + c as u64);
+                let mut sample = vec![0f32; len];
+                rng.fill_uniform(&mut sample, -1.0, 1.0);
+                for _ in 0..IA_PER_CLIENT {
+                    let _ = handle.infer(&sample); // blocking, interactive lane
+                }
+            });
+        }
+    });
+    let report = engine.shutdown();
+
+    let ia = *report.lane(Lane::Interactive);
+    let be = *report.lane(Lane::BestEffort);
+    let mut t = Table::new(
+        "Overload QoS: convserve, 1 worker, best-effort flood vs interactive trickle",
+        &["lane", "completed", "p50 ms", "p99 ms", "max ms"],
+    );
+    for (name, lane) in [("interactive", &ia), ("best-effort", &be)] {
+        t.row(&[
+            name.to_string(),
+            lane.completed.to_string(),
+            format!("{:.2}", lane.latency.p50_us / 1e3),
+            format!("{:.2}", lane.latency.p99_us / 1e3),
+            format!("{:.2}", lane.latency.max_us / 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "sheds: {} expired (deadline) + {} rejected (backpressure); {} batches, mean batch {:.2}",
+        report.expired, report.rejected, report.batches, report.mean_batch
+    );
+
+    let shed_ok = report.expired > 0;
+    let prio_ok =
+        ia.completed > 0 && be.completed > 0 && ia.latency.p99_us < be.latency.p99_us;
+    println!(
+        "acceptance: sheds before forward pass {} (expired {}), interactive p99 < best-effort p99 {} ({:.2} ms vs {:.2} ms)",
+        if shed_ok { "PASS" } else { "FAIL" },
+        report.expired,
+        if prio_ok { "PASS" } else { "FAIL" },
+        ia.latency.p99_us / 1e3,
+        be.latency.p99_us / 1e3
+    );
+    let allocs_ok = report.worker_steady_allocs.iter().all(|&a| a == 0);
+    if !allocs_ok {
+        println!(
+            "  REGRESSION: overload worker steady-state allocs {:?} (expected all 0)",
+            report.worker_steady_allocs
+        );
+    }
+    shed_ok && prio_ok && allocs_ok
+}
+
 fn main() {
     std::fs::create_dir_all("bench_out").ok();
     let mut all_zero_allocs = true;
@@ -130,5 +249,11 @@ fn main() {
     println!(
         "steady-state serve-loop tensor allocations: {}",
         if all_zero_allocs { "0 across every config (plan-once holds)" } else { "NONZERO — see above" }
+    );
+    println!();
+    let qos_ok = overload_qos();
+    println!(
+        "overload QoS acceptance: {}",
+        if qos_ok { "PASS (sheds before FLOPs, interactive p99 bounded)" } else { "FAIL — see above" }
     );
 }

@@ -32,8 +32,13 @@ pub struct BlockSizes {
 
 impl Default for BlockSizes {
     fn default() -> Self {
-        // KC*NR*4B ≈ 8 KiB B-panel strip in L1; MC*KC*4B ≈ 256 KiB A
-        // panel in L2; NC*KC*4B B panel in L3.
+        // Working-set arithmetic at f32 (4 B/element):
+        //   KC·NR·4B = 384·32·4  ≈ 48 KiB  B micro-panel strip (L2);
+        //   MC·KC·4B = 128·384·4 ≈ 192 KiB A panel (L2);
+        //   NC·KC·4B = 4096·384·4 ≈ 6 MiB  B panel (L3).
+        // The microkernel streams one NR-wide strip of the packed B
+        // panel against MR-row A micro-panels, so the truly hot set is
+        // the strip plus an MR·KC·4B ≈ 12 KiB A micro-panel.
         BlockSizes { mc: 128, kc: 384, nc: 4096 }
     }
 }
@@ -60,6 +65,12 @@ pub fn gemm_blocked(
         for x in c[..m * n].iter_mut() {
             *x *= beta;
         }
+    }
+
+    // Degenerate dims: the β pass above is the whole job (and packing
+    // would read operand memory that legitimately has length 0).
+    if m == 0 || n == 0 || k == 0 {
+        return;
     }
 
     let mut packed_a = vec![0f32; bs.mc.div_ceil(MR) * MR * bs.kc];

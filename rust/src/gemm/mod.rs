@@ -63,6 +63,11 @@ pub fn gemm_flops(d: GemmDims) -> u64 {
 /// Dispatches to the naive kernel for tiny problems (where packing
 /// overhead dominates) and the blocked kernel otherwise; `threads > 1`
 /// strips C by rows.
+///
+/// Degenerate dimensions follow the BLAS quick-return convention in
+/// every kernel: `m == 0` or `n == 0` touches nothing, and `k == 0`
+/// only applies the β scaling of C (A and B are never read, so their
+/// slices may be empty).
 #[allow(clippy::too_many_arguments)]
 pub fn sgemm(
     ta: Trans,
@@ -94,9 +99,14 @@ pub fn matmul(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32])
 
 fn validate(ta: Trans, tb: Trans, dims: GemmDims, a: &[f32], b: &[f32], c: &[f32]) {
     let GemmDims { m, n, k } = dims;
+    assert!(c.len() >= m * n, "C buffer too small: {} < {}", c.len(), m * n);
+    // Degenerate problems never read A or B (quick return / β pass
+    // only), so zero-dim calls may legally pass empty operand slices.
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
     let a_len = m * k;
     let b_len = k * n;
-    debug_assert!(m > 0 && n > 0 && k > 0, "degenerate gemm {dims:?}");
     assert!(
         a.len() >= a_len,
         "A buffer too small: {} < {} ({:?}, ta={ta:?})",
@@ -111,7 +121,6 @@ fn validate(ta: Trans, tb: Trans, dims: GemmDims, a: &[f32], b: &[f32], c: &[f32
         b_len,
         dims
     );
-    assert!(c.len() >= m * n, "C buffer too small: {} < {}", c.len(), m * n);
 }
 
 /// Element accessor honoring the transpose flag: logical (i, j) of an
@@ -219,5 +228,44 @@ mod tests {
     #[test]
     fn flops_counter() {
         assert_eq!(gemm_flops(GemmDims { m: 2, n: 3, k: 4 }), 48);
+    }
+
+    /// Regression (PR 3): `gemm_threaded` used to panic with a
+    /// mod-by-zero when `m == 0` (`threads.min(m)` → 0). All entry
+    /// points must quick-return on any zero dimension instead.
+    #[test]
+    fn zero_dimensions_quick_return_without_panicking() {
+        for &(m, n, k) in &[(0usize, 4usize, 4usize), (4, 0, 4), (4, 4, 0), (0, 0, 0)] {
+            let dims = GemmDims { m, n, k };
+            for &ta in &[Trans::N, Trans::T] {
+                for &tb in &[Trans::N, Trans::T] {
+                    // β = 1 keeps any existing C contents untouched.
+                    let mut c = vec![7f32; m * n];
+                    gemm_naive(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c);
+                    gemm_blocked(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, BlockSizes::default());
+                    gemm_threaded(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, 8);
+                    sgemm(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, 4);
+                    assert!(c.iter().all(|&x| x == 7.0), "({m},{n},{k}) touched C");
+                }
+            }
+        }
+    }
+
+    /// `k == 0` is "no accumulation", not "no operation": C ← β·C must
+    /// still apply, in every kernel, without reading A or B.
+    #[test]
+    fn zero_k_applies_beta_scaling_only() {
+        let dims = GemmDims { m: 2, n: 2, k: 0 };
+        let run = |f: &dyn Fn(&mut [f32])| {
+            let mut c = vec![2f32; 4];
+            f(&mut c);
+            assert!(c.iter().all(|&x| (x - 1.0).abs() < 1e-6), "expected β·C = 1.0: {c:?}");
+        };
+        run(&|c| gemm_naive(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c));
+        run(&|c| {
+            gemm_blocked(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, BlockSizes::default())
+        });
+        run(&|c| gemm_threaded(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, 8));
+        run(&|c| sgemm(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, 4));
     }
 }

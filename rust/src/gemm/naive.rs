@@ -15,6 +15,12 @@ pub fn gemm_naive(
     c: &mut [f32],
 ) {
     let GemmDims { m, n, k } = dims;
+    // Degenerate dims: with zero output rows or columns there is
+    // nothing to touch (A/B are never read); k == 0 falls through to
+    // the β pass below and skips the (empty) accumulation loops.
+    if m == 0 || n == 0 {
+        return;
+    }
     // β pass first so the accumulation loop is pure +=.
     if beta == 0.0 {
         c[..m * n].fill(0.0);

@@ -7,7 +7,7 @@
 //! b=1 the strips are slivers, packing cannot amortize, and adding
 //! threads *hurts*.
 
-use super::{gemm_blocked, BlockSizes, GemmDims, Trans};
+use super::{gemm_blocked, gemm_naive, BlockSizes, GemmDims, Trans};
 
 /// C ← α·op(A)·op(B) + β·C with `threads` row-strips of C computed
 /// concurrently via `std::thread::scope`.
@@ -24,6 +24,14 @@ pub fn gemm_threaded(
     threads: usize,
 ) {
     let GemmDims { m, n, k } = dims;
+    // Degenerate dims: delegate to the naive kernel, which no-ops on
+    // zero m/n and still applies the β pass for k == 0. Without this
+    // guard m == 0 would drive `threads.min(m)` to 0 and the strip
+    // arithmetic below into a divide-by-zero.
+    if m == 0 || n == 0 || k == 0 {
+        gemm_naive(ta, tb, dims, alpha, a, b, beta, c);
+        return;
+    }
     let threads = threads.max(1).min(m); // never more strips than rows
     if threads == 1 {
         gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, BlockSizes::default());

@@ -37,16 +37,21 @@
 //! halving activation traffic. See `examples/quickstart.rs` for the
 //! plan-once / run-many API in a dozen lines.
 //!
-//! ## Serving: dynamic micro-batching on plan-once workspaces
+//! ## Serving: QoS-aware dynamic micro-batching on plan-once workspaces
 //!
 //! The [`serve`] module puts an inference service on top of the same
-//! execution model: single-sample requests enter a bounded queue, a
-//! micro-batcher assembles them under a max-batch / max-wait policy,
-//! and a worker pool runs them in **forward-only** workspaces
-//! pre-planned at a ladder of bucketed batch sizes — re-creating at
-//! the queue the batching the paper shows GEMM efficiency depends on,
-//! while keeping the steady state allocation-free. See
-//! `examples/serve.rs` and the `serve-bench` CLI subcommand.
+//! execution model: single-sample requests enter a bounded two-lane
+//! queue (interactive / best-effort, with optional per-request
+//! deadlines), a micro-batcher assembles them under a max-batch /
+//! adaptive max-wait policy — shedding expired requests before they
+//! cost FLOPs — and a worker pool runs them in **forward-only**
+//! workspaces pre-planned at a ladder of bucketed batch sizes —
+//! re-creating at the queue the batching the paper shows GEMM
+//! efficiency depends on, while keeping the steady state
+//! allocation-free. A std-only HTTP/1.1 frontend
+//! ([`serve::HttpServer`]) puts a wire protocol in front of it. See
+//! `examples/serve.rs` and the `serve` / `serve-bench` CLI
+//! subcommands.
 
 #![warn(missing_docs)]
 

@@ -10,6 +10,8 @@
 //! cct gemm    [--size N] [--iters K]        # GEMM calibration
 //! cct serve-bench [--workers P] [--clients C] [--requests N] [--max-batch B]
 //!                                           # micro-batched vs batch-1 serving
+//! cct serve   [--addr HOST:PORT] [--workers P] [--max-batch B] [--adaptive BOOL]
+//!                                           # QoS HTTP inference frontend
 //! ```
 
 use cct::bail;
@@ -23,7 +25,7 @@ use cct::lowering::{choose_lowering, optimizer, ConvShape, LoweringType, Machine
 use cct::net::presets;
 use cct::rng::Pcg64;
 use cct::runtime::{ArtifactStore, XlaInput};
-use cct::serve::{closed_loop, worker_placement, ServeConfig, ServeEngine};
+use cct::serve::{closed_loop, worker_placement, HttpServer, ServeConfig, ServeEngine};
 use cct::solver::SolverConfig;
 use cct::tensor::Tensor;
 
@@ -72,6 +74,7 @@ fn main() -> Result<()> {
         "optimize" => cmd_optimize(&args),
         "gemm" => cmd_gemm(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -91,7 +94,10 @@ fn print_help() {
          \x20 optimize    lowering-optimizer report for CaffeNet layers (--batch)\n\
          \x20 gemm        GEMM calibration (--size, --iters, --threads)\n\
          \x20 serve-bench micro-batched vs batch-1 inference serving (--net tiny|cifar, \n\
-         \x20             --workers, --clients, --requests, --max-batch, --wait-us, --queue)\n"
+         \x20             --workers, --clients, --requests, --max-batch, --wait-us, --queue)\n\
+         \x20 serve       QoS HTTP inference frontend: POST /infer, GET /stats (--net tiny|cifar,\n\
+         \x20             --addr, --workers, --max-batch, --wait-us, --queue, --adaptive,\n\
+         \x20             --max-requests; 0 = run until killed)\n"
     );
 }
 
@@ -307,6 +313,71 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "FLOPS-proportional placement of {} workers on [GRID K520, g2 host CPU]: {placement:?}",
         workers.max(2)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers: usize = args.get("workers", 2)?;
+    let max_batch: usize = args.get("max-batch", 16)?;
+    let wait_us: u64 = args.get("wait-us", 2_000)?;
+    let queue: usize = args.get("queue", 256)?;
+    let adaptive: bool = args.get("adaptive", true)?;
+    let addr = args.get_str("addr", "127.0.0.1:8080");
+    let max_requests: u64 = args.get("max-requests", 0)?;
+    let net_name = args.get_str("net", "tiny");
+    let cfg_text = match net_name.as_str() {
+        "tiny" => SERVE_TINY,
+        "cifar" => presets::CIFAR10_QUICK,
+        other => bail!("unknown net '{other}' (tiny|cifar)"),
+    };
+    let cfg = cct::net::parse_net(cfg_text)?;
+
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig {
+            workers,
+            max_batch,
+            max_wait_us: wait_us,
+            queue_cap: queue,
+            adaptive_wait: adaptive,
+            ..Default::default()
+        },
+    )?;
+    let sample_len = engine.sample_len();
+    let server = HttpServer::bind(engine.handle(), &addr, max_requests)?;
+    println!(
+        "serving {} on http://{}  ({workers} workers, max_batch {max_batch}, buckets {:?}, adaptive_wait {adaptive})",
+        cfg.name,
+        server.local_addr(),
+        engine.buckets()
+    );
+    println!("  POST /infer   body: JSON array of {sample_len} floats, or raw LE f32 bytes");
+    println!("                (Content-Type: application/octet-stream); optional headers");
+    println!("                X-Priority: interactive|best-effort, X-Deadline-Us: <µs>");
+    println!("  GET  /stats   live JSON serving report");
+    println!("  GET  /healthz liveness probe");
+    if max_requests > 0 {
+        println!("  exiting after {max_requests} request(s)");
+    }
+    // Blocks until the request budget is exhausted (or forever at 0).
+    server.join();
+    let report = engine.shutdown();
+    println!(
+        "served {} requests in {:.2}s ({:.0} req/s), {} rejected, {} expired, mean batch {:.2}",
+        report.completed,
+        report.wall_s,
+        report.throughput_rps,
+        report.rejected,
+        report.expired,
+        report.mean_batch
+    );
+    println!(
+        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms; steady-state allocs {:?}",
+        report.latency.p50_us / 1e3,
+        report.latency.p95_us / 1e3,
+        report.latency.p99_us / 1e3,
+        report.worker_steady_allocs
     );
     Ok(())
 }

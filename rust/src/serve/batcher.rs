@@ -1,17 +1,39 @@
-//! Dynamic micro-batcher: pulls single-sample requests off the bounded
-//! submit queue and assembles them into micro-batches under a
-//! max-batch / max-wait policy.
+//! Dynamic micro-batcher: pulls single-sample requests off the two-lane
+//! submit queue (interactive first) and assembles them into
+//! micro-batches under a max-batch / max-wait policy with per-request
+//! deadlines and an adaptive hold-open window.
 //!
 //! The policy is the serving-side knob of the paper's batching
 //! analysis (§2.2 / Fig 2): a bigger batch amortizes lowering and
 //! restores GEMM efficiency, but a request that arrives alone should
-//! not wait forever for company — `max_wait_us` bounds the time a
-//! partially filled batch is held open, and an expired wait flushes
+//! not wait forever for company — the hold-open window bounds the time
+//! a partially filled batch waits, and an expired window flushes
 //! whatever has accumulated (tested in `rust/tests/serve_policy.rs`).
+//!
+//! Three QoS behaviors live here:
+//!
+//! * **Enqueue-anchored clock** — the flush deadline is
+//!   `first.enqueued + window`, not "when the batcher got around to
+//!   popping the request": under backlog the oldest waiter's clock has
+//!   often already run out, in which case the batcher tops the batch up
+//!   from whatever is queued and dispatches immediately instead of
+//!   holding the backlog open for another full window.
+//! * **Deadline shedding** — a request whose deadline has already
+//!   passed is answered [`Expired`](super::InferOutcome::Expired) the
+//!   moment it is popped, before it can occupy a batch slot (the worker
+//!   re-checks at execution time, so no expired request ever costs
+//!   FLOPs).
+//! * **Adaptive max-wait** — an EWMA over inter-arrival gaps predicts
+//!   how long the rest of the batch will take to fill; the hold-open
+//!   window shrinks when traffic is dense (the batch fills itself
+//!   anyway) and grows back toward `max_wait_us` when sparse
+//!   ([`BatchPolicy::window_us`]).
 
+use super::lanes::{LaneQueue, Pop};
+use super::stats::Recorder;
 use super::InferRequest;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -22,10 +44,35 @@ pub struct BatchPolicy {
     /// Hard cap on real samples per micro-batch; a full batch is
     /// dispatched immediately.
     pub max_batch: usize,
-    /// How long (µs) to hold an under-full batch open for stragglers
-    /// after its first request arrives; an expired wait flushes the
-    /// partial batch.
+    /// Upper bound (µs) on how long an under-full batch is held open
+    /// for stragglers after its *oldest* request was enqueued; an
+    /// expired window flushes the partial batch.
     pub max_wait_us: u64,
+    /// When set, the hold-open window adapts to the measured arrival
+    /// rate instead of always using `max_wait_us` — see
+    /// [`BatchPolicy::window_us`].
+    pub adaptive: bool,
+}
+
+impl BatchPolicy {
+    /// The hold-open window (µs) for a batch opened when the arrival
+    /// gap EWMA reads `ewma_gap_us`.
+    ///
+    /// Non-adaptive policies always return `max_wait_us`. Adaptive
+    /// policies predict the fill time of the remaining
+    /// `max_batch - 1` slots (2× the EWMA estimate, for headroom) and
+    /// clamp it to `[max_wait_us / 16, max_wait_us]`: dense traffic
+    /// shrinks the window toward the floor (the batch fills itself;
+    /// holding longer only adds latency), sparse traffic grows it back
+    /// to the configured cap.
+    pub fn window_us(&self, ewma_gap_us: f64) -> u64 {
+        if !self.adaptive {
+            return self.max_wait_us;
+        }
+        let open_slots = self.max_batch.saturating_sub(1).max(1) as f64;
+        let predicted = ewma_gap_us * open_slots * 2.0;
+        (predicted as u64).clamp(self.max_wait_us / 16, self.max_wait_us)
+    }
 }
 
 /// A batch of requests on its way to a worker.
@@ -38,63 +85,153 @@ const IDLE_TICK: Duration = Duration::from_millis(20);
 
 /// How long a draining batcher waits for straggling in-flight sends
 /// after `stop` is raised. Handles refuse new work once `stop` is set,
-/// so only a `try_send` that began before the flag flipped can still
-/// land — and it lands in well under this window.
+/// so only a push that began before the flag flipped can still land —
+/// and it lands in well under this window.
 const DRAIN_GRACE: Duration = Duration::from_millis(5);
+
+/// EWMA smoothing factor for the inter-arrival gap estimate.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Update the inter-arrival EWMA with a popped request's *enqueue*
+/// timestamp. Using enqueue times (not pop times) matters: draining a
+/// backlog pops requests microseconds apart even when they actually
+/// arrived hundreds of microseconds apart, and an EWMA over pop gaps
+/// would mis-read that drain as ultra-dense traffic and pin the
+/// adaptive window at its floor. Gaps are capped at 16× the policy
+/// window so one long idle period doesn't pin the estimate at
+/// "sparse" for many batches after traffic resumes; enqueue stamps
+/// from different producers may be slightly out of order, which
+/// saturates to a zero gap.
+fn observe_arrival(
+    ewma_gap_us: &mut f64,
+    last: &mut Option<Instant>,
+    max_wait_us: u64,
+    enqueued: Instant,
+) {
+    if let Some(prev) = *last {
+        let cap = max_wait_us.max(1) as f64 * 16.0;
+        let gap = (enqueued.saturating_duration_since(prev).as_secs_f64() * 1e6).min(cap);
+        *ewma_gap_us = *ewma_gap_us * (1.0 - EWMA_ALPHA) + gap * EWMA_ALPHA;
+    }
+    *last = Some(enqueued);
+}
+
+/// Ownership adapter over [`InferRequest::shed_if_expired`]: `None`
+/// when the request was shed (answered `Expired`, counted), `Some`
+/// when it is still live and may take a batch slot.
+fn shed_expired(req: InferRequest, stats: &Recorder) -> Option<InferRequest> {
+    if req.shed_if_expired(Instant::now(), stats) {
+        None
+    } else {
+        Some(req)
+    }
+}
 
 /// Batcher thread body: assemble micro-batches until shutdown.
 ///
 /// Shutdown protocol: when `stop` is raised the batcher drains whatever
 /// is still queued (flushing partial batches without waiting out the
-/// policy clock, allowing [`DRAIN_GRACE`] for in-flight sends to land),
-/// then exits and drops the work sender, which terminates the worker
-/// pool. A disconnected submit queue (all handles and the engine
-/// dropped) ends the loop the same way.
+/// policy clock, allowing [`DRAIN_GRACE`] for in-flight pushes to
+/// land), then exits and drops the work sender, which terminates the
+/// worker pool. A closed submit queue ends the loop the same way.
 pub(crate) fn run(
-    rx: Receiver<InferRequest>,
+    queue: Arc<LaneQueue>,
     tx: SyncSender<MicroBatch>,
     policy: BatchPolicy,
     stop: Arc<AtomicBool>,
+    stats: Arc<Recorder>,
 ) {
     assert!(policy.max_batch >= 1);
+    // Start from the sparse assumption: the first batches hold open for
+    // the full policy window until real arrivals teach the EWMA better.
+    let mut ewma_gap_us = policy.max_wait_us.max(1) as f64;
+    let mut last_arrival: Option<Instant> = None;
     'outer: loop {
-        // Wait for the first request of the next micro-batch.
+        // Wait for the first (non-expired) request of the next batch.
         let first = loop {
-            if stop.load(Ordering::Relaxed) {
-                match rx.recv_timeout(DRAIN_GRACE) {
-                    Ok(r) => break r,
-                    Err(_) => break 'outer,
+            let draining = stop.load(Ordering::Relaxed);
+            let wait = if draining { DRAIN_GRACE } else { IDLE_TICK };
+            match queue.pop(wait) {
+                Pop::Req(r) => {
+                    observe_arrival(
+                        &mut ewma_gap_us,
+                        &mut last_arrival,
+                        policy.max_wait_us,
+                        r.enqueued,
+                    );
+                    if let Some(r) = shed_expired(r, &stats) {
+                        break r;
+                    }
                 }
-            }
-            match rx.recv_timeout(IDLE_TICK) {
-                Ok(r) => break r,
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => break 'outer,
+                Pop::Timeout => {
+                    if draining {
+                        break 'outer;
+                    }
+                }
+                Pop::Closed => break 'outer,
             }
         };
         let mut requests = Vec::with_capacity(policy.max_batch);
         requests.push(first);
-        let deadline = Instant::now() + Duration::from_micros(policy.max_wait_us);
+        // The flush clock is anchored at the oldest request's *enqueue*
+        // time, matching the documented policy ("when the oldest queued
+        // request has waited `max_wait_us`"). Anchoring at pop time
+        // instead would let a backlogged request wait ~2× the policy.
+        let window = Duration::from_micros(policy.window_us(ewma_gap_us));
+        let deadline = requests[0].enqueued + window;
         while requests.len() < policy.max_batch {
             if stop.load(Ordering::Relaxed) {
                 // Draining: take what is queued or lands within the
                 // grace window, but don't wait out the policy clock.
-                match rx.recv_timeout(DRAIN_GRACE) {
-                    Ok(r) => {
-                        requests.push(r);
-                        continue;
+                match queue.pop(DRAIN_GRACE) {
+                    Pop::Req(r) => {
+                        if let Some(r) = shed_expired(r, &stats) {
+                            requests.push(r);
+                        }
                     }
-                    Err(_) => break,
+                    Pop::Timeout | Pop::Closed => break,
                 }
+                continue;
             }
             let now = Instant::now();
             if now >= deadline {
+                // Window exhausted (possibly before the batch even
+                // opened, under backlog) — top up from whatever is
+                // already queued, then dispatch. A backlog must not be
+                // under-batched just because the oldest waiter's clock
+                // ran out while it sat in the queue.
+                while requests.len() < policy.max_batch {
+                    match queue.try_pop() {
+                        Some(r) => {
+                            observe_arrival(
+                                &mut ewma_gap_us,
+                                &mut last_arrival,
+                                policy.max_wait_us,
+                                r.enqueued,
+                            );
+                            if let Some(r) = shed_expired(r, &stats) {
+                                requests.push(r);
+                            }
+                        }
+                        None => break,
+                    }
+                }
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => requests.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            match queue.pop(deadline - now) {
+                Pop::Req(r) => {
+                    observe_arrival(
+                        &mut ewma_gap_us,
+                        &mut last_arrival,
+                        policy.max_wait_us,
+                        r.enqueued,
+                    );
+                    if let Some(r) = shed_expired(r, &stats) {
+                        requests.push(r);
+                    }
+                }
+                Pop::Timeout => { /* the loop re-checks the deadline and tops up */ }
+                Pop::Closed => break,
             }
         }
         if tx.send(MicroBatch { requests }).is_err() {
@@ -105,29 +242,46 @@ pub(crate) fn run(
 
 #[cfg(test)]
 mod tests {
+    use super::super::{InferOutcome, Lane};
     use super::*;
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn request() -> (InferRequest, mpsc::Receiver<super::super::InferReply>) {
+    fn request() -> (InferRequest, mpsc::Receiver<InferOutcome>) {
         let (reply, rx) = mpsc::channel();
-        (InferRequest { sample: vec![0.0; 4], reply, enqueued: Instant::now() }, rx)
+        (
+            InferRequest {
+                sample: vec![0.0; 4],
+                reply,
+                enqueued: Instant::now(),
+                deadline: None,
+                lane: Lane::Interactive,
+            },
+            rx,
+        )
+    }
+
+    fn fixed_policy(max_batch: usize, max_wait_us: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait_us, adaptive: false }
     }
 
     #[test]
     fn full_batch_dispatches_without_waiting_out_the_clock() {
-        let (in_tx, in_rx) = mpsc::sync_channel(16);
+        let queue = Arc::new(LaneQueue::new(16));
         let (out_tx, out_rx) = mpsc::sync_channel(16);
         let stop = Arc::new(AtomicBool::new(false));
         let mut reply_rxs = Vec::new();
         for _ in 0..4 {
             let (r, keep) = request();
             reply_rxs.push(keep);
-            in_tx.send(r).unwrap();
+            assert!(matches!(queue.try_push(Lane::Interactive, r), super::super::lanes::Push::Ok));
         }
-        let policy = BatchPolicy { max_batch: 2, max_wait_us: 60_000_000 };
+        let policy = fixed_policy(2, 60_000_000);
+        let q2 = Arc::clone(&queue);
         let stop2 = Arc::clone(&stop);
-        let h = std::thread::spawn(move || run(in_rx, out_tx, policy, stop2));
+        let h = std::thread::spawn(move || {
+            run(q2, out_tx, policy, stop2, Arc::new(Recorder::new()))
+        });
         // Despite a 60 s max wait, two full batches of 2 must arrive fast.
         let t0 = Instant::now();
         let b1 = out_rx.recv_timeout(Duration::from_secs(5)).expect("batch 1");
@@ -136,26 +290,108 @@ mod tests {
         assert_eq!(b2.requests.len(), 2);
         assert!(t0.elapsed() < Duration::from_secs(5));
         stop.store(true, Ordering::Relaxed);
-        drop(in_tx);
+        queue.close();
         h.join().unwrap();
     }
 
     #[test]
     fn stop_flag_drains_and_exits() {
-        let (in_tx, in_rx) = mpsc::sync_channel(16);
+        let queue = Arc::new(LaneQueue::new(16));
         let (out_tx, out_rx) = mpsc::sync_channel(16);
         let stop = Arc::new(AtomicBool::new(false));
         let (r, _rx1) = request();
-        in_tx.send(r).unwrap();
+        assert!(matches!(queue.try_push(Lane::Interactive, r), super::super::lanes::Push::Ok));
         stop.store(true, Ordering::Relaxed);
-        let policy = BatchPolicy { max_batch: 8, max_wait_us: 60_000_000 };
-        let h = std::thread::spawn(move || run(in_rx, out_tx, policy, stop));
+        let policy = fixed_policy(8, 60_000_000);
+        let q2 = Arc::clone(&queue);
+        let h = std::thread::spawn(move || {
+            run(q2, out_tx, policy, stop, Arc::new(Recorder::new()))
+        });
         // The queued request is flushed as a partial batch immediately
         // (no 60 s wait), then the batcher exits.
         let b = out_rx.recv_timeout(Duration::from_secs(5)).expect("drained batch");
         assert_eq!(b.requests.len(), 1);
         h.join().unwrap();
         assert!(out_rx.recv().is_err(), "work channel should be closed");
-        drop(in_tx);
+    }
+
+    /// Regression (PR 3): the flush deadline used to be anchored at
+    /// batcher *pop* time, so a request that had already waited out
+    /// `max_wait_us` in the queue waited the whole window *again* —
+    /// up to ~2× the documented policy under backlog.
+    #[test]
+    fn flush_clock_is_anchored_at_enqueue_not_pop() {
+        let queue = Arc::new(LaneQueue::new(16));
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (mut r, _keep) = request();
+        // Simulate backlog: the request was enqueued 250 ms ago, well
+        // past the 200 ms policy window.
+        r.enqueued = Instant::now()
+            .checked_sub(Duration::from_millis(250))
+            .expect("clock supports back-dating");
+        assert!(matches!(queue.try_push(Lane::Interactive, r), super::super::lanes::Push::Ok));
+        let policy = fixed_policy(8, 200_000);
+        let q2 = Arc::clone(&queue);
+        let stop2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            run(q2, out_tx, policy, stop2, Arc::new(Recorder::new()))
+        });
+        let t0 = Instant::now();
+        let b = out_rx.recv_timeout(Duration::from_secs(5)).expect("flushed batch");
+        assert_eq!(b.requests.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "an already-overdue request must flush immediately, not wait \
+             another full window (took {:?})",
+            t0.elapsed()
+        );
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn expired_request_is_shed_not_batched() {
+        let queue = Arc::new(LaneQueue::new(16));
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Recorder::new());
+        let (mut r, keep) = request();
+        r.deadline = Some(r.enqueued); // expired the moment it was enqueued
+        assert!(matches!(queue.try_push(Lane::Interactive, r), super::super::lanes::Push::Ok));
+        let policy = fixed_policy(8, 1_000);
+        let q2 = Arc::clone(&queue);
+        let stop2 = Arc::clone(&stop);
+        let st2 = Arc::clone(&stats);
+        let h = std::thread::spawn(move || run(q2, out_tx, policy, stop2, st2));
+        // The shed answer arrives without any batch being dispatched.
+        let outcome = keep.recv_timeout(Duration::from_secs(5)).expect("answered");
+        assert!(matches!(outcome, InferOutcome::Expired));
+        assert!(
+            out_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "an expired request must never reach a worker"
+        );
+        assert_eq!(stats.report().expired, 1);
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn adaptive_window_tracks_arrival_density() {
+        let p = BatchPolicy { max_batch: 16, max_wait_us: 2_000, adaptive: true };
+        // Non-adaptive: always the configured cap.
+        let fixed = BatchPolicy { adaptive: false, ..p };
+        assert_eq!(fixed.window_us(10.0), 2_000);
+        // Sparse traffic (huge gaps): the window grows to the cap.
+        assert_eq!(p.window_us(1e9), 2_000);
+        // Dense traffic (zero gaps): the window shrinks to the floor.
+        assert_eq!(p.window_us(0.0), 2_000 / 16);
+        // In between: 20 µs gaps × 15 open slots × 2 headroom = 600 µs.
+        assert_eq!(p.window_us(20.0), 600);
+        // Degenerate max_batch=1 stays within bounds.
+        let single = BatchPolicy { max_batch: 1, max_wait_us: 2_000, adaptive: true };
+        assert!(single.window_us(50.0) <= 2_000);
     }
 }

@@ -1,0 +1,545 @@
+//! Minimal std-only HTTP/1.1 transport in front of [`ServeHandle`]:
+//! the "real transport" the ROADMAP asks for, with zero external
+//! crates (`std::net::TcpListener`, hand-rolled request parsing and
+//! JSON formatting).
+//!
+//! ## Wire protocol
+//!
+//! * `POST /infer` — one flattened `(c, h, w)` sample. Body is either
+//!   a JSON array of numbers (default) or raw little-endian `f32`
+//!   bytes (`Content-Type: application/octet-stream`). QoS rides in
+//!   headers: `X-Priority: interactive | best-effort` picks the
+//!   [`Lane`], `X-Deadline-Us: <µs>` sets
+//!   [`InferOptions::deadline_us`]. Replies:
+//!   * `200` — `{"class":…,"logits":[…],"latency_us":…,
+//!     "batch_real":…,"bucket":…,"lane":"…"}`
+//!   * `400` — malformed body or wrong sample length
+//!   * `503` — lane full (backpressure) or engine shut down
+//!   * `504` — the request's deadline expired before execution (shed)
+//! * `GET /stats` — live [`ServeReport`] snapshot as JSON.
+//! * `GET /healthz` — `{"ok":true}` liveness probe.
+//!
+//! ## Design notes
+//!
+//! One thread per connection, one request per connection
+//! (`Connection: close`): the simplest shape that exercises the QoS
+//! engine end-to-end. The accept loop polls a non-blocking listener on
+//! a short tick so shutdown (and the `max_requests` CI hook) never
+//! hangs in `accept(2)`. Submission uses the *non-blocking* engine
+//! path, so an overloaded lane surfaces as a fast `503` — load is
+//! shed at the door instead of accumulating one parked thread per
+//! queued connection.
+
+use super::{InferOptions, InferOutcome, InferReply, Lane, ServeHandle, ServeReport, SubmitError};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often the accept loop re-checks its exit conditions.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// Per-connection socket read timeout (a stalled client must not pin
+/// its handler thread forever).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Largest accepted request body (a 1M-float sample is ~12 MiB of
+/// JSON; anything bigger is a client bug, not a sample).
+const MAX_BODY: usize = 16 << 20;
+
+/// Longest accepted request/header line and most accepted header
+/// lines: without these caps a client streaming newline-free bytes
+/// (or endless headers) would grow memory without bound — the body is
+/// not the only thing that needs a ceiling.
+const MAX_LINE: u64 = 8 << 10;
+/// See [`MAX_LINE`].
+const MAX_HEADERS: usize = 64;
+
+/// A running HTTP frontend over a [`ServeHandle`]. Dropping the server
+/// stops the accept loop and joins it (in-flight connections finish
+/// first); the engine itself keeps running until
+/// [`ServeEngine::shutdown`](super::ServeEngine::shutdown).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an
+    /// ephemeral port — read it back with [`HttpServer::local_addr`])
+    /// and start serving `handle`. With `max_requests > 0` the server
+    /// accepts exactly that many connections (one request each),
+    /// answers them, and exits on its own — the hook the CI smoke test
+    /// uses; `0` means serve until dropped.
+    pub fn bind(handle: ServeHandle, addr: &str, max_requests: u64) -> crate::Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| crate::err!("binding http server {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| crate::err!("reading bound address: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::err!("configuring listener: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("serve-http-accept".to_string())
+            .spawn(move || accept_loop(listener, handle, stop2, max_requests))
+            .map_err(|e| crate::err!("spawning http accept thread: {e}"))?;
+        Ok(HttpServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The address actually bound (resolves port `0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the server exits on its own — i.e. until a
+    /// `max_requests` bound is reached. With `max_requests = 0` this
+    /// blocks until the process is killed.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, finish in-flight connections, and return.
+    pub fn shutdown(self) {
+        // Drop does the work; spelled out for call-site readability.
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept loop: poll the non-blocking listener, spawn one handler
+/// thread per connection, stop on the flag or the request budget, then
+/// join the stragglers.
+fn accept_loop(
+    listener: TcpListener,
+    handle: ServeHandle,
+    stop: Arc<AtomicBool>,
+    max_requests: u64,
+) {
+    let mut served: u64 = 0;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if max_requests > 0 && served >= max_requests {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Charge the budget at *accept* time: counting at
+                // request completion would let concurrent connections
+                // overshoot `max_requests` (each accepted connection
+                // handles exactly one request, parsed or not).
+                served += 1;
+                conns.retain(|h| !h.is_finished());
+                let handle = handle.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("serve-http-conn".to_string())
+                    .spawn(move || {
+                        let _ = handle_connection(stream, &handle);
+                    });
+                if let Ok(h) = spawned {
+                    conns.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// One parsed HTTP request.
+struct Request {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Request {
+    /// Lowercase-name header lookup.
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A response about to be written: status code plus JSON body.
+struct Response {
+    status: u16,
+    body: String,
+}
+
+impl Response {
+    fn json(status: u16, body: impl Into<String>) -> Response {
+        Response { status, body: body.into() }
+    }
+
+    fn error(status: u16, message: &str) -> Response {
+        Response::json(status, format!("{{\"error\":{}}}", json_string(message)))
+    }
+}
+
+/// Handle one connection: parse a request, route it, write the reply,
+/// close. The `max_requests` budget was already charged at accept
+/// time, so malformed traffic cannot dodge it and concurrent
+/// connections cannot overshoot it.
+fn handle_connection(stream: TcpStream, handle: &ServeHandle) -> std::io::Result<()> {
+    // The accepted socket may inherit the listener's non-blocking mode
+    // on some platforms; force plain blocking I/O with a read timeout.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let response = match read_request(&mut reader, &mut writer) {
+        Ok(req) => route(&req, handle),
+        Err(e) => Response::error(400, &format!("malformed request: {e}")),
+    };
+    write_response(&mut writer, &response)
+}
+
+/// Read one `\n`-terminated line, erroring instead of growing without
+/// bound when the client never sends a newline.
+fn read_line_bounded(reader: &mut BufReader<TcpStream>) -> std::io::Result<String> {
+    let mut limited = reader.by_ref().take(MAX_LINE);
+    let mut line = String::new();
+    limited.read_line(&mut line)?;
+    if line.len() as u64 >= MAX_LINE && !line.ends_with('\n') {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "request line or header longer than 8 KiB",
+        ));
+    }
+    Ok(line)
+}
+
+/// Parse request line, headers, and a `Content-Length` body. Needs the
+/// write half too: an `Expect: 100-continue` client (curl, for any
+/// body over ~1 KiB) waits about a second for the interim response
+/// before it sends the body at all.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+) -> std::io::Result<Request> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let line = read_line_bounded(reader)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| bad("request line has no path"))?.to_string();
+    let mut headers = Vec::new();
+    loop {
+        let h = read_line_bounded(reader)?;
+        let trimmed = h.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(bad("too many request headers"));
+        }
+        if let Some((k, v)) = trimmed.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    if headers
+        .iter()
+        .any(|(k, v)| k == "expect" && v.eq_ignore_ascii_case("100-continue"))
+    {
+        writer.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        writer.flush()?;
+    }
+    let len = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0,
+        // An unparseable length must be a 400, not silently "no body".
+        Some((_, v)) => v.parse::<usize>().map_err(|_| bad("bad Content-Length header"))?,
+    };
+    if len > MAX_BODY {
+        return Err(bad("request body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn route(req: &Request, handle: &ServeHandle) -> Response {
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("POST", "/infer") => infer_route(req, handle),
+        ("GET", "/stats") => Response::json(200, report_json(&handle.stats())),
+        ("GET", "/healthz") => Response::json(200, "{\"ok\":true}"),
+        _ => Response::error(404, "not found (try POST /infer, GET /stats, GET /healthz)"),
+    }
+}
+
+/// `POST /infer`: decode the sample and QoS headers, submit on the
+/// non-blocking path, wait for the outcome.
+fn infer_route(req: &Request, handle: &ServeHandle) -> Response {
+    let sample = match decode_sample(req) {
+        Ok(s) => s,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    let mut opts = InferOptions::default();
+    if let Some(v) = req.header("x-priority") {
+        match parse_lane(v) {
+            Some(lane) => opts.lane = lane,
+            None => {
+                return Response::error(
+                    400,
+                    "bad X-Priority (use 'interactive' or 'best-effort')",
+                )
+            }
+        }
+    }
+    if let Some(v) = req.header("x-deadline-us") {
+        match v.parse::<u64>() {
+            Ok(us) => opts.deadline_us = Some(us),
+            Err(_) => return Response::error(400, "bad X-Deadline-Us (want microseconds)"),
+        }
+    }
+    match handle.try_infer_with(&sample, opts) {
+        Ok(pending) => match pending.wait_outcome() {
+            Ok(InferOutcome::Reply(reply)) => Response::json(200, reply_json(&reply)),
+            Ok(InferOutcome::Expired) => {
+                Response::error(504, "deadline expired before execution (shed)")
+            }
+            Err(_) => Response::error(503, "engine shut down before answering"),
+        },
+        Err(SubmitError::QueueFull) => Response::error(503, "lane full (backpressure)"),
+        Err(SubmitError::Closed) => Response::error(503, "engine is shut down"),
+        Err(SubmitError::BadSample(got, want)) => {
+            Response::error(400, &format!("sample length {got}, expected {want}"))
+        }
+    }
+}
+
+/// Body → flat f32 sample: raw little-endian bytes for
+/// `application/octet-stream`, a JSON number array otherwise.
+fn decode_sample(req: &Request) -> Result<Vec<f32>, String> {
+    let binary = req
+        .header("content-type")
+        .is_some_and(|ct| ct.to_ascii_lowercase().contains("octet-stream"));
+    if binary {
+        if req.body.len() % 4 != 0 {
+            return Err(format!(
+                "octet-stream body length {} is not a multiple of 4 (want raw little-endian f32)",
+                req.body.len()
+            ));
+        }
+        return Ok(req
+            .body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect());
+    }
+    let text = std::str::from_utf8(&req.body).map_err(|_| "body is not UTF-8".to_string())?;
+    parse_f32_array(text)
+}
+
+/// Minimal JSON parser for exactly the shape we accept: a flat array
+/// of numbers (`[1, 2.5, -3e-2]`). No strings, no nesting.
+fn parse_f32_array(text: &str) -> Result<Vec<f32>, String> {
+    let inner = text
+        .trim()
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| {
+            "body must be a JSON array of numbers (or raw f32 bytes with \
+             Content-Type: application/octet-stream)"
+                .to_string()
+        })?;
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            tok.parse::<f32>().map_err(|_| format!("bad number '{tok}' in sample array"))
+        })
+        .collect()
+}
+
+fn parse_lane(v: &str) -> Option<Lane> {
+    match v.to_ascii_lowercase().replace('-', "_").as_str() {
+        "interactive" => Some(Lane::Interactive),
+        "best_effort" | "besteffort" => Some(Lane::BestEffort),
+        _ => None,
+    }
+}
+
+/// Escape a string for embedding in JSON output.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn f32_array_json(values: &[f32]) -> String {
+    let mut out = String::from("[");
+    for (i, v) in values.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        // JSON has no inf/NaN literals; a degenerate net (or an inf
+        // input that parsed fine) must not make a 200 body unparseable.
+        if v.is_finite() {
+            out.push_str(&format!("{v}"));
+        } else {
+            out.push_str("null");
+        }
+    }
+    out.push(']');
+    out
+}
+
+fn reply_json(r: &InferReply) -> String {
+    format!(
+        "{{\"class\":{},\"logits\":{},\"latency_us\":{:.1},\"batch_real\":{},\"bucket\":{},\"lane\":{}}}",
+        r.class,
+        f32_array_json(&r.logits),
+        r.latency_s * 1e6,
+        r.batch_real,
+        r.bucket,
+        json_string(r.lane.as_str()),
+    )
+}
+
+fn latency_json(l: &super::LatencySummary) -> String {
+    format!(
+        "{{\"p50_us\":{:.1},\"p95_us\":{:.1},\"p99_us\":{:.1},\"mean_us\":{:.1},\"max_us\":{:.1}}}",
+        l.p50_us, l.p95_us, l.p99_us, l.mean_us, l.max_us
+    )
+}
+
+fn lane_json(l: &super::LaneReport) -> String {
+    format!("{{\"completed\":{},\"latency\":{}}}", l.completed, latency_json(&l.latency))
+}
+
+/// The `GET /stats` payload: a [`ServeReport`] snapshot as JSON.
+fn report_json(rep: &ServeReport) -> String {
+    let allocs = rep
+        .worker_steady_allocs
+        .iter()
+        .map(|a| a.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"completed\":{},\"rejected\":{},\"expired\":{},\"batches\":{},\"mean_batch\":{:.3},\
+         \"padded_slots\":{},\"wall_s\":{:.3},\"throughput_rps\":{:.1},\"latency\":{},\
+         \"lanes\":{{\"interactive\":{},\"best_effort\":{}}},\"worker_steady_allocs\":[{}]}}",
+        rep.completed,
+        rep.rejected,
+        rep.expired,
+        rep.batches,
+        rep.mean_batch,
+        rep.padded_slots,
+        rep.wall_s,
+        rep.throughput_rps,
+        latency_json(&rep.latency),
+        lane_json(rep.lane(Lane::Interactive)),
+        lane_json(rep.lane(Lane::BestEffort)),
+        allocs,
+    )
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Response",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        resp.status,
+        reason,
+        resp.body.len(),
+        resp.body
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_array_parser_accepts_json_numbers() {
+        assert_eq!(parse_f32_array("[1, 2.5, -3e-2]").unwrap(), vec![1.0, 2.5, -3e-2]);
+        assert_eq!(parse_f32_array(" [ ] ").unwrap(), Vec::<f32>::new());
+        assert!(parse_f32_array("1,2,3").is_err());
+        assert!(parse_f32_array("[1, true]").is_err());
+    }
+
+    #[test]
+    fn lane_header_parsing() {
+        assert_eq!(parse_lane("interactive"), Some(Lane::Interactive));
+        assert_eq!(parse_lane("Best-Effort"), Some(Lane::BestEffort));
+        assert_eq!(parse_lane("best_effort"), Some(Lane::BestEffort));
+        assert_eq!(parse_lane("bulk"), None);
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        assert_eq!(
+            f32_array_json(&[1.0, f32::INFINITY, f32::NAN, -2.5]),
+            "[1,null,null,-2.5]"
+        );
+    }
+
+    #[test]
+    fn reply_json_shape() {
+        let r = InferReply {
+            logits: vec![1.0, -2.5],
+            class: 0,
+            latency_s: 0.001,
+            batch_real: 2,
+            bucket: 4,
+            lane: Lane::BestEffort,
+        };
+        let j = reply_json(&r);
+        assert!(j.contains("\"class\":0"), "{j}");
+        assert!(j.contains("\"logits\":[1,-2.5]"), "{j}");
+        assert!(j.contains("\"lane\":\"best_effort\""), "{j}");
+    }
+}

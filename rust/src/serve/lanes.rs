@@ -1,0 +1,276 @@
+//! Two-lane bounded submit queue with strict priority pop.
+//!
+//! The QoS submit path: requests enter one of two bounded lanes
+//! ([`Lane::Interactive`] / [`Lane::BestEffort`]) and the batcher pops
+//! the interactive lane first, topping batches up from best-effort
+//! only when no interactive work is waiting. Under overload the
+//! best-effort lane absorbs the backlog while interactive requests
+//! keep jumping the line, which is what bounds interactive p99.
+//!
+//! Strict priority can starve the best-effort lane under sustained
+//! interactive saturation — that is by design (best-effort means
+//! exactly that), and each lane's bounded capacity keeps a starved
+//! lane from growing memory: producers get clean backpressure
+//! ([`Push::Full`]) instead.
+//!
+//! Built on `Mutex` + `Condvar` rather than two `mpsc` channels
+//! because a consumer cannot block on two std channels at once; a
+//! single condvar-guarded state lets one pop wait on "either lane
+//! non-empty" with a timeout.
+
+use super::{InferRequest, Lane};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Result of a push onto a lane.
+pub(crate) enum Push {
+    /// The request was enqueued.
+    Ok,
+    /// The lane is at capacity (non-blocking push only).
+    Full,
+    /// The queue has been closed; the request was dropped.
+    Closed,
+}
+
+/// Result of a (timed) pop.
+pub(crate) enum Pop {
+    /// A request, taken from the highest-priority non-empty lane.
+    Req(InferRequest),
+    /// Both lanes stayed empty for the whole timeout.
+    Timeout,
+    /// The queue is closed and empty.
+    Closed,
+}
+
+struct State {
+    /// One FIFO per lane, indexed by `Lane as usize` (interactive
+    /// first).
+    lanes: [VecDeque<InferRequest>; 2],
+    /// Per-lane capacity bound.
+    cap: usize,
+    closed: bool,
+}
+
+/// The bounded two-lane queue between [`ServeHandle`](super::ServeHandle)
+/// producers and the batcher consumer.
+pub(crate) struct LaneQueue {
+    state: Mutex<State>,
+    /// Signalled on push and on close (consumer side).
+    not_empty: Condvar,
+    /// Signalled on pop and on close (blocked-producer side).
+    not_full: Condvar,
+}
+
+impl LaneQueue {
+    /// A queue whose lanes each hold at most `cap` waiting requests.
+    pub(crate) fn new(cap: usize) -> Self {
+        LaneQueue {
+            state: Mutex::new(State {
+                lanes: [VecDeque::new(), VecDeque::new()],
+                cap: cap.max(1),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push; [`Push::Full`] is the backpressure signal.
+    pub(crate) fn try_push(&self, lane: Lane, req: InferRequest) -> Push {
+        let mut g = self.state.lock().expect("serve lane queue poisoned");
+        if g.closed {
+            return Push::Closed;
+        }
+        let cap = g.cap;
+        let q = &mut g.lanes[lane as usize];
+        if q.len() >= cap {
+            return Push::Full;
+        }
+        q.push_back(req);
+        self.not_empty.notify_one();
+        Push::Ok
+    }
+
+    /// Blocking push: wait for lane space (backpressure by blocking).
+    /// Returns [`Push::Ok`] or — once the queue closes — [`Push::Closed`].
+    pub(crate) fn push_blocking(&self, lane: Lane, req: InferRequest) -> Push {
+        let mut g = self.state.lock().expect("serve lane queue poisoned");
+        loop {
+            if g.closed {
+                return Push::Closed;
+            }
+            let cap = g.cap;
+            let q = &mut g.lanes[lane as usize];
+            if q.len() < cap {
+                q.push_back(req);
+                self.not_empty.notify_one();
+                return Push::Ok;
+            }
+            g = self.not_full.wait(g).expect("serve lane queue poisoned");
+        }
+    }
+
+    /// Timed pop, interactive lane first. Drains any remaining
+    /// requests even after close; returns [`Pop::Closed`] only once
+    /// closed *and* empty.
+    pub(crate) fn pop(&self, timeout: Duration) -> Pop {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().expect("serve lane queue poisoned");
+        loop {
+            if let Some(r) = Self::take(&mut g) {
+                // notify_all, not notify_one: producers for *both*
+                // lanes share this condvar, and waking only one could
+                // pick a producer whose lane is still full while the
+                // producer whose lane just gained space sleeps on.
+                self.not_full.notify_all();
+                return Pop::Req(r);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Timeout;
+            }
+            let (g2, _timed_out) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("serve lane queue poisoned");
+            g = g2;
+        }
+    }
+
+    /// Non-blocking pop, interactive lane first.
+    pub(crate) fn try_pop(&self) -> Option<InferRequest> {
+        let mut g = self.state.lock().expect("serve lane queue poisoned");
+        let r = Self::take(&mut g);
+        if r.is_some() {
+            // notify_all for the same reason as in `pop`.
+            self.not_full.notify_all();
+        }
+        r
+    }
+
+    fn take(g: &mut State) -> Option<InferRequest> {
+        for lane in g.lanes.iter_mut() {
+            if let Some(r) = lane.pop_front() {
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Close the queue: refuse all future pushes, drop anything still
+    /// queued (dropping a request's reply sender errors its client's
+    /// wait — the "engine shut down" path), and wake every blocked
+    /// producer and consumer.
+    pub(crate) fn close(&self) {
+        let mut g = self.state.lock().expect("serve lane queue poisoned");
+        g.closed = true;
+        for lane in g.lanes.iter_mut() {
+            lane.clear();
+        }
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::InferOutcome;
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn request(lane: Lane) -> (InferRequest, mpsc::Receiver<InferOutcome>) {
+        let (reply, rx) = mpsc::channel();
+        (
+            InferRequest {
+                sample: vec![0.0; 4],
+                reply,
+                enqueued: Instant::now(),
+                deadline: None,
+                lane,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn pop_prefers_interactive_lane() {
+        let q = LaneQueue::new(8);
+        let mut keep = Vec::new();
+        for _ in 0..2 {
+            let (r, rx) = request(Lane::BestEffort);
+            keep.push(rx);
+            assert!(matches!(q.try_push(Lane::BestEffort, r), Push::Ok));
+        }
+        let (r, rx) = request(Lane::Interactive);
+        keep.push(rx);
+        assert!(matches!(q.try_push(Lane::Interactive, r), Push::Ok));
+        // FIFO within a lane, but interactive jumps the best-effort line.
+        let first = q.try_pop().expect("queued");
+        assert_eq!(first.lane, Lane::Interactive);
+        assert_eq!(q.try_pop().expect("queued").lane, Lane::BestEffort);
+        assert_eq!(q.try_pop().expect("queued").lane, Lane::BestEffort);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn per_lane_capacity_and_backpressure() {
+        let q = LaneQueue::new(1);
+        let (r1, _k1) = request(Lane::BestEffort);
+        assert!(matches!(q.try_push(Lane::BestEffort, r1), Push::Ok));
+        let (r2, _k2) = request(Lane::BestEffort);
+        assert!(matches!(q.try_push(Lane::BestEffort, r2), Push::Full));
+        // A full best-effort lane does not block the interactive lane.
+        let (r3, _k3) = request(Lane::Interactive);
+        assert!(matches!(q.try_push(Lane::Interactive, r3), Push::Ok));
+    }
+
+    #[test]
+    fn timed_pop_times_out_then_sees_new_work() {
+        let q = LaneQueue::new(4);
+        assert!(matches!(q.pop(Duration::from_millis(10)), Pop::Timeout));
+        let (r, _k) = request(Lane::Interactive);
+        assert!(matches!(q.try_push(Lane::Interactive, r), Push::Ok));
+        assert!(matches!(q.pop(Duration::from_millis(10)), Pop::Req(_)));
+    }
+
+    #[test]
+    fn close_refuses_pushes_and_wakes_consumers() {
+        let q = Arc::new(LaneQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            // A long wait that close() must cut short.
+            matches!(q2.pop(Duration::from_secs(30)), Pop::Closed)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap(), "close should wake the blocked pop as Closed");
+        let (r, _k) = request(Lane::Interactive);
+        assert!(matches!(q.try_push(Lane::Interactive, r), Push::Closed));
+        let (r, _k) = request(Lane::Interactive);
+        assert!(matches!(q.push_blocking(Lane::Interactive, r), Push::Closed));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space_then_lands() {
+        let q = Arc::new(LaneQueue::new(1));
+        let (r1, _k1) = request(Lane::Interactive);
+        assert!(matches!(q.try_push(Lane::Interactive, r1), Push::Ok));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let (r2, k2) = request(Lane::Interactive);
+            let p = q2.push_blocking(Lane::Interactive, r2);
+            (matches!(p, Push::Ok), k2)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        // Popping frees lane space and wakes the blocked producer.
+        assert!(q.try_pop().is_some());
+        let (ok, _k2) = h.join().unwrap();
+        assert!(ok, "blocked push should land once space frees up");
+        assert!(q.try_pop().is_some(), "the blocked producer's request arrived");
+    }
+}

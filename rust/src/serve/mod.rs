@@ -1,30 +1,48 @@
-//! Dynamic micro-batching inference service on plan-once workspaces
-//! (the serving layer the ROADMAP's "heavy traffic" north star asks
-//! for).
+//! QoS-aware dynamic micro-batching inference service on plan-once
+//! workspaces (the serving layer the ROADMAP's "heavy traffic" north
+//! star asks for).
 //!
 //! The paper's central result is that CNN throughput tracks delivered
 //! FLOPS once *batching* amortizes lowering and restores GEMM
 //! efficiency (§2.2, Fig 2). Training gets that batching for free —
 //! mini-batches arrive pre-formed. A server does not: requests arrive
 //! one sample at a time, so this module re-creates the batch at the
-//! queue:
+//! queue — and, because a production frontend needs latency *control*
+//! rather than just latency *measurement*, wraps it in QoS machinery:
 //!
-//! 1. **Bounded submit queue** — single-sample requests enter a
-//!    bounded MPSC queue ([`ServeHandle::try_infer`] rejects cleanly
-//!    with [`SubmitError::QueueFull`] when it is full — backpressure
-//!    instead of unbounded memory growth).
-//! 2. **Micro-batcher** — one thread assembles requests into batches
-//!    under a [`BatchPolicy`]: dispatch at `max_batch`, or when the
-//!    oldest queued request has waited `max_wait_us`.
-//! 3. **Worker pool** — each worker owns a [`Net`] replica and a
+//! 1. **Two-lane bounded submit queue** — requests enter a bounded
+//!    [`Lane::Interactive`] or [`Lane::BestEffort`] lane
+//!    ([`ServeHandle::try_infer_with`] + [`InferOptions`]); the batcher
+//!    drains the interactive lane first and only tops batches up from
+//!    best-effort, so interactive p99 stays bounded under overload. A
+//!    full lane rejects cleanly with [`SubmitError::QueueFull`] —
+//!    backpressure instead of unbounded memory growth.
+//! 2. **Per-request deadlines + load shedding** — a request may carry
+//!    a deadline ([`InferOptions::deadline_us`]); the batcher and the
+//!    worker both drop already-expired requests *before* they can
+//!    occupy a batch slot or consume FLOPs, answering
+//!    [`InferOutcome::Expired`] and counting the shed in
+//!    [`ServeReport::expired`].
+//! 3. **Micro-batcher with adaptive max-wait** — one thread assembles
+//!    requests into batches under a [`BatchPolicy`]: dispatch at
+//!    `max_batch`, or when the *oldest queued request* has waited out
+//!    the hold-open window. With [`ServeConfig::adaptive_wait`] the
+//!    window follows an arrival-rate EWMA: dense traffic shrinks it
+//!    (the batch fills itself), sparse traffic grows it back toward
+//!    `max_wait_us` ([`BatchPolicy::window_us`]).
+//! 4. **Worker pool** — each worker owns a [`Net`] replica and a
 //!    ladder of **forward-only** workspaces pre-planned at bucketed
 //!    batch sizes (e.g. 1/4/16); a batch of n runs in the smallest
 //!    bucket ≥ n. Planning happened up front, so the steady-state
 //!    serve loop performs **zero tensor allocations**
 //!    (`tensor::alloc_stats`-verified, like the training hot loop).
-//! 4. **Stats** — end-to-end latency percentiles (p50/p95/p99),
-//!    batch-shape accounting, and rejection counts in a
-//!    [`ServeReport`].
+//! 5. **Stats** — end-to-end latency percentiles (p50/p95/p99),
+//!    overall and per lane, batch-shape accounting, and
+//!    rejection/shed counts in a [`ServeReport`].
+//! 6. **HTTP transport** — a minimal std-only HTTP/1.1 frontend
+//!    ([`HttpServer`], `POST /infer` + `GET /stats`) and the
+//!    `cct serve` CLI subcommand put a real wire protocol in front of
+//!    [`ServeHandle`].
 //!
 //! Padding to a bucket is sound because every layer computes samples
 //! independently in forward mode; a padded row changes nothing about
@@ -38,10 +56,13 @@
 //! heuristic to spread workers over a device fleet.
 
 mod batcher;
+mod http;
+mod lanes;
 mod stats;
 
 pub use batcher::BatchPolicy;
-pub use stats::{percentile, LatencySummary, ServeReport};
+pub use http::HttpServer;
+pub use stats::{percentile, LaneReport, LatencySummary, ServeReport};
 
 use crate::coordinator::flops_proportional_split;
 use crate::device::DeviceSpec;
@@ -52,16 +73,71 @@ use crate::net::{Net, Workspace};
 use crate::rng::Pcg64;
 use crate::tensor::alloc_stats;
 use batcher::MicroBatch;
+use lanes::LaneQueue;
 use stats::Recorder;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// QoS lane a request is submitted on. The batcher drains
+/// [`Lane::Interactive`] strictly first; [`Lane::BestEffort`] tops up
+/// leftover batch slots. Each lane has its own bounded capacity
+/// ([`ServeConfig::queue_cap`]), so an overloaded best-effort lane
+/// sheds onto itself instead of crowding out interactive traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-sensitive traffic: drained first, bounded p99 under
+    /// overload. The default lane.
+    #[default]
+    Interactive = 0,
+    /// Throughput traffic: fills whatever batch capacity interactive
+    /// traffic leaves over; may starve under sustained interactive
+    /// saturation (by design — its bounded lane then backpressures).
+    BestEffort = 1,
+}
+
+impl Lane {
+    /// Stable lowercase name (`"interactive"` / `"best_effort"`) used
+    /// by the HTTP transport and reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::BestEffort => "best_effort",
+        }
+    }
+}
+
+/// Per-request QoS options for [`ServeHandle::try_infer_with`] /
+/// [`ServeHandle::infer_with`]. The default is the interactive lane
+/// with no deadline — identical to plain [`ServeHandle::try_infer`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferOptions {
+    /// Which QoS lane to submit on.
+    pub lane: Lane,
+    /// Optional deadline, in microseconds from enqueue. A request
+    /// whose deadline passes before it reaches a forward pass is shed
+    /// ([`InferOutcome::Expired`]) without consuming any FLOPs.
+    pub deadline_us: Option<u64>,
+}
+
+impl InferOptions {
+    /// Best-effort lane, no deadline.
+    pub fn best_effort() -> Self {
+        InferOptions { lane: Lane::BestEffort, deadline_us: None }
+    }
+
+    /// This options value with a deadline `us` microseconds from
+    /// enqueue.
+    pub fn with_deadline_us(self, us: u64) -> Self {
+        InferOptions { deadline_us: Some(us), ..self }
+    }
+}
 
 /// Engine configuration; `Default` gives a small general-purpose setup
 /// (2 workers, micro-batches up to 16, 2 ms max wait, cost-model
-/// bucket ladder).
+/// bucket ladder, fixed hold-open window).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Worker threads; each owns a net replica and its own workspace
@@ -71,10 +147,17 @@ pub struct ServeConfig {
     pub threads_per_worker: usize,
     /// Hard cap on real samples per micro-batch.
     pub max_batch: usize,
-    /// Max µs an under-full micro-batch waits for stragglers.
+    /// Max µs an under-full micro-batch waits for stragglers, counted
+    /// from its oldest request's enqueue time.
     pub max_wait_us: u64,
-    /// Bounded submit-queue capacity (requests beyond it are rejected).
+    /// Bounded submit-queue capacity *per lane* (requests beyond it
+    /// are rejected).
     pub queue_cap: usize,
+    /// Adapt the hold-open window to the measured arrival rate (an
+    /// EWMA over inter-arrival gaps): dense traffic shrinks the window
+    /// below `max_wait_us`, sparse traffic grows it back to the cap.
+    /// See [`BatchPolicy::window_us`].
+    pub adaptive_wait: bool,
     /// Bucketed batch sizes to pre-plan workspaces for (ascending).
     /// Empty → derive a ladder from the device cost model
     /// ([`plan_bucket_ladder`]).
@@ -91,6 +174,7 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_wait_us: 2_000,
             queue_cap: 256,
+            adaptive_wait: false,
             buckets: Vec::new(),
             seed: 42,
         }
@@ -100,7 +184,7 @@ impl Default for ServeConfig {
 /// Why a non-blocking submission was not accepted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// The bounded request queue is full (backpressure) — retry later
+    /// The bounded request lane is full (backpressure) — retry later
     /// or shed load.
     QueueFull,
     /// The engine has shut down.
@@ -125,12 +209,32 @@ impl std::fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 /// One queued inference request: a flattened `(c, h, w)` sample plus
-/// the reply channel and the enqueue timestamp latency is measured
-/// from.
+/// the reply channel, the enqueue timestamp latency is measured from,
+/// and its QoS parameters.
 pub(crate) struct InferRequest {
     pub(crate) sample: Vec<f32>,
-    pub(crate) reply: mpsc::Sender<InferReply>,
+    pub(crate) reply: mpsc::Sender<InferOutcome>,
     pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) lane: Lane,
+}
+
+impl InferRequest {
+    /// The one definition of the shed protocol, shared by the batcher
+    /// and the worker: if the deadline has passed as of `now`, answer
+    /// [`InferOutcome::Expired`], count the shed, and return `true`
+    /// (callers then drop the request so it never occupies a batch
+    /// slot or costs FLOPs).
+    pub(crate) fn shed_if_expired(&self, now: Instant, stats: &Recorder) -> bool {
+        match self.deadline {
+            Some(d) if now >= d => {
+                stats.record_expired();
+                let _ = self.reply.send(InferOutcome::Expired);
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 /// The answer to one inference request.
@@ -146,30 +250,56 @@ pub struct InferReply {
     pub batch_real: usize,
     /// Bucket (planned batch size) the micro-batch executed at.
     pub bucket: usize,
+    /// QoS lane the request was served on.
+    pub lane: Lane,
+}
+
+/// How a submitted request ended.
+#[derive(Clone, Debug)]
+pub enum InferOutcome {
+    /// The request ran; here are its logits.
+    Reply(InferReply),
+    /// The request's deadline passed before it reached a forward pass;
+    /// it was shed without consuming FLOPs.
+    Expired,
 }
 
 /// An in-flight request: wait on it for the [`InferReply`].
 pub struct PendingInference {
-    rx: mpsc::Receiver<InferReply>,
+    rx: mpsc::Receiver<InferOutcome>,
 }
 
 impl PendingInference {
-    /// Block until the reply arrives; errors if the engine shuts down
-    /// before answering.
+    /// Block until the reply arrives; errors if the request expired
+    /// (deadline shed) or the engine shuts down before answering. Use
+    /// [`PendingInference::wait_outcome`] to distinguish expiry
+    /// without an error.
     pub fn wait(self) -> crate::Result<InferReply> {
+        match self.rx.recv() {
+            Ok(InferOutcome::Reply(r)) => Ok(r),
+            Ok(InferOutcome::Expired) => {
+                Err(crate::err!("request deadline expired before execution (shed)"))
+            }
+            Err(_) => Err(crate::err!("serve engine shut down before answering")),
+        }
+    }
+
+    /// Block until the request resolves either way; errors only if the
+    /// engine shuts down before answering.
+    pub fn wait_outcome(self) -> crate::Result<InferOutcome> {
         self.rx
             .recv()
             .map_err(|_| crate::err!("serve engine shut down before answering"))
     }
 }
 
-/// A cloneable client handle onto the engine's submit queue. Once the
+/// A cloneable client handle onto the engine's submit lanes. Once the
 /// engine's shutdown begins, submissions are refused immediately
 /// ([`SubmitError::Closed`]) so no accepted request can race the
 /// draining batcher.
 #[derive(Clone)]
 pub struct ServeHandle {
-    submit: SyncSender<InferRequest>,
+    queue: Arc<LaneQueue>,
     sample_len: usize,
     stats: Arc<Recorder>,
     stop: Arc<AtomicBool>,
@@ -178,52 +308,94 @@ pub struct ServeHandle {
 impl ServeHandle {
     /// Shared validation + request construction for both submission
     /// paths: checks the sample length and the shutdown flag, then
-    /// wraps the sample with a fresh reply channel.
+    /// wraps the sample with a fresh reply channel and the resolved
+    /// QoS parameters.
     fn build_request(
         &self,
         sample: &[f32],
-    ) -> Result<(InferRequest, mpsc::Receiver<InferReply>), SubmitError> {
+        opts: InferOptions,
+    ) -> Result<(InferRequest, mpsc::Receiver<InferOutcome>), SubmitError> {
         if sample.len() != self.sample_len {
             return Err(SubmitError::BadSample(sample.len(), self.sample_len));
         }
         if self.stop.load(Ordering::Relaxed) {
             return Err(SubmitError::Closed);
         }
+        let enqueued = Instant::now();
+        let deadline = opts.deadline_us.map(|us| enqueued + Duration::from_micros(us));
         let (reply, rx) = mpsc::channel();
-        Ok((InferRequest { sample: sample.to_vec(), reply, enqueued: Instant::now() }, rx))
+        Ok((
+            InferRequest {
+                sample: sample.to_vec(),
+                reply,
+                enqueued,
+                deadline,
+                lane: opts.lane,
+            },
+            rx,
+        ))
     }
 
-    /// Non-blocking submission: enqueue one flattened `(c, h, w)`
-    /// sample, or reject immediately — when the bounded queue is full
-    /// ([`SubmitError::QueueFull`], the backpressure path), when the
-    /// engine is shutting down ([`SubmitError::Closed`]), or when the
-    /// sample length is wrong ([`SubmitError::BadSample`]).
-    pub fn try_infer(&self, sample: &[f32]) -> Result<PendingInference, SubmitError> {
-        let (req, rx) = self.build_request(sample)?;
-        match self.submit.try_send(req) {
-            Ok(()) => Ok(PendingInference { rx }),
-            Err(TrySendError::Full(_)) => {
+    /// Non-blocking QoS submission: enqueue one flattened `(c, h, w)`
+    /// sample on the options' lane, or reject immediately — when the
+    /// bounded lane is full ([`SubmitError::QueueFull`], the
+    /// backpressure path), when the engine is shutting down
+    /// ([`SubmitError::Closed`]), or when the sample length is wrong
+    /// ([`SubmitError::BadSample`]).
+    pub fn try_infer_with(
+        &self,
+        sample: &[f32],
+        opts: InferOptions,
+    ) -> Result<PendingInference, SubmitError> {
+        let (req, rx) = self.build_request(sample, opts)?;
+        match self.queue.try_push(opts.lane, req) {
+            lanes::Push::Ok => Ok(PendingInference { rx }),
+            lanes::Push::Full => {
                 self.stats.record_rejected();
                 Err(SubmitError::QueueFull)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            lanes::Push::Closed => Err(SubmitError::Closed),
         }
     }
 
-    /// Blocking submission: wait for queue space (backpressure by
+    /// Non-blocking submission on the default (interactive, no
+    /// deadline) options — see [`ServeHandle::try_infer_with`].
+    pub fn try_infer(&self, sample: &[f32]) -> Result<PendingInference, SubmitError> {
+        self.try_infer_with(sample, InferOptions::default())
+    }
+
+    /// Blocking QoS submission: wait for lane space (backpressure by
     /// blocking), then wait for the reply. Errors on a mis-sized
-    /// sample or an engine that is (or finishes) shutting down.
+    /// sample, an expired deadline, or an engine that is (or finishes)
+    /// shutting down.
+    pub fn infer_with(&self, sample: &[f32], opts: InferOptions) -> crate::Result<InferReply> {
+        let (req, rx) = self.build_request(sample, opts).map_err(|e| crate::err!("{e}"))?;
+        match self.queue.push_blocking(opts.lane, req) {
+            lanes::Push::Ok => PendingInference { rx }.wait(),
+            _ => Err(crate::err!("serve engine is shut down")),
+        }
+    }
+
+    /// Blocking submission on the default (interactive, no deadline)
+    /// options — see [`ServeHandle::infer_with`].
     pub fn infer(&self, sample: &[f32]) -> crate::Result<InferReply> {
-        let (req, rx) = self.build_request(sample).map_err(|e| crate::err!("{e}"))?;
-        self.submit
-            .send(req)
-            .map_err(|_| crate::err!("serve engine is shut down"))?;
-        PendingInference { rx }.wait()
+        self.infer_with(sample, InferOptions::default())
+    }
+
+    /// Snapshot of the serving statistics so far (what the HTTP
+    /// transport's `GET /stats` answers with).
+    pub fn stats(&self) -> ServeReport {
+        self.stats.report()
+    }
+
+    /// Flattened sample length (`c·h·w`) requests must carry.
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
     }
 }
 
-/// The dynamic micro-batching inference engine: bounded queue →
-/// batcher → worker pool, all running on background threads until
+/// The dynamic micro-batching inference engine: bounded two-lane queue
+/// → batcher → worker pool, all running on background threads until
 /// [`ServeEngine::shutdown`].
 ///
 /// ```
@@ -255,9 +427,9 @@ impl ServeHandle {
 /// assert!(report.worker_steady_allocs.iter().all(|&a| a == 0));
 /// ```
 pub struct ServeEngine {
-    submit: SyncSender<InferRequest>,
+    queue: Arc<LaneQueue>,
     stop: Arc<AtomicBool>,
-    batcher: JoinHandle<()>,
+    batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Recorder>,
     sample_len: usize,
@@ -267,7 +439,7 @@ pub struct ServeEngine {
 impl ServeEngine {
     /// Build the worker pool (identically seeded net replicas with
     /// pre-planned forward-only workspace ladders), start the batcher,
-    /// and open the submit queue. All workspace allocation happens
+    /// and open the submit lanes. All workspace allocation happens
     /// here; the serving steady state allocates no tensors.
     pub fn start(cfg: &NetConfig, serve: ServeConfig) -> crate::Result<ServeEngine> {
         ensure!(serve.workers >= 1, "need at least one serve worker");
@@ -315,7 +487,7 @@ impl ServeEngine {
         let (c, h, w) = cfg.input;
         let sample_len = c * h * w;
 
-        let (submit, submit_rx) = mpsc::sync_channel::<InferRequest>(serve.queue_cap);
+        let queue = Arc::new(LaneQueue::new(serve.queue_cap));
         let (work_tx, work_rx) = mpsc::sync_channel::<MicroBatch>(serve.workers);
         let work_rx = Arc::new(Mutex::new(work_rx));
         let stop = Arc::new(AtomicBool::new(false));
@@ -341,21 +513,35 @@ impl ServeEngine {
             workers.push(handle);
         }
 
-        let policy = BatchPolicy { max_batch: serve.max_batch, max_wait_us: serve.max_wait_us };
+        let policy = BatchPolicy {
+            max_batch: serve.max_batch,
+            max_wait_us: serve.max_wait_us,
+            adaptive: serve.adaptive_wait,
+        };
         let stop_b = Arc::clone(&stop);
+        let queue_b = Arc::clone(&queue);
+        let stats_b = Arc::clone(&stats);
         let batcher = std::thread::Builder::new()
             .name("serve-batcher".to_string())
-            .spawn(move || batcher::run(submit_rx, work_tx, policy, stop_b))
+            .spawn(move || batcher::run(queue_b, work_tx, policy, stop_b, stats_b))
             .map_err(|e| crate::err!("spawning serve batcher: {e}"))?;
 
-        Ok(ServeEngine { submit, stop, batcher, workers, stats, sample_len, buckets })
+        Ok(ServeEngine {
+            queue,
+            stop,
+            batcher: Some(batcher),
+            workers,
+            stats,
+            sample_len,
+            buckets,
+        })
     }
 
-    /// A new client handle onto the submit queue (cloneable; hand one
-    /// to each load-generator thread).
+    /// A new client handle onto the submit lanes (cloneable; hand one
+    /// to each load-generator thread or transport connection).
     pub fn handle(&self) -> ServeHandle {
         ServeHandle {
-            submit: self.submit.clone(),
+            queue: Arc::clone(&self.queue),
             sample_len: self.sample_len,
             stats: Arc::clone(&self.stats),
             stop: Arc::clone(&self.stop),
@@ -378,23 +564,52 @@ impl ServeEngine {
         self.stats.report()
     }
 
-    /// Stop accepting work, drain the queue, join every thread, and
+    /// Stop accepting work, drain the lanes, join every thread, and
     /// return the final [`ServeReport`]. In-flight and queued requests
-    /// are answered before workers exit.
-    pub fn shutdown(self) -> ServeReport {
-        let ServeEngine { submit, stop, batcher, workers, stats, .. } = self;
-        stop.store(true, Ordering::Relaxed);
-        drop(submit);
-        let _ = batcher.join();
-        for h in workers {
+    /// are answered before workers exit; a client blocked in
+    /// [`ServeHandle::infer`] during the drain gets either its answer
+    /// or a clean shutdown error — never a hang.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.stop.store(true, Ordering::Relaxed);
+        // The batcher sees the flag, drains both lanes (answering
+        // everything queued), then exits and closes the work channel.
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        // Closing the lanes wakes any producer still blocked in a
+        // blocking push; its request is dropped, which errors the
+        // client's wait cleanly.
+        self.queue.close();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
-        stats.report()
+        self.stats.report()
+        // Drop runs next and finds nothing left to do.
+    }
+}
+
+/// An engine dropped *without* [`ServeEngine::shutdown`] (an error
+/// path, a test early-return) must not leak a spinning batcher and
+/// parked workers for the process lifetime: stop abruptly — close the
+/// lanes first (queued requests error their clients instead of being
+/// answered) — and reap every thread. Prefer `shutdown()`, which
+/// drains gracefully and returns the final report.
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.close();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
 /// Worker thread body: pull micro-batches off the shared work queue,
-/// run them in the smallest covering bucket, and answer each request.
+/// shed anything already expired, run the rest in the smallest
+/// covering bucket, and answer each request.
 fn worker_loop(
     net: &mut Net,
     mut workspaces: Vec<(usize, Workspace)>,
@@ -412,7 +627,15 @@ fn worker_loop(
         // recv, the rest queue on the lock (the std worker-pool idiom).
         let job = { rx.lock().expect("serve work queue poisoned").recv() };
         let Ok(mut batch) = job else { break };
+        // Last line of deadline defense: shed anything that expired
+        // while it sat in the queue or the work channel, *before* it
+        // can claim a bucket slot or any FLOPs.
+        let now = Instant::now();
+        batch.requests.retain(|req| !req.shed_if_expired(now, stats));
         let n = batch.requests.len();
+        if n == 0 {
+            continue;
+        }
         let idx = workspaces
             .iter()
             .position(|(b, _)| *b >= n)
@@ -442,15 +665,16 @@ fn worker_loop(
                 }
             }
             let latency_s = req.enqueued.elapsed().as_secs_f64();
-            stats.record_request(latency_s * 1e6);
+            stats.record_request(latency_s * 1e6, req.lane);
             // A client that gave up (dropped its receiver) is fine.
-            let _ = req.reply.send(InferReply {
+            let _ = req.reply.send(InferOutcome::Reply(InferReply {
                 logits: row.to_vec(),
                 class,
                 latency_s,
                 batch_real: n,
                 bucket,
-            });
+                lane: req.lane,
+            }));
         }
     }
     stats.record_worker_allocs(alloc_stats::allocs_since(baseline));
@@ -582,23 +806,23 @@ fc   { name: f1 out: 3 std: 0.1 }
         assert!(placement[0] > placement[1], "faster device should host more workers");
     }
 
-    fn test_handle(cap: usize) -> (ServeHandle, Receiver<InferRequest>, Arc<Recorder>) {
-        let (submit, rx) = mpsc::sync_channel::<InferRequest>(cap);
+    fn test_handle(cap: usize) -> (ServeHandle, Arc<LaneQueue>, Arc<Recorder>) {
+        let queue = Arc::new(LaneQueue::new(cap));
         let stats = Arc::new(Recorder::new());
         let handle = ServeHandle {
-            submit,
+            queue: Arc::clone(&queue),
             sample_len: 4,
             stats: Arc::clone(&stats),
             stop: Arc::new(AtomicBool::new(false)),
         };
-        (handle, rx, stats)
+        (handle, queue, stats)
     }
 
     #[test]
     fn backpressure_rejects_when_queue_full() {
-        // A handle over a bounded queue with no consumer: the first
-        // submissions fill the queue, the next is rejected cleanly.
-        let (handle, _rx, stats) = test_handle(2);
+        // A handle over a bounded lane with no consumer: the first
+        // submissions fill the lane, the next is rejected cleanly.
+        let (handle, _queue, stats) = test_handle(2);
         let sample = [0.0f32; 4];
         assert!(handle.try_infer(&sample).is_ok());
         assert!(handle.try_infer(&sample).is_ok());
@@ -607,13 +831,29 @@ fc   { name: f1 out: 3 std: 0.1 }
     }
 
     #[test]
+    fn lanes_have_independent_capacity() {
+        // Filling the best-effort lane must not reject interactive
+        // traffic (and vice versa) — that isolation is the whole point
+        // of the two-lane design.
+        let (handle, _queue, _stats) = test_handle(1);
+        let sample = [0.0f32; 4];
+        let be = InferOptions::best_effort();
+        assert!(handle.try_infer_with(&sample, be).is_ok());
+        assert_eq!(
+            handle.try_infer_with(&sample, be).unwrap_err(),
+            SubmitError::QueueFull
+        );
+        assert!(handle.try_infer(&sample).is_ok(), "interactive lane unaffected");
+    }
+
+    #[test]
     fn submit_to_closed_engine_errors() {
-        let (handle, rx, _stats) = test_handle(2);
-        drop(rx);
+        let (handle, queue, _stats) = test_handle(2);
+        queue.close();
         assert_eq!(handle.try_infer(&[0.0; 4]).unwrap_err(), SubmitError::Closed);
         assert!(handle.infer(&[0.0; 4]).is_err());
         // A raised stop flag refuses work even while the queue exists.
-        let (handle, _rx, _stats) = test_handle(2);
+        let (handle, _queue, _stats) = test_handle(2);
         handle.stop.store(true, Ordering::Relaxed);
         assert_eq!(handle.try_infer(&[0.0; 4]).unwrap_err(), SubmitError::Closed);
         assert!(handle.infer(&[0.0; 4]).is_err());
@@ -621,12 +861,33 @@ fc   { name: f1 out: 3 std: 0.1 }
 
     #[test]
     fn mis_sized_sample_is_an_error_not_a_panic() {
-        let (handle, _rx, _stats) = test_handle(2);
+        let (handle, _queue, _stats) = test_handle(2);
         assert_eq!(
             handle.try_infer(&[0.0; 3]).unwrap_err(),
             SubmitError::BadSample(3, 4)
         );
         assert!(handle.infer(&[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn dropping_engine_without_shutdown_reaps_threads() {
+        let engine = ServeEngine::start(
+            &tiny_cfg(),
+            ServeConfig { workers: 1, max_batch: 4, max_wait_us: 500, ..Default::default() },
+        )
+        .unwrap();
+        let handle = engine.handle();
+        let pending = handle.try_infer(&[0.1f32; 64]).expect("queue has room");
+        // Dropping without shutdown() must stop and join everything —
+        // the queued request is either answered during teardown or its
+        // client errors; neither side hangs (the test completing IS
+        // the assertion that all threads were reaped).
+        drop(engine);
+        let _ = pending.wait_outcome();
+        assert!(
+            handle.try_infer(&[0.1f32; 64]).is_err(),
+            "a dropped engine must refuse new work"
+        );
     }
 
     #[test]
@@ -649,6 +910,7 @@ fc   { name: f1 out: 3 std: 0.1 }
             assert!(reply.class < 3);
             assert!(reply.latency_s >= 0.0);
             assert!(reply.batch_real >= 1 && reply.batch_real <= reply.bucket);
+            assert_eq!(reply.lane, Lane::Interactive);
         }
         // Identically seeded replicas + identical input ⇒ identical logits.
         for reply in &pending[1..] {
@@ -657,7 +919,10 @@ fc   { name: f1 out: 3 std: 0.1 }
         let report = engine.shutdown();
         assert_eq!(report.completed, 8);
         assert_eq!(report.rejected, 0);
+        assert_eq!(report.expired, 0);
         assert!(report.batches >= 1);
         assert!(report.latency.p99_us >= report.latency.p50_us);
+        assert_eq!(report.lane(Lane::Interactive).completed, 8);
+        assert_eq!(report.lane(Lane::BestEffort).completed, 0);
     }
 }

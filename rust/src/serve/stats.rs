@@ -1,6 +1,7 @@
-//! Serving statistics: end-to-end latency percentiles (p50/p95/p99),
-//! micro-batch shape accounting, backpressure rejections, and the
-//! per-worker steady-state allocation counters that extend PR 1's
+//! Serving statistics: end-to-end latency percentiles (p50/p95/p99,
+//! overall and per QoS lane), micro-batch shape accounting,
+//! backpressure rejections, deadline sheds, and the per-worker
+//! steady-state allocation counters that extend PR 1's
 //! zero-allocation guarantee to the serving hot loop.
 //!
 //! All recording goes through a shared [`Recorder`] behind one mutex;
@@ -8,6 +9,7 @@
 //! outside the forward pass, so contention is negligible next to even
 //! a small net's inference cost.
 
+use super::Lane;
 use crate::rng::Pcg64;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -53,13 +55,27 @@ impl LatencySummary {
 }
 
 /// Nearest-rank percentile of an ascending-sorted slice; `p` in
-/// `[0, 100]`. Empty input returns 0.
+/// `[0, 100]`: the smallest element with at least `⌈p/100 · n⌉` of the
+/// distribution at or below it. `p = 0` returns the minimum, `p = 100`
+/// the maximum, a one-element slice returns its element for every `p`,
+/// and empty input returns 0. Out-of-range `p` clamps to those
+/// endpoints.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Completion count and latency distribution for one QoS lane.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneReport {
+    /// Requests answered on this lane.
+    pub completed: u64,
+    /// End-to-end latency distribution for this lane.
+    pub latency: LatencySummary,
 }
 
 /// End-of-run serving statistics, returned by
@@ -68,8 +84,12 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 pub struct ServeReport {
     /// Requests answered.
     pub completed: u64,
-    /// Requests rejected by backpressure (bounded queue full).
+    /// Requests rejected by backpressure (bounded lane full).
     pub rejected: u64,
+    /// Requests shed because their deadline expired before execution
+    /// (answered [`InferOutcome`](super::InferOutcome)`::Expired`
+    /// without consuming a batch slot or any FLOPs).
+    pub expired: u64,
     /// Micro-batches dispatched to workers.
     pub batches: u64,
     /// Mean *real* samples per dispatched micro-batch.
@@ -81,24 +101,75 @@ pub struct ServeReport {
     pub wall_s: f64,
     /// Completed requests per wall-clock second.
     pub throughput_rps: f64,
-    /// End-to-end request latency distribution (`mean_us`/`max_us`
-    /// exact; percentiles estimated from a 64 Ki reservoir sample).
+    /// End-to-end request latency distribution over all lanes
+    /// (`mean_us`/`max_us` exact; percentiles estimated from a 64 Ki
+    /// reservoir sample).
     pub latency: LatencySummary,
+    /// Per-lane completion counts and latency, indexed by
+    /// `Lane as usize` — see [`ServeReport::lane`].
+    pub lanes: [LaneReport; 2],
     /// Tensor allocations each worker performed *after* its workspaces
     /// were planned — the steady-state serve loop must report all
     /// zeros (the `tensor::alloc_stats` invariant).
     pub worker_steady_allocs: Vec<u64>,
 }
 
+impl ServeReport {
+    /// The sub-report for one QoS lane.
+    pub fn lane(&self, lane: Lane) -> &LaneReport {
+        &self.lanes[lane as usize]
+    }
+}
+
+/// One latency aggregate: exact count/mean/max plus an Algorithm R
+/// reservoir for percentile estimation.
+#[derive(Clone, Default)]
+struct LatAgg {
+    sample: Vec<f64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LatAgg {
+    fn observe(&mut self, v: f64, rng: &mut Pcg64) {
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+        if self.sample.len() < RESERVOIR_CAP {
+            self.sample.push(v);
+        } else {
+            // Algorithm R: keep each of the n seen so far with
+            // probability CAP/n.
+            let j = rng.below(self.count) as usize;
+            if j < RESERVOIR_CAP {
+                self.sample[j] = v;
+            }
+        }
+    }
+
+    fn summary(&self) -> LatencySummary {
+        let mut s = LatencySummary::from_samples(&self.sample);
+        if self.count > 0 {
+            // Exact where exact is cheap; the reservoir only serves
+            // the percentiles.
+            s.mean_us = self.sum / self.count as f64;
+            s.max_us = self.max;
+        }
+        s
+    }
+}
+
 struct Inner {
-    /// Uniform latency sample (Algorithm R), capped at
-    /// [`RESERVOIR_CAP`].
-    lat_sample: Vec<f64>,
-    lat_count: u64,
-    lat_sum: f64,
-    lat_max: f64,
+    /// All completed requests, across lanes.
+    all: LatAgg,
+    /// Per-lane aggregates, indexed by `Lane as usize`.
+    lanes: [LatAgg; 2],
     rng: Pcg64,
     rejected: u64,
+    expired: u64,
     batches: u64,
     real_samples: u64,
     padded_slots: u64,
@@ -108,12 +179,11 @@ struct Inner {
 impl Default for Inner {
     fn default() -> Self {
         Inner {
-            lat_sample: Vec::new(),
-            lat_count: 0,
-            lat_sum: 0.0,
-            lat_max: 0.0,
+            all: LatAgg::default(),
+            lanes: [LatAgg::default(), LatAgg::default()],
             rng: Pcg64::with_stream(0x57a7, 0x1a7e),
             rejected: 0,
+            expired: 0,
             batches: 0,
             real_samples: 0,
             padded_slots: 0,
@@ -133,27 +203,19 @@ impl Recorder {
         Recorder { started: Instant::now(), inner: Mutex::new(Inner::default()) }
     }
 
-    pub(crate) fn record_request(&self, latency_us: f64) {
+    pub(crate) fn record_request(&self, latency_us: f64, lane: Lane) {
         let mut g = self.inner.lock().expect("stats poisoned");
-        g.lat_count += 1;
-        g.lat_sum += latency_us;
-        if latency_us > g.lat_max {
-            g.lat_max = latency_us;
-        }
-        if g.lat_sample.len() < RESERVOIR_CAP {
-            g.lat_sample.push(latency_us);
-        } else {
-            // Algorithm R: keep each of the n seen so far with
-            // probability CAP/n.
-            let j = g.rng.below(g.lat_count) as usize;
-            if j < RESERVOIR_CAP {
-                g.lat_sample[j] = latency_us;
-            }
-        }
+        let Inner { all, lanes, rng, .. } = &mut *g;
+        all.observe(latency_us, rng);
+        lanes[lane as usize].observe(latency_us, rng);
     }
 
     pub(crate) fn record_rejected(&self) {
         self.inner.lock().expect("stats poisoned").rejected += 1;
+    }
+
+    pub(crate) fn record_expired(&self) {
+        self.inner.lock().expect("stats poisoned").expired += 1;
     }
 
     pub(crate) fn record_batch(&self, real: usize, bucket: usize) {
@@ -171,14 +233,13 @@ impl Recorder {
         // Copy the raw numbers out under the lock, then sort/summarize
         // outside it — a live `stats()` snapshot must not stall the
         // workers' recording calls for the duration of a 64 Ki sort.
-        let (lat_sample, completed, lat_sum, lat_max, rejected, batches, real, padded, allocs) = {
+        let (all, lanes, rejected, expired, batches, real, padded, allocs) = {
             let g = self.inner.lock().expect("stats poisoned");
             (
-                g.lat_sample.clone(),
-                g.lat_count,
-                g.lat_sum,
-                g.lat_max,
+                g.all.clone(),
+                g.lanes.clone(),
                 g.rejected,
+                g.expired,
                 g.batches,
                 g.real_samples,
                 g.padded_slots,
@@ -186,22 +247,21 @@ impl Recorder {
             )
         };
         let wall_s = self.started.elapsed().as_secs_f64();
-        let mut latency = LatencySummary::from_samples(&lat_sample);
-        if completed > 0 {
-            // Exact where exact is cheap; the reservoir only serves
-            // the percentiles.
-            latency.mean_us = lat_sum / completed as f64;
-            latency.max_us = lat_max;
-        }
+        let completed = all.count;
         ServeReport {
             completed,
             rejected,
+            expired,
             batches,
             mean_batch: if batches == 0 { 0.0 } else { real as f64 / batches as f64 },
             padded_slots: padded,
             wall_s,
             throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
-            latency,
+            latency: all.summary(),
+            lanes: [
+                LaneReport { completed: lanes[0].count, latency: lanes[0].summary() },
+                LaneReport { completed: lanes[1].count, latency: lanes[1].summary() },
+            ],
             worker_steady_allocs: allocs,
         }
     }
@@ -212,13 +272,32 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentile_nearest_rank() {
+    fn percentile_nearest_rank_exact() {
         let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // Nearest rank on 1..=100: rank ⌈p⌉, value = rank.
+        assert_eq!(percentile(&s, 50.0), 50.0);
+        assert_eq!(percentile(&s, 95.0), 95.0);
+        assert_eq!(percentile(&s, 99.0), 99.0);
+        assert_eq!(percentile(&s, 0.1), 1.0);
+    }
+
+    #[test]
+    fn percentile_boundary_cases() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // p = 0 is the minimum, p = 100 the maximum; out-of-range clamps.
         assert_eq!(percentile(&s, 0.0), 1.0);
         assert_eq!(percentile(&s, 100.0), 100.0);
-        assert!((percentile(&s, 50.0) - 51.0).abs() <= 1.0);
-        assert!(percentile(&s, 95.0) >= 94.0);
+        assert_eq!(percentile(&s, -5.0), 1.0);
+        assert_eq!(percentile(&s, 250.0), 100.0);
+        // A one-element slice answers every p with its element.
+        for p in [0.0, 1.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+        // Empty input returns 0.
         assert_eq!(percentile(&[], 50.0), 0.0);
+        // Two elements: the median is the first (⌈0.5·2⌉ = 1).
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 51.0), 2.0);
     }
 
     #[test]
@@ -228,7 +307,7 @@ mod tests {
         assert!((sum.mean_us - 500.5).abs() < 1e-9);
         assert_eq!(sum.max_us, 1000.0);
         assert!(sum.p50_us <= sum.p95_us && sum.p95_us <= sum.p99_us);
-        assert!((sum.p99_us - 990.0).abs() < 5.0);
+        assert_eq!(sum.p99_us, 990.0);
     }
 
     #[test]
@@ -236,7 +315,7 @@ mod tests {
         let r = Recorder::new();
         let n = RESERVOIR_CAP + 1_000;
         for i in 0..n {
-            r.record_request(i as f64);
+            r.record_request(i as f64, Lane::Interactive);
         }
         let rep = r.report();
         // Count, mean, and max are exact even past the reservoir cap…
@@ -249,6 +328,9 @@ mod tests {
         assert!(rep.latency.p95_us <= rep.latency.p99_us);
         assert!(rep.latency.p99_us <= rep.latency.max_us);
         assert!((rep.latency.p50_us - exact_mean).abs() < n as f64 * 0.05);
+        // Everything ran on the interactive lane.
+        assert_eq!(rep.lane(Lane::Interactive).completed, n as u64);
+        assert_eq!(rep.lane(Lane::BestEffort).completed, 0);
     }
 
     #[test]
@@ -256,17 +338,25 @@ mod tests {
         let r = Recorder::new();
         r.record_batch(3, 4);
         r.record_batch(1, 1);
-        r.record_request(100.0);
-        r.record_request(300.0);
+        r.record_request(100.0, Lane::Interactive);
+        r.record_request(300.0, Lane::BestEffort);
         r.record_rejected();
+        r.record_expired();
+        r.record_expired();
         r.record_worker_allocs(0);
         let rep = r.report();
         assert_eq!(rep.completed, 2);
         assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.expired, 2);
         assert_eq!(rep.batches, 2);
         assert_eq!(rep.padded_slots, 1);
         assert!((rep.mean_batch - 2.0).abs() < 1e-12);
         assert_eq!(rep.worker_steady_allocs, vec![0]);
         assert!((rep.latency.mean_us - 200.0).abs() < 1e-9);
+        // Lane split: one completion each, with the right latencies.
+        assert_eq!(rep.lane(Lane::Interactive).completed, 1);
+        assert_eq!(rep.lane(Lane::BestEffort).completed, 1);
+        assert!((rep.lane(Lane::Interactive).latency.mean_us - 100.0).abs() < 1e-9);
+        assert!((rep.lane(Lane::BestEffort).latency.mean_us - 300.0).abs() < 1e-9);
     }
 }

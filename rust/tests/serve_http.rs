@@ -1,0 +1,171 @@
+//! HTTP transport round-trip: a real `TcpStream` client against
+//! [`cct::serve::HttpServer`] fronting a live engine — `POST /infer`
+//! (JSON and raw-f32 bodies, QoS headers) and `GET /stats`, plus the
+//! error statuses (400 bad input, 404 unknown route, 504 expired
+//! deadline).
+
+use cct::net::parse_net;
+use cct::serve::{HttpServer, ServeConfig, ServeEngine};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+const NET: &str = "
+name: httptest
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+fc   { name: f1 out: 3 std: 0.1 }
+";
+
+const SAMPLE_LEN: usize = 64;
+
+fn start() -> (ServeEngine, HttpServer) {
+    let cfg = parse_net(NET).unwrap();
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig { workers: 1, max_batch: 4, max_wait_us: 500, ..Default::default() },
+    )
+    .unwrap();
+    let server = HttpServer::bind(engine.handle(), "127.0.0.1:0", 0).expect("bind ephemeral port");
+    (engine, server)
+}
+
+/// Send one raw HTTP/1.1 request and return (status, body). The server
+/// replies `Connection: close`, so read-to-end terminates.
+fn request(addr: SocketAddr, head: &str, body: &[u8]) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(head.as_bytes()).expect("write head");
+    stream.write_all(body).expect("write body");
+    stream.flush().unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn post_infer(addr: SocketAddr, extra_headers: &str, body: &[u8], content_type: &str) -> (u16, String) {
+    let head = format!(
+        "POST /infer HTTP/1.1\r\nHost: cct\r\nContent-Type: {content_type}\r\n{extra_headers}Content-Length: {}\r\n\r\n",
+        body.len()
+    );
+    request(addr, &head, body)
+}
+
+fn json_sample(value: f32) -> Vec<u8> {
+    let mut parts = Vec::with_capacity(SAMPLE_LEN);
+    for _ in 0..SAMPLE_LEN {
+        parts.push(format!("{value}"));
+    }
+    format!("[{}]", parts.join(",")).into_bytes()
+}
+
+#[test]
+fn infer_round_trip_json_and_binary_agree() {
+    let (engine, server) = start();
+    let addr = server.local_addr();
+
+    // JSON body.
+    let (status, body) = post_infer(addr, "", &json_sample(0.5), "application/json");
+    assert_eq!(status, 200, "body: {body}");
+    assert!(body.contains("\"class\":"), "{body}");
+    assert!(body.contains("\"logits\":["), "{body}");
+    assert!(body.contains("\"lane\":\"interactive\""), "{body}");
+
+    // The same sample as raw little-endian f32 bytes must classify
+    // identically (identical engine, identical input bits).
+    let mut bin = Vec::with_capacity(SAMPLE_LEN * 4);
+    for _ in 0..SAMPLE_LEN {
+        bin.extend_from_slice(&0.5f32.to_le_bytes());
+    }
+    let (status2, body2) = post_infer(addr, "", &bin, "application/octet-stream");
+    assert_eq!(status2, 200, "body: {body2}");
+    let class = |b: &str| {
+        b.split("\"class\":")
+            .nth(1)
+            .and_then(|s| s.split([',', '}']).next())
+            .map(|s| s.to_string())
+    };
+    assert_eq!(class(&body), class(&body2), "JSON and binary bodies diverged");
+
+    server.shutdown();
+    let report = engine.shutdown();
+    assert_eq!(report.completed, 2);
+    assert!(report.worker_steady_allocs.iter().all(|&a| a == 0));
+}
+
+#[test]
+fn qos_headers_route_lane_and_deadline() {
+    let (engine, server) = start();
+    let addr = server.local_addr();
+
+    // Best-effort lane via header.
+    let (status, body) = post_infer(
+        addr,
+        "X-Priority: best-effort\r\n",
+        &json_sample(0.25),
+        "application/json",
+    );
+    assert_eq!(status, 200, "body: {body}");
+    assert!(body.contains("\"lane\":\"best_effort\""), "{body}");
+
+    // A zero deadline is expired on arrival: shed as 504, no FLOPs.
+    let (status, body) = post_infer(
+        addr,
+        "X-Deadline-Us: 0\r\n",
+        &json_sample(0.25),
+        "application/json",
+    );
+    assert_eq!(status, 504, "body: {body}");
+
+    // An unknown priority is a client error.
+    let (status, _) =
+        post_infer(addr, "X-Priority: bulk\r\n", &json_sample(0.25), "application/json");
+    assert_eq!(status, 400);
+
+    server.shutdown();
+    let report = engine.shutdown();
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.expired, 1);
+}
+
+#[test]
+fn stats_health_and_errors() {
+    let (engine, server) = start();
+    let addr = server.local_addr();
+
+    // Serve one request so /stats has something to report.
+    let (status, _) = post_infer(addr, "", &json_sample(1.0), "application/json");
+    assert_eq!(status, 200);
+
+    let (status, body) = request(addr, "GET /stats HTTP/1.1\r\nHost: cct\r\n\r\n", b"");
+    assert_eq!(status, 200, "body: {body}");
+    assert!(body.contains("\"completed\":1"), "{body}");
+    assert!(body.contains("\"lanes\":"), "{body}");
+    // Workers report their steady-state alloc counters at exit, so a
+    // live snapshot legitimately shows an empty array.
+    assert!(body.contains("\"worker_steady_allocs\":["), "{body}");
+
+    let (status, body) = request(addr, "GET /healthz HTTP/1.1\r\nHost: cct\r\n\r\n", b"");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\":true"), "{body}");
+
+    // Wrong sample length → 400 naming both lengths.
+    let (status, body) = post_infer(addr, "", b"[1,2,3]", "application/json");
+    assert_eq!(status, 400);
+    assert!(body.contains("expected 64"), "{body}");
+
+    // Malformed body → 400; unknown route → 404.
+    let (status, _) = post_infer(addr, "", b"not json", "application/json");
+    assert_eq!(status, 400);
+    let (status, _) = request(addr, "GET /nope HTTP/1.1\r\nHost: cct\r\n\r\n", b"");
+    assert_eq!(status, 404);
+
+    server.shutdown();
+    engine.shutdown();
+}

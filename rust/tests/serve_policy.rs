@@ -13,13 +13,24 @@
 //!    allocates a tensor after workspace planning (the
 //!    `tensor::alloc_stats` invariant, extended from training to
 //!    serving).
+//! 5. **Deadline shedding** — an expired request is answered
+//!    `Expired` without ever reaching a forward pass (no batch, no
+//!    bucket slot, no FLOPs).
+//! 6. **Priority lanes** — under a best-effort backlog an interactive
+//!    request jumps the line.
+//! 7. **Shutdown/submit race** — a blocking `infer` issued while
+//!    `shutdown()` drains returns an answer or an error, never a
+//!    panic or a hang.
 
 use cct::layers::{ExecCtx, Phase};
 use cct::net::config::build_net;
 use cct::net::parse_net;
 use cct::rng::Pcg64;
-use cct::serve::{closed_loop, ServeConfig, ServeEngine, SubmitError};
+use cct::serve::{
+    closed_loop, InferOptions, InferOutcome, Lane, ServeConfig, ServeEngine, SubmitError,
+};
 use cct::tensor::Tensor;
+use std::time::Duration;
 
 const NET: &str = "
 name: servetest
@@ -151,6 +162,118 @@ fn backpressure_rejects_cleanly_and_answers_the_rest() {
     let report = engine.shutdown();
     assert_eq!(report.completed, n);
     assert_eq!(report.rejected, rejected);
+}
+
+#[test]
+fn expired_requests_shed_before_any_flops() {
+    let cfg = parse_net(NET).unwrap();
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig { workers: 1, max_batch: 4, max_wait_us: 1_000, ..Default::default() },
+    )
+    .unwrap();
+    let handle = engine.handle();
+    // deadline_us = 0: expired the instant it is enqueued.
+    let opts = InferOptions::default().with_deadline_us(0);
+    let pending: Vec<_> = (0..5)
+        .map(|i| handle.try_infer_with(&sample(i), opts).expect("queue has room"))
+        .collect();
+    for p in pending {
+        let outcome = p.wait_outcome().expect("engine must answer sheds");
+        assert!(
+            matches!(outcome, InferOutcome::Expired),
+            "an already-expired request must be shed, not executed"
+        );
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.expired, 5);
+    assert_eq!(report.completed, 0);
+    // The load-shedding point of the feature: no forward pass ran, so
+    // no batch was ever dispatched and no bucket slot was consumed.
+    assert_eq!(report.batches, 0, "expired requests must not reach a worker");
+    assert_eq!(report.padded_slots, 0);
+}
+
+#[test]
+fn interactive_lane_jumps_the_best_effort_backlog() {
+    let cfg = parse_net(NET).unwrap();
+    // One worker, batch-1 buckets: requests are served strictly one at
+    // a time, so completion order is exactly the batcher's pop order.
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait_us: 0,
+            buckets: vec![1],
+            queue_cap: 64,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let handle = engine.handle();
+    // Build a best-effort backlog, then submit one interactive request.
+    let be: Vec<_> = (0..16)
+        .map(|i| {
+            handle
+                .try_infer_with(&sample(i), InferOptions::best_effort())
+                .expect("queue has room")
+        })
+        .collect();
+    let interactive = handle.try_infer(&sample(99)).expect("queue has room");
+    let ia_latency = interactive.wait().expect("interactive answered").latency_s;
+    let be_latencies: Vec<f64> = be
+        .into_iter()
+        .map(|p| p.wait().expect("best-effort answered").latency_s)
+        .collect();
+    let report = engine.shutdown();
+    assert_eq!(report.completed, 17);
+    assert_eq!(report.lane(Lane::Interactive).completed, 1);
+    assert_eq!(report.lane(Lane::BestEffort).completed, 16);
+    // Submitted last, the interactive request must still beat the bulk
+    // of the backlog (at most a couple of best-effort requests can
+    // already be in flight when it lands).
+    let slower = be_latencies.iter().filter(|&&l| l > ia_latency).count();
+    assert!(
+        slower >= 8,
+        "interactive request should overtake the best-effort backlog \
+         (only {slower}/16 best-effort requests finished after it)"
+    );
+}
+
+#[test]
+fn blocking_infer_racing_shutdown_errors_never_hangs() {
+    let cfg = parse_net(NET).unwrap();
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig { workers: 1, max_batch: 4, max_wait_us: 200, ..Default::default() },
+    )
+    .unwrap();
+    let handle = engine.handle();
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let client = std::thread::spawn(move || {
+        let s = sample(1);
+        let mut answered = 0u64;
+        // Hammer the blocking path until shutdown turns it away.
+        for _ in 0..1_000_000 {
+            match handle.infer(&s) {
+                Ok(_) => answered += 1,
+                Err(_) => break,
+            }
+        }
+        done_tx.send(()).ok();
+        answered
+    });
+    // Let the client get in flight, then shut down underneath it.
+    std::thread::sleep(Duration::from_millis(50));
+    let report = engine.shutdown();
+    // The client must resolve promptly — an error (or drained answer),
+    // never a hang or a panic.
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("blocking infer hung across shutdown");
+    let answered = client.join().expect("client panicked racing shutdown");
+    assert_eq!(report.completed, answered, "every Ok reply must be counted exactly once");
 }
 
 #[test]
