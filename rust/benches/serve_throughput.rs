@@ -22,6 +22,14 @@
 //! live requests), and the interactive lane's p99 stays below the
 //! best-effort p99.
 //!
+//! A fourth section measures the **HTTP transport** itself: the same
+//! closed-loop load driven over real sockets, once reconnecting per
+//! request (`Connection: close` — a TCP handshake per inference) and
+//! once over persistent keep-alive connections on the same bounded
+//! handler pool. Acceptance: keep-alive sustains higher request
+//! throughput at equal worker count, with the reuse counter proving
+//! the connections actually persisted.
+//!
 //! Also asserts the plan-once invariant end-to-end: every worker's
 //! steady-state tensor-allocation count must be 0.
 //!
@@ -31,8 +39,12 @@ use cct::bench_util::Table;
 use cct::net::parse_net;
 use cct::rng::Pcg64;
 use cct::serve::{
-    closed_loop, InferOptions, Lane, ServeConfig, ServeEngine, ServeReport, SubmitError,
+    closed_loop, HttpConfig, HttpServer, InferOptions, Lane, ServeConfig, ServeEngine,
+    ServeReport, SubmitError,
 };
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 const TINY: &str = "
 name: tinyserve
@@ -222,6 +234,163 @@ fn overload_qos() -> bool {
     shed_ok && prio_ok && allocs_ok
 }
 
+/// Minimal HTTP/1.1 client for the transport scenario: POST one raw
+/// f32 sample to `/infer` and parse the response by `Content-Length`
+/// (required to speak keep-alive — read-to-end only works for
+/// `Connection: close`).
+struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    fn connect(addr: SocketAddr) -> HttpClient {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().expect("clone");
+        HttpClient { reader: BufReader::new(stream), writer }
+    }
+
+    fn post_infer(&mut self, body: &[u8], close: bool) -> u16 {
+        let conn = if close { "close" } else { "keep-alive" };
+        self.writer
+            .write_all(
+                format!(
+                    "POST /infer HTTP/1.1\r\nHost: cct\r\nConnection: {conn}\r\n\
+                     Content-Type: application/octet-stream\r\nContent-Length: {}\r\n\r\n",
+                    body.len()
+                )
+                .as_bytes(),
+            )
+            .expect("write head");
+        self.writer.write_all(body).expect("write body");
+        self.writer.flush().expect("flush");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line {line:?}"));
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("header");
+            let t = h.trim_end();
+            if t.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = t.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().expect("content-length");
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("body");
+        status
+    }
+}
+
+/// Keep-alive vs reconnect-per-request over the real socket
+/// transport, same engine and same bounded handler pool. Returns
+/// whether keep-alive sustained more requests/s.
+fn http_transport() -> bool {
+    const HTTP_WORKERS: usize = 4;
+    // One closed-loop client per handler slot: every connection keeps
+    // its handler busy, and no keep-alive connection ever goes idle
+    // while others wait (which would trigger the fairness yield and
+    // close it mid-session).
+    const CLIENTS: usize = HTTP_WORKERS;
+    const PER_CLIENT: usize = 250;
+    let cfg = parse_net(TINY).expect("net parses");
+    let sample_len: usize = 64; // 1×8×8 flattened
+
+    let mut t = Table::new(
+        &format!(
+            "HTTP transport: keep-alive vs reconnect-per-request (tinyserve, {WORKERS} engine workers, {HTTP_WORKERS} http handlers, {CLIENTS} clients × {PER_CLIENT} requests)"
+        ),
+        &["transport", "req/s", "connections", "reuses", "sheds", "p50 ms", "p99 ms"],
+    );
+    let mut rates = Vec::new();
+    let mut reuses = Vec::new();
+    for keep_alive in [false, true] {
+        let engine = ServeEngine::start(
+            &cfg,
+            ServeConfig {
+                workers: WORKERS,
+                max_batch: 8,
+                max_wait_us: 500,
+                queue_cap: 1024,
+                ..Default::default()
+            },
+        )
+        .expect("engine starts");
+        let server = HttpServer::bind_with(
+            engine.handle(),
+            "127.0.0.1:0",
+            HttpConfig { workers: HTTP_WORKERS, ..Default::default() },
+        )
+        .expect("bind");
+        let addr = server.local_addr();
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..CLIENTS {
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(0x4717 + c as u64);
+                    let mut sample = vec![0f32; sample_len];
+                    rng.fill_uniform(&mut sample, -1.0, 1.0);
+                    let mut body = Vec::with_capacity(sample_len * 4);
+                    for v in &sample {
+                        body.extend_from_slice(&v.to_le_bytes());
+                    }
+                    if keep_alive {
+                        let mut client = HttpClient::connect(addr);
+                        for _ in 0..PER_CLIENT {
+                            assert_eq!(client.post_infer(&body, false), 200);
+                        }
+                    } else {
+                        for _ in 0..PER_CLIENT {
+                            let mut client = HttpClient::connect(addr);
+                            assert_eq!(client.post_infer(&body, true), 200);
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        let report = engine.shutdown();
+        let rate = (CLIENTS * PER_CLIENT) as f64 / wall;
+        rates.push(rate);
+        reuses.push(report.http.keepalive_reuses);
+        t.row(&[
+            if keep_alive { "keep-alive" } else { "reconnect" }.to_string(),
+            format!("{rate:.0}"),
+            report.http.connections.to_string(),
+            report.http.keepalive_reuses.to_string(),
+            report.http.accept_sheds.to_string(),
+            format!("{:.2}", report.latency.p50_us / 1e3),
+            format!("{:.2}", report.latency.p99_us / 1e3),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_out/serve_throughput_http_transport.csv").ok();
+    let faster = rates[1] > rates[0];
+    let reused = reuses[1] > 0 && reuses[0] == 0;
+    println!(
+        "keep-alive vs reconnect at equal worker count: {:.2}× ({:.0} vs {:.0} req/s), {} reuses — {}",
+        rates[1] / rates[0].max(1e-12),
+        rates[1],
+        rates[0],
+        reuses[1],
+        if faster && reused { "PASS" } else { "FAIL" }
+    );
+    faster && reused
+}
+
 fn main() {
     std::fs::create_dir_all("bench_out").ok();
     let mut all_zero_allocs = true;
@@ -255,5 +424,15 @@ fn main() {
     println!(
         "overload QoS acceptance: {}",
         if qos_ok { "PASS (sheds before FLOPs, interactive p99 bounded)" } else { "FAIL — see above" }
+    );
+    println!();
+    let transport_ok = http_transport();
+    println!(
+        "keep-alive transport acceptance: {}",
+        if transport_ok {
+            "PASS (persistent connections out-serve reconnect-per-request)"
+        } else {
+            "FAIL — see above"
+        }
     );
 }

@@ -11,7 +11,8 @@
 //! cct serve-bench [--workers P] [--clients C] [--requests N] [--max-batch B]
 //!                                           # micro-batched vs batch-1 serving
 //! cct serve   [--addr HOST:PORT] [--workers P] [--max-batch B] [--adaptive BOOL]
-//!                                           # QoS HTTP inference frontend
+//!             [--http-workers N]            # QoS HTTP inference frontend
+//!                                           # (keep-alive, bounded handler pool)
 //! ```
 
 use cct::bail;
@@ -25,7 +26,7 @@ use cct::lowering::{choose_lowering, optimizer, ConvShape, LoweringType, Machine
 use cct::net::presets;
 use cct::rng::Pcg64;
 use cct::runtime::{ArtifactStore, XlaInput};
-use cct::serve::{closed_loop, worker_placement, HttpServer, ServeConfig, ServeEngine};
+use cct::serve::{closed_loop, worker_placement, HttpConfig, HttpServer, ServeConfig, ServeEngine};
 use cct::solver::SolverConfig;
 use cct::tensor::Tensor;
 
@@ -97,6 +98,7 @@ fn print_help() {
          \x20             --workers, --clients, --requests, --max-batch, --wait-us, --queue)\n\
          \x20 serve       QoS HTTP inference frontend: POST /infer, GET /stats (--net tiny|cifar,\n\
          \x20             --addr, --workers, --max-batch, --wait-us, --queue, --adaptive,\n\
+         \x20             --http-workers N: keep-alive connection-handler pool size,\n\
          \x20             --max-requests; 0 = run until killed)\n"
     );
 }
@@ -325,6 +327,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let adaptive: bool = args.get("adaptive", true)?;
     let addr = args.get_str("addr", "127.0.0.1:8080");
     let max_requests: u64 = args.get("max-requests", 0)?;
+    let http_workers: usize = args.get("http-workers", ServeConfig::default().http_workers)?;
     let net_name = args.get_str("net", "tiny");
     let cfg_text = match net_name.as_str() {
         "tiny" => SERVE_TINY,
@@ -341,16 +344,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait_us: wait_us,
             queue_cap: queue,
             adaptive_wait: adaptive,
+            http_workers,
             ..Default::default()
         },
     )?;
     let sample_len = engine.sample_len();
-    let server = HttpServer::bind(engine.handle(), &addr, max_requests)?;
+    let server = HttpServer::bind_with(
+        engine.handle(),
+        &addr,
+        HttpConfig { workers: http_workers, max_requests, ..Default::default() },
+    )?;
     println!(
-        "serving {} on http://{}  ({workers} workers, max_batch {max_batch}, buckets {:?}, adaptive_wait {adaptive})",
+        "serving {} on http://{}  ({workers} workers, max_batch {max_batch}, buckets {:?}, adaptive_wait {adaptive}, {} http handlers)",
         cfg.name,
         server.local_addr(),
-        engine.buckets()
+        engine.buckets(),
+        http_workers
     );
     println!("  POST /infer   body: JSON array of {sample_len} floats, or raw LE f32 bytes");
     println!("                (Content-Type: application/octet-stream); optional headers");
@@ -378,6 +387,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.latency.p95_us / 1e3,
         report.latency.p99_us / 1e3,
         report.worker_steady_allocs
+    );
+    println!(
+        "transport: {} connections, {} keep-alive reuses, {} accept-queue sheds",
+        report.http.connections, report.http.keepalive_reuses, report.http.accept_sheds
     );
     Ok(())
 }

@@ -1,5 +1,5 @@
-//! Minimal std-only HTTP/1.1 transport in front of [`ServeHandle`]:
-//! the "real transport" the ROADMAP asks for, with zero external
+//! Std-only HTTP/1.1 transport in front of [`ServeHandle`]: a
+//! **bounded connection-handler pool with keep-alive**, zero external
 //! crates (`std::net::TcpListener`, hand-rolled request parsing and
 //! JSON formatting).
 //!
@@ -14,36 +14,69 @@
 //!   * `200` — `{"class":…,"logits":[…],"latency_us":…,
 //!     "batch_real":…,"bucket":…,"lane":"…"}`
 //!   * `400` — malformed body or wrong sample length
-//!   * `503` — lane full (backpressure) or engine shut down
+//!   * `503` — lane full (backpressure), connection backlog full
+//!     (accept-queue shed), request budget spent, or engine shut down
 //!   * `504` — the request's deadline expired before execution (shed)
-//! * `GET /stats` — live [`ServeReport`] snapshot as JSON.
+//! * `GET /stats` — live [`ServeReport`] snapshot as JSON, including
+//!   the transport's own [`HttpReport`](super::HttpReport) counters.
 //! * `GET /healthz` — `{"ok":true}` liveness probe.
 //!
-//! ## Design notes
+//! ## Concurrency model
 //!
-//! One thread per connection, one request per connection
-//! (`Connection: close`): the simplest shape that exercises the QoS
-//! engine end-to-end. The accept loop polls a non-blocking listener on
-//! a short tick so shutdown (and the `max_requests` CI hook) never
-//! hangs in `accept(2)`. Submission uses the *non-blocking* engine
-//! path, so an overloaded lane surfaces as a fast `503` — load is
-//! shed at the door instead of accumulating one parked thread per
-//! queued connection.
+//! The transport runs exactly `workers + 1` threads, no matter how
+//! many clients connect: one accept thread polls a non-blocking
+//! listener and pushes accepted sockets onto a **bounded channel**
+//! ([`HttpConfig::backlog`]); a fixed pool of [`HttpConfig::workers`]
+//! handler threads pulls from it. When the pool and the backlog are
+//! both full, the accept thread sheds the connection at the door with
+//! `503` + `Connection: close` instead of queueing it — bounded
+//! memory, bounded threads, fast failure.
+//!
+//! Each handler runs a **per-connection request loop**: HTTP/1.1
+//! connections are kept alive by default (HTTP/1.0 ones closed unless
+//! they ask for `keep-alive`), so one TCP handshake amortizes over
+//! many requests. A connection is closed when the client asks
+//! (`Connection: close`), after [`HttpConfig::max_conn_requests`]
+//! requests, after sitting idle for [`HttpConfig::idle_timeout`] —
+//! or sooner, at the next idle tick, if accepted connections are
+//! waiting for a handler (the fairness yield that keeps parked
+//! keep-alive clients from starving new traffic) — when a started
+//! request exceeds the whole-request [`HttpConfig::read_timeout`]
+//! (slow-loris defense: the stalled socket is answered `408` and the
+//! pool slot freed), or during shutdown.
+//!
+//! Shutdown drains gracefully: the accept thread stops, in-flight
+//! requests are answered (`Connection: close` on the final response),
+//! idle connections are closed at the next idle tick, and every
+//! transport thread is joined before [`HttpServer::shutdown`] /
+//! `Drop` returns — no detached threads can race engine teardown.
+//!
+//! A server-wide request budget ([`HttpConfig::max_requests`], the CI
+//! smoke hook) counts **requests, not connections**: a keep-alive
+//! connection carrying three requests spends three budget units, and
+//! the server exits deterministically once the budget is spent even
+//! if other connections are still idle.
 
 use super::{InferOptions, InferOutcome, InferReply, Lane, ServeHandle, ServeReport, SubmitError};
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How often the accept loop re-checks its exit conditions.
 const ACCEPT_TICK: Duration = Duration::from_millis(5);
 
-/// Per-connection socket read timeout (a stalled client must not pin
-/// its handler thread forever).
-const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// How often an idle connection's handler re-checks the stop flag and
+/// the request budget while waiting for the next request.
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+/// How often a mid-request read re-checks its whole-request deadline
+/// and the stop flag (a trickling client advances one socket read at
+/// a time; the deadline check between reads is what bounds the total).
+const READ_POLL: Duration = Duration::from_millis(100);
 
 /// Largest accepted request body (a 1M-float sample is ~12 MiB of
 /// JSON; anything bigger is a client bug, not a sample).
@@ -53,28 +86,142 @@ const MAX_BODY: usize = 16 << 20;
 /// lines: without these caps a client streaming newline-free bytes
 /// (or endless headers) would grow memory without bound — the body is
 /// not the only thing that needs a ceiling.
-const MAX_LINE: u64 = 8 << 10;
+const MAX_LINE: usize = 8 << 10;
 /// See [`MAX_LINE`].
 const MAX_HEADERS: usize = 64;
 
+/// Transport configuration for [`HttpServer::bind_with`].
+///
+/// `Default` gives a small general-purpose setup: 4 handler threads,
+/// a 64-connection accept backlog, 5 s keep-alive idle timeout, 10 s
+/// per-request read timeout, up to 1024 requests per connection, and
+/// no server-wide request budget.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Connection-handler threads — the transport's entire concurrency
+    /// budget (plus one accept thread). See
+    /// [`ServeConfig::http_workers`](super::ServeConfig::http_workers)
+    /// and `cct serve --http-workers`.
+    pub workers: usize,
+    /// Accepted sockets that may wait for a free handler. When the
+    /// pool and this backlog are both full, new connections are shed
+    /// with `503` + `Connection: close`.
+    pub backlog: usize,
+    /// Close a keep-alive connection that has been idle (no new
+    /// request started) this long. Under contention the bound is
+    /// tighter: an idle connection yields its pool slot at the next
+    /// idle tick whenever accepted connections are waiting for a
+    /// handler, so a handful of parked keep-alive clients cannot
+    /// starve new traffic for the full idle budget.
+    pub idle_timeout: Duration,
+    /// Whole-request read deadline: once a request has *started*
+    /// arriving, all of it (request line, headers, body) must arrive
+    /// within this bound or the connection is answered `408` and
+    /// closed. Enforced between every socket read, so a client
+    /// trickling one byte per read cannot pin a pool slot past it
+    /// (slow-loris defense) — and cannot stall shutdown either.
+    pub read_timeout: Duration,
+    /// Most requests served over a single connection before the server
+    /// closes it (`0` = unbounded). A recycling cap like this bounds
+    /// any per-connection state accumulation.
+    pub max_conn_requests: u64,
+    /// Server-wide request budget: after this many requests have been
+    /// answered the server stops accepting and exits on its own (the
+    /// CI smoke hook). `0` = serve until dropped. Counts *requests*,
+    /// not connections — keep-alive traffic spends it per request.
+    pub max_requests: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            workers: 4,
+            backlog: 64,
+            idle_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(10),
+            max_conn_requests: 1024,
+            max_requests: 0,
+        }
+    }
+}
+
+/// State shared by the accept thread, the handler pool, and the
+/// [`HttpServer`] front object.
+struct Shared {
+    stop: AtomicBool,
+    /// Requests whose budget unit has been claimed (see
+    /// [`Shared::claim_budget`]).
+    served: AtomicU64,
+    /// Accepted sockets sitting in the backlog channel, not yet picked
+    /// up by a handler — the contention signal idle keep-alive
+    /// connections use to yield their pool slot.
+    waiting: AtomicUsize,
+    cfg: HttpConfig,
+}
+
+/// Outcome of claiming one unit of the server-wide request budget.
+enum Budget {
+    /// The request may run; `last` marks the final budgeted request
+    /// (its response closes the connection so the server can exit).
+    Granted { last: bool },
+    /// The budget was already spent — answer `503` and close.
+    Exhausted,
+}
+
+impl Shared {
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    fn budget_spent(&self) -> bool {
+        self.cfg.max_requests > 0 && self.served.load(Ordering::Relaxed) >= self.cfg.max_requests
+    }
+
+    /// Claim one request against the server-wide budget. With no
+    /// budget configured every claim is granted (and never "last").
+    fn claim_budget(&self) -> Budget {
+        if self.cfg.max_requests == 0 {
+            return Budget::Granted { last: false };
+        }
+        let prev = self.served.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.cfg.max_requests {
+            Budget::Exhausted
+        } else {
+            Budget::Granted { last: prev + 1 == self.cfg.max_requests }
+        }
+    }
+}
+
 /// A running HTTP frontend over a [`ServeHandle`]. Dropping the server
-/// stops the accept loop and joins it (in-flight connections finish
-/// first); the engine itself keeps running until
+/// stops the accept thread, drains the handler pool (in-flight
+/// requests answered, idle connections closed), and joins every
+/// transport thread; the engine itself keeps running until
 /// [`ServeEngine::shutdown`](super::ServeEngine::shutdown).
 pub struct HttpServer {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an
     /// ephemeral port — read it back with [`HttpServer::local_addr`])
-    /// and start serving `handle`. With `max_requests > 0` the server
-    /// accepts exactly that many connections (one request each),
-    /// answers them, and exits on its own — the hook the CI smoke test
-    /// uses; `0` means serve until dropped.
+    /// and start serving `handle` with a default [`HttpConfig`] and
+    /// the given server-wide request budget (`max_requests` requests —
+    /// not connections — then exit on its own; `0` means serve until
+    /// dropped).
     pub fn bind(handle: ServeHandle, addr: &str, max_requests: u64) -> crate::Result<HttpServer> {
+        Self::bind_with(handle, addr, HttpConfig { max_requests, ..Default::default() })
+    }
+
+    /// Bind `addr` and start serving `handle` on a bounded handler
+    /// pool configured by `cfg`. Spawns exactly `cfg.workers + 1`
+    /// transport threads (the pool plus the accept thread); no
+    /// connection ever spawns another.
+    pub fn bind_with(handle: ServeHandle, addr: &str, cfg: HttpConfig) -> crate::Result<HttpServer> {
+        crate::ensure!(cfg.workers >= 1, "http transport needs at least one handler worker");
+        crate::ensure!(cfg.backlog >= 1, "http accept backlog must be ≥ 1");
         let listener =
             TcpListener::bind(addr).map_err(|e| crate::err!("binding http server {addr}: {e}"))?;
         let local = listener
@@ -83,13 +230,35 @@ impl HttpServer {
         listener
             .set_nonblocking(true)
             .map_err(|e| crate::err!("configuring listener: {e}"))?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            waiting: AtomicUsize::new(0),
+            cfg,
+        });
+        // Accepted sockets queue here; the bound is the accept-shed
+        // threshold. Thread names carry the port so tools (and the
+        // flood test) can attribute transport threads to one server.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(shared.cfg.backlog);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let port = local.port();
+        let mut handlers = Vec::with_capacity(shared.cfg.workers);
+        for i in 0..shared.cfg.workers {
+            let rx = Arc::clone(&conn_rx);
+            let h = handle.clone();
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("http-{port}-w{i}"))
+                .spawn(move || handler_loop(&rx, &h, &sh))
+                .map_err(|e| crate::err!("spawning http handler thread: {e}"))?;
+            handlers.push(spawned);
+        }
+        let sh = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
-            .name("serve-http-accept".to_string())
-            .spawn(move || accept_loop(listener, handle, stop2, max_requests))
+            .name(format!("http-{port}-acc"))
+            .spawn(move || accept_loop(&listener, &conn_tx, &handle, &sh))
             .map_err(|e| crate::err!("spawning http accept thread: {e}"))?;
-        Ok(HttpServer { addr: local, stop, accept: Some(accept) })
+        Ok(HttpServer { addr: local, shared, accept: Some(accept), handlers })
     }
 
     /// The address actually bound (resolves port `0`).
@@ -97,16 +266,30 @@ impl HttpServer {
         self.addr
     }
 
+    /// The transport's fixed thread count: the accept thread plus the
+    /// handler pool (`workers + 1`). The transport never runs more
+    /// threads than this, no matter how many connections arrive —
+    /// excess sockets wait in the bounded backlog or are shed with
+    /// `503`.
+    pub fn transport_threads(&self) -> usize {
+        self.handlers.len() + 1
+    }
+
     /// Block until the server exits on its own — i.e. until a
-    /// `max_requests` bound is reached. With `max_requests = 0` this
-    /// blocks until the process is killed.
+    /// `max_requests` budget is spent (every transport thread is
+    /// joined before returning). With `max_requests = 0` this blocks
+    /// until the process is killed.
     pub fn join(mut self) {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
     }
 
-    /// Stop accepting, finish in-flight connections, and return.
+    /// Stop accepting, answer in-flight requests, close idle
+    /// connections, join every transport thread, and return.
     pub fn shutdown(self) {
         // Drop does the work; spelled out for call-site readability.
     }
@@ -114,47 +297,53 @@ impl HttpServer {
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.shared.stop.store(true, Ordering::Relaxed);
+        // Joining the accept thread drops the channel sender; handlers
+        // then drain any queued sockets and exit. Handlers parked on
+        // an idle connection notice the flag at the next idle tick;
+        // one mid-request finishes that request first (its response
+        // carries `Connection: close`).
         if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.handlers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-/// Accept loop: poll the non-blocking listener, spawn one handler
-/// thread per connection, stop on the flag or the request budget, then
-/// join the stragglers.
+/// Accept thread body: poll the non-blocking listener, push accepted
+/// sockets onto the bounded handler channel, shed with `503` when it
+/// is full, exit on the stop flag or a spent request budget (dropping
+/// the sender is what lets idle handlers exit).
 fn accept_loop(
-    listener: TcpListener,
-    handle: ServeHandle,
-    stop: Arc<AtomicBool>,
-    max_requests: u64,
+    listener: &TcpListener,
+    conn_tx: &SyncSender<TcpStream>,
+    handle: &ServeHandle,
+    shared: &Shared,
 ) {
-    let mut served: u64 = 0;
-    let mut conns: Vec<JoinHandle<()>> = Vec::new();
     loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        if max_requests > 0 && served >= max_requests {
+        if shared.stopped() || shared.budget_spent() {
             break;
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
-                // Charge the budget at *accept* time: counting at
-                // request completion would let concurrent connections
-                // overshoot `max_requests` (each accepted connection
-                // handles exactly one request, parsed or not).
-                served += 1;
-                conns.retain(|h| !h.is_finished());
-                let handle = handle.clone();
-                let spawned = std::thread::Builder::new()
-                    .name("serve-http-conn".to_string())
-                    .spawn(move || {
-                        let _ = handle_connection(stream, &handle);
-                    });
-                if let Ok(h) = spawned {
-                    conns.push(h);
+                // Count the socket as waiting *before* it can be
+                // picked up: if the handler's decrement could precede
+                // this increment, the counter would wrap and the
+                // fairness yield would fire spuriously.
+                shared.waiting.fetch_add(1, Ordering::Relaxed);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(stream)) => {
+                        shared.waiting.fetch_sub(1, Ordering::Relaxed);
+                        handle.stats.record_http_shed();
+                        shed_overflow(stream);
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        shared.waiting.fetch_sub(1, Ordering::Relaxed);
+                        break;
+                    }
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -163,24 +352,187 @@ fn accept_loop(
             Err(_) => std::thread::sleep(ACCEPT_TICK),
         }
     }
-    for h in conns {
-        let _ = h.join();
+}
+
+/// Answer a connection the bounded backlog has no room for: `503` +
+/// `Connection: close`, written with a short timeout so a peer that
+/// never reads cannot stall the accept thread.
+fn shed_overflow(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp = Response::error(503, "connection backlog full (load shed), retry later");
+    let _ = write_response(&mut stream, &resp, true);
+}
+
+/// Handler-pool thread body: pull accepted sockets off the shared
+/// bounded channel and run each connection's request loop. Exits when
+/// the channel closes (accept thread gone) and is empty.
+fn handler_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, handle: &ServeHandle, shared: &Shared) {
+    loop {
+        // Hold the mutex only while waiting: one idle handler blocks
+        // on recv, the rest queue on the lock (the std pool idiom).
+        let job = { rx.lock().expect("http conn queue poisoned").recv() };
+        let Ok(stream) = job else { break };
+        shared.waiting.fetch_sub(1, Ordering::Relaxed);
+        handle.stats.record_http_conn_opened();
+        let _ = serve_connection(stream, handle, shared);
+        handle.stats.record_http_conn_closed();
     }
+}
+
+/// Why the wait for a connection's next request ended.
+enum NextRequest {
+    /// Request bytes are buffered and ready to parse.
+    Available,
+    /// The client closed the connection at a request boundary.
+    Eof,
+    /// No request started within the idle timeout.
+    IdleTimeout,
+    /// The server is shutting down (or its request budget is spent).
+    Stopped,
+}
+
+/// `true` for the error kinds a socket read timeout surfaces as.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Park on an idle keep-alive connection until its next request
+/// starts, it reaches EOF, the idle budget runs out, or the server
+/// begins shutting down — polling in short ticks so a handler never
+/// sleeps through a shutdown.
+fn wait_for_request(
+    reader: &mut BufReader<TcpStream>,
+    shared: &Shared,
+) -> std::io::Result<NextRequest> {
+    let idle_since = Instant::now();
+    loop {
+        if shared.stopped() || shared.budget_spent() {
+            return Ok(NextRequest::Stopped);
+        }
+        reader.get_ref().set_read_timeout(Some(IDLE_TICK))?;
+        let got = reader.fill_buf().map(|buffered| buffered.len());
+        match got {
+            Ok(0) => return Ok(NextRequest::Eof),
+            Ok(_) => return Ok(NextRequest::Available),
+            Err(e) if is_timeout(&e) => {
+                if idle_since.elapsed() >= shared.cfg.idle_timeout {
+                    return Ok(NextRequest::IdleTimeout);
+                }
+                // Fairness under contention: this connection has been
+                // idle for at least one tick while accepted sockets
+                // wait for a handler — yield the pool slot instead of
+                // pinning it for the rest of the idle budget.
+                if shared.waiting.load(Ordering::Relaxed) > 0 {
+                    return Ok(NextRequest::IdleTimeout);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// One connection's request loop: wait for a request, parse it, claim
+/// a budget unit, route, reply, and repeat until something asks for
+/// the connection to close (see the module docs for the full list).
+fn serve_connection(
+    stream: TcpStream,
+    handle: &ServeHandle,
+    shared: &Shared,
+) -> std::io::Result<()> {
+    // The accepted socket may inherit the listener's non-blocking mode
+    // on some platforms; force plain blocking I/O with timeouts.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut served_on_conn: u64 = 0;
+    loop {
+        match wait_for_request(&mut reader, shared)? {
+            NextRequest::Available => {}
+            // EOF, idle timeout, shutdown: close without a response —
+            // there is no request on the wire to answer.
+            NextRequest::Eof | NextRequest::IdleTimeout | NextRequest::Stopped => break,
+        }
+        // A request has started. It spends a budget unit *before*
+        // parsing — parsed or malformed — so garbage traffic cannot
+        // keep a `max_requests`-bounded server (the CI smoke hook)
+        // running forever by never completing a valid request.
+        let last = match shared.claim_budget() {
+            Budget::Exhausted => {
+                let resp = Response::error(503, "server request budget exhausted");
+                write_response(&mut writer, &resp, true)?;
+                break;
+            }
+            Budget::Granted { last } => last,
+        };
+        served_on_conn += 1;
+        if served_on_conn > 1 {
+            handle.stats.record_http_reuse();
+        }
+        // The whole request must arrive within read_timeout of its
+        // first byte (slow-loris defense, enforced between every
+        // socket read inside read_request).
+        let deadline = Instant::now() + shared.cfg.read_timeout;
+        let (response, close) = match read_request(&mut reader, &mut writer, deadline, shared) {
+            Ok(req) => {
+                let resp = route(&req, handle);
+                let cap = shared.cfg.max_conn_requests;
+                let close = last
+                    || !wants_keep_alive(&req)
+                    || (cap > 0 && served_on_conn >= cap)
+                    || shared.stopped();
+                (resp, close)
+            }
+            Err(e) if is_timeout(&e) => {
+                (Response::error(408, "timed out reading request"), true)
+            }
+            Err(e) => (Response::error(400, &format!("malformed request: {e}")), true),
+        };
+        write_response(&mut writer, &response, close)?;
+        if close {
+            break;
+        }
+    }
+    Ok(())
 }
 
 /// One parsed HTTP request.
 struct Request {
     method: String,
     path: String,
+    version: String,
     headers: Vec<(String, String)>,
     body: Vec<u8>,
 }
 
 impl Request {
-    /// Lowercase-name header lookup.
+    /// Header lookup by lowercase name (names are normalized to
+    /// lowercase at parse time, so matching is case-insensitive on the
+    /// wire per RFC 9110). Returns the first occurrence.
     fn header(&self, name: &str) -> Option<&str> {
         self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
     }
+}
+
+/// Keep-alive negotiation: an explicit `Connection: close` /
+/// `keep-alive` token wins; otherwise HTTP/1.1 defaults to keep-alive
+/// and anything older to close.
+fn wants_keep_alive(req: &Request) -> bool {
+    if let Some(v) = req.header("connection") {
+        let v = v.to_ascii_lowercase();
+        if v.split(',').any(|t| t.trim() == "close") {
+            return false;
+        }
+        if v.split(',').any(|t| t.trim() == "keep-alive") {
+            return true;
+        }
+    }
+    req.version.eq_ignore_ascii_case("HTTP/1.1")
 }
 
 /// A response about to be written: status code plus JSON body.
@@ -199,66 +551,184 @@ impl Response {
     }
 }
 
-/// Handle one connection: parse a request, route it, write the reply,
-/// close. The `max_requests` budget was already charged at accept
-/// time, so malformed traffic cannot dodge it and concurrent
-/// connections cannot overshoot it.
-fn handle_connection(stream: TcpStream, handle: &ServeHandle) -> std::io::Result<()> {
-    // The accepted socket may inherit the listener's non-blocking mode
-    // on some platforms; force plain blocking I/O with a read timeout.
-    stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(READ_TIMEOUT))?;
-    stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let response = match read_request(&mut reader, &mut writer) {
-        Ok(req) => route(&req, handle),
-        Err(e) => Response::error(400, &format!("malformed request: {e}")),
-    };
-    write_response(&mut writer, &response)
-}
-
-/// Read one `\n`-terminated line, erroring instead of growing without
-/// bound when the client never sends a newline.
-fn read_line_bounded(reader: &mut BufReader<TcpStream>) -> std::io::Result<String> {
-    let mut limited = reader.by_ref().take(MAX_LINE);
-    let mut line = String::new();
-    limited.read_line(&mut line)?;
-    if line.len() as u64 >= MAX_LINE && !line.ends_with('\n') {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "request line or header longer than 8 KiB",
-        ));
+/// Block until the reader has buffered data, erroring with
+/// [`std::io::ErrorKind::TimedOut`] once `deadline` passes or the
+/// server starts shutting down. Polling in [`READ_POLL`] ticks is
+/// what turns the socket's *per-read* timeout into a *whole-request*
+/// bound: a client trickling one byte per read still runs out of
+/// deadline, and a mid-request shutdown is noticed within one tick.
+/// Returns the number of buffered bytes (`0` = EOF).
+fn fill_within(
+    reader: &mut BufReader<TcpStream>,
+    deadline: Instant,
+    shared: &Shared,
+) -> std::io::Result<usize> {
+    loop {
+        if shared.stopped() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "server shutting down mid-request",
+            ));
+        }
+        let Some(rem) = deadline.checked_duration_since(Instant::now()).filter(|d| !d.is_zero())
+        else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request read deadline exceeded",
+            ));
+        };
+        reader.get_ref().set_read_timeout(Some(rem.min(READ_POLL)))?;
+        match reader.fill_buf().map(|buffered| buffered.len()) {
+            Ok(n) => return Ok(n),
+            Err(e) if is_timeout(&e) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
     }
-    Ok(line)
 }
 
-/// Parse request line, headers, and a `Content-Length` body. Needs the
+/// Read one `\n`-terminated line under the request deadline, erroring
+/// instead of growing without bound when the client never sends a
+/// newline.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    deadline: Instant,
+    shared: &Shared,
+) -> std::io::Result<String> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let n = fill_within(reader, deadline, shared)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-request",
+            ));
+        }
+        let buf = reader.buffer();
+        let newline = buf.iter().position(|&b| b == b'\n');
+        let take = newline.map_or(buf.len(), |p| p + 1);
+        if line.len() + take > MAX_LINE {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request line or header longer than 8 KiB",
+            ));
+        }
+        line.extend_from_slice(&buf[..take]);
+        reader.consume(take);
+        if newline.is_some() {
+            return String::from_utf8(line).map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "request head is not UTF-8",
+                )
+            });
+        }
+    }
+}
+
+/// Read exactly `len` body bytes under the request deadline.
+fn read_body(
+    reader: &mut BufReader<TcpStream>,
+    len: usize,
+    deadline: Instant,
+    shared: &Shared,
+) -> std::io::Result<Vec<u8>> {
+    let mut body = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        let n = fill_within(reader, deadline, shared)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-body",
+            ));
+        }
+        let buf = reader.buffer();
+        let take = buf.len().min(len - filled);
+        body[filled..filled + take].copy_from_slice(&buf[..take]);
+        reader.consume(take);
+        filled += take;
+    }
+    Ok(body)
+}
+
+/// Resolve the body length from the header list, rejecting the
+/// request-smuggling shapes: duplicate or comma-folded
+/// `Content-Length` values must all agree, and each must parse.
+fn parse_content_length(headers: &[(String, String)]) -> Result<usize, String> {
+    let mut found: Option<usize> = None;
+    for (k, v) in headers {
+        if k != "content-length" {
+            continue;
+        }
+        // A repeated header may have been folded into one
+        // comma-separated value by an intermediary; each element gets
+        // the same agreement check as a separate header line.
+        for part in v.split(',') {
+            let part = part.trim();
+            let n = part
+                .parse::<usize>()
+                .map_err(|_| format!("bad Content-Length '{part}'"))?;
+            match found {
+                Some(prev) if prev != n => {
+                    return Err(format!("conflicting Content-Length values ({prev} vs {n})"));
+                }
+                _ => found = Some(n),
+            }
+        }
+    }
+    Ok(found.unwrap_or(0))
+}
+
+/// Parse request line, headers, and a `Content-Length` body, with
+/// every read bounded by the whole-request `deadline`. Needs the
 /// write half too: an `Expect: 100-continue` client (curl, for any
 /// body over ~1 KiB) waits about a second for the interim response
 /// before it sends the body at all.
 fn read_request(
     reader: &mut BufReader<TcpStream>,
     writer: &mut TcpStream,
+    deadline: Instant,
+    shared: &Shared,
 ) -> std::io::Result<Request> {
-    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
-    let line = read_line_bounded(reader)?;
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    let mut line = read_line_bounded(reader, deadline, shared)?;
+    // RFC 9112 §2.2: tolerate blank line(s) before the request-line —
+    // a keep-alive client that sent a stray CRLF after the previous
+    // body must not lose its healthy session to a 400.
+    let mut blanks = 0;
+    while line.trim_end().is_empty() {
+        blanks += 1;
+        if blanks > 4 {
+            return Err(bad("too many blank lines before the request line".into()));
+        }
+        line = read_line_bounded(reader, deadline, shared)?;
+    }
     let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
-    let path = parts.next().ok_or_else(|| bad("request line has no path"))?.to_string();
+    let method = parts.next().ok_or_else(|| bad("empty request line".into()))?.to_string();
+    let path = parts.next().ok_or_else(|| bad("request line has no path".into()))?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0").to_string();
     let mut headers = Vec::new();
     loop {
-        let h = read_line_bounded(reader)?;
+        let h = read_line_bounded(reader, deadline, shared)?;
         let trimmed = h.trim_end();
         if trimmed.is_empty() {
             break;
         }
         if headers.len() >= MAX_HEADERS {
-            return Err(bad("too many request headers"));
+            return Err(bad("too many request headers".into()));
         }
         if let Some((k, v)) = trimmed.split_once(':') {
+            // Lowercasing the name here is what makes every downstream
+            // header match case-insensitive (RFC 9110 §5.1).
             headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
         }
+    }
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        // Refusing is safer than guessing: a body this server read by
+        // Content-Length while an upstream read it chunked is the
+        // classic request-smuggling split.
+        return Err(bad("Transfer-Encoding is not supported (use Content-Length)".into()));
     }
     if headers
         .iter()
@@ -267,17 +737,12 @@ fn read_request(
         writer.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
         writer.flush()?;
     }
-    let len = match headers.iter().find(|(k, _)| k == "content-length") {
-        None => 0,
-        // An unparseable length must be a 400, not silently "no body".
-        Some((_, v)) => v.parse::<usize>().map_err(|_| bad("bad Content-Length header"))?,
-    };
+    let len = parse_content_length(&headers).map_err(bad)?;
     if len > MAX_BODY {
-        return Err(bad("request body too large"));
+        return Err(bad("request body too large".into()));
     }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
-    Ok(Request { method, path, headers, body })
+    let body = read_body(reader, len, deadline, shared)?;
+    Ok(Request { method, path, version, headers, body })
 }
 
 fn route(req: &Request, handle: &ServeHandle) -> Response {
@@ -332,7 +797,9 @@ fn infer_route(req: &Request, handle: &ServeHandle) -> Response {
 }
 
 /// Body → flat f32 sample: raw little-endian bytes for
-/// `application/octet-stream`, a JSON number array otherwise.
+/// `application/octet-stream`, a JSON number array otherwise. A raw
+/// body whose length is not a multiple of 4 is rejected rather than
+/// silently truncated.
 fn decode_sample(req: &Request) -> Result<Vec<f32>, String> {
     let binary = req
         .header("content-type")
@@ -447,6 +914,13 @@ fn lane_json(l: &super::LaneReport) -> String {
     format!("{{\"completed\":{},\"latency\":{}}}", l.completed, latency_json(&l.latency))
 }
 
+fn http_json(h: &super::HttpReport) -> String {
+    format!(
+        "{{\"connections\":{},\"open_connections\":{},\"keepalive_reuses\":{},\"accept_sheds\":{}}}",
+        h.connections, h.open_connections, h.keepalive_reuses, h.accept_sheds
+    )
+}
+
 /// The `GET /stats` payload: a [`ServeReport`] snapshot as JSON.
 fn report_json(rep: &ServeReport) -> String {
     let allocs = rep
@@ -458,7 +932,8 @@ fn report_json(rep: &ServeReport) -> String {
     format!(
         "{{\"completed\":{},\"rejected\":{},\"expired\":{},\"batches\":{},\"mean_batch\":{:.3},\
          \"padded_slots\":{},\"wall_s\":{:.3},\"throughput_rps\":{:.1},\"latency\":{},\
-         \"lanes\":{{\"interactive\":{},\"best_effort\":{}}},\"worker_steady_allocs\":[{}]}}",
+         \"lanes\":{{\"interactive\":{},\"best_effort\":{}}},\"http\":{},\
+         \"worker_steady_allocs\":[{}]}}",
         rep.completed,
         rep.rejected,
         rep.expired,
@@ -470,25 +945,28 @@ fn report_json(rep: &ServeReport) -> String {
         latency_json(&rep.latency),
         lane_json(rep.lane(Lane::Interactive)),
         lane_json(rep.lane(Lane::BestEffort)),
+        http_json(&rep.http),
         allocs,
     )
 }
 
-fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+fn write_response(stream: &mut TcpStream, resp: &Response, close: bool) -> std::io::Result<()> {
     let reason = match resp.status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Response",
     };
     write!(
         stream,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
         resp.status,
         reason,
         resp.body.len(),
+        if close { "close" } else { "keep-alive" },
         resp.body
     )?;
     stream.flush()
@@ -541,5 +1019,84 @@ mod tests {
         assert!(j.contains("\"class\":0"), "{j}");
         assert!(j.contains("\"logits\":[1,-2.5]"), "{j}");
         assert!(j.contains("\"lane\":\"best_effort\""), "{j}");
+    }
+
+    fn hdrs(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn content_length_agreement() {
+        assert_eq!(parse_content_length(&hdrs(&[])).unwrap(), 0);
+        assert_eq!(parse_content_length(&hdrs(&[("content-length", "12")])).unwrap(), 12);
+        // Duplicates that agree are tolerated (RFC 9110 §8.6)…
+        assert_eq!(
+            parse_content_length(&hdrs(&[("content-length", "7"), ("content-length", "7")]))
+                .unwrap(),
+            7
+        );
+        assert_eq!(parse_content_length(&hdrs(&[("content-length", "7, 7")])).unwrap(), 7);
+        // …but conflicts and garbage are rejected.
+        assert!(
+            parse_content_length(&hdrs(&[("content-length", "7"), ("content-length", "8")]))
+                .is_err()
+        );
+        assert!(parse_content_length(&hdrs(&[("content-length", "7, 9")])).is_err());
+        assert!(parse_content_length(&hdrs(&[("content-length", "x")])).is_err());
+        assert!(parse_content_length(&hdrs(&[("content-length", "-3")])).is_err());
+    }
+
+    fn req_with(version: &str, connection: Option<&str>) -> Request {
+        let headers = match connection {
+            Some(v) => hdrs(&[("connection", v)]),
+            None => Vec::new(),
+        };
+        Request {
+            method: "GET".into(),
+            path: "/healthz".into(),
+            version: version.into(),
+            headers,
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn keep_alive_negotiation() {
+        // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close.
+        assert!(wants_keep_alive(&req_with("HTTP/1.1", None)));
+        assert!(!wants_keep_alive(&req_with("HTTP/1.0", None)));
+        // Explicit tokens win in both directions, case-insensitively.
+        assert!(!wants_keep_alive(&req_with("HTTP/1.1", Some("close"))));
+        assert!(!wants_keep_alive(&req_with("HTTP/1.1", Some("Close"))));
+        assert!(wants_keep_alive(&req_with("HTTP/1.0", Some("Keep-Alive"))));
+        // Token lists are scanned token-wise, and close wins over
+        // keep-alive when both appear.
+        assert!(!wants_keep_alive(&req_with("HTTP/1.1", Some("keep-alive, close"))));
+    }
+
+    #[test]
+    fn budget_counts_requests_and_marks_the_last() {
+        let shared = Shared {
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            waiting: AtomicUsize::new(0),
+            cfg: HttpConfig { max_requests: 2, ..Default::default() },
+        };
+        assert!(matches!(shared.claim_budget(), Budget::Granted { last: false }));
+        assert!(!shared.budget_spent());
+        assert!(matches!(shared.claim_budget(), Budget::Granted { last: true }));
+        assert!(shared.budget_spent());
+        assert!(matches!(shared.claim_budget(), Budget::Exhausted));
+        // No budget configured: never last, never spent.
+        let unbounded = Shared {
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            waiting: AtomicUsize::new(0),
+            cfg: HttpConfig { max_requests: 0, ..Default::default() },
+        };
+        for _ in 0..3 {
+            assert!(matches!(unbounded.claim_budget(), Budget::Granted { last: false }));
+        }
+        assert!(!unbounded.budget_spent());
     }
 }

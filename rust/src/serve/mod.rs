@@ -39,10 +39,15 @@
 //! 5. **Stats** — end-to-end latency percentiles (p50/p95/p99),
 //!    overall and per lane, batch-shape accounting, and
 //!    rejection/shed counts in a [`ServeReport`].
-//! 6. **HTTP transport** — a minimal std-only HTTP/1.1 frontend
+//! 6. **HTTP transport** — a std-only HTTP/1.1 frontend
 //!    ([`HttpServer`], `POST /infer` + `GET /stats`) and the
 //!    `cct serve` CLI subcommand put a real wire protocol in front of
-//!    [`ServeHandle`].
+//!    [`ServeHandle`]: a **bounded connection-handler pool with
+//!    keep-alive** ([`HttpConfig`]) — a fixed set of handler threads
+//!    pulling accepted sockets from a bounded backlog (overflow is
+//!    shed `503` at the door), each connection serving many requests
+//!    per TCP handshake, with idle/read timeouts and graceful drain.
+//!    Pool counters land in [`ServeReport::http`].
 //!
 //! Padding to a bucket is sound because every layer computes samples
 //! independently in forward mode; a padded row changes nothing about
@@ -61,8 +66,8 @@ mod lanes;
 mod stats;
 
 pub use batcher::BatchPolicy;
-pub use http::HttpServer;
-pub use stats::{percentile, LaneReport, LatencySummary, ServeReport};
+pub use http::{HttpConfig, HttpServer};
+pub use stats::{percentile, HttpReport, LaneReport, LatencySummary, ServeReport};
 
 use crate::coordinator::flops_proportional_split;
 use crate::device::DeviceSpec;
@@ -137,7 +142,8 @@ impl InferOptions {
 
 /// Engine configuration; `Default` gives a small general-purpose setup
 /// (2 workers, micro-batches up to 16, 2 ms max wait, cost-model
-/// bucket ladder, fixed hold-open window).
+/// bucket ladder, fixed hold-open window, 4 HTTP handler threads for
+/// callers that front the engine with an [`HttpServer`]).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Worker threads; each owns a net replica and its own workspace
@@ -162,6 +168,13 @@ pub struct ServeConfig {
     /// Empty → derive a ladder from the device cost model
     /// ([`plan_bucket_ladder`]).
     pub buckets: Vec<usize>,
+    /// Convenience default for the HTTP transport's handler-pool size
+    /// (`cct serve --http-workers` threads it into
+    /// [`HttpConfig::workers`], which is the transport's single
+    /// source of truth). The engine itself never reads it — callers
+    /// using [`HttpServer::bind_with`] directly configure
+    /// [`HttpConfig`] and may ignore this field.
+    pub http_workers: usize,
     /// Seed for the (identical) worker net replicas.
     pub seed: u64,
 }
@@ -176,6 +189,7 @@ impl Default for ServeConfig {
             queue_cap: 256,
             adaptive_wait: false,
             buckets: Vec::new(),
+            http_workers: 4,
             seed: 42,
         }
     }
@@ -322,7 +336,12 @@ impl ServeHandle {
             return Err(SubmitError::Closed);
         }
         let enqueued = Instant::now();
-        let deadline = opts.deadline_us.map(|us| enqueued + Duration::from_micros(us));
+        // checked_add: an absurd client-supplied deadline (u64::MAX µs
+        // ≈ 584k years) must degrade to "no deadline", not overflow
+        // Instant arithmetic and panic the submitting thread.
+        let deadline = opts
+            .deadline_us
+            .and_then(|us| enqueued.checked_add(Duration::from_micros(us)));
         let (reply, rx) = mpsc::channel();
         Ok((
             InferRequest {
@@ -857,6 +876,23 @@ fc   { name: f1 out: 3 std: 0.1 }
         handle.stop.store(true, Ordering::Relaxed);
         assert_eq!(handle.try_infer(&[0.0; 4]).unwrap_err(), SubmitError::Closed);
         assert!(handle.infer(&[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn absurd_deadline_degrades_to_no_deadline_instead_of_panicking() {
+        // u64::MAX µs would overflow `Instant + Duration` on platforms
+        // with nanosecond-tick Instants — a client header must not be
+        // able to panic the submitting (HTTP handler) thread.
+        let (handle, queue, _stats) = test_handle(2);
+        let opts = InferOptions::default().with_deadline_us(u64::MAX);
+        assert!(handle.try_infer_with(&[0.0; 4], opts).is_ok());
+        let req = queue.try_pop().expect("request was enqueued");
+        // Where the add overflows the deadline degrades to None;
+        // elsewhere it is a far-future Some — either way no panic,
+        // and the request is not already expired.
+        if let Some(d) = req.deadline {
+            assert!(d > Instant::now(), "absurd deadline must not be instantly expired");
+        }
     }
 
     #[test]

@@ -38,12 +38,17 @@ pub struct LatencySummary {
 
 impl LatencySummary {
     /// Summarize a sample set (sorts a copy; empty input → all zeros).
+    /// Non-finite samples (NaN, ±∞) are dropped before summarizing —
+    /// one poisoned measurement must not panic the stats snapshot
+    /// path or make every percentile meaningless — and the sort uses
+    /// [`f64::total_cmp`], which is total even if a non-finite value
+    /// ever slipped through.
     pub fn from_samples(samples: &[f64]) -> Self {
-        if samples.is_empty() {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|v| v.is_finite()).collect();
+        if sorted.is_empty() {
             return LatencySummary::default();
         }
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         LatencySummary {
             p50_us: percentile(&sorted, 50.0),
             p95_us: percentile(&sorted, 95.0),
@@ -78,6 +83,25 @@ pub struct LaneReport {
     pub latency: LatencySummary,
 }
 
+/// HTTP-transport counters: connection-pool accounting recorded by
+/// [`HttpServer`](super::HttpServer) (all zeros when the engine is
+/// driven directly, without the HTTP frontend).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HttpReport {
+    /// Connections a pool handler picked up (total over the run).
+    pub connections: u64,
+    /// Connections currently being handled (a live gauge; bounded by
+    /// the handler-pool size).
+    pub open_connections: u64,
+    /// Requests served on an already-used keep-alive connection —
+    /// i.e. requests that did *not* pay a TCP handshake. The CI smoke
+    /// step asserts this is non-zero for a persistent client.
+    pub keepalive_reuses: u64,
+    /// Connections shed with `503` at accept time because the handler
+    /// pool and its bounded backlog were both full.
+    pub accept_sheds: u64,
+}
+
 /// End-of-run serving statistics, returned by
 /// [`ServeEngine::shutdown`](super::ServeEngine::shutdown).
 #[derive(Clone, Debug)]
@@ -108,6 +132,9 @@ pub struct ServeReport {
     /// Per-lane completion counts and latency, indexed by
     /// `Lane as usize` — see [`ServeReport::lane`].
     pub lanes: [LaneReport; 2],
+    /// HTTP-transport connection-pool counters (zeros when no
+    /// [`HttpServer`](super::HttpServer) fronts the engine).
+    pub http: HttpReport,
     /// Tensor allocations each worker performed *after* its workspaces
     /// were planned — the steady-state serve loop must report all
     /// zeros (the `tensor::alloc_stats` invariant).
@@ -173,6 +200,7 @@ struct Inner {
     batches: u64,
     real_samples: u64,
     padded_slots: u64,
+    http: HttpReport,
     worker_allocs: Vec<u64>,
 }
 
@@ -187,6 +215,7 @@ impl Default for Inner {
             batches: 0,
             real_samples: 0,
             padded_slots: 0,
+            http: HttpReport::default(),
             worker_allocs: Vec::new(),
         }
     }
@@ -229,11 +258,30 @@ impl Recorder {
         self.inner.lock().expect("stats poisoned").worker_allocs.push(allocs);
     }
 
+    pub(crate) fn record_http_conn_opened(&self) {
+        let mut g = self.inner.lock().expect("stats poisoned");
+        g.http.connections += 1;
+        g.http.open_connections += 1;
+    }
+
+    pub(crate) fn record_http_conn_closed(&self) {
+        let mut g = self.inner.lock().expect("stats poisoned");
+        g.http.open_connections = g.http.open_connections.saturating_sub(1);
+    }
+
+    pub(crate) fn record_http_reuse(&self) {
+        self.inner.lock().expect("stats poisoned").http.keepalive_reuses += 1;
+    }
+
+    pub(crate) fn record_http_shed(&self) {
+        self.inner.lock().expect("stats poisoned").http.accept_sheds += 1;
+    }
+
     pub(crate) fn report(&self) -> ServeReport {
         // Copy the raw numbers out under the lock, then sort/summarize
         // outside it — a live `stats()` snapshot must not stall the
         // workers' recording calls for the duration of a 64 Ki sort.
-        let (all, lanes, rejected, expired, batches, real, padded, allocs) = {
+        let (all, lanes, rejected, expired, batches, real, padded, http, allocs) = {
             let g = self.inner.lock().expect("stats poisoned");
             (
                 g.all.clone(),
@@ -243,6 +291,7 @@ impl Recorder {
                 g.batches,
                 g.real_samples,
                 g.padded_slots,
+                g.http,
                 g.worker_allocs.clone(),
             )
         };
@@ -262,6 +311,7 @@ impl Recorder {
                 LaneReport { completed: lanes[0].count, latency: lanes[0].summary() },
                 LaneReport { completed: lanes[1].count, latency: lanes[1].summary() },
             ],
+            http,
             worker_steady_allocs: allocs,
         }
     }
@@ -298,6 +348,45 @@ mod tests {
         // Two elements: the median is the first (⌈0.5·2⌉ = 1).
         assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
         assert_eq!(percentile(&[1.0, 2.0], 51.0), 2.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_and_infinity() {
+        // A single NaN used to panic the `partial_cmp(..).unwrap()`
+        // sort inside every stats snapshot; non-finite samples are now
+        // dropped before summarizing.
+        let s = [1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY];
+        let sum = LatencySummary::from_samples(&s);
+        assert_eq!(sum.p50_us, 2.0);
+        assert_eq!(sum.max_us, 3.0);
+        assert!((sum.mean_us - 2.0).abs() < 1e-12);
+        assert!(sum.p99_us.is_finite());
+        // All-non-finite input degrades to the empty summary, not a
+        // panic or a NaN-poisoned one.
+        let junk = LatencySummary::from_samples(&[f64::NAN, f64::INFINITY]);
+        assert_eq!(junk.p50_us, 0.0);
+        assert_eq!(junk.mean_us, 0.0);
+    }
+
+    #[test]
+    fn http_counters_aggregate() {
+        let r = Recorder::new();
+        r.record_http_conn_opened();
+        r.record_http_conn_opened();
+        r.record_http_reuse();
+        r.record_http_reuse();
+        r.record_http_reuse();
+        r.record_http_shed();
+        r.record_http_conn_closed();
+        let rep = r.report();
+        assert_eq!(rep.http.connections, 2);
+        assert_eq!(rep.http.open_connections, 1);
+        assert_eq!(rep.http.keepalive_reuses, 3);
+        assert_eq!(rep.http.accept_sheds, 1);
+        // The gauge saturates at zero instead of wrapping.
+        r.record_http_conn_closed();
+        r.record_http_conn_closed();
+        assert_eq!(r.report().http.open_connections, 0);
     }
 
     #[test]
