@@ -391,6 +391,41 @@ fn http_transport() -> bool {
     faster && reused
 }
 
+/// Shared-GEMM-pool serving (PR 5): engine workers with a per-call
+/// GEMM thread budget > 1 submit to the ONE process-wide compute pool
+/// (queueing for it) instead of each spawning a private thread set per
+/// call. Acceptance: every request completes and the serve loop stays
+/// allocation-free with pooled GEMMs underneath.
+fn shared_pool_serving() -> bool {
+    let cfg = parse_net(CONV).expect("net parses");
+    let engine = ServeEngine::start(
+        &cfg,
+        ServeConfig {
+            workers: WORKERS,
+            threads_per_worker: 2,
+            max_batch: 8,
+            max_wait_us: 1_000,
+            queue_cap: 1024,
+            ..Default::default()
+        },
+    )
+    .expect("engine starts");
+    const TOTAL: usize = 256;
+    let wall = closed_loop(&engine, 8, TOTAL);
+    let report = engine.shutdown();
+    let done_ok = report.completed == TOTAL as u64;
+    let allocs_ok = report.worker_steady_allocs.iter().all(|&a| a == 0);
+    println!(
+        "shared-pool serving: {WORKERS} workers × 2 GEMM threads on one compute pool ({} pool workers): {:.0} req/s, completed {}, steady allocs {:?} — {}",
+        cct::gemm::pool::global_workers(),
+        TOTAL as f64 / wall,
+        report.completed,
+        report.worker_steady_allocs,
+        if done_ok && allocs_ok { "PASS" } else { "FAIL" }
+    );
+    done_ok && allocs_ok
+}
+
 fn main() {
     std::fs::create_dir_all("bench_out").ok();
     let mut all_zero_allocs = true;
@@ -431,6 +466,16 @@ fn main() {
         "keep-alive transport acceptance: {}",
         if transport_ok {
             "PASS (persistent connections out-serve reconnect-per-request)"
+        } else {
+            "FAIL — see above"
+        }
+    );
+    println!();
+    let pool_ok = shared_pool_serving();
+    println!(
+        "shared-pool serving acceptance: {}",
+        if pool_ok {
+            "PASS (workers share one compute pool, zero steady-state allocs)"
         } else {
             "FAIL — see above"
         }

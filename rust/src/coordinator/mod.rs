@@ -63,6 +63,12 @@ impl CnnCoordinator {
         seed: u64,
     ) -> crate::Result<Self> {
         ensure!(workers >= 1, "need at least one worker");
+        // Workers that will run threaded GEMMs share the process-wide
+        // compute pool; start it (and its per-worker packing arenas)
+        // at construction time rather than mid-first-step.
+        if (total_threads / workers).max(1) > 1 {
+            crate::gemm::pool::prewarm();
+        }
         let mut replicas = Vec::with_capacity(workers);
         for _ in 0..workers {
             // identical seed ⇒ identical init across replicas
@@ -117,7 +123,13 @@ impl CnnCoordinator {
         }
 
         // Run each replica's partition on its own thread, in its own
-        // workspace.
+        // workspace. These are per-step scoped threads, so their
+        // thread-local GEMM packing arenas are rebuilt once per thread
+        // per step — bounded, and strictly less churn than the old
+        // per-GEMM-call packing allocations, but NOT covered by the
+        // pool's zero-steady-state-allocation guarantee (that holds
+        // for pool workers and persistent submitter threads: the main
+        // training thread and the serve workers).
         let losses: Vec<(f64, usize)> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(ranges.len());
             let workers = self.replicas.iter_mut().zip(self.workspaces.iter_mut());
@@ -164,8 +176,11 @@ impl CnnCoordinator {
         }
 
         // Update replica 0, then broadcast parameters to the others
-        // (in-place copy — no tensor churn).
-        self.solver.step(&mut self.replicas[0]);
+        // (in-place copy — no tensor churn). The update may use the
+        // whole configured thread budget: the partition workers have
+        // joined by this point, so the pool is idle.
+        let update_threads = self.threads_per_worker * self.replicas.len();
+        self.solver.step_with_threads(&mut self.replicas[0], update_threads);
         {
             let (head, tail) = self.replicas.split_at_mut(1);
             let p0 = head[0].params_mut();

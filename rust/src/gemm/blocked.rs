@@ -10,8 +10,28 @@
 //! output has fewer than ~MR rows per thread-strip (batch-1 lowering),
 //! packing amortization collapses and effective FLOP/s drop — exactly
 //! the Fig 2(b) effect.
+//!
+//! ## Packing arenas (PR 5)
+//!
+//! The packed A/B micro-panel buffers live in a [`PackArena`] —
+//! per-thread, planned once, reused across calls — instead of being
+//! allocated (and zeroed) per GEMM call. Single-threaded entry points
+//! use a thread-local arena; the persistent worker pool
+//! ([`crate::gemm::pool`]) gives each worker its own arena at spawn.
+//! Steady-state GEMM therefore performs **zero** heap allocation; the
+//! thread-local [`arena_growth_count`] counter (same discipline as
+//! `tensor::alloc_stats`) lets tests assert it.
+//!
+//! The block computation itself is exposed (crate-internally) as
+//! [`compute_block`], which updates an arbitrary `[ic0, ic0+mc)` ×
+//! `[jc0, jc0+nc)` rectangle of a row-major C through a raw base
+//! pointer — the tile primitive the pool schedules. Per-element
+//! arithmetic (packing layout, KC panel boundaries, accumulation
+//! order) is identical no matter how the rectangle is cut, so pooled
+//! execution is bit-identical to [`gemm_blocked`].
 
 use super::{at, GemmDims, Trans};
+use std::cell::{Cell, RefCell};
 
 /// Register microtile rows: MR×NR accumulators.
 pub const MR: usize = 8;
@@ -43,7 +63,93 @@ impl Default for BlockSizes {
     }
 }
 
-/// C ← α·op(A)·op(B) + β·C (row-major, contiguous).
+thread_local! {
+    /// Times this thread's packing arenas (re)grew. Warmed threads
+    /// never grow in steady state — asserted by tests and the fig2
+    /// bench, mirroring the `tensor::alloc_stats` discipline.
+    static ARENA_GROWTH: Cell<u64> = const { Cell::new(0) };
+
+    /// This thread's packing arena for single-threaded blocked GEMM
+    /// calls (pool workers carry their own, non-TLS arena).
+    static TLS_ARENA: RefCell<PackArena> = RefCell::new(PackArena::new());
+}
+
+/// Number of times the *current thread* has grown a packing arena.
+/// Zero growth across a window means the window ran entirely in
+/// planned buffers.
+pub fn arena_growth_count() -> u64 {
+    ARENA_GROWTH.with(|c| c.get())
+}
+
+/// Pre-size the calling thread's thread-local packing arena to full
+/// default-[`BlockSizes`] capacity (the planning step; idempotent).
+pub(crate) fn warm_tls_arena() {
+    TLS_ARENA.with(|a| a.borrow_mut().warm());
+}
+
+/// Run `f` with the calling thread's packing arena borrowed mutably
+/// (panics on reentrant use — GEMM never nests per thread).
+pub(crate) fn with_tls_arena<R>(f: impl FnOnce(&mut PackArena) -> R) -> R {
+    TLS_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Per-thread packing buffers: the MR-row A micro-panels and NR-column
+/// B micro-panels of the Goto blocked GEMM. Planned once (grown to a
+/// high-water mark, at most the default [`BlockSizes`] footprint of
+/// ~6.3 MiB) and reused by every subsequent call on the owning thread.
+pub struct PackArena {
+    /// Packed MC×KC block of op(A) in MR-row micro-panels.
+    packed_a: Vec<f32>,
+    /// Packed KC×NC block of op(B) in NR-column micro-panels.
+    packed_b: Vec<f32>,
+}
+
+impl PackArena {
+    /// An empty arena (buffers grow on first use or via
+    /// [`PackArena::warm`]).
+    pub fn new() -> Self {
+        PackArena { packed_a: Vec::new(), packed_b: Vec::new() }
+    }
+
+    /// Grow to fit one ≤MC × ≤KC A block and one KC × `nc` B block
+    /// (no-op once at capacity; growth bumps the thread's
+    /// [`arena_growth_count`]).
+    pub fn ensure(&mut self, bs: BlockSizes, nc: usize) {
+        let a_need = bs.mc.div_ceil(MR) * MR * bs.kc;
+        let b_need = bs.kc * nc.min(bs.nc).div_ceil(NR) * NR;
+        if self.packed_a.len() < a_need {
+            ARENA_GROWTH.with(|c| c.set(c.get() + 1));
+            self.packed_a.resize(a_need, 0.0);
+        }
+        if self.packed_b.len() < b_need {
+            ARENA_GROWTH.with(|c| c.set(c.get() + 1));
+            self.packed_b.resize(b_need, 0.0);
+        }
+    }
+
+    /// Grow to the full default-[`BlockSizes`] capacity up front — the
+    /// "plan the arena" step pool workers run at spawn and
+    /// `net::Workspace` planning runs for the submitting thread.
+    pub fn warm(&mut self) {
+        let bs = BlockSizes::default();
+        self.ensure(bs, bs.nc);
+    }
+
+    /// Bytes currently held by the arena.
+    pub fn bytes(&self) -> usize {
+        (self.packed_a.len() + self.packed_b.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+impl Default for PackArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// C ← α·op(A)·op(B) + β·C (row-major, contiguous). Single-threaded;
+/// packing runs in the calling thread's planned arena (no per-call
+/// allocation once warm).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_blocked(
     ta: Trans,
@@ -73,26 +179,81 @@ pub fn gemm_blocked(
         return;
     }
 
-    let mut packed_a = vec![0f32; bs.mc.div_ceil(MR) * MR * bs.kc];
-    let mut packed_b = vec![0f32; bs.kc * bs.nc.div_ceil(NR) * NR];
-
-    let mut jc = 0;
-    while jc < n {
-        let nc = bs.nc.min(n - jc);
-        let mut pc = 0;
-        while pc < k {
-            let kc = bs.kc.min(k - pc);
-            pack_b(tb, b, k, n, pc, jc, kc, nc, &mut packed_b);
-            let mut ic = 0;
-            while ic < m {
-                let mc = bs.mc.min(m - ic);
-                pack_a(ta, a, m, k, ic, pc, mc, kc, alpha, &mut packed_a);
-                macro_kernel(&packed_a, &packed_b, mc, nc, kc, c, n, ic, jc);
-                ic += mc;
+    let c_ptr = c.as_mut_ptr();
+    let c_len = c.len();
+    with_tls_arena(|arena| {
+        let mut jc = 0;
+        while jc < n {
+            let nc = bs.nc.min(n - jc);
+            // SAFETY: `c_ptr`/`c_len` come from the exclusive `&mut c`
+            // above and this thread is the only writer for the whole
+            // call; the [0,m)×[jc,jc+nc) rectangle is in bounds.
+            unsafe {
+                compute_block(ta, tb, dims, alpha, a, b, c_ptr, c_len, n, 0, m, jc, nc, bs, arena);
             }
-            pc += kc;
+            jc += nc;
         }
-        jc += nc;
+    });
+}
+
+/// Accumulate `alpha·op(A)·op(B)` into the `[ic0, ic0+mc_total)` ×
+/// `[jc0, jc0+nc_total)` rectangle of C (row-major with row stride
+/// `ldc`), looping KC panels outermost and packing through `arena`.
+/// This is the macro-tile primitive the worker pool schedules; the β
+/// scaling of C is the caller's job (exactly once per element).
+///
+/// # Safety
+///
+/// `c` must be valid for reads/writes of `c_len` elements; the
+/// addressed rectangle must lie within `c_len` (i.e.
+/// `(ic0+mc_total-1)·ldc + jc0+nc_total ≤ c_len`); and no other thread
+/// may access that rectangle for the duration of the call. Disjoint
+/// rectangles of the same C may be updated concurrently.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn compute_block(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    c: *mut f32,
+    c_len: usize,
+    ldc: usize,
+    ic0: usize,
+    mc_total: usize,
+    jc0: usize,
+    nc_total: usize,
+    bs: BlockSizes,
+    arena: &mut PackArena,
+) {
+    let GemmDims { m, n, k } = dims;
+    debug_assert!(nc_total <= bs.nc, "tile wider than the packed-B arena");
+    debug_assert!((ic0 + mc_total - 1) * ldc + jc0 + nc_total <= c_len);
+    arena.ensure(bs, nc_total);
+    let mut pc = 0;
+    while pc < k {
+        let kc = bs.kc.min(k - pc);
+        pack_b(tb, b, k, n, pc, jc0, kc, nc_total, &mut arena.packed_b);
+        let mut ic = ic0;
+        while ic < ic0 + mc_total {
+            let mc = bs.mc.min(ic0 + mc_total - ic);
+            pack_a(ta, a, m, k, ic, pc, mc, kc, alpha, &mut arena.packed_a);
+            macro_kernel(
+                &arena.packed_a,
+                &arena.packed_b,
+                mc,
+                nc_total,
+                kc,
+                c,
+                c_len,
+                ldc,
+                ic,
+                jc0,
+            );
+            ic += mc;
+        }
+        pc += kc;
     }
 }
 
@@ -159,14 +320,21 @@ fn pack_b(
 }
 
 /// Drive the microkernel over all MR×NR tiles of the packed block.
+///
+/// # Safety
+///
+/// Same contract as [`compute_block`]: the addressed
+/// `[ic, ic+mc) × [jc, jc+nc)` rectangle of the `ldc`-strided C must
+/// lie within `c_len` and be exclusively owned by this thread.
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(
+unsafe fn macro_kernel(
     packed_a: &[f32],
     packed_b: &[f32],
     mc: usize,
     nc: usize,
     kc: usize,
-    c: &mut [f32],
+    c: *mut f32,
+    c_len: usize,
     ldc: usize,
     ic: usize,
     jc: usize,
@@ -179,7 +347,7 @@ fn macro_kernel(
             let bpanel = &packed_b[q * NR * kc..q * NR * kc + NR * kc];
             let rows = MR.min(mc - p * MR);
             let cols = NR.min(nc - q * NR);
-            micro_kernel(apanel, bpanel, kc, c, ldc, ic + p * MR, jc + q * NR, rows, cols);
+            micro_kernel(apanel, bpanel, kc, c, c_len, ldc, ic + p * MR, jc + q * NR, rows, cols);
         }
     }
 }
@@ -189,13 +357,19 @@ fn macro_kernel(
 /// AVX-512 kernel when available (8 ZMM accumulators, one ZMM B load +
 /// 8 broadcast-FMAs per k step — see EXPERIMENTS.md §Perf), falling
 /// back to an auto-vectorized portable kernel.
+///
+/// # Safety
+///
+/// The `rows × cols` rectangle at `(row0, col0)` of the `ldc`-strided
+/// C must lie within `c_len` and be exclusively owned by this thread.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn micro_kernel(
+unsafe fn micro_kernel(
     apanel: &[f32],
     bpanel: &[f32],
     kc: usize,
-    c: &mut [f32],
+    c: *mut f32,
+    c_len: usize,
     ldc: usize,
     row0: usize,
     col0: usize,
@@ -206,23 +380,27 @@ fn micro_kernel(
     {
         if std::arch::is_x86_feature_detected!("avx512f") {
             // SAFETY: feature checked; panel sizes are MR·kc / NR·kc by
-            // construction; C bounds asserted inside.
-            unsafe {
-                micro_kernel_avx512(apanel, bpanel, kc, c, ldc, row0, col0, rows, cols);
-            }
+            // construction; C bounds guaranteed by the caller.
+            micro_kernel_avx512(apanel, bpanel, kc, c, c_len, ldc, row0, col0, rows, cols);
             return;
         }
     }
-    micro_kernel_portable(apanel, bpanel, kc, c, ldc, row0, col0, rows, cols);
+    micro_kernel_portable(apanel, bpanel, kc, c, c_len, ldc, row0, col0, rows, cols);
 }
 
+/// Portable (auto-vectorized) microkernel body.
+///
+/// # Safety
+///
+/// Same contract as [`micro_kernel`].
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn micro_kernel_portable(
+unsafe fn micro_kernel_portable(
     apanel: &[f32],
     bpanel: &[f32],
     kc: usize,
-    c: &mut [f32],
+    c: *mut f32,
+    c_len: usize,
     ldc: usize,
     row0: usize,
     col0: usize,
@@ -242,7 +420,11 @@ fn micro_kernel_portable(
         }
     }
     for r in 0..rows {
-        let crow = &mut c[(row0 + r) * ldc + col0..(row0 + r) * ldc + col0 + cols];
+        let base = (row0 + r) * ldc + col0;
+        debug_assert!(base + cols <= c_len);
+        // SAFETY: per-row slices of disjoint tiles never overlap; the
+        // caller guarantees exclusive ownership of this rectangle.
+        let crow = std::slice::from_raw_parts_mut(c.add(base), cols);
         for (j, cv) in crow.iter_mut().enumerate() {
             *cv += acc[r][j];
         }
@@ -250,6 +432,10 @@ fn micro_kernel_portable(
 }
 
 /// Explicit AVX-512 8×16 microkernel: one ZMM per output row.
+///
+/// # Safety
+///
+/// Requires `avx512f`; same C-ownership contract as [`micro_kernel`].
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f")]
 #[allow(clippy::too_many_arguments)]
@@ -257,7 +443,8 @@ unsafe fn micro_kernel_avx512(
     apanel: &[f32],
     bpanel: &[f32],
     kc: usize,
-    c: &mut [f32],
+    c: *mut f32,
+    c_len: usize,
     ldc: usize,
     row0: usize,
     col0: usize,
@@ -290,7 +477,9 @@ unsafe fn micro_kernel_avx512(
     }
     if cols == NR {
         for r in 0..rows {
-            let cp = c.as_mut_ptr().add((row0 + r) * ldc + col0);
+            let base = (row0 + r) * ldc + col0;
+            debug_assert!(base + cols <= c_len);
+            let cp = c.add(base);
             _mm512_storeu_ps(cp, _mm512_add_ps(_mm512_loadu_ps(cp), acc0[r]));
             let cp1 = cp.add(16);
             _mm512_storeu_ps(cp1, _mm512_add_ps(_mm512_loadu_ps(cp1), acc1[r]));
@@ -301,7 +490,9 @@ unsafe fn micro_kernel_avx512(
         for r in 0..rows {
             _mm512_storeu_ps(tmp.as_mut_ptr(), acc0[r]);
             _mm512_storeu_ps(tmp.as_mut_ptr().add(16), acc1[r]);
-            let crow = &mut c[(row0 + r) * ldc + col0..(row0 + r) * ldc + col0 + cols];
+            let base = (row0 + r) * ldc + col0;
+            debug_assert!(base + cols <= c_len);
+            let crow = std::slice::from_raw_parts_mut(c.add(base), cols);
             for (j, cv) in crow.iter_mut().enumerate() {
                 *cv += tmp[j];
             }
@@ -366,5 +557,56 @@ mod tests {
         let mut c = vec![0f32; m * n];
         gemm_blocked(Trans::N, Trans::N, GemmDims { m, n, k }, 2.0, &a, &b, 0.0, &mut c, BlockSizes::default());
         assert!(c.iter().all(|&x| (x - 24.0).abs() < 1e-4));
+    }
+
+    /// A warmed thread never grows its packing arena again — the
+    /// planned-once discipline the pool relies on.
+    #[test]
+    fn warm_arena_never_regrows() {
+        warm_tls_arena();
+        let before = arena_growth_count();
+        for _ in 0..3 {
+            check(130, 70, 50, BlockSizes::default());
+        }
+        assert_eq!(arena_growth_count(), before, "steady-state arena growth");
+    }
+
+    /// `compute_block` on a split rectangle is bit-identical to the
+    /// whole-matrix blocked call (the property pooled tiles rely on).
+    #[test]
+    fn split_tiles_bitwise_match_whole() {
+        let dims = GemmDims { m: 161, n: 93, k: 77 };
+        let mut rng = Pcg64::new(2024);
+        let mut a = vec![0f32; dims.m * dims.k];
+        let mut b = vec![0f32; dims.k * dims.n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let bs = BlockSizes::default();
+        let mut whole = vec![0.25f32; dims.m * dims.n];
+        gemm_blocked(Trans::N, Trans::N, dims, 1.5, &a, &b, 0.5, &mut whole, bs);
+
+        let mut tiled = vec![0.25f32; dims.m * dims.n];
+        for x in tiled.iter_mut() {
+            *x *= 0.5; // β pass, once per element
+        }
+        let mut arena = PackArena::new();
+        let c_len = tiled.len();
+        let c_ptr = tiled.as_mut_ptr();
+        // Cut C into a 2×2 grid of rectangles, computed separately.
+        for &(ic0, mc) in &[(0usize, 128usize), (128, 33)] {
+            for &(jc0, nc) in &[(0usize, 64usize), (64, 29)] {
+                // SAFETY: rectangles are disjoint and in bounds; this
+                // thread is the only writer.
+                unsafe {
+                    compute_block(
+                        Trans::N, Trans::N, dims, 1.5, &a, &b, c_ptr, c_len, dims.n, ic0, mc,
+                        jc0, nc, bs, &mut arena,
+                    );
+                }
+            }
+        }
+        for (i, (x, y)) in whole.iter().zip(tiled.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "idx {i}: {x} vs {y}");
+        }
     }
 }

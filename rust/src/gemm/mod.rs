@@ -14,21 +14,26 @@
 //!   micro-panels of B,
 //! * an `MR × NR` register-tiled microkernel does the FLOPs.
 //!
-//! Threading mirrors what the paper observes about OpenBLAS: the output
-//! is partitioned into disjoint strips with one thread per strip (we
-//! strip rows of C — the dimension that grows with the lowered batch —
-//! so batch-1 lowerings hand each thread a sliver, reproducing the
-//! paper's "thin matrix" pathology).
+//! Threading runs on a **persistent worker pool** ([`pool`], PR 5):
+//! GEMM work is decomposed into 2-D MC×NC macro-tiles claimed off a
+//! shared queue by long-lived workers with per-thread packing arenas —
+//! no thread spawn and no packing allocation per call. The old
+//! spawn-per-call row-strip path is retained as
+//! [`gemm_spawn`] — it is the measured baseline for the pool (and
+//! still reproduces the paper's "thin matrix" pathology: batch-1
+//! lowerings hand each strip a sliver, so adding threads hurts).
 //!
 //! All matrices are row-major and contiguous.
 
 mod blocked;
 mod naive;
+pub mod pool;
 mod threaded;
 
-pub use blocked::{gemm_blocked, BlockSizes};
+pub use blocked::{arena_growth_count, gemm_blocked, BlockSizes, PackArena};
 pub use naive::gemm_naive;
-pub use threaded::gemm_threaded;
+pub use pool::GemmPool;
+pub use threaded::{gemm_spawn, gemm_threaded};
 
 /// Transpose flag for an operand. The buffer is always row-major; `T`
 /// means the *logical* operand is the transpose of the stored matrix.
@@ -62,7 +67,9 @@ pub fn gemm_flops(d: GemmDims) -> u64 {
 ///
 /// Dispatches to the naive kernel for tiny problems (where packing
 /// overhead dominates) and the blocked kernel otherwise; `threads > 1`
-/// strips C by rows.
+/// schedules MC×NC macro-tiles over the persistent worker pool
+/// ([`pool`]) — no thread spawn or packing allocation per call, and
+/// results bit-identical to the single-threaded blocked kernel.
 ///
 /// Degenerate dimensions follow the BLAS quick-return convention in
 /// every kernel: `m == 0` or `n == 0` touches nothing, and `k == 0`
@@ -87,7 +94,7 @@ pub fn sgemm(
     } else if threads <= 1 {
         gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, BlockSizes::default());
     } else {
-        gemm_threaded(ta, tb, dims, alpha, a, b, beta, c, threads);
+        pool::sgemm_pooled(ta, tb, dims, alpha, a, b, beta, c, threads);
     }
 }
 
@@ -97,7 +104,7 @@ pub fn matmul(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32])
     sgemm(Trans::N, Trans::N, GemmDims { m, n, k }, 1.0, a, b, 0.0, c, 1);
 }
 
-fn validate(ta: Trans, tb: Trans, dims: GemmDims, a: &[f32], b: &[f32], c: &[f32]) {
+pub(crate) fn validate(ta: Trans, tb: Trans, dims: GemmDims, a: &[f32], b: &[f32], c: &[f32]) {
     let GemmDims { m, n, k } = dims;
     assert!(c.len() >= m * n, "C buffer too small: {} < {}", c.len(), m * n);
     // Degenerate problems never read A or B (quick return / β pass
@@ -244,6 +251,7 @@ mod tests {
                     gemm_naive(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c);
                     gemm_blocked(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, BlockSizes::default());
                     gemm_threaded(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, 8);
+                    gemm_spawn(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, 8);
                     sgemm(ta, tb, dims, 1.0, &[], &[], 1.0, &mut c, 4);
                     assert!(c.iter().all(|&x| x == 7.0), "({m},{n},{k}) touched C");
                 }
@@ -266,6 +274,7 @@ mod tests {
             gemm_blocked(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, BlockSizes::default())
         });
         run(&|c| gemm_threaded(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, 8));
+        run(&|c| gemm_spawn(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, 8));
         run(&|c| sgemm(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, c, 4));
     }
 }

@@ -1,0 +1,881 @@
+//! Persistent GEMM worker pool with 2-D tile scheduling (PR 5).
+//!
+//! The paper's end-to-end claim — CPU time tracks delivered FLOPS once
+//! batching restores GEMM efficiency (§2.2) — only holds if the
+//! runtime doesn't tax every GEMM call with fixed costs. The previous
+//! threaded path paid two such taxes per call, per layer, per step:
+//! a `std::thread::scope` spawn for every strip, and a fresh
+//! allocation (plus zeroing) of the ~6 MiB packed-panel buffers in
+//! every strip. This module replaces both with a **persistent pool**:
+//!
+//! * a fixed set of long-lived workers (`cct-gemm-{pool}-{idx}`
+//!   threads), parked on a condvar between calls;
+//! * GEMM work decomposed into **2-D MC×NC macro-tiles** claimed off a
+//!   shared atomic tile counter — squat, wide outputs (the im2col
+//!   shapes: few rows, thousands of columns) split along *columns*
+//!   too, where the old 1-D row-strip split starved every thread but
+//!   one;
+//! * a per-worker [`PackArena`] planned once at spawn and reused by
+//!   every call — zero steady-state allocation, measurable via
+//!   [`arena_allocs`] and `tensor::alloc_stats` (the guarantee covers
+//!   pool workers and persistent submitter threads; a short-lived
+//!   thread — e.g. a per-step scoped partition worker — warms its own
+//!   arena once on first use);
+//! * the submitting thread participates in tile execution, so a pool
+//!   with zero workers degrades to exactly the single-threaded path.
+//!
+//! One job runs on the pool at a time; a submitter that finds the pool
+//! busy with another thread's job does **not** idle on the lock — it
+//! computes its own GEMM inline (single-threaded, in its own arena),
+//! so `p` concurrent submitters — the serve engine's workers,
+//! batch-partition workers — deliver ~`pool + p − 1` threads of
+//! aggregate progress without ever oversubscribing the machine with
+//! private thread sets. Tiles write
+//! disjoint rectangles of C and the per-element arithmetic is
+//! identical to [`crate::gemm::gemm_blocked`], so pooled results are
+//! bit-identical to the single-threaded kernel regardless of order —
+//! `rust/tests/pool_gemm.rs` asserts exactly that, under contention.
+//!
+//! Most callers never touch this module directly: [`crate::gemm::sgemm`]
+//! routes `threads > 1` through the process-wide [`global`] pool, and
+//! [`parallel_for`] gives the lowering/lift/solver loops a way to run
+//! data-parallel chunks on the same threads (no extra spawns anywhere
+//! on the training or serving hot path).
+
+use super::blocked::{compute_block, warm_tls_arena, BlockSizes, PackArena, NR};
+use super::{gemm_naive, GemmDims, Trans};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Tiles to aim for per participating executor: enough slack for
+/// dynamic load balancing without shredding packing reuse.
+const TILES_PER_EXEC: usize = 4;
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread, and on a
+    /// submitting thread while it executes its own job's tasks: a
+    /// thread inside the pool must never (re)submit to it — a worker
+    /// has no way to drive a nested job, and a submitter already holds
+    /// the run lock. Pool entry points fall back to the inline kernel
+    /// when set.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// One GEMM call's shared description: operand pointers + the tile
+/// grid. Tiles are rectangles of C; tile `t` covers rows
+/// `[ (t % tiles_m)·tile_m, +tile_m )` and columns
+/// `[ (t / tiles_m)·tile_n, +tile_n )`, clipped to the matrix.
+#[derive(Clone, Copy)]
+struct GemmJob {
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    beta: f32,
+    a: *const f32,
+    a_len: usize,
+    b: *const f32,
+    b_len: usize,
+    c: *mut f32,
+    c_len: usize,
+    tile_m: usize,
+    tile_n: usize,
+    tiles_m: usize,
+    bs: BlockSizes,
+}
+
+/// A generic data-parallel region: `f(t)` for `t in 0..ntasks`, each
+/// index claimed by exactly one executor.
+#[derive(Clone, Copy)]
+struct TaskJob {
+    f: *const (dyn Fn(usize) + Sync),
+}
+
+#[derive(Clone, Copy)]
+enum JobKind {
+    Gemm(GemmJob),
+    Tasks(TaskJob),
+}
+
+#[derive(Clone, Copy)]
+struct Job {
+    ntasks: usize,
+    /// Executor cap for this job (submitter + at most `max_exec - 1`
+    /// workers) — how the per-call `threads` budget is enforced.
+    max_exec: usize,
+    kind: JobKind,
+}
+
+// SAFETY: the raw pointers in a Job refer to buffers the submitting
+// thread keeps alive (and exclusively owned, for C) for the entire
+// run: `GemmPool::run` does not return until every claimed task has
+// finished and every participating worker has left the job. Tiles
+// address disjoint rectangles of C.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Ctrl {
+    /// Bumped once per submitted job; workers key their pickup on it.
+    epoch: u64,
+    /// The job of the current epoch (None once it completed).
+    job: Option<Job>,
+    /// Executors that joined the current job (the submitter plus every
+    /// worker that picked it up); capped at the job's `max_exec`.
+    joined: usize,
+    /// Workers currently inside the job's execution loop.
+    in_flight: usize,
+    /// Pool is shutting down; workers exit.
+    shutdown: bool,
+}
+
+/// Lock the pool's control state, recovering from poison: the guarded
+/// state is only ever mutated by straight-line integer updates that
+/// cannot panic mid-update, so a poisoned mutex (a pool *task*
+/// panicked and unwound through a lock-holding frame elsewhere) left
+/// it consistent. Recovering keeps one panicked request from bricking
+/// every later GEMM in the process.
+fn lock_ctrl(shared: &Shared) -> std::sync::MutexGuard<'_, Ctrl> {
+    shared.ctrl.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The submitter waits here for tasks-done + workers-out.
+    done_cv: Condvar,
+    /// Next unclaimed task index of the current job.
+    next_task: AtomicUsize,
+    /// Completed tasks of the current job.
+    tasks_done: AtomicUsize,
+    /// A task of the current job panicked (caught so the job still
+    /// completes its bookkeeping; the submitter re-raises).
+    panicked: AtomicBool,
+}
+
+/// A persistent compute pool: `workers` long-lived threads plus the
+/// submitting thread execute tiles/tasks claimed from a shared
+/// counter. Dropping the pool joins every worker (procfs-asserted in
+/// `rust/tests/pool_gemm.rs`).
+///
+/// Most code should use the process-wide [`global`] pool via
+/// [`crate::gemm::sgemm`]; constructing private pools is for tests and
+/// special deployments.
+pub struct GemmPool {
+    shared: Arc<Shared>,
+    /// Serializes whole jobs: one GEMM/parallel-for on the pool at a
+    /// time; concurrent submitters queue here.
+    run_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+    id: u64,
+}
+
+impl GemmPool {
+    /// A pool with `workers` background worker threads. The submitting
+    /// thread also executes tiles, so total parallelism is
+    /// `workers + 1`; `GemmPool::new(0)` is a valid, fully inline
+    /// degenerate pool. Each worker plans its packing arena at spawn.
+    pub fn new(workers: usize) -> Self {
+        static POOL_IDS: AtomicU64 = AtomicU64::new(0);
+        let id = POOL_IDS.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl { epoch: 0, job: None, joined: 0, in_flight: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_task: AtomicUsize::new(0),
+            tasks_done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("cct-gemm-{id}-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning gemm pool worker");
+            handles.push(handle);
+        }
+        GemmPool { shared, run_lock: Mutex::new(()), handles, id }
+    }
+
+    /// Number of background worker threads (total parallelism is this
+    /// plus the submitting thread).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// The `/proc/self/task/*/comm` name prefix of this pool's worker
+    /// threads (see [`threads_with_prefix`]).
+    pub fn thread_name_prefix(&self) -> String {
+        format!("cct-gemm-{}-", self.id)
+    }
+
+    /// C ← α·op(A)·op(B) + β·C, decomposed into MC×NC macro-tiles
+    /// scheduled over the pool. `threads` caps the parallelism this
+    /// call plans for (clamped to the pool size + 1). Results are
+    /// bit-identical to [`gemm_blocked`] with default [`BlockSizes`].
+    ///
+    /// [`gemm_blocked`]: crate::gemm::gemm_blocked
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        dims: GemmDims,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c: &mut [f32],
+        threads: usize,
+    ) {
+        super::validate(ta, tb, dims, a, b, c);
+        let GemmDims { m, n, k } = dims;
+        if m == 0 || n == 0 || k == 0 {
+            // Quick-return convention: β pass only (never reads A/B).
+            gemm_naive(ta, tb, dims, alpha, a, b, beta, c);
+            return;
+        }
+        let bs = BlockSizes::default();
+        let par = threads.max(1).min(self.workers() + 1);
+        let (tile_m, tile_n) = plan_tiles(m, n, par, bs);
+        let tiles_m = m.div_ceil(tile_m);
+        let tiles_n = n.div_ceil(tile_n);
+        let ntiles = tiles_m * tiles_n;
+        if par == 1 || ntiles == 1 || in_pool_worker() {
+            super::gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, bs);
+            return;
+        }
+        // Pool busy with another submitter's job? Contribute this
+        // thread's worth of progress inline instead of idling: with p
+        // concurrent submitters the machine runs ~pool + p − 1 threads
+        // of useful work, never more (and the result is bit-identical
+        // either way).
+        let Some(serialize) = self.try_serialize() else {
+            super::gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, bs);
+            return;
+        };
+        let job = Job {
+            ntasks: ntiles,
+            max_exec: par,
+            kind: JobKind::Gemm(GemmJob {
+                ta,
+                tb,
+                dims,
+                alpha,
+                beta,
+                a: a.as_ptr(),
+                a_len: a.len(),
+                b: b.as_ptr(),
+                b_len: b.len(),
+                c: c.as_mut_ptr(),
+                c_len: c.len(),
+                tile_m,
+                tile_n,
+                tiles_m,
+                bs,
+            }),
+        };
+        self.run(serialize, job);
+    }
+
+    /// Run `f(t)` for every `t in 0..ntasks` across up to `threads`
+    /// executors (the calling thread plus pool workers); returns when
+    /// all tasks completed. Tasks must be safe to run concurrently
+    /// (disjoint outputs). Falls back to a serial loop for a budget of
+    /// 1, trivial sizes, zero-worker pools, and calls made from a pool
+    /// worker.
+    pub fn parallel_for(&self, threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if ntasks == 0 {
+            return;
+        }
+        let par = threads.max(1).min(self.workers() + 1);
+        if par == 1 || ntasks == 1 || in_pool_worker() {
+            for t in 0..ntasks {
+                f(t);
+            }
+            return;
+        }
+        // Busy pool: run serially on this thread rather than idling
+        // (same no-stall policy as `gemm`).
+        let Some(serialize) = self.try_serialize() else {
+            for t in 0..ntasks {
+                f(t);
+            }
+            return;
+        };
+        // SAFETY: the 'static lifetime is a lie confined to this call:
+        // `run` blocks until every claimed task finished and every
+        // participating worker left the job, so no worker can touch
+        // `f` after this frame returns.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Job { ntasks, max_exec: par, kind: JobKind::Tasks(TaskJob { f: f_static }) };
+        self.run(serialize, job);
+    }
+
+    /// Acquire the job-serialization lock without blocking: `None`
+    /// means another submitter's job is in flight (callers then do
+    /// their work inline). Poison is recovered — the lock guards no
+    /// data.
+    fn try_serialize(&self) -> Option<std::sync::MutexGuard<'_, ()>> {
+        match self.run_lock.try_lock() {
+            Ok(guard) => Some(guard),
+            Err(std::sync::TryLockError::Poisoned(p)) => Some(p.into_inner()),
+            Err(std::sync::TryLockError::WouldBlock) => None,
+        }
+    }
+
+    /// Post a job, execute tiles on the calling thread alongside the
+    /// workers, and wait for full completion (tasks done AND all
+    /// workers out of the job — the latter guarantees no worker still
+    /// holds the job's pointers when this returns). `_serialize` is
+    /// the held job-serialization guard from [`GemmPool::try_serialize`].
+    fn run(&self, _serialize: std::sync::MutexGuard<'_, ()>, job: Job) {
+        {
+            let mut ctrl = lock_ctrl(&self.shared);
+            self.shared.next_task.store(0, Ordering::Relaxed);
+            self.shared.tasks_done.store(0, Ordering::Relaxed);
+            self.shared.panicked.store(false, Ordering::Relaxed);
+            ctrl.epoch = ctrl.epoch.wrapping_add(1);
+            ctrl.joined = 1; // the submitter is executor #1
+            ctrl.job = Some(job);
+        }
+        self.shared.work_cv.notify_all();
+        // The submitter executes tasks too, flagged as "inside the
+        // pool" so a task body can never re-enter the run lock.
+        IN_POOL_WORKER.with(|f| {
+            let prev = f.get();
+            f.set(true);
+            execute_with_tls_arena(&job, &self.shared);
+            f.set(prev);
+        });
+        let mut ctrl = lock_ctrl(&self.shared);
+        while self.shared.tasks_done.load(Ordering::Acquire) < job.ntasks || ctrl.in_flight > 0 {
+            ctrl = self
+                .shared
+                .done_cv
+                .wait(ctrl)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        ctrl.job = None;
+        drop(ctrl);
+        if self.shared.panicked.load(Ordering::Relaxed) {
+            panic!("a gemm pool task panicked (see worker output above)");
+        }
+    }
+}
+
+impl Drop for GemmPool {
+    /// Joins every worker thread: after drop, no `cct-gemm-{id}-*`
+    /// thread of this pool remains (asserted via procfs in tests and
+    /// the CI smoke).
+    fn drop(&mut self) {
+        {
+            let mut ctrl = lock_ctrl(&self.shared);
+            ctrl.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    // The worker's packing arena: planned once, here, at full
+    // capacity — never grows again (pool tiles never exceed the
+    // default BlockSizes footprint).
+    let mut arena = PackArena::new();
+    arena.warm();
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut ctrl = lock_ctrl(shared);
+            loop {
+                if ctrl.shutdown {
+                    return;
+                }
+                if ctrl.epoch != seen {
+                    seen = ctrl.epoch;
+                    if let Some(job) = ctrl.job {
+                        // Join only while the job's executor budget
+                        // (submitter + workers) has room — this is
+                        // where the per-call `threads` cap binds.
+                        if ctrl.joined < job.max_exec {
+                            ctrl.joined += 1;
+                            ctrl.in_flight += 1;
+                            break job;
+                        }
+                    }
+                }
+                ctrl = shared.work_cv.wait(ctrl).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        execute(&job, shared, &mut arena);
+        {
+            let mut ctrl = lock_ctrl(shared);
+            ctrl.in_flight -= 1;
+        }
+        shared.done_cv.notify_all();
+    }
+}
+
+/// Claim-and-run loop shared by workers and the submitting thread.
+/// A panicking task is caught so the job's bookkeeping still completes
+/// (otherwise the submitter would wait forever); the flag makes the
+/// submitter re-raise once the job has fully drained.
+fn execute(job: &Job, shared: &Shared, arena: &mut PackArena) {
+    loop {
+        let t = shared.next_task.fetch_add(1, Ordering::Relaxed);
+        if t >= job.ntasks {
+            break;
+        }
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            match job.kind {
+                JobKind::Gemm(ref g) => run_tile(g, t, arena),
+                JobKind::Tasks(ref tasks) => {
+                    // SAFETY: the submitter keeps the closure alive
+                    // until `run` returns (see `parallel_for`).
+                    let f = unsafe { &*tasks.f };
+                    f(t);
+                }
+            }
+        }));
+        if outcome.is_err() {
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+        shared.tasks_done.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// The submitting thread participates in GEMM jobs using its
+/// thread-local arena (the same one single-threaded `gemm_blocked`
+/// calls use). Task jobs never pack, so they get a throwaway empty
+/// arena instead — which also lets a task body run an inline GEMM of
+/// its own without re-entering the thread-local borrow.
+fn execute_with_tls_arena(job: &Job, shared: &Shared) {
+    match job.kind {
+        JobKind::Gemm(_) => super::blocked::with_tls_arena(|arena| execute(job, shared, arena)),
+        JobKind::Tasks(_) => {
+            let mut unused = PackArena::new();
+            execute(job, shared, &mut unused);
+        }
+    }
+}
+
+/// Compute one macro-tile: β-scale its C rectangle (each element
+/// belongs to exactly one tile), then accumulate via `compute_block`.
+fn run_tile(g: &GemmJob, t: usize, arena: &mut PackArena) {
+    let GemmDims { m, n, .. } = g.dims;
+    let ti = t % g.tiles_m;
+    let tj = t / g.tiles_m;
+    let ic0 = ti * g.tile_m;
+    let jc0 = tj * g.tile_n;
+    if ic0 >= m || jc0 >= n {
+        return; // defensive: grid exactly covers the matrix
+    }
+    let mc_total = g.tile_m.min(m - ic0);
+    let nc_total = g.tile_n.min(n - jc0);
+    // SAFETY: the submitter keeps A/B/C alive (and C exclusively
+    // borrowed) until every tile completes; this tile's rectangle is
+    // disjoint from every other tile's.
+    unsafe {
+        let a = std::slice::from_raw_parts(g.a, g.a_len);
+        let b = std::slice::from_raw_parts(g.b, g.b_len);
+        if g.beta == 0.0 {
+            for r in ic0..ic0 + mc_total {
+                std::slice::from_raw_parts_mut(g.c.add(r * n + jc0), nc_total).fill(0.0);
+            }
+        } else if g.beta != 1.0 {
+            for r in ic0..ic0 + mc_total {
+                for x in std::slice::from_raw_parts_mut(g.c.add(r * n + jc0), nc_total) {
+                    *x *= g.beta;
+                }
+            }
+        }
+        compute_block(
+            g.ta, g.tb, g.dims, g.alpha, a, b, g.c, g.c_len, n, ic0, mc_total, jc0, nc_total,
+            g.bs, arena,
+        );
+    }
+}
+
+/// Choose the macro-tile shape for an m×n output at parallelism `par`:
+/// whole-MC row bands by default (maximum packing reuse), coalesced
+/// when m is tall (fewer, fatter tiles), and split along columns in
+/// NR multiples when the row dimension alone cannot feed every
+/// executor — the squat im2col shapes the 1-D row split starved.
+fn plan_tiles(m: usize, n: usize, par: usize, bs: BlockSizes) -> (usize, usize) {
+    let round_up = |x: usize, q: usize| x.div_ceil(q) * q;
+    let target = par * TILES_PER_EXEC;
+    let mut tile_m = bs.mc;
+    if m.div_ceil(tile_m) > target {
+        tile_m = round_up(m.div_ceil(target), bs.mc);
+    }
+    let mut tile_n = n.min(bs.nc);
+    let tiles_m = m.div_ceil(tile_m);
+    if tiles_m < par && n > NR {
+        let splits = par.div_ceil(tiles_m);
+        tile_n = round_up(n.div_ceil(splits), NR).min(bs.nc);
+    }
+    (tile_m, tile_n)
+}
+
+// ---------------------------------------------------------------------
+// Process-wide pool
+// ---------------------------------------------------------------------
+
+static GLOBAL: Mutex<Option<Arc<GemmPool>>> = Mutex::new(None);
+static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Total compute threads the process-wide pool plans for when it first
+/// starts: the `CCT_POOL_THREADS` env var if set, else
+/// `available_parallelism()`. One of these is the submitting thread,
+/// so the pool spawns one fewer worker.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("CCT_POOL_THREADS") {
+        if let Ok(t) = v.trim().parse::<usize>() {
+            return t.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the process-wide pool's total thread budget (workers + the
+/// submitting thread) **before** it first starts. Returns `false` —
+/// leaving the running pool untouched — once the pool exists; the
+/// first configuration wins, which keeps concurrent engines sharing
+/// one pool instead of stacking private thread sets.
+pub fn configure(threads: usize) -> bool {
+    let guard = GLOBAL.lock().expect("gemm pool registry poisoned");
+    if guard.is_some() {
+        return false;
+    }
+    CONFIGURED_THREADS.store(threads.max(1), Ordering::Relaxed);
+    true
+}
+
+/// The process-wide pool, started on first use (size per [`configure`]
+/// / [`default_threads`]).
+pub fn global() -> Arc<GemmPool> {
+    let mut guard = GLOBAL.lock().expect("gemm pool registry poisoned");
+    if guard.is_none() {
+        let threads = match CONFIGURED_THREADS.load(Ordering::Relaxed) {
+            usize::MAX => default_threads(),
+            t => t,
+        };
+        *guard = Some(Arc::new(GemmPool::new(threads.saturating_sub(1))));
+    }
+    Arc::clone(guard.as_ref().expect("just installed"))
+}
+
+/// Stop and join the process-wide pool's workers (no-op if never
+/// started). The next [`global`] call starts a fresh pool. `cct serve`
+/// calls this on exit so the CI smoke can procfs-assert that no pool
+/// worker outlives the serving stack.
+pub fn shutdown_global() {
+    let pool = GLOBAL.lock().expect("gemm pool registry poisoned").take();
+    drop(pool);
+}
+
+/// Workers in the process-wide pool right now (0 if not started).
+/// Total GEMM parallelism is this plus the submitting thread.
+pub fn global_workers() -> usize {
+    GLOBAL
+        .lock()
+        .expect("gemm pool registry poisoned")
+        .as_ref()
+        .map_or(0, |p| p.workers())
+}
+
+/// C ← α·op(A)·op(B) + β·C on the process-wide pool (the `threads > 1`
+/// arm of [`crate::gemm::sgemm`]). Falls back to the inline blocked
+/// kernel when called from a pool worker.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_pooled(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+) {
+    if in_pool_worker() {
+        let GemmDims { m, n, k } = dims;
+        if m == 0 || n == 0 || k == 0 {
+            gemm_naive(ta, tb, dims, alpha, a, b, beta, c);
+        } else {
+            super::gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, BlockSizes::default());
+        }
+        return;
+    }
+    global().gemm(ta, tb, dims, alpha, a, b, beta, c, threads);
+}
+
+/// Run `f(t)` for `t in 0..ntasks` with a parallelism budget of
+/// `threads`: inline when the budget is 1 (or the call comes from a
+/// pool worker), otherwise on the process-wide pool. The lowering,
+/// lifting, and solver-update loops dispatch through here so *every*
+/// data-parallel phase of a step shares the same persistent threads.
+pub fn parallel_for(threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if threads <= 1 || ntasks <= 1 || in_pool_worker() {
+        for t in 0..ntasks {
+            f(t);
+        }
+        return;
+    }
+    global().parallel_for(threads, ntasks, f);
+}
+
+/// Run `body(lo, hi, chunk)` over disjoint, contiguous index ranges of
+/// `total` items, each item `stride` f32s wide in the output buffer
+/// `base` — the one shared home of the unsafe chunk-carving idiom the
+/// lowering/lift/col2im loops use. `chunk` is exactly the sub-slice
+/// `[lo·stride, hi·stride)` of `base`, so bodies index it relative to
+/// `lo`. Serial (single chunk) when the budget is 1.
+///
+/// Caller contract: `base` points at a buffer of at least
+/// `total · stride` elements that no other code touches for the
+/// duration of the (blocking) call.
+pub(crate) fn parallel_chunks(
+    threads: usize,
+    total: usize,
+    stride: usize,
+    base: SendMutF32,
+    body: &(dyn Fn(usize, usize, &mut [f32]) + Sync),
+) {
+    if total == 0 {
+        return;
+    }
+    let nchunks = if threads <= 1 { 1 } else { total.min(threads * 4) };
+    let per = total.div_ceil(nchunks);
+    parallel_for(threads, nchunks, &|t| {
+        let lo = t * per;
+        let hi = ((t + 1) * per).min(total);
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: [lo, hi) ranges are disjoint across tasks and within
+        // the caller-guaranteed `total · stride` bounds; the buffer
+        // outlives the blocking parallel_for.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(lo * stride), (hi - lo) * stride) };
+        body(lo, hi, chunk);
+    });
+}
+
+/// Pre-size the calling thread's packing arena to full capacity (the
+/// submitter side of "plan the arenas once"). `net::Workspace`
+/// planning and serve workers call this so the first hot-loop GEMM
+/// finds a warm arena.
+pub fn warm_local() {
+    warm_tls_arena();
+}
+
+/// The full planning step: warm the calling thread's arena *and* start
+/// the process-wide pool (whose workers plan their arenas at spawn).
+/// Callers that *know* they will run threaded — the serve engine, the
+/// multi-threaded coordinator — invoke this up front so pool/arena
+/// allocation happens at plan time, not inside the first hot-loop
+/// step. Single-threaded users never pay for the pool: `Net::plan*`
+/// only warms the local arena, and the pool starts lazily on the
+/// first `threads > 1` submission.
+pub fn prewarm() {
+    warm_local();
+    let _ = global();
+}
+
+/// This thread's packing-arena growth events so far (see
+/// [`crate::gemm::arena_growth_count`]); zero across a window ⇔ the
+/// window ran entirely in planned buffers.
+pub fn arena_allocs() -> u64 {
+    super::blocked::arena_growth_count()
+}
+
+/// A raw mutable `f32` base pointer that may cross into pool tasks.
+/// Callers hand one to a [`parallel_for`] closure and carve
+/// **disjoint** sub-slices per task index with
+/// `std::slice::from_raw_parts_mut` — the idiom the lowering/lift and
+/// solver-update loops use to write chunked output without a borrow
+/// the closure could not share. The caller is responsible for
+/// disjointness and for keeping the buffer alive across the call
+/// (guaranteed: `parallel_for` blocks until every task finished).
+#[derive(Clone, Copy)]
+pub struct SendMutF32(pub *mut f32);
+
+// SAFETY: the pointer itself is plain data; all aliasing discipline is
+// the caller's contract (see the type docs).
+unsafe impl Send for SendMutF32 {}
+unsafe impl Sync for SendMutF32 {}
+
+/// Count this process's live threads whose name starts with `prefix`
+/// (via `/proc/self/task/*/comm`). Returns `None` where procfs is
+/// unavailable (non-Linux). Pool workers are named
+/// `cct-gemm-{pool}-{idx}`, so `threads_with_prefix("cct-gemm-")`
+/// counts every live pool worker in the process.
+pub fn threads_with_prefix(prefix: &str) -> Option<usize> {
+    let dir = std::fs::read_dir("/proc/self/task").ok()?;
+    let mut count = 0usize;
+    for entry in dir.flatten() {
+        let comm = std::fs::read_to_string(entry.path().join("comm")).unwrap_or_default();
+        if comm.trim_end().starts_with(prefix) {
+            count += 1;
+        }
+    }
+    Some(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_vec(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn tile_plan_covers_and_balances() {
+        let bs = BlockSizes::default();
+        // Tall output: row bands only, coalesced to ~4·par tiles.
+        let (tm, tn) = plan_tiles(8464, 256, 2, bs);
+        assert_eq!(tm % bs.mc, 0);
+        assert_eq!(tn, 256);
+        assert!(8464usize.div_ceil(tm) <= 2 * TILES_PER_EXEC);
+        // Squat output: columns split in NR multiples.
+        let (tm, tn) = plan_tiles(64, 2400, 4, bs);
+        assert_eq!(tm, bs.mc);
+        assert_eq!(tn % NR, 0);
+        assert!(tn < 2400);
+        // Tiny problems stay single-tile.
+        let (tm, tn) = plan_tiles(16, 16, 8, bs);
+        assert!(16usize.div_ceil(tm) * 16usize.div_ceil(tn) >= 1);
+    }
+
+    #[test]
+    fn pool_matches_naive() {
+        let pool = GemmPool::new(2);
+        let dims = GemmDims { m: 150, n: 90, k: 70 };
+        let mut rng = Pcg64::new(500);
+        let a = rand_vec(dims.m * dims.k, &mut rng);
+        let b = rand_vec(dims.k * dims.n, &mut rng);
+        for &ta in &[Trans::N, Trans::T] {
+            for &tb in &[Trans::N, Trans::T] {
+                let mut c0 = vec![0.5f32; dims.m * dims.n];
+                let mut c1 = c0.clone();
+                gemm_naive(ta, tb, dims, 1.2, &a, &b, 0.3, &mut c0);
+                pool.gemm(ta, tb, dims, 1.2, &a, &b, 0.3, &mut c1, 4);
+                for (x, y) in c0.iter().zip(c1.iter()) {
+                    assert!((x - y).abs() < 1e-3, "{x} vs {y} ta={ta:?} tb={tb:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_is_inline() {
+        let pool = GemmPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let dims = GemmDims { m: 40, n: 40, k: 40 };
+        let mut rng = Pcg64::new(501);
+        let a = rand_vec(dims.m * dims.k, &mut rng);
+        let b = rand_vec(dims.k * dims.n, &mut rng);
+        let mut c0 = vec![0f32; dims.m * dims.n];
+        let mut c1 = vec![0f32; dims.m * dims.n];
+        gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c0);
+        pool.gemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c1, 8);
+        for (x, y) in c0.iter().zip(c1.iter()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        pool.parallel_for(8, 5, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn parallel_for_runs_every_task_once() {
+        let pool = GemmPool::new(2);
+        let slots: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(3, slots.len(), &|t| {
+            slots[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, s) in slots.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    /// The `threads` budget binds: a job submitted with budget 2 on a
+    /// big pool never has more than 2 concurrent executors.
+    #[test]
+    fn executor_budget_is_enforced() {
+        let pool = GemmPool::new(4);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.parallel_for(2, 64, &|_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "budget 2 exceeded: peak {} executors",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn degenerate_dims_quick_return() {
+        let pool = GemmPool::new(1);
+        for &(m, n, k) in &[(0usize, 4usize, 4usize), (4, 0, 4), (4, 4, 0)] {
+            let dims = GemmDims { m, n, k };
+            let mut c = vec![2f32; m * n];
+            pool.gemm(Trans::N, Trans::N, dims, 1.0, &[], &[], 0.5, &mut c, 4);
+            assert!(c.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn back_to_back_jobs_reuse_the_pool() {
+        let pool = GemmPool::new(2);
+        let dims = GemmDims { m: 200, n: 64, k: 48 };
+        let mut rng = Pcg64::new(502);
+        let a = rand_vec(dims.m * dims.k, &mut rng);
+        let b = rand_vec(dims.k * dims.n, &mut rng);
+        let mut want = vec![0f32; dims.m * dims.n];
+        gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut want);
+        for _ in 0..20 {
+            let mut c = vec![0f32; dims.m * dims.n];
+            pool.gemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c, 3);
+            for (x, y) in want.iter().zip(c.iter()) {
+                assert!((x - y).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn configure_is_first_wins_and_global_roundtrips() {
+        // Can't assert much about the shared global pool under test
+        // parallelism; exercise the API surface.
+        let p = global();
+        let _ = p.workers();
+        assert!(!configure(4), "configure after start must refuse");
+        assert!(global_workers() == p.workers());
+    }
+}

@@ -1,18 +1,46 @@
-//! Threaded GEMM: strip the output rows across OS threads.
+//! Multi-threaded GEMM entry points.
 //!
-//! The paper (§2.2) notes BLAS parallelizes GEMM "by partitioning
-//! columns of B and allocating 1 thread per partition"; the dual — rows
-//! of op(A) — is what grows with the lowered batch size, so stripping M
-//! makes the thin-matrix pathology visible exactly as in Fig 2: with
-//! b=1 the strips are slivers, packing cannot amortize, and adding
-//! threads *hurts*.
+//! Since PR 5, [`gemm_threaded`] is a **thin shim** onto the
+//! persistent worker pool ([`crate::gemm::pool`]): long-lived workers,
+//! 2-D MC×NC tile scheduling, per-thread packing arenas — no thread is
+//! spawned and no packing buffer allocated per call.
+//!
+//! The previous implementation — spawn `threads` scoped OS threads per
+//! call, strip C by rows, allocate fresh packed-panel buffers in every
+//! strip — is retained verbatim as [`gemm_spawn`]: it is the
+//! *spawn-per-call baseline* the `fig2_gemm_batching` bench and the CI
+//! perf-smoke gate measure the pool against, and it still reproduces
+//! the paper's observation that 1-D row partitioning starves threads
+//! on thin outputs (§2.2, Fig 2(b): with b=1 the strips are slivers
+//! and adding threads *hurts*).
 
-use super::{gemm_blocked, gemm_naive, BlockSizes, GemmDims, Trans};
+use super::{gemm_blocked, gemm_naive, pool, BlockSizes, GemmDims, Trans};
 
-/// C ← α·op(A)·op(B) + β·C with `threads` row-strips of C computed
-/// concurrently via `std::thread::scope`.
+/// C ← α·op(A)·op(B) + β·C with up to `threads`-way parallelism on the
+/// process-wide persistent pool (see [`crate::gemm::pool`]). Kept as
+/// the stable multi-threaded entry point; results are bit-identical to
+/// [`gemm_blocked`] with default [`BlockSizes`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_threaded(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+) {
+    pool::sgemm_pooled(ta, tb, dims, alpha, a, b, beta, c, threads);
+}
+
+/// The pre-pool threaded GEMM: spawn `threads` scoped OS threads *per
+/// call*, one row-strip of C each, every strip packing into freshly
+/// allocated buffers. Retained as the measured baseline for the pool
+/// (fig2 bench section (e), CI perf gate) — do not use on hot paths.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_spawn(
     ta: Trans,
     tb: Trans,
     dims: GemmDims,
@@ -98,10 +126,15 @@ mod tests {
         rng.fill_uniform(&mut b, -1.0, 1.0);
         let mut c0 = vec![0.5f32; m * n];
         let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
         gemm_naive(ta, tb, GemmDims { m, n, k }, 1.1, &a, &b, 0.4, &mut c0);
         gemm_threaded(ta, tb, GemmDims { m, n, k }, 1.1, &a, &b, 0.4, &mut c1, threads);
+        gemm_spawn(ta, tb, GemmDims { m, n, k }, 1.1, &a, &b, 0.4, &mut c2, threads);
         for (x, y) in c0.iter().zip(c1.iter()) {
-            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            assert!((x - y).abs() < 1e-3, "pool path: {x} vs {y}");
+        }
+        for (x, y) in c0.iter().zip(c2.iter()) {
+            assert!((x - y).abs() < 1e-3, "spawn baseline: {x} vs {y}");
         }
     }
 

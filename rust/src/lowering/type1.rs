@@ -17,8 +17,15 @@
 //! coordinator reproduces it by slicing the batch (see
 //! `coordinator::partitioner`).
 
+//! **Pool execution (PR 5):** the lowering, lifting, and col2im phases
+//! are data-parallel and, at `threads > 1`, run as chunked jobs on the
+//! same persistent worker pool the GEMM uses
+//! ([`crate::gemm::pool::parallel_for`]) — the cores stay busy across
+//! the whole lower → GEMM → lift pipeline with zero thread spawns and
+//! bit-identical results to the serial path.
+
 use super::ConvShape;
-use crate::gemm::{sgemm, GemmDims, Trans};
+use crate::gemm::{pool, sgemm, GemmDims, Trans};
 use crate::tensor::Tensor;
 
 /// Number of columns of the lowered data matrix.
@@ -44,46 +51,82 @@ pub fn lower_batch(shape: &ConvShape, data: &Tensor, out: &mut [f32]) {
 /// workers lower straight out of a larger arena without copying into a
 /// temporary `Tensor`.
 pub fn lower_batch_slice(shape: &ConvShape, src: &[f32], out: &mut [f32]) {
-    let &ConvShape { n, k, d, b, pad, stride, .. } = shape;
+    let &ConvShape { n, d, b, .. } = shape;
     let m = shape.m();
     let cols = lowered_cols(shape);
     assert!(out.len() >= b * m * m * cols, "lowering buffer too small");
     assert!(src.len() >= b * d * n * n, "input buffer too small");
+    lower_strips(shape, src, 0, b * m, out);
+}
+
+/// [`lower_batch_slice`] with the im2col work chunked over the
+/// persistent compute pool (the lowering itself becomes a pool job, so
+/// the same threads that will run the GEMM stay busy building D̂).
+/// Bit-identical to the serial path; small lowerings skip the pool.
+pub fn lower_batch_slice_threaded(shape: &ConvShape, src: &[f32], out: &mut [f32], threads: usize) {
+    let &ConvShape { n, d, b, .. } = shape;
+    let m = shape.m();
+    let cols = lowered_cols(shape);
+    let strips = b * m;
+    assert!(out.len() >= strips * m * cols, "lowering buffer too small");
+    assert!(src.len() >= b * d * n * n, "input buffer too small");
+    if threads <= 1 || strips < 2 || strips * m * cols < (1 << 15) {
+        lower_strips(shape, src, 0, strips, out);
+        return;
+    }
+    // Strip s owns the contiguous `m·cols` range s of `out`.
+    pool::parallel_chunks(
+        threads,
+        strips,
+        m * cols,
+        pool::SendMutF32(out.as_mut_ptr()),
+        &|s0, s1, chunk| lower_strips(shape, src, s0, s1, chunk),
+    );
+}
+
+/// im2col for the output-row strips `[s0, s1)` of the flattened
+/// (image, output-row) grid — strip `s = bi·m + r` produces the `m`
+/// D̂ rows of output row `r` of image `bi`. `out` holds exactly those
+/// strips ((s1−s0)·m rows), so chunked callers hand disjoint
+/// sub-buffers to the pool.
+fn lower_strips(shape: &ConvShape, src: &[f32], s0: usize, s1: usize, out: &mut [f32]) {
+    let &ConvShape { n, k, d, pad, stride, .. } = shape;
+    let m = shape.m();
+    let cols = lowered_cols(shape);
     let img_stride = d * n * n;
 
-    for bi in 0..b {
+    for s in s0..s1 {
+        let bi = s / m;
+        let r = s % m;
         let img = &src[bi * img_stride..(bi + 1) * img_stride];
-        let base_row = bi * m * m;
-        for r in 0..m {
-            let r0 = (r * stride) as isize - pad as isize;
-            for c in 0..m {
-                let c0 = (c * stride) as isize - pad as isize;
-                let row = &mut out[(base_row + r * m + c) * cols..(base_row + r * m + c + 1) * cols];
-                let mut idx = 0;
-                for i in 0..d {
-                    let chan = &img[i * n * n..(i + 1) * n * n];
-                    for rk in 0..k {
-                        let rr = r0 + rk as isize;
-                        if rr < 0 || rr >= n as isize {
-                            row[idx..idx + k].fill(0.0);
-                            idx += k;
-                            continue;
-                        }
-                        let rrow = &chan[rr as usize * n..(rr as usize + 1) * n];
-                        // Fast path: fully interior window row.
-                        if c0 >= 0 && c0 + k as isize <= n as isize {
-                            row[idx..idx + k].copy_from_slice(&rrow[c0 as usize..c0 as usize + k]);
-                            idx += k;
-                        } else {
-                            for ck in 0..k {
-                                let cc = c0 + ck as isize;
-                                row[idx] = if cc < 0 || cc >= n as isize {
-                                    0.0
-                                } else {
-                                    rrow[cc as usize]
-                                };
-                                idx += 1;
-                            }
+        let r0 = (r * stride) as isize - pad as isize;
+        for c in 0..m {
+            let c0 = (c * stride) as isize - pad as isize;
+            let row = &mut out[((s - s0) * m + c) * cols..((s - s0) * m + c + 1) * cols];
+            let mut idx = 0;
+            for i in 0..d {
+                let chan = &img[i * n * n..(i + 1) * n * n];
+                for rk in 0..k {
+                    let rr = r0 + rk as isize;
+                    if rr < 0 || rr >= n as isize {
+                        row[idx..idx + k].fill(0.0);
+                        idx += k;
+                        continue;
+                    }
+                    let rrow = &chan[rr as usize * n..(rr as usize + 1) * n];
+                    // Fast path: fully interior window row.
+                    if c0 >= 0 && c0 + k as isize <= n as isize {
+                        row[idx..idx + k].copy_from_slice(&rrow[c0 as usize..c0 as usize + k]);
+                        idx += k;
+                    } else {
+                        for ck in 0..k {
+                            let cc = c0 + ck as isize;
+                            row[idx] = if cc < 0 || cc >= n as isize {
+                                0.0
+                            } else {
+                                rrow[cc as usize]
+                            };
+                            idx += 1;
                         }
                     }
                 }
@@ -103,14 +146,47 @@ pub fn col2im_batch(shape: &ConvShape, d_lowered: &[f32], d_data: &mut Tensor) {
 /// caller is responsible for zeroing when overwrite semantics are
 /// wanted).
 pub fn col2im_batch_slice(shape: &ConvShape, d_lowered: &[f32], dst: &mut [f32]) {
-    let &ConvShape { n, k, d, b, pad, stride, .. } = shape;
+    let &ConvShape { n, d, b, .. } = shape;
+    assert!(dst.len() >= b * d * n * n, "gradient buffer too small");
+    col2im_images(shape, d_lowered, 0, b, dst);
+}
+
+/// [`col2im_batch_slice`] with the scatter-add chunked per image over
+/// the compute pool (each image's gradient region is disjoint, so the
+/// adds race nothing; bit-identical to the serial path). Batches of
+/// one image fall back to the serial loop.
+pub fn col2im_batch_slice_threaded(
+    shape: &ConvShape,
+    d_lowered: &[f32],
+    dst: &mut [f32],
+    threads: usize,
+) {
+    let &ConvShape { n, d, b, .. } = shape;
+    assert!(dst.len() >= b * d * n * n, "gradient buffer too small");
+    if threads <= 1 || b < 2 {
+        col2im_images(shape, d_lowered, 0, b, dst);
+        return;
+    }
+    // Image bi owns the contiguous `d·n²` gradient range bi of `dst`.
+    pool::parallel_chunks(
+        threads,
+        b,
+        d * n * n,
+        pool::SendMutF32(dst.as_mut_ptr()),
+        &|b0, b1, chunk| col2im_images(shape, d_lowered, b0, b1, chunk),
+    );
+}
+
+/// col2im scatter-add for images `[b0, b1)`; `dst` holds exactly those
+/// images' gradient buffers.
+fn col2im_images(shape: &ConvShape, d_lowered: &[f32], b0: usize, b1: usize, dst: &mut [f32]) {
+    let &ConvShape { n, k, d, pad, stride, .. } = shape;
     let m = shape.m();
     let cols = lowered_cols(shape);
-    assert!(dst.len() >= b * d * n * n, "gradient buffer too small");
     let img_stride = d * n * n;
 
-    for bi in 0..b {
-        let img = &mut dst[bi * img_stride..(bi + 1) * img_stride];
+    for bi in b0..b1 {
+        let img = &mut dst[(bi - b0) * img_stride..(bi - b0 + 1) * img_stride];
         let base_row = bi * m * m;
         for r in 0..m {
             let r0 = (r * stride) as isize - pad as isize;
@@ -148,17 +224,47 @@ pub fn lift(shape: &ConvShape, r_hat: &[f32], out: &mut Tensor) {
 /// Slice-core of [`lift`].
 pub fn lift_slice(shape: &ConvShape, r_hat: &[f32], dst: &mut [f32]) {
     let &ConvShape { o, b, .. } = shape;
-    let m = shape.m();
-    let mm = m * m;
+    let mm = shape.m() * shape.m();
     assert!(dst.len() >= b * o * mm, "output buffer too small");
-    for bi in 0..b {
+    lift_channels(shape, r_hat, 0, b * o, dst);
+}
+
+/// [`lift_slice`] with the permute chunked per output channel over the
+/// compute pool (channel images are contiguous in NCHW, so chunks are
+/// disjoint; a pure permute is trivially bit-identical). Small lifts
+/// skip the pool.
+pub fn lift_slice_threaded(shape: &ConvShape, r_hat: &[f32], dst: &mut [f32], threads: usize) {
+    let &ConvShape { o, b, .. } = shape;
+    let mm = shape.m() * shape.m();
+    assert!(dst.len() >= b * o * mm, "output buffer too small");
+    let channels = b * o;
+    if threads <= 1 || channels < 2 || channels * mm < (1 << 15) {
+        lift_channels(shape, r_hat, 0, channels, dst);
+        return;
+    }
+    // Channel ch owns the contiguous `m²` image range ch of `dst`.
+    pool::parallel_chunks(
+        threads,
+        channels,
+        mm,
+        pool::SendMutF32(dst.as_mut_ptr()),
+        &|c0, c1, chunk| lift_channels(shape, r_hat, c0, c1, chunk),
+    );
+}
+
+/// Lift for the flat channel range `[c0, c1)` of the (image, channel)
+/// grid — channel `ch = bi·o + j`; `dst` holds exactly those channel
+/// images ((c1−c0)·m² elements).
+fn lift_channels(shape: &ConvShape, r_hat: &[f32], c0: usize, c1: usize, dst: &mut [f32]) {
+    let &ConvShape { o, .. } = shape;
+    let mm = shape.m() * shape.m();
+    for ch in c0..c1 {
+        let bi = ch / o;
+        let j = ch % o;
         let src_base = bi * mm * o;
-        let dst_base = bi * o * mm;
-        for pos in 0..mm {
-            let srow = &r_hat[src_base + pos * o..src_base + (pos + 1) * o];
-            for (j, &v) in srow.iter().enumerate() {
-                dst[dst_base + j * mm + pos] = v;
-            }
+        let drow = &mut dst[(ch - c0) * mm..(ch - c0 + 1) * mm];
+        for (pos, dv) in drow.iter_mut().enumerate() {
+            *dv = r_hat[src_base + pos * o + j];
         }
     }
 }
@@ -172,12 +278,40 @@ pub fn unlift(shape: &ConvShape, d_out: &Tensor, d_r_hat: &mut [f32]) {
 /// Slice-core of [`unlift`].
 pub fn unlift_slice(shape: &ConvShape, src: &[f32], d_r_hat: &mut [f32]) {
     let &ConvShape { o, b, .. } = shape;
-    let m = shape.m();
-    let mm = m * m;
+    let mm = shape.m() * shape.m();
     assert!(src.len() >= b * o * mm && d_r_hat.len() >= b * mm * o);
-    for bi in 0..b {
+    unlift_images(shape, src, 0, b, d_r_hat);
+}
+
+/// [`unlift_slice`] chunked per image over the compute pool (an
+/// image's d_R̂ rows are contiguous, so chunks are disjoint). Batches
+/// of one image fall back to the serial loop.
+pub fn unlift_slice_threaded(shape: &ConvShape, src: &[f32], d_r_hat: &mut [f32], threads: usize) {
+    let &ConvShape { o, b, .. } = shape;
+    let mm = shape.m() * shape.m();
+    assert!(src.len() >= b * o * mm && d_r_hat.len() >= b * mm * o);
+    if threads <= 1 || b < 2 {
+        unlift_images(shape, src, 0, b, d_r_hat);
+        return;
+    }
+    // Image bi owns the contiguous `m²·o` row range bi of `d_r_hat`.
+    pool::parallel_chunks(
+        threads,
+        b,
+        mm * o,
+        pool::SendMutF32(d_r_hat.as_mut_ptr()),
+        &|b0, b1, chunk| unlift_images(shape, src, b0, b1, chunk),
+    );
+}
+
+/// Inverse lift for images `[b0, b1)`; `d_r_hat` holds exactly those
+/// images' rows.
+fn unlift_images(shape: &ConvShape, src: &[f32], b0: usize, b1: usize, d_r_hat: &mut [f32]) {
+    let &ConvShape { o, .. } = shape;
+    let mm = shape.m() * shape.m();
+    for bi in b0..b1 {
         let src_base = bi * o * mm;
-        let dst_base = bi * mm * o;
+        let dst_base = (bi - b0) * mm * o;
         for j in 0..o {
             let srow = &src[src_base + j * mm..src_base + (j + 1) * mm];
             for (pos, &v) in srow.iter().enumerate() {
@@ -264,7 +398,7 @@ pub fn conv_type1_into(
     ws.ensure(shape);
     assert!(weights.len() >= shape.o * cols, "weight buffer too small");
 
-    lower_batch_slice(shape, data, &mut ws.lowered);
+    lower_batch_slice_threaded(shape, data, &mut ws.lowered, threads);
     // R̂ = D̂ · Wᵀ  (W is (o, k²d) row-major ⇒ Trans::T gives (k²d, o)).
     sgemm(
         Trans::N,
@@ -277,7 +411,7 @@ pub fn conv_type1_into(
         &mut ws.r_hat,
         threads,
     );
-    lift_slice(shape, &ws.r_hat, out);
+    lift_slice_threaded(shape, &ws.r_hat, out, threads);
 }
 
 /// Type-1 backward: recompute D̂, then
@@ -328,8 +462,8 @@ pub fn conv_type1_backward_into(
     assert!(d_w.len() >= shape.o * cols, "weight-gradient buffer too small");
     assert!(d_data.len() >= shape.b * shape.d * shape.n * shape.n);
 
-    lower_batch_slice(shape, data, &mut ws.lowered);
-    unlift_slice(shape, d_out, &mut ws.r_hat);
+    lower_batch_slice_threaded(shape, data, &mut ws.lowered, threads);
+    unlift_slice_threaded(shape, d_out, &mut ws.r_hat, threads);
 
     // dW (o, k²d) += d_R̂ᵀ (o, b·m²) · D̂ (b·m², k²d)
     sgemm(
@@ -358,7 +492,7 @@ pub fn conv_type1_backward_into(
     );
     let img = shape.d * shape.n * shape.n;
     d_data[..shape.b * img].fill(0.0);
-    col2im_batch_slice(shape, &ws.lowered, d_data);
+    col2im_batch_slice_threaded(shape, &ws.lowered, d_data, threads);
 }
 
 #[cfg(test)]
@@ -472,6 +606,66 @@ mod tests {
                 .sum();
             assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "adjoint broken: {lhs} vs {rhs}");
         });
+    }
+
+    /// The pool-chunked lowering/lift/col2im paths must be
+    /// bit-identical to the serial ones (pure data movement, disjoint
+    /// chunks — PR 5).
+    #[test]
+    fn threaded_phases_bitwise_match_serial() {
+        // Big enough that every phase crosses its pool-dispatch
+        // threshold (strips·m·cols and channels·m² ≥ 2^15, b ≥ 2).
+        let shape = ConvShape { n: 16, k: 3, d: 4, o: 32, b: 4, pad: 1, stride: 1 };
+        let m = shape.m();
+        let rows = lowered_rows(&shape);
+        let cols = lowered_cols(&shape);
+        let mut rng = Pcg64::new(34);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+
+        let mut low_s = vec![0f32; rows * cols];
+        let mut low_t = vec![0f32; rows * cols];
+        lower_batch_slice(&shape, data.as_slice(), &mut low_s);
+        lower_batch_slice_threaded(&shape, data.as_slice(), &mut low_t, 4);
+        assert_eq!(low_s, low_t, "im2col");
+
+        let mut r_hat = vec![0f32; rows * shape.o];
+        rng.fill_uniform(&mut r_hat, -1.0, 1.0);
+        let mut lift_s = vec![0f32; shape.b * shape.o * m * m];
+        let mut lift_t = lift_s.clone();
+        lift_slice(&shape, &r_hat, &mut lift_s);
+        lift_slice_threaded(&shape, &r_hat, &mut lift_t, 4);
+        assert_eq!(lift_s, lift_t, "lift");
+
+        let mut un_s = vec![0f32; rows * shape.o];
+        let mut un_t = un_s.clone();
+        unlift_slice(&shape, &lift_s, &mut un_s);
+        unlift_slice_threaded(&shape, &lift_s, &mut un_t, 4);
+        assert_eq!(un_s, un_t, "unlift");
+
+        let mut ci_s = vec![0f32; shape.b * shape.d * shape.n * shape.n];
+        let mut ci_t = ci_s.clone();
+        col2im_batch_slice(&shape, &low_s, &mut ci_s);
+        col2im_batch_slice_threaded(&shape, &low_t, &mut ci_t, 4);
+        assert_eq!(ci_s, ci_t, "col2im");
+    }
+
+    /// Whole Type-1 passes at `threads = 4` (pool) and 1 (serial) are
+    /// bit-identical — the conv-layer-level consequence of the above.
+    #[test]
+    fn pooled_conv_bitwise_matches_serial() {
+        let shape = ConvShape { n: 8, k: 3, d: 3, o: 4, b: 2, pad: 1, stride: 1 };
+        let mut rng = Pcg64::new(35);
+        let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+        let f1 = conv_type1(&shape, &data, &w, 1);
+        let f4 = conv_type1(&shape, &data, &w, 4);
+        assert_eq!(f1.as_slice(), f4.as_slice(), "forward");
+
+        let d_out = Tensor::randn(shape.output_shape(), 0.0, 1.0, &mut rng);
+        let (dd1, dw1) = conv_type1_backward(&shape, &data, &w, &d_out, 1);
+        let (dd4, dw4) = conv_type1_backward(&shape, &data, &w, &d_out, 4);
+        assert_eq!(dd1.as_slice(), dd4.as_slice(), "d_data");
+        assert_eq!(dw1.as_slice(), dw4.as_slice(), "d_w");
     }
 
     #[test]

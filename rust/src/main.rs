@@ -99,6 +99,7 @@ fn print_help() {
          \x20 serve       QoS HTTP inference frontend: POST /infer, GET /stats (--net tiny|cifar,\n\
          \x20             --addr, --workers, --max-batch, --wait-us, --queue, --adaptive,\n\
          \x20             --http-workers N: keep-alive connection-handler pool size,\n\
+         \x20             --gemm-threads N: shared GEMM compute-pool budget (0 = machine default),\n\
          \x20             --max-requests; 0 = run until killed)\n"
     );
 }
@@ -328,6 +329,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:8080");
     let max_requests: u64 = args.get("max-requests", 0)?;
     let http_workers: usize = args.get("http-workers", ServeConfig::default().http_workers)?;
+    let gemm_threads: usize = args.get("gemm-threads", 0)?;
     let net_name = args.get_str("net", "tiny");
     let cfg_text = match net_name.as_str() {
         "tiny" => SERVE_TINY,
@@ -345,6 +347,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_cap: queue,
             adaptive_wait: adaptive,
             http_workers,
+            gemm_pool_threads: gemm_threads,
             ..Default::default()
         },
     )?;
@@ -392,6 +395,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "transport: {} connections, {} keep-alive reuses, {} accept-queue sheds",
         report.http.connections, report.http.keepalive_reuses, report.http.accept_sheds
     );
+    // Join the shared GEMM pool and prove it via procfs: the CI smoke
+    // asserts this line reports zero live pool threads (no leaks).
+    cct::gemm::pool::shutdown_global();
+    match cct::gemm::pool::threads_with_prefix("cct-gemm-") {
+        Some(n) => println!("gemm pool drained: live pool threads {n}"),
+        None => println!("gemm pool drained (procfs unavailable)"),
+    }
     Ok(())
 }
 

@@ -305,6 +305,14 @@ impl Net {
     }
 
     fn plan_impl(&self, b: usize, with_grads: bool) -> Workspace {
+        // Planning also sizes the GEMM substrate: warm this thread's
+        // packing arena so steady-state steps allocate nothing — not
+        // even packing buffers. (The shared compute pool itself starts
+        // lazily on the first `threads > 1` GEMM, or eagerly via
+        // `gemm::pool::prewarm()` in callers that know they'll run
+        // threaded — the serve engine, the coordinator — so purely
+        // single-threaded users never pay for idle pool workers.)
+        crate::gemm::pool::warm_local();
         let (c, h, w) = self.input_dims;
         let mut cur = Shape::from((b, c, h, w));
         let mut slots = vec![Tensor::zeros(cur)];

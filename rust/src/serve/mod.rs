@@ -36,6 +36,11 @@
 //!    bucket ≥ n. Planning happened up front, so the steady-state
 //!    serve loop performs **zero tensor allocations**
 //!    (`tensor::alloc_stats`-verified, like the training hot loop).
+//!    Since PR 5 the workers' GEMMs **share the process-wide
+//!    persistent compute pool** ([`crate::gemm::pool`], budget via
+//!    [`ServeConfig::gemm_pool_threads`]) instead of spawning private
+//!    thread sets per call — concurrent workers queue for the pool
+//!    rather than oversubscribing the machine.
 //! 5. **Stats** — end-to-end latency percentiles (p50/p95/p99),
 //!    overall and per lane, batch-shape accounting, and
 //!    rejection/shed counts in a [`ServeReport`].
@@ -175,6 +180,15 @@ pub struct ServeConfig {
     /// using [`HttpServer::bind_with`] directly configure
     /// [`HttpConfig`] and may ignore this field.
     pub http_workers: usize,
+    /// Total thread budget for the process-wide GEMM compute pool
+    /// (workers + submitter; see [`crate::gemm::pool::configure`]).
+    /// Serve workers *share* that one pool — their
+    /// `threads_per_worker` GEMMs queue for it instead of each worker
+    /// spawning a private thread set and oversubscribing the machine.
+    /// `0` (the default) leaves the pool at its configured/default
+    /// size; a non-zero value is applied best-effort (the first
+    /// configuration in the process wins).
+    pub gemm_pool_threads: usize,
     /// Seed for the (identical) worker net replicas.
     pub seed: u64,
 }
@@ -190,6 +204,7 @@ impl Default for ServeConfig {
             adaptive_wait: false,
             buckets: Vec::new(),
             http_workers: 4,
+            gemm_pool_threads: 0,
             seed: 42,
         }
     }
@@ -465,6 +480,18 @@ impl ServeEngine {
         ensure!(serve.max_batch >= 1, "max_batch must be ≥ 1");
         ensure!(serve.queue_cap >= 1, "queue_cap must be ≥ 1");
 
+        // Serve workers share the process-wide GEMM pool (their
+        // per-call `threads_per_worker` budgets queue for it) instead
+        // of oversubscribing with private thread sets. Apply the
+        // requested budget before anything (e.g. workspace planning)
+        // starts the pool; after that, the running pool's size wins.
+        if serve.gemm_pool_threads > 0 {
+            let _ = crate::gemm::pool::configure(serve.gemm_pool_threads);
+        }
+        // A serving engine always wants the pool ready before traffic
+        // arrives (workers plan their packing arenas at spawn).
+        crate::gemm::pool::prewarm();
+
         // One net replica per worker, identically seeded (bit-identical
         // parameters, like the coordinator's replicas).
         let mut nets = Vec::with_capacity(serve.workers);
@@ -637,9 +664,11 @@ fn worker_loop(
     stats: &Arc<Recorder>,
     ctx: &ExecCtx,
 ) {
-    // This thread's tensor-allocation counter starts at its current
-    // value (planning happened on the spawning thread): everything the
-    // loop below allocates is steady-state serving cost, and must be 0.
+    // Warm this worker's packing arena up front (planning cost, like
+    // the workspace ladder planned on the spawning thread)...
+    crate::gemm::pool::warm_local();
+    // ...then snapshot: everything the loop below allocates is
+    // steady-state serving cost, and must be 0.
     let baseline = alloc_stats::tensor_allocs();
     loop {
         // Hold the mutex while waiting: only one idle worker blocks on

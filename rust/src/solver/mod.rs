@@ -6,10 +6,62 @@
 //! buffers are planned on first use), and [`SgdSolver::train_step_in`]
 //! composes with a planned [`Workspace`] so the whole
 //! forward/backward/update cycle performs zero tensor allocations.
+//!
+//! Large blobs (≥ 64Ki elements — CaffeNet's fc weights are tens of
+//! millions) stripe their momentum update over the persistent compute
+//! pool ([`crate::gemm::pool`]), the same threads the GEMMs run on;
+//! chunks are disjoint and the arithmetic per element unchanged, so
+//! pooled and serial updates are bit-identical.
 
+use crate::gemm::pool;
 use crate::layers::ExecCtx;
 use crate::net::{Net, Workspace};
 use crate::tensor::Tensor;
+
+/// Blob element count above which the momentum update runs striped
+/// over the compute pool.
+const POOL_UPDATE_MIN: usize = 1 << 16;
+
+/// `v ← μ·v + lr·(g + λ·w); w ← w − v`, striped over the pool for
+/// large blobs when the caller's thread budget allows. Bit-identical
+/// to the serial loop (chunks are disjoint, per-element arithmetic
+/// unchanged).
+fn momentum_update(
+    momentum: f32,
+    lr: f32,
+    decay: f32,
+    g: &[f32],
+    w: &mut [f32],
+    v: &mut [f32],
+    threads: usize,
+) {
+    let n = w.len();
+    if n < POOL_UPDATE_MIN || threads <= 1 {
+        for i in 0..n {
+            v[i] = momentum * v[i] + lr * (g[i] + decay * w[i]);
+            w[i] -= v[i];
+        }
+        return;
+    }
+    let nchunks = threads * 2;
+    let per = n.div_ceil(nchunks);
+    let wp = pool::SendMutF32(w.as_mut_ptr());
+    let vp = pool::SendMutF32(v.as_mut_ptr());
+    pool::parallel_for(threads, nchunks, &|t| {
+        let lo = t * per;
+        let hi = ((t + 1) * per).min(n);
+        // SAFETY: chunks are disjoint index ranges of w and v, which
+        // outlive the (blocking) parallel_for.
+        unsafe {
+            for i in lo..hi {
+                let vi = vp.0.add(i);
+                let wi = wp.0.add(i);
+                *vi = momentum * *vi + lr * (g[i] + decay * *wi);
+                *wi -= *vi;
+            }
+        }
+    });
+}
 
 /// Learning-rate schedule (Caffe `lr_policy`).
 #[derive(Clone, Copy, Debug)]
@@ -72,8 +124,17 @@ impl SgdSolver {
 
     /// One update using the gradients currently accumulated in the net:
     /// `v ← μ·v + lr·(∇ + λ·w)`; `w ← w − v` (Caffe's update order).
-    /// Clears gradients afterwards.
+    /// Clears gradients afterwards. Serial — thread-count-controlled
+    /// experiments stay exact; the `train_step*` entry points thread
+    /// their `ExecCtx` budget through to a striped update.
     pub fn step(&mut self, net: &mut Net) {
+        self.step_with_threads(net, 1);
+    }
+
+    /// [`SgdSolver::step`] with a thread budget: blobs of ≥ 64Ki
+    /// elements stripe their update over the shared compute pool,
+    /// bit-identically to the serial loop.
+    pub fn step_with_threads(&mut self, net: &mut Net, threads: usize) {
         let lr = self.cfg.lr_at(self.iter);
         let momentum = self.cfg.momentum;
         let decay = self.cfg.weight_decay;
@@ -84,13 +145,15 @@ impl SgdSolver {
         for (p, v) in params.iter_mut().zip(self.history.iter_mut()) {
             let local_lr = lr * p.lr_mult;
             let local_decay = decay * p.decay_mult;
-            let g = p.grad.as_slice();
-            let w = p.data.as_mut_slice();
-            let vv = v.as_mut_slice();
-            for i in 0..w.len() {
-                vv[i] = momentum * vv[i] + local_lr * (g[i] + local_decay * w[i]);
-                w[i] -= vv[i];
-            }
+            momentum_update(
+                momentum,
+                local_lr,
+                local_decay,
+                p.grad.as_slice(),
+                p.data.as_mut_slice(),
+                v.as_mut_slice(),
+                threads,
+            );
             p.zero_grad();
         }
         self.iter += 1;
@@ -103,7 +166,7 @@ impl SgdSolver {
         let mut step_ctx = *ctx;
         step_ctx.seed = ctx.seed.wrapping_add(self.iter as u64); // fresh dropout mask per step
         let loss = net.forward_backward(data, labels, &step_ctx);
-        self.step(net);
+        self.step_with_threads(net, ctx.threads);
         loss
     }
 
@@ -120,7 +183,7 @@ impl SgdSolver {
         let mut step_ctx = *ctx;
         step_ctx.seed = ctx.seed.wrapping_add(self.iter as u64);
         let loss = net.forward_backward_in(ws, labels, &step_ctx);
-        self.step(net);
+        self.step_with_threads(net, ctx.threads);
         loss
     }
 }

@@ -1,0 +1,205 @@
+//! Persistent-pool GEMM guarantees (PR 5):
+//!
+//! * parity with `gemm_naive` across degenerate shapes
+//!   (m/n/k ∈ {0, 1, odd primes}) and all transpose combinations;
+//! * **bitwise** parity with the single-threaded blocked kernel — tile
+//!   scheduling must not change a single ulp;
+//! * deterministic results under pool contention (many submitter
+//!   threads hammering the shared pool concurrently);
+//! * zero steady-state allocations: no tensor allocs and no packing-
+//!   arena growth on a warmed thread;
+//! * all pool worker threads joined on drop, procfs-asserted.
+
+use cct::gemm::{
+    gemm_blocked, gemm_naive, gemm_spawn, gemm_threaded, pool, sgemm, BlockSizes, GemmDims,
+    GemmPool, Trans,
+};
+use cct::rng::Pcg64;
+use cct::tensor::alloc_stats;
+
+fn rand_vec(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_uniform(&mut v, -1.0, 1.0);
+    v
+}
+
+/// m/n/k ∈ {0, 1, odd primes}: every combination, every transpose,
+/// α/β active, pool vs naive.
+#[test]
+fn degenerate_and_prime_shapes_match_naive() {
+    let pool = GemmPool::new(2);
+    let sizes = [0usize, 1, 3, 7, 13, 31];
+    let mut rng = Pcg64::new(7001);
+    for &m in &sizes {
+        for &n in &sizes {
+            for &k in &sizes {
+                let dims = GemmDims { m, n, k };
+                for &ta in &[Trans::N, Trans::T] {
+                    for &tb in &[Trans::N, Trans::T] {
+                        let a = rand_vec(m * k, &mut rng);
+                        let b = rand_vec(k * n, &mut rng);
+                        let mut c0 = rand_vec(m * n, &mut rng);
+                        let mut c1 = c0.clone();
+                        gemm_naive(ta, tb, dims, 1.25, &a, &b, 0.5, &mut c0);
+                        pool.gemm(ta, tb, dims, 1.25, &a, &b, 0.5, &mut c1, 4);
+                        for (i, (x, y)) in c0.iter().zip(c1.iter()).enumerate() {
+                            assert!(
+                                (x - y).abs() < 1e-3,
+                                "m={m} n={n} k={k} ta={ta:?} tb={tb:?} idx {i}: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pool tiles must reproduce the single-threaded blocked kernel
+/// bit-for-bit: same packing layout, same KC panel walk, same
+/// accumulation order per element, no matter how the tile grid is cut
+/// or which worker claims which tile.
+#[test]
+fn pool_is_bitwise_identical_to_blocked() {
+    let pool = GemmPool::new(3);
+    let mut rng = Pcg64::new(7002);
+    for &(m, n, k) in &[(311usize, 257usize, 199usize), (64, 2400, 96), (529, 256, 300)] {
+        let dims = GemmDims { m, n, k };
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let mut want = rand_vec(m * n, &mut rng);
+        let mut got = want.clone();
+        gemm_blocked(Trans::N, Trans::N, dims, 1.5, &a, &b, 0.25, &mut want, BlockSizes::default());
+        pool.gemm(Trans::N, Trans::N, dims, 1.5, &a, &b, 0.25, &mut got, 4);
+        for (i, (x, y)) in want.iter().zip(got.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "({m},{n},{k}) idx {i}: {x} vs {y}");
+        }
+    }
+}
+
+/// Several OS threads hammer the *shared* pool concurrently (the serve
+/// worker pattern): every result must be bit-identical to the
+/// single-threaded reference — run-lock serialization plus disjoint
+/// tiles leave no room for scheduling-dependent results.
+#[test]
+fn contended_pool_results_are_deterministic() {
+    let dims = GemmDims { m: 260, n: 130, k: 90 };
+    let mut rng = Pcg64::new(7003);
+    let a = rand_vec(dims.m * dims.k, &mut rng);
+    let b = rand_vec(dims.k * dims.n, &mut rng);
+    let mut want = vec![0f32; dims.m * dims.n];
+    gemm_blocked(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut want, BlockSizes::default());
+
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let (a, b, want) = (&a, &b, &want);
+            scope.spawn(move || {
+                for _ in 0..8 {
+                    let mut c = vec![0f32; dims.m * dims.n];
+                    gemm_threaded(Trans::N, Trans::N, dims, 1.0, a, b, 0.0, &mut c, 4);
+                    for (i, (x, y)) in want.iter().zip(c.iter()).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(), "idx {i} under contention");
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// The spawn-per-call baseline and the pool agree (they are compared
+/// head-to-head by the fig2 bench, so both must stay correct).
+#[test]
+fn spawn_baseline_matches_pool() {
+    let dims = GemmDims { m: 150, n: 70, k: 60 };
+    let mut rng = Pcg64::new(7004);
+    let a = rand_vec(dims.m * dims.k, &mut rng);
+    let b = rand_vec(dims.k * dims.n, &mut rng);
+    let mut c_spawn = vec![0.5f32; dims.m * dims.n];
+    let mut c_pool = c_spawn.clone();
+    gemm_spawn(Trans::N, Trans::N, dims, 1.0, &a, &b, 1.0, &mut c_spawn, 4);
+    sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 1.0, &mut c_pool, 4);
+    for (x, y) in c_spawn.iter().zip(c_pool.iter()) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+/// Steady-state pooled GEMM performs zero tensor allocations and zero
+/// packing-arena growth on a warmed submitter thread (worker arenas
+/// are planned at spawn and can never grow past their warm size).
+#[test]
+fn steady_state_is_allocation_free() {
+    let pool = GemmPool::new(2);
+    let dims = GemmDims { m: 530, n: 256, k: 310 };
+    let mut rng = Pcg64::new(7005);
+    let a = rand_vec(dims.m * dims.k, &mut rng);
+    let b = rand_vec(dims.k * dims.n, &mut rng);
+    let mut c = vec![0f32; dims.m * dims.n];
+    pool::warm_local();
+    pool.gemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c, 4); // warm-up call
+    let arena_snap = pool::arena_allocs();
+    let tensor_snap = alloc_stats::tensor_allocs();
+    for _ in 0..10 {
+        pool.gemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c, 4);
+    }
+    assert_eq!(pool::arena_allocs() - arena_snap, 0, "packing arena grew in steady state");
+    assert_eq!(
+        alloc_stats::allocs_since(tensor_snap),
+        0,
+        "tensor allocations in the GEMM hot loop"
+    );
+}
+
+/// Dropping a pool joins every worker thread — procfs-asserted by
+/// counting live threads with this pool's unique name prefix.
+#[cfg(target_os = "linux")]
+#[test]
+fn pool_workers_join_on_drop() {
+    let pool = GemmPool::new(3);
+    let prefix = pool.thread_name_prefix();
+    // Thread names are set by the spawned threads themselves; wait for
+    // all three to appear before asserting.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        match pool::threads_with_prefix(&prefix) {
+            Some(3) => break,
+            Some(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Some(got) => panic!("expected 3 pool threads named {prefix}*, found {got}"),
+            None => return, // procfs unavailable — nothing to assert
+        }
+    }
+    // Exercise the pool so workers have actually run jobs.
+    let dims = GemmDims { m: 200, n: 64, k: 40 };
+    let mut rng = Pcg64::new(7006);
+    let a = rand_vec(dims.m * dims.k, &mut rng);
+    let b = rand_vec(dims.k * dims.n, &mut rng);
+    let mut c = vec![0f32; dims.m * dims.n];
+    pool.gemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c, 4);
+
+    drop(pool);
+    // Drop joins synchronously, so the count is 0 immediately.
+    assert_eq!(
+        pool::threads_with_prefix(&prefix),
+        Some(0),
+        "pool worker threads leaked past drop"
+    );
+}
+
+/// `parallel_for` under a thread budget of 1 must not touch the pool
+/// (budget semantics), and with a budget > 1 must run every task
+/// exactly once.
+#[test]
+fn parallel_for_budget_semantics() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let slots: Vec<AtomicUsize> = (0..40).map(|_| AtomicUsize::new(0)).collect();
+    pool::parallel_for(1, slots.len(), &|t| {
+        slots[t].fetch_add(1, Ordering::Relaxed);
+    });
+    pool::parallel_for(4, slots.len(), &|t| {
+        slots[t].fetch_add(1, Ordering::Relaxed);
+    });
+    for (i, s) in slots.iter().enumerate() {
+        assert_eq!(s.load(Ordering::Relaxed), 2, "task {i}");
+    }
+}
