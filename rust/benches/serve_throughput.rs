@@ -30,6 +30,17 @@
 //! throughput at equal worker count, with the reuse counter proving
 //! the connections actually persisted.
 //!
+//! A fifth section drives a **multi-tenant overload** scenario on the
+//! model registry: a hot tenant (weight 2) flooding its model against
+//! a minority tenant (weight 1) running a closed-loop trickle, with
+//! weighted fair admission ON (shared capacity, per-tenant floors)
+//! versus OFF (capacity 0). Acceptance: the minority tenant is *never*
+//! admission-shed (it stays under its guaranteed floor), the hot
+//! tenant *is* shed once over its floor in fair mode, and the minority
+//! p99 under fair admission stays bounded relative to the
+//! unfair/free-for-all run. Emits
+//! `bench_out/BENCH_serve_multitenant.json`.
+//!
 //! Also asserts the plan-once invariant end-to-end: every worker's
 //! steady-state tensor-allocation count must be 0.
 //!
@@ -38,12 +49,16 @@
 use cct::bench_util::Table;
 use cct::net::parse_net;
 use cct::rng::Pcg64;
+use cct::serve::registry::{LoadOptions, ModelRegistry, RegistryConfig};
 use cct::serve::{
     closed_loop, HttpConfig, HttpServer, InferOptions, Lane, ServeConfig, ServeEngine,
     ServeReport, SubmitError,
 };
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const TINY: &str = "
@@ -426,6 +441,191 @@ fn shared_pool_serving() -> bool {
     done_ok && allocs_ok
 }
 
+/// One multi-tenant overload run on the registry: `hot` (weight 2)
+/// flooded by window-limited async clients, `minority` (weight 1)
+/// served closed-loop, both models the same conv net on their own
+/// single-worker engines over the shared GEMM pool.
+struct TenantOutcome {
+    minority_p99_us: f64,
+    minority_completed: u64,
+    minority_sheds: u64,
+    hot_completed: u64,
+    hot_sheds: u64,
+}
+
+fn multi_tenant_run(admission_capacity: usize) -> TenantOutcome {
+    const MIN_CLIENTS: usize = 2;
+    const MIN_PER_CLIENT: usize = 100;
+    const HOT_CLIENTS: usize = 6;
+    /// Async in-flight window per flood client — far above any fair
+    /// floor, so the flood always presses against admission.
+    const HOT_WINDOW: usize = 16;
+
+    let cfg = parse_net(CONV).expect("net parses");
+    let reg = Arc::new(
+        ModelRegistry::new(RegistryConfig {
+            serve: ServeConfig {
+                workers: 1,
+                max_batch: 8,
+                max_wait_us: 1_000,
+                queue_cap: 256,
+                ..Default::default()
+            },
+            admission_capacity,
+        })
+        .expect("registry config"),
+    );
+    let sw = reg.load("hot", &cfg, LoadOptions { weight: 2, seed: Some(1) }).expect("load hot");
+    reg.load("minority", &cfg, LoadOptions { weight: 1, seed: Some(2) }).expect("load minority");
+    let len = sw.sample_len;
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let stop = &stop;
+        for c in 0..HOT_CLIENTS {
+            let reg = Arc::clone(&reg);
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(0x407 + c as u64);
+                let mut sample = vec![0f32; len];
+                rng.fill_uniform(&mut sample, -1.0, 1.0);
+                let mut pending = VecDeque::new();
+                while !stop.load(Ordering::Relaxed) {
+                    match reg.submit("hot", &sample, InferOptions::best_effort()) {
+                        Ok(sub) => pending.push_back(sub),
+                        // Shed (or lane full): reap one in-flight
+                        // reply, then press on — a flooder that never
+                        // backs off further than admission forces it.
+                        Err(_) => match pending.pop_front() {
+                            Some(p) => {
+                                let _ = p.wait_outcome();
+                            }
+                            None => std::thread::sleep(Duration::from_micros(200)),
+                        },
+                    }
+                    if pending.len() >= HOT_WINDOW {
+                        if let Some(p) = pending.pop_front() {
+                            let _ = p.wait_outcome();
+                        }
+                    }
+                }
+                for p in pending {
+                    let _ = p.wait_outcome();
+                }
+            });
+        }
+        let minority: Vec<_> = (0..MIN_CLIENTS)
+            .map(|c| {
+                let reg = Arc::clone(&reg);
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(0x317 + c as u64);
+                    let mut sample = vec![0f32; len];
+                    rng.fill_uniform(&mut sample, -1.0, 1.0);
+                    for _ in 0..MIN_PER_CLIENT {
+                        let _ = reg.infer("minority", &sample, InferOptions::default());
+                    }
+                })
+            })
+            .collect();
+        // The flood runs for exactly as long as the minority tenant
+        // has work — its whole run happens under contention.
+        for h in minority {
+            h.join().expect("minority client");
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    let reports = reg.shutdown();
+    let report = |name: &str| {
+        reports
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| r.clone())
+            .expect("tenant report")
+    };
+    let (hot, minority) = (report("hot"), report("minority"));
+    assert!(
+        hot.worker_steady_allocs.iter().chain(&minority.worker_steady_allocs).all(|&a| a == 0),
+        "steady-state allocs under multi-tenant load: hot {:?}, minority {:?}",
+        hot.worker_steady_allocs,
+        minority.worker_steady_allocs
+    );
+    TenantOutcome {
+        minority_p99_us: minority.lane(Lane::Interactive).latency.p99_us,
+        minority_completed: minority.completed,
+        minority_sheds: minority.admission_sheds,
+        hot_completed: hot.completed,
+        hot_sheds: hot.admission_sheds,
+    }
+}
+
+/// Weighted fair admission A/B: the same hot-flood-vs-minority load
+/// with admission OFF (capacity 0, free-for-all) and ON (shared
+/// capacity 12 at weights 2:1 → floors 8/4). Returns whether the
+/// fairness acceptance held, and writes
+/// `bench_out/BENCH_serve_multitenant.json`.
+fn multi_tenant_fairness() -> bool {
+    const CAPACITY: usize = 12;
+    let unfair = multi_tenant_run(0);
+    let fair = multi_tenant_run(CAPACITY);
+
+    let mut t = Table::new(
+        &format!(
+            "Multi-tenant overload: hot flood (weight 2) vs minority trickle (weight 1), admission off vs capacity {CAPACITY}"
+        ),
+        &["admission", "minority p99 ms", "minority done", "minority sheds", "hot done", "hot sheds"],
+    );
+    for (name, o) in [("off", &unfair), ("fair", &fair)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", o.minority_p99_us / 1e3),
+            o.minority_completed.to_string(),
+            o.minority_sheds.to_string(),
+            o.hot_completed.to_string(),
+            o.hot_sheds.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Acceptance: the floor guarantee protects the minority (never
+    // shed, all requests answered), the flood is actually pressed back
+    // (hot sheds in fair mode), and fair admission does not cost the
+    // minority its tail (small multiplicative + absolute slack for
+    // scheduler noise at sub-ms latencies).
+    let minority_served = fair.minority_completed == unfair.minority_completed
+        && fair.minority_completed > 0;
+    let minority_never_shed = fair.minority_sheds == 0 && unfair.minority_sheds == 0;
+    let hot_pressed_back = fair.hot_sheds > 0 && unfair.hot_sheds == 0;
+    let p99_bounded = fair.minority_p99_us <= unfair.minority_p99_us * 1.25 + 2_000.0;
+    println!(
+        "acceptance: minority fully served {} ({} reqs), minority never shed {} (0 sheds), hot pressed back in fair mode {} ({} sheds), minority p99 bounded {} ({:.2} ms fair vs {:.2} ms off)",
+        if minority_served { "PASS" } else { "FAIL" },
+        fair.minority_completed,
+        if minority_never_shed { "PASS" } else { "FAIL" },
+        if hot_pressed_back { "PASS" } else { "FAIL" },
+        fair.hot_sheds,
+        if p99_bounded { "PASS" } else { "FAIL" },
+        fair.minority_p99_us / 1e3,
+        unfair.minority_p99_us / 1e3
+    );
+
+    let pass = minority_served && minority_never_shed && hot_pressed_back && p99_bounded;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_multitenant\",\n  \"tenants\": {{\"hot\": {{\"weight\": 2}}, \"minority\": {{\"weight\": 1}}}},\n  \"admission_capacity\": {CAPACITY},\n  \"off\": {{\"minority_p99_ms\": {:.3}, \"minority_completed\": {}, \"minority_admission_sheds\": {}, \"hot_completed\": {}, \"hot_admission_sheds\": {}}},\n  \"fair\": {{\"minority_p99_ms\": {:.3}, \"minority_completed\": {}, \"minority_admission_sheds\": {}, \"hot_completed\": {}, \"hot_admission_sheds\": {}}},\n  \"acceptance\": {{\"minority_fully_served\": {minority_served}, \"minority_never_shed\": {minority_never_shed}, \"hot_pressed_back\": {hot_pressed_back}, \"minority_p99_bounded\": {p99_bounded}, \"pass\": {pass}}}\n}}\n",
+        unfair.minority_p99_us / 1e3,
+        unfair.minority_completed,
+        unfair.minority_sheds,
+        unfair.hot_completed,
+        unfair.hot_sheds,
+        fair.minority_p99_us / 1e3,
+        fair.minority_completed,
+        fair.minority_sheds,
+        fair.hot_completed,
+        fair.hot_sheds,
+    );
+    std::fs::write("bench_out/BENCH_serve_multitenant.json", json).ok();
+    pass
+}
+
 fn main() {
     std::fs::create_dir_all("bench_out").ok();
     let mut all_zero_allocs = true;
@@ -476,6 +676,16 @@ fn main() {
         "shared-pool serving acceptance: {}",
         if pool_ok {
             "PASS (workers share one compute pool, zero steady-state allocs)"
+        } else {
+            "FAIL — see above"
+        }
+    );
+    println!();
+    let fair_ok = multi_tenant_fairness();
+    println!(
+        "multi-tenant fair-admission acceptance: {}",
+        if fair_ok {
+            "PASS (minority floor held under hot-tenant flood, p99 bounded)"
         } else {
             "FAIL — see above"
         }

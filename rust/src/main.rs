@@ -13,6 +13,8 @@
 //! cct serve   [--addr HOST:PORT] [--workers P] [--max-batch B] [--adaptive BOOL]
 //!             [--http-workers N]            # QoS HTTP inference frontend
 //!                                           # (keep-alive, bounded handler pool)
+//!             [--model name=preset[:weight]]...  # repeatable: multi-tenant registry
+//!             [--admission C]               # shared fair-admission capacity
 //! ```
 
 use cct::bail;
@@ -26,32 +28,37 @@ use cct::lowering::{choose_lowering, optimizer, ConvShape, LoweringType, Machine
 use cct::net::presets;
 use cct::rng::Pcg64;
 use cct::runtime::{ArtifactStore, XlaInput};
+use cct::serve::registry::{preset_net, LoadOptions, ModelRegistry, RegistryConfig};
 use cct::serve::{closed_loop, worker_placement, HttpConfig, HttpServer, ServeConfig, ServeEngine};
 use cct::solver::SolverConfig;
 use cct::tensor::Tensor;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Repeatable flags (`--model a=tiny --model b=cifar`) accumulate in
+/// command-line order; single-valued lookups take the last occurrence
+/// (the usual later-flag-overrides convention).
 struct Args {
-    flags: std::collections::HashMap<String, String>,
+    flags: std::collections::HashMap<String, Vec<String>>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
-        let mut flags = std::collections::HashMap::new();
+        let mut flags: std::collections::HashMap<String, Vec<String>> =
+            std::collections::HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let key = argv[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got '{}'", argv[i]))?;
             let val = argv.get(i + 1).with_context(|| format!("missing value for --{key}"))?;
-            flags.insert(key.to_string(), val.clone());
+            flags.entry(key.to_string()).or_default().push(val.clone());
             i += 2;
         }
         Ok(Args { flags })
     }
 
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
-        match self.flags.get(key) {
+        match self.flags.get(key).and_then(|v| v.last()) {
             Some(v) => v
                 .parse()
                 .map_err(|_| cct::err!("bad value for --{key}: {v}")),
@@ -60,7 +67,19 @@ impl Args {
     }
 
     fn get_str(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    fn get_all(&self, key: &str) -> &[String] {
+        match self.flags.get(key) {
+            Some(v) => v.as_slice(),
+            None => &[],
+        }
     }
 }
 
@@ -100,7 +119,13 @@ fn print_help() {
          \x20             --addr, --workers, --max-batch, --wait-us, --queue, --adaptive,\n\
          \x20             --http-workers N: keep-alive connection-handler pool size,\n\
          \x20             --gemm-threads N: shared GEMM compute-pool budget (0 = machine default),\n\
-         \x20             --max-requests; 0 = run until killed)\n"
+         \x20             --max-requests; 0 = run until killed)\n\
+         \x20             multi-tenant: --model name=preset[:weight] (repeatable;\n\
+         \x20             preset tiny|cifar|lenet|caffenet64) turns on the registry —\n\
+         \x20             POST /v1/{{model}}/infer, PUT /v1/{{model}} (hot swap),\n\
+         \x20             DELETE /v1/{{model}} (retire), GET /v1/{{model}};\n\
+         \x20             --admission C: shared weighted-fair admission capacity\n\
+         \x20             (default: models × workers × max-batch; 0 = off)\n"
     );
 }
 
@@ -321,6 +346,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // One or more --model flags switch to the multi-tenant registry
+    // frontend; without them the legacy single-engine path is
+    // byte-for-byte unchanged.
+    if !args.get_all("model").is_empty() {
+        return cmd_serve_registry(args);
+    }
     let workers: usize = args.get("workers", 2)?;
     let max_batch: usize = args.get("max-batch", 16)?;
     let wait_us: u64 = args.get("wait-us", 2_000)?;
@@ -397,6 +428,125 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     // Join the shared GEMM pool and prove it via procfs: the CI smoke
     // asserts this line reports zero live pool threads (no leaks).
+    cct::gemm::pool::shutdown_global();
+    match cct::gemm::pool::threads_with_prefix("cct-gemm-") {
+        Some(n) => println!("gemm pool drained: live pool threads {n}"),
+        None => println!("gemm pool drained (procfs unavailable)"),
+    }
+    Ok(())
+}
+
+/// Parse one `--model` spec: `name=preset[:weight]`, e.g. `alpha=tiny`
+/// or `hot=cifar:3` (weight ≥ 1 sets the tenant's fair share).
+fn parse_model_spec(spec: &str) -> Result<(String, String, usize)> {
+    let (name, rest) = spec
+        .split_once('=')
+        .with_context(|| format!("bad --model '{spec}' (want name=preset[:weight])"))?;
+    let (preset, weight) = match rest.split_once(':') {
+        Some((p, w)) => (
+            p,
+            w.parse::<usize>()
+                .ok()
+                .filter(|&w| w >= 1)
+                .with_context(|| format!("bad weight in --model '{spec}' (want an integer ≥ 1)"))?,
+        ),
+        None => (rest, 1),
+    };
+    if name.is_empty() || preset.is_empty() {
+        bail!("bad --model '{spec}' (want name=preset[:weight])");
+    }
+    Ok((name.to_string(), preset.to_string(), weight))
+}
+
+/// `cct serve --model name=preset[:weight] ...` — the multi-tenant
+/// registry frontend: every named model runs its own engine (all
+/// sharing the one process-wide GEMM pool), the `/v1/{model}` routes
+/// add hot swap and retire over HTTP, and weighted fair admission
+/// keeps one hot tenant from starving the rest.
+fn cmd_serve_registry(args: &Args) -> Result<()> {
+    let workers: usize = args.get("workers", 2)?;
+    let max_batch: usize = args.get("max-batch", 16)?;
+    let wait_us: u64 = args.get("wait-us", 2_000)?;
+    let queue: usize = args.get("queue", 256)?;
+    let adaptive: bool = args.get("adaptive", true)?;
+    let addr = args.get_str("addr", "127.0.0.1:8080");
+    let max_requests: u64 = args.get("max-requests", 0)?;
+    let http_workers: usize = args.get("http-workers", ServeConfig::default().http_workers)?;
+    let gemm_threads: usize = args.get("gemm-threads", 0)?;
+    let specs: Vec<(String, String, usize)> = args
+        .get_all("model")
+        .iter()
+        .map(|s| parse_model_spec(s))
+        .collect::<Result<_>>()?;
+    // Default shared admission capacity: room for every tenant to keep
+    // its own engine's batch pipeline full, with the fair floors
+    // carving it up under contention. --admission 0 disables it.
+    let admission: usize = args.get("admission", specs.len() * workers * max_batch)?;
+
+    let registry = std::sync::Arc::new(ModelRegistry::new(RegistryConfig {
+        serve: ServeConfig {
+            workers,
+            max_batch,
+            max_wait_us: wait_us,
+            queue_cap: queue,
+            adaptive_wait: adaptive,
+            http_workers,
+            gemm_pool_threads: gemm_threads,
+            ..Default::default()
+        },
+        admission_capacity: admission,
+    })?);
+    for (name, preset, weight) in &specs {
+        let net = preset_net(preset)?;
+        let sw = registry.load(name, &net, LoadOptions { weight: *weight, seed: None })?;
+        println!(
+            "loaded model '{name}' (preset {preset}, weight {weight}): sample_len {}, buckets {:?}",
+            sw.sample_len, sw.buckets
+        );
+    }
+    let server = HttpServer::bind_registry(
+        std::sync::Arc::clone(&registry),
+        &addr,
+        HttpConfig { workers: http_workers, max_requests, ..Default::default() },
+    )?;
+    println!(
+        "serving {} model(s) on http://{}  ({workers} workers/model, max_batch {max_batch}, admission capacity {admission}, {http_workers} http handlers)",
+        specs.len(),
+        server.local_addr()
+    );
+    println!("  POST /v1/{{model}}/infer  body: JSON float array or raw LE f32 bytes;");
+    println!("                          headers X-Priority, X-Deadline-Us");
+    println!("  PUT  /v1/{{model}}        load / hot-swap (body 'preset:NAME' or a net config;");
+    println!("                          headers X-Seed, X-Weight)");
+    println!("  DELETE /v1/{{model}}      retire (drain, then remove from routing)");
+    println!("  GET  /v1/{{model}}        per-model stats; GET /stats covers all models");
+    println!("  POST /infer             routes to the default model '{}'", specs[0].0);
+    if max_requests > 0 {
+        println!("  exiting after {max_requests} request(s)");
+    }
+    // Blocks until the request budget is exhausted (or forever at 0).
+    server.join();
+    let http = registry.http_report();
+    let reports = registry.shutdown();
+    for (name, report) in &reports {
+        println!(
+            "model '{name}': {} completed ({:.0} req/s), {} rejected, {} admission sheds, \
+             {} swaps, p50/p99 {:.2}/{:.2} ms, steady allocs {:?}",
+            report.completed,
+            report.throughput_rps,
+            report.rejected,
+            report.admission_sheds,
+            report.swaps,
+            report.latency.p50_us / 1e3,
+            report.latency.p99_us / 1e3,
+            report.worker_steady_allocs
+        );
+    }
+    println!(
+        "transport: {} connections, {} keep-alive reuses, {} accept-queue sheds",
+        http.connections, http.keepalive_reuses, http.accept_sheds
+    );
+    // Same pool-drain proof as the single-engine path (CI greps it).
     cct::gemm::pool::shutdown_global();
     match cct::gemm::pool::threads_with_prefix("cct-gemm-") {
         Some(n) => println!("gemm pool drained: live pool threads {n}"),

@@ -141,7 +141,9 @@ pub(crate) fn run(
     stop: Arc<AtomicBool>,
     stats: Arc<Recorder>,
 ) {
-    assert!(policy.max_batch >= 1);
+    // `ServeConfig::validate` already refused a zero max_batch at
+    // engine construction; this is a debug-build tripwire only.
+    debug_assert!(policy.max_batch >= 1);
     // Start from the sparse assumption: the first batches hold open for
     // the full policy window until real arrivals teach the EWMA better.
     let mut ewma_gap_us = policy.max_wait_us.max(1) as f64;

@@ -14,12 +14,42 @@
 //!   * `200` — `{"class":…,"logits":[…],"latency_us":…,
 //!     "batch_real":…,"bucket":…,"lane":"…"}`
 //!   * `400` — malformed body or wrong sample length
-//!   * `503` — lane full (backpressure), connection backlog full
-//!     (accept-queue shed), request budget spent, or engine shut down
+//!   * `429` + `Retry-After` — lane full (backpressure) or, on a
+//!     registry backend, the tenant was shed by weighted fair
+//!     admission; retry later
+//!   * `503` — connection backlog full (accept-queue shed, also with
+//!     `Retry-After`), request budget spent, or engine shut down
 //!   * `504` — the request's deadline expired before execution (shed)
 //! * `GET /stats` — live [`ServeReport`] snapshot as JSON, including
 //!   the transport's own [`HttpReport`](super::HttpReport) counters.
+//!   On a registry backend the payload is
+//!   `{"models":{name:{…,"report":{…}}},"admission":{…},"http":{…}}` —
+//!   one entry per model with its generation, fair-share
+//!   weight/floor/in-flight gauges, live queue depths, and full report.
 //! * `GET /healthz` — `{"ok":true}` liveness probe.
+//!
+//! With a multi-tenant registry backend
+//! ([`HttpServer::bind_registry`], `cct serve --model name=preset`)
+//! three model-scoped routes join the surface:
+//!
+//! * `POST /v1/{model}/infer` — as `POST /infer`, routed to the named
+//!   model; `200` bodies additionally carry `"model"` and
+//!   `"generation"` (the plan generation that computed the logits).
+//!   `404` for a name that is not loaded.
+//! * `PUT /v1/{model}` — load a new model, or **hot-swap** a live one
+//!   (the new plan is built and warmed off the request path, then
+//!   atomically flipped in; in-flight traffic drains against the old
+//!   plan — zero dropped requests). Body: `preset:NAME`
+//!   (`tiny|cifar|lenet|caffenet64`) or a full net-config text.
+//!   Optional `X-Seed: <u64>` and `X-Weight: <n≥1>` headers. Replies
+//!   `200` with `{"model":…,"generation":…,"swapped":…,…}`.
+//! * `DELETE /v1/{model}` — retire the model: drain it (every accepted
+//!   request is answered first) and remove it from routing.
+//! * `GET /v1/{model}` — that model's stats object alone.
+//!
+//! A known path hit with the wrong method answers
+//! `405 Method Not Allowed` with an `Allow:` header; unknown paths
+//! answer `404`.
 //!
 //! ## Concurrency model
 //!
@@ -57,7 +87,12 @@
 //! the server exits deterministically once the budget is spent even
 //! if other connections are still idle.
 
-use super::{InferOptions, InferOutcome, InferReply, Lane, ServeHandle, ServeReport, SubmitError};
+use super::registry::{self, LoadOptions, ModelRegistry, RegistryError};
+use super::stats::Recorder;
+use super::{
+    ConfigError, InferOptions, InferOutcome, InferReply, Lane, ServeHandle, ServeReport,
+    SubmitError,
+};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -145,6 +180,49 @@ impl Default for HttpConfig {
     }
 }
 
+impl HttpConfig {
+    /// Construction-time structural validation, called by every bind
+    /// path before the listener is opened: a zero-thread handler pool,
+    /// a zero-slot backlog, or a zero timeout would hang or
+    /// insta-close every connection at runtime — refuse them up front
+    /// with a typed [`ConfigError`] instead.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.workers == 0 {
+            return Err(ConfigError::ZeroHttpWorkers);
+        }
+        if self.backlog == 0 {
+            return Err(ConfigError::ZeroBacklog);
+        }
+        if self.idle_timeout.is_zero() {
+            return Err(ConfigError::ZeroIdleTimeout);
+        }
+        if self.read_timeout.is_zero() {
+            return Err(ConfigError::ZeroReadTimeout);
+        }
+        Ok(())
+    }
+}
+
+/// What the transport routes requests to: a single engine handle (the
+/// legacy `POST /infer` service) or a multi-tenant model registry
+/// (which adds the `/v1/{model}` routes).
+#[derive(Clone)]
+enum Backend {
+    Engine(ServeHandle),
+    Registry(Arc<ModelRegistry>),
+}
+
+impl Backend {
+    /// The recorder the transport's own counters (connections,
+    /// keep-alive reuses, accept sheds) land in.
+    fn http_stats(&self) -> &Recorder {
+        match self {
+            Backend::Engine(h) => &h.stats,
+            Backend::Registry(r) => r.http_recorder(),
+        }
+    }
+}
+
 /// State shared by the accept thread, the handler pool, and the
 /// [`HttpServer`] front object.
 struct Shared {
@@ -220,8 +298,28 @@ impl HttpServer {
     /// transport threads (the pool plus the accept thread); no
     /// connection ever spawns another.
     pub fn bind_with(handle: ServeHandle, addr: &str, cfg: HttpConfig) -> crate::Result<HttpServer> {
-        crate::ensure!(cfg.workers >= 1, "http transport needs at least one handler worker");
-        crate::ensure!(cfg.backlog >= 1, "http accept backlog must be ≥ 1");
+        Self::bind_backend(Backend::Engine(handle), addr, cfg)
+    }
+
+    /// Bind `addr` in front of a multi-tenant [`ModelRegistry`]: the
+    /// same transport (same pool, same keep-alive and budget
+    /// machinery), with the `/v1/{model}` routes enabled and the
+    /// legacy `POST /infer` routed to the registry's default (first
+    /// loaded) model. Transport counters land in the registry's
+    /// [`http_report`](ModelRegistry::http_report).
+    pub fn bind_registry(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        cfg: HttpConfig,
+    ) -> crate::Result<HttpServer> {
+        Self::bind_backend(Backend::Registry(registry), addr, cfg)
+    }
+
+    /// Shared bind path: validate the transport config, open the
+    /// listener, spawn the handler pool and the accept thread.
+    fn bind_backend(backend: Backend, addr: &str, cfg: HttpConfig) -> crate::Result<HttpServer> {
+        cfg.validate()
+            .map_err(|e| crate::err!("invalid http config: {e}"))?;
         let listener =
             TcpListener::bind(addr).map_err(|e| crate::err!("binding http server {addr}: {e}"))?;
         let local = listener
@@ -245,18 +343,18 @@ impl HttpServer {
         let mut handlers = Vec::with_capacity(shared.cfg.workers);
         for i in 0..shared.cfg.workers {
             let rx = Arc::clone(&conn_rx);
-            let h = handle.clone();
+            let b = backend.clone();
             let sh = Arc::clone(&shared);
             let spawned = std::thread::Builder::new()
                 .name(format!("http-{port}-w{i}"))
-                .spawn(move || handler_loop(&rx, &h, &sh))
+                .spawn(move || handler_loop(&rx, &b, &sh))
                 .map_err(|e| crate::err!("spawning http handler thread: {e}"))?;
             handlers.push(spawned);
         }
         let sh = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
             .name(format!("http-{port}-acc"))
-            .spawn(move || accept_loop(&listener, &conn_tx, &handle, &sh))
+            .spawn(move || accept_loop(&listener, &conn_tx, &backend, &sh))
             .map_err(|e| crate::err!("spawning http accept thread: {e}"))?;
         Ok(HttpServer { addr: local, shared, accept: Some(accept), handlers })
     }
@@ -319,7 +417,7 @@ impl Drop for HttpServer {
 fn accept_loop(
     listener: &TcpListener,
     conn_tx: &SyncSender<TcpStream>,
-    handle: &ServeHandle,
+    backend: &Backend,
     shared: &Shared,
 ) {
     loop {
@@ -337,7 +435,7 @@ fn accept_loop(
                     Ok(()) => {}
                     Err(TrySendError::Full(stream)) => {
                         shared.waiting.fetch_sub(1, Ordering::Relaxed);
-                        handle.stats.record_http_shed();
+                        backend.http_stats().record_http_shed();
                         shed_overflow(stream);
                     }
                     Err(TrySendError::Disconnected(_)) => {
@@ -355,28 +453,28 @@ fn accept_loop(
 }
 
 /// Answer a connection the bounded backlog has no room for: `503` +
-/// `Connection: close`, written with a short timeout so a peer that
-/// never reads cannot stall the accept thread.
+/// `Retry-After` + `Connection: close`, written with a short timeout
+/// so a peer that never reads cannot stall the accept thread.
 fn shed_overflow(mut stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-    let resp = Response::error(503, "connection backlog full (load shed), retry later");
+    let resp = Response::retry(503, 1, "connection backlog full (load shed), retry later");
     let _ = write_response(&mut stream, &resp, true);
 }
 
 /// Handler-pool thread body: pull accepted sockets off the shared
 /// bounded channel and run each connection's request loop. Exits when
 /// the channel closes (accept thread gone) and is empty.
-fn handler_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, handle: &ServeHandle, shared: &Shared) {
+fn handler_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, backend: &Backend, shared: &Shared) {
     loop {
         // Hold the mutex only while waiting: one idle handler blocks
         // on recv, the rest queue on the lock (the std pool idiom).
         let job = { rx.lock().expect("http conn queue poisoned").recv() };
         let Ok(stream) = job else { break };
         shared.waiting.fetch_sub(1, Ordering::Relaxed);
-        handle.stats.record_http_conn_opened();
-        let _ = serve_connection(stream, handle, shared);
-        handle.stats.record_http_conn_closed();
+        backend.http_stats().record_http_conn_opened();
+        let _ = serve_connection(stream, backend, shared);
+        backend.http_stats().record_http_conn_closed();
     }
 }
 
@@ -441,7 +539,7 @@ fn wait_for_request(
 /// the connection to close (see the module docs for the full list).
 fn serve_connection(
     stream: TcpStream,
-    handle: &ServeHandle,
+    backend: &Backend,
     shared: &Shared,
 ) -> std::io::Result<()> {
     // The accepted socket may inherit the listener's non-blocking mode
@@ -480,7 +578,7 @@ fn serve_connection(
         let deadline = Instant::now() + shared.cfg.read_timeout;
         let (response, close) = match read_request(&mut reader, &mut writer, deadline, shared) {
             Ok(req) => {
-                let resp = route(&req, handle);
+                let resp = route(&req, backend);
                 let cap = shared.cfg.max_conn_requests;
                 let close = last
                     || !wants_keep_alive(&req)
@@ -535,19 +633,41 @@ fn wants_keep_alive(req: &Request) -> bool {
     req.version.eq_ignore_ascii_case("HTTP/1.1")
 }
 
-/// A response about to be written: status code plus JSON body.
+/// A response about to be written: status code, JSON body, and the
+/// optional shed/dispatch headers.
 struct Response {
     status: u16,
     body: String,
+    /// `Retry-After: <seconds>` on shed responses (`429` queue-full /
+    /// admission-shed, `503` accept-shed) — tells a well-behaved
+    /// client when backing off is worth it.
+    retry_after: Option<u64>,
+    /// `Allow: <methods>` on `405` responses (RFC 9110 §10.2.1
+    /// requires it).
+    allow: Option<&'static str>,
 }
 
 impl Response {
     fn json(status: u16, body: impl Into<String>) -> Response {
-        Response { status, body: body.into() }
+        Response { status, body: body.into(), retry_after: None, allow: None }
     }
 
     fn error(status: u16, message: &str) -> Response {
         Response::json(status, format!("{{\"error\":{}}}", json_string(message)))
+    }
+
+    /// A shed response carrying a `Retry-After: secs` hint.
+    fn retry(status: u16, secs: u64, message: &str) -> Response {
+        Response { retry_after: Some(secs), ..Response::error(status, message) }
+    }
+
+    /// `405 Method Not Allowed` for a known path hit with the wrong
+    /// method, with the RFC-required `Allow:` list.
+    fn method_not_allowed(allow: &'static str) -> Response {
+        Response {
+            allow: Some(allow),
+            ..Response::error(405, &format!("method not allowed (allow: {allow})"))
+        }
     }
 }
 
@@ -745,54 +865,227 @@ fn read_request(
     Ok(Request { method, path, version, headers, body })
 }
 
-fn route(req: &Request, handle: &ServeHandle) -> Response {
+fn route(req: &Request, backend: &Backend) -> Response {
     let path = req.path.split('?').next().unwrap_or("");
-    match (req.method.as_str(), path) {
-        ("POST", "/infer") => infer_route(req, handle),
-        ("GET", "/stats") => Response::json(200, report_json(&handle.stats())),
-        ("GET", "/healthz") => Response::json(200, "{\"ok\":true}"),
-        _ => Response::error(404, "not found (try POST /infer, GET /stats, GET /healthz)"),
+    match path {
+        "/infer" => match req.method.as_str() {
+            "POST" => infer_route(req, backend, None),
+            _ => Response::method_not_allowed("POST"),
+        },
+        "/stats" => match req.method.as_str() {
+            "GET" => Response::json(200, stats_json(backend)),
+            _ => Response::method_not_allowed("GET"),
+        },
+        "/healthz" => match req.method.as_str() {
+            "GET" => Response::json(200, "{\"ok\":true}"),
+            _ => Response::method_not_allowed("GET"),
+        },
+        p => {
+            if let Some(rest) = p.strip_prefix("/v1/") {
+                return route_v1(req, backend, rest);
+            }
+            Response::error(
+                404,
+                "not found (try POST /infer, POST /v1/{model}/infer, GET /stats, GET /healthz)",
+            )
+        }
     }
 }
 
-/// `POST /infer`: decode the sample and QoS headers, submit on the
-/// non-blocking path, wait for the outcome.
-fn infer_route(req: &Request, handle: &ServeHandle) -> Response {
-    let sample = match decode_sample(req) {
-        Ok(s) => s,
-        Err(msg) => return Response::error(400, &msg),
+/// Dispatch the model-scoped `/v1/{model}[/infer]` routes. These need
+/// a registry backend; on a single-engine server they answer a clean
+/// `404` pointing at `cct serve --model`.
+fn route_v1(req: &Request, backend: &Backend, rest: &str) -> Response {
+    let Backend::Registry(reg) = backend else {
+        return Response::error(
+            404,
+            "multi-model routes need a registry backend (start with cct serve --model name=preset)",
+        );
     };
+    let (model, tail) = match rest.split_once('/') {
+        Some((m, t)) => (m, Some(t)),
+        None => (rest, None),
+    };
+    if model.is_empty() {
+        return Response::error(404, "missing model name (try /v1/{model}/infer)");
+    }
+    match tail {
+        None | Some("") => match req.method.as_str() {
+            "PUT" => put_model(req, reg, model),
+            "DELETE" => delete_model(reg, model),
+            "GET" => model_stats(reg, model),
+            _ => Response::method_not_allowed("PUT, DELETE, GET"),
+        },
+        Some("infer") => match req.method.as_str() {
+            "POST" => infer_route(req, backend, Some(model)),
+            _ => Response::method_not_allowed("POST"),
+        },
+        Some(_) => {
+            Response::error(404, "unknown model route (try /v1/{model}/infer or /v1/{model})")
+        }
+    }
+}
+
+/// Decode the sample body and the QoS headers shared by every infer
+/// route.
+fn decode_infer_request(req: &Request) -> Result<(Vec<f32>, InferOptions), Response> {
+    let sample = decode_sample(req).map_err(|msg| Response::error(400, &msg))?;
     let mut opts = InferOptions::default();
     if let Some(v) = req.header("x-priority") {
         match parse_lane(v) {
             Some(lane) => opts.lane = lane,
             None => {
-                return Response::error(
+                return Err(Response::error(
                     400,
                     "bad X-Priority (use 'interactive' or 'best-effort')",
-                )
+                ))
             }
         }
     }
     if let Some(v) = req.header("x-deadline-us") {
         match v.parse::<u64>() {
             Ok(us) => opts.deadline_us = Some(us),
-            Err(_) => return Response::error(400, "bad X-Deadline-Us (want microseconds)"),
+            Err(_) => return Err(Response::error(400, "bad X-Deadline-Us (want microseconds)")),
         }
     }
-    match handle.try_infer_with(&sample, opts) {
-        Ok(pending) => match pending.wait_outcome() {
-            Ok(InferOutcome::Reply(reply)) => Response::json(200, reply_json(&reply)),
-            Ok(InferOutcome::Expired) => {
-                Response::error(504, "deadline expired before execution (shed)")
+    Ok((sample, opts))
+}
+
+/// `POST /infer` and `POST /v1/{model}/infer`: decode the sample and
+/// QoS headers, submit on the non-blocking path (admission-checked on
+/// a registry backend), wait for the outcome. `model: None` means the
+/// un-scoped route — the engine itself, or the registry's default
+/// (first loaded) model.
+fn infer_route(req: &Request, backend: &Backend, model: Option<&str>) -> Response {
+    let (sample, opts) = match decode_infer_request(req) {
+        Ok(decoded) => decoded,
+        Err(resp) => return resp,
+    };
+    match backend {
+        Backend::Engine(handle) => match handle.try_infer_with(&sample, opts) {
+            Ok(pending) => match pending.wait_outcome() {
+                Ok(InferOutcome::Reply(reply)) => Response::json(200, reply_json(&reply)),
+                Ok(InferOutcome::Expired) => {
+                    Response::error(504, "deadline expired before execution (shed)")
+                }
+                Err(_) => Response::error(503, "engine shut down before answering"),
+            },
+            Err(SubmitError::QueueFull) => {
+                Response::retry(429, 1, "lane full (backpressure), retry later")
             }
-            Err(_) => Response::error(503, "engine shut down before answering"),
+            Err(SubmitError::Closed) => Response::error(503, "engine is shut down"),
+            Err(SubmitError::BadSample(got, want)) => {
+                Response::error(400, &format!("sample length {got}, expected {want}"))
+            }
         },
-        Err(SubmitError::QueueFull) => Response::error(503, "lane full (backpressure)"),
-        Err(SubmitError::Closed) => Response::error(503, "engine is shut down"),
-        Err(SubmitError::BadSample(got, want)) => {
-            Response::error(400, &format!("sample length {got}, expected {want}"))
+        Backend::Registry(reg) => {
+            let name = match model {
+                Some(m) => m.to_string(),
+                None => match reg.default_model() {
+                    Some(n) => n,
+                    None => {
+                        return Response::error(404, "no models loaded (PUT /v1/{model} first)")
+                    }
+                },
+            };
+            match reg.submit(&name, &sample, opts) {
+                Ok(sub) => {
+                    let generation = sub.generation();
+                    match sub.wait_outcome() {
+                        Ok(InferOutcome::Reply(reply)) => {
+                            Response::json(200, registry_reply_json(&name, generation, &reply))
+                        }
+                        Ok(InferOutcome::Expired) => {
+                            Response::error(504, "deadline expired before execution (shed)")
+                        }
+                        Err(_) => Response::error(503, "model shut down before answering"),
+                    }
+                }
+                Err(RegistryError::UnknownModel(m)) => {
+                    Response::error(404, &format!("unknown model '{m}'"))
+                }
+                Err(RegistryError::AdmissionShed) => Response::retry(
+                    429,
+                    1,
+                    "tenant over fair-share admission capacity (shed), retry later",
+                ),
+                Err(RegistryError::Submit(SubmitError::QueueFull)) => {
+                    Response::retry(429, 1, "lane full (backpressure), retry later")
+                }
+                Err(RegistryError::Submit(SubmitError::Closed)) => {
+                    Response::error(503, "model is shutting down")
+                }
+                Err(RegistryError::Submit(SubmitError::BadSample(got, want))) => {
+                    Response::error(400, &format!("sample length {got}, expected {want}"))
+                }
+            }
         }
+    }
+}
+
+/// `PUT /v1/{model}`: load or hot-swap. Body is `preset:NAME` or a
+/// full net-config text; optional `X-Seed` / `X-Weight` headers.
+fn put_model(req: &Request, reg: &Arc<ModelRegistry>, model: &str) -> Response {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t.trim(),
+        Err(_) => {
+            return Response::error(400, "body is not UTF-8 (want 'preset:NAME' or a net config)")
+        }
+    };
+    if text.is_empty() {
+        return Response::error(400, "empty body (want 'preset:NAME' or a net config)");
+    }
+    let net = if let Some(name) = text.strip_prefix("preset:") {
+        match registry::preset_net(name.trim()) {
+            Ok(n) => n,
+            Err(e) => return Response::error(400, &format!("{e}")),
+        }
+    } else {
+        match crate::net::parse_net(text) {
+            Ok(n) => n,
+            Err(e) => return Response::error(400, &format!("bad net config: {e}")),
+        }
+    };
+    let mut opts = LoadOptions::default();
+    if let Some(v) = req.header("x-seed") {
+        match v.parse::<u64>() {
+            Ok(s) => opts.seed = Some(s),
+            Err(_) => return Response::error(400, "bad X-Seed (want an unsigned integer)"),
+        }
+    }
+    if let Some(v) = req.header("x-weight") {
+        match v.parse::<usize>() {
+            Ok(w) if w >= 1 => opts.weight = w,
+            _ => return Response::error(400, "bad X-Weight (want an integer ≥ 1)"),
+        }
+    }
+    match reg.load(model, &net, opts) {
+        Ok(sw) => Response::json(200, swap_json(&sw)),
+        Err(e) => Response::error(400, &format!("{e}")),
+    }
+}
+
+/// `DELETE /v1/{model}`: retire — drain the engine (answering
+/// everything it accepted) and remove the model from routing.
+fn delete_model(reg: &Arc<ModelRegistry>, model: &str) -> Response {
+    match reg.retire(model) {
+        Ok(report) => Response::json(
+            200,
+            format!(
+                "{{\"model\":{},\"retired\":true,\"completed\":{}}}",
+                json_string(model),
+                report.completed
+            ),
+        ),
+        Err(e) => Response::error(404, &format!("{e}")),
+    }
+}
+
+/// `GET /v1/{model}`: that model's stats object alone.
+fn model_stats(reg: &Arc<ModelRegistry>, model: &str) -> Response {
+    match reg.stats().into_iter().find(|m| m.name == model) {
+        Some(m) => Response::json(200, model_stats_json(&m)),
+        None => Response::error(404, &format!("unknown model '{model}'")),
     }
 }
 
@@ -903,6 +1196,73 @@ fn reply_json(r: &InferReply) -> String {
     )
 }
 
+/// A registry-route reply: the plain [`reply_json`] object with
+/// `"model"` and `"generation"` prepended, so a client flooding across
+/// a hot swap can group logits by the plan that computed them.
+fn registry_reply_json(model: &str, generation: u64, r: &InferReply) -> String {
+    let base = reply_json(r);
+    format!(
+        "{{\"model\":{},\"generation\":{},{}",
+        json_string(model),
+        generation,
+        base.strip_prefix('{').unwrap_or(&base),
+    )
+}
+
+/// The `PUT /v1/{model}` response body.
+fn swap_json(sw: &registry::SwapReport) -> String {
+    let buckets =
+        sw.buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"model\":{},\"generation\":{},\"swapped\":{},\"buckets\":[{}],\"sample_len\":{}}}",
+        json_string(&sw.model),
+        sw.generation,
+        sw.swapped,
+        buckets,
+        sw.sample_len
+    )
+}
+
+/// One model's entry in the registry stats payload (also the whole
+/// `GET /v1/{model}` body).
+fn model_stats_json(m: &registry::ModelStats) -> String {
+    format!(
+        "{{\"model\":{},\"generation\":{},\"weight\":{},\"floor\":{},\"inflight\":{},\
+         \"queue_depths\":[{},{}],\"report\":{}}}",
+        json_string(&m.name),
+        m.generation,
+        m.weight,
+        m.floor,
+        m.inflight,
+        m.queue_depths[0],
+        m.queue_depths[1],
+        report_json(&m.report)
+    )
+}
+
+/// The `GET /stats` payload for either backend: a single-engine
+/// [`ServeReport`], or the registry's per-model map plus admission and
+/// transport counters.
+fn stats_json(backend: &Backend) -> String {
+    match backend {
+        Backend::Engine(handle) => report_json(&handle.stats()),
+        Backend::Registry(reg) => {
+            let models = reg
+                .stats()
+                .iter()
+                .map(|m| format!("{}:{}", json_string(&m.name), model_stats_json(m)))
+                .collect::<Vec<_>>()
+                .join(",");
+            format!(
+                "{{\"models\":{{{}}},\"admission\":{{\"capacity\":{}}},\"http\":{}}}",
+                models,
+                reg.admission().capacity(),
+                http_json(&reg.http_report())
+            )
+        }
+    }
+}
+
 fn latency_json(l: &super::LatencySummary) -> String {
     format!(
         "{{\"p50_us\":{:.1},\"p95_us\":{:.1},\"p99_us\":{:.1},\"mean_us\":{:.1},\"max_us\":{:.1}}}",
@@ -921,7 +1281,8 @@ fn http_json(h: &super::HttpReport) -> String {
     )
 }
 
-/// The `GET /stats` payload: a [`ServeReport`] snapshot as JSON.
+/// A [`ServeReport`] snapshot as JSON (the single-engine `GET /stats`
+/// payload, and each model's `"report"` on a registry backend).
 fn report_json(rep: &ServeReport) -> String {
     let allocs = rep
         .worker_steady_allocs
@@ -930,13 +1291,16 @@ fn report_json(rep: &ServeReport) -> String {
         .collect::<Vec<_>>()
         .join(",");
     format!(
-        "{{\"completed\":{},\"rejected\":{},\"expired\":{},\"batches\":{},\"mean_batch\":{:.3},\
+        "{{\"completed\":{},\"rejected\":{},\"expired\":{},\"swaps\":{},\"admission_sheds\":{},\
+         \"batches\":{},\"mean_batch\":{:.3},\
          \"padded_slots\":{},\"wall_s\":{:.3},\"throughput_rps\":{:.1},\"latency\":{},\
          \"lanes\":{{\"interactive\":{},\"best_effort\":{}}},\"http\":{},\
          \"worker_steady_allocs\":[{}]}}",
         rep.completed,
         rep.rejected,
         rep.expired,
+        rep.swaps,
+        rep.admission_sheds,
         rep.batches,
         rep.mean_batch,
         rep.padded_slots,
@@ -955,17 +1319,27 @@ fn write_response(stream: &mut TcpStream, resp: &Response, close: bool) -> std::
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        405 => "Method Not Allowed",
         408 => "Request Timeout",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Response",
     };
+    let mut extra = String::new();
+    if let Some(secs) = resp.retry_after {
+        extra.push_str(&format!("Retry-After: {secs}\r\n"));
+    }
+    if let Some(allow) = resp.allow {
+        extra.push_str(&format!("Allow: {allow}\r\n"));
+    }
     write!(
         stream,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n{}",
         resp.status,
         reason,
         resp.body.len(),
+        extra,
         if close { "close" } else { "keep-alive" },
         resp.body
     )?;
@@ -1098,5 +1472,104 @@ mod tests {
             assert!(matches!(unbounded.claim_budget(), Budget::Granted { last: false }));
         }
         assert!(!unbounded.budget_spent());
+    }
+
+    /// An engine backend over a small disconnected queue — enough to
+    /// drive `route` without spinning up workers.
+    fn engine_backend() -> Backend {
+        Backend::Engine(ServeHandle {
+            queue: Arc::new(crate::serve::lanes::LaneQueue::new(2)),
+            sample_len: 4,
+            stats: Arc::new(Recorder::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    fn request(method: &str, path: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            version: "HTTP/1.1".into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn wrong_method_is_405_with_allow() {
+        let b = engine_backend();
+        let resp = route(&request("GET", "/infer"), &b);
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.allow, Some("POST"));
+        assert_eq!(route(&request("POST", "/stats"), &b).status, 405);
+        assert_eq!(route(&request("DELETE", "/healthz"), &b).status, 405);
+        // Unknown paths stay 404 (no Allow header).
+        let resp = route(&request("GET", "/nope"), &b);
+        assert_eq!(resp.status, 404);
+        assert_eq!(resp.allow, None);
+    }
+
+    #[test]
+    fn v1_routes_on_engine_backend_are_a_clean_404() {
+        let b = engine_backend();
+        assert_eq!(route(&request("POST", "/v1/alpha/infer"), &b).status, 404);
+        assert_eq!(route(&request("PUT", "/v1/alpha"), &b).status, 404);
+    }
+
+    #[test]
+    fn shed_responses_carry_retry_after() {
+        let r = Response::retry(429, 1, "shed");
+        assert_eq!((r.status, r.retry_after), (429, Some(1)));
+        let r = Response::retry(503, 1, "shed");
+        assert_eq!((r.status, r.retry_after), (503, Some(1)));
+        assert_eq!(Response::error(404, "x").retry_after, None);
+    }
+
+    #[test]
+    fn registry_reply_json_prepends_model_and_generation() {
+        let r = InferReply {
+            logits: vec![1.0],
+            class: 0,
+            latency_s: 0.001,
+            batch_real: 1,
+            bucket: 1,
+            lane: Lane::Interactive,
+        };
+        let j = registry_reply_json("alpha", 3, &r);
+        assert!(j.starts_with("{\"model\":\"alpha\",\"generation\":3,\"class\":0,"), "{j}");
+        assert!(j.ends_with('}'), "{j}");
+    }
+
+    #[test]
+    fn swap_json_shape() {
+        let sw = registry::SwapReport {
+            model: "alpha".into(),
+            generation: 2,
+            swapped: true,
+            buckets: vec![1, 4],
+            sample_len: 64,
+        };
+        let j = swap_json(&sw);
+        assert_eq!(
+            j,
+            "{\"model\":\"alpha\",\"generation\":2,\"swapped\":true,\
+             \"buckets\":[1,4],\"sample_len\":64}"
+        );
+    }
+
+    #[test]
+    fn http_config_validation() {
+        assert!(HttpConfig::default().validate().is_ok());
+        let bad = |cfg: HttpConfig| cfg.validate().unwrap_err();
+        assert_eq!(bad(HttpConfig { workers: 0, ..Default::default() }), ConfigError::ZeroHttpWorkers);
+        assert_eq!(bad(HttpConfig { backlog: 0, ..Default::default() }), ConfigError::ZeroBacklog);
+        assert_eq!(
+            bad(HttpConfig { idle_timeout: Duration::ZERO, ..Default::default() }),
+            ConfigError::ZeroIdleTimeout
+        );
+        assert_eq!(
+            bad(HttpConfig { read_timeout: Duration::ZERO, ..Default::default() }),
+            ConfigError::ZeroReadTimeout
+        );
     }
 }

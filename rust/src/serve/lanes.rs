@@ -161,6 +161,14 @@ impl LaneQueue {
         None
     }
 
+    /// Current queued depth of each lane, indexed by `Lane as usize`
+    /// (`[interactive, best_effort]`) — a live observability gauge,
+    /// racy by nature (the batcher may pop concurrently).
+    pub(crate) fn depths(&self) -> [usize; 2] {
+        let g = self.state.lock().expect("serve lane queue poisoned");
+        [g.lanes[0].len(), g.lanes[1].len()]
+    }
+
     /// Close the queue: refuse all future pushes, drop anything still
     /// queued (dropping a request's reply sender errors its client's
     /// wait — the "engine shut down" path), and wake every blocked

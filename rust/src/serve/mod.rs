@@ -53,6 +53,12 @@
 //!    shed `503` at the door), each connection serving many requests
 //!    per TCP handshake, with idle/read timeouts and graceful drain.
 //!    Pool counters land in [`ServeReport::http`].
+//! 7. **Multi-tenant registry** — [`registry::ModelRegistry`] serves N
+//!    named models out of one process (each with its own engine,
+//!    bucket ladder, and batcher, all sharing the one persistent GEMM
+//!    pool), with hot swap (`PUT /v1/{model}` flips an `Arc` to a
+//!    freshly warmed plan and drains in-flight traffic against the old
+//!    one) and weighted fair admission across tenants.
 //!
 //! Padding to a bucket is sound because every layer computes samples
 //! independently in forward mode; a padded row changes nothing about
@@ -68,6 +74,7 @@
 mod batcher;
 mod http;
 mod lanes;
+pub mod registry;
 mod stats;
 
 pub use batcher::BatchPolicy;
@@ -207,6 +214,98 @@ impl Default for ServeConfig {
             gemm_pool_threads: 0,
             seed: 42,
         }
+    }
+}
+
+/// A structurally invalid [`ServeConfig`] / [`HttpConfig`], caught at
+/// construction time. Every variant describes a configuration that
+/// would otherwise hang, panic, or spin at runtime (a zero-capacity
+/// queue blocks every producer forever; a zero-thread handler pool
+/// accepts connections nobody ever serves), so [`ServeEngine::start`]
+/// and [`HttpServer::bind_with`] refuse them up front with a typed
+/// error instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ConfigError {
+    /// `ServeConfig::workers == 0`: no worker would ever pull a batch.
+    ZeroWorkers,
+    /// `ServeConfig::max_batch == 0`: the batcher could never dispatch.
+    ZeroMaxBatch,
+    /// `ServeConfig::queue_cap == 0`: a zero-capacity submit lane
+    /// rejects (or blocks) every request forever.
+    ZeroQueueCap,
+    /// An explicit bucket ladder contains a `0` rung — no workspace
+    /// can be planned for a zero-sample batch.
+    ZeroBucket,
+    /// An explicit, non-empty bucket ladder whose largest rung (first
+    /// field) does not cover `max_batch` (second field): a full batch
+    /// would have no workspace to run in.
+    LadderTooShort(usize, usize),
+    /// `HttpConfig::workers == 0` (or `ServeConfig::http_workers == 0`):
+    /// accepted connections would queue forever with no handler.
+    ZeroHttpWorkers,
+    /// `HttpConfig::backlog == 0`: the accept channel could never hand
+    /// a socket to the pool.
+    ZeroBacklog,
+    /// `HttpConfig::idle_timeout` is zero: every keep-alive connection
+    /// would be closed at its first idle tick.
+    ZeroIdleTimeout,
+    /// `HttpConfig::read_timeout` is zero: every request would time out
+    /// (`408`) before its first byte was read.
+    ZeroReadTimeout,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroWorkers => write!(f, "workers must be ≥ 1"),
+            ConfigError::ZeroMaxBatch => write!(f, "max_batch must be ≥ 1"),
+            ConfigError::ZeroQueueCap => write!(f, "queue_cap must be ≥ 1"),
+            ConfigError::ZeroBucket => write!(f, "bucket ladder rungs must be ≥ 1"),
+            ConfigError::LadderTooShort(max_bucket, max_batch) => write!(
+                f,
+                "bucket ladder (max {max_bucket}) must cover max_batch {max_batch}"
+            ),
+            ConfigError::ZeroHttpWorkers => write!(f, "http workers must be ≥ 1"),
+            ConfigError::ZeroBacklog => write!(f, "http accept backlog must be ≥ 1"),
+            ConfigError::ZeroIdleTimeout => write!(f, "http idle_timeout must be non-zero"),
+            ConfigError::ZeroReadTimeout => write!(f, "http read_timeout must be non-zero"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl ServeConfig {
+    /// Construction-time structural validation, called by
+    /// [`ServeEngine::start`] (and the registry) before any thread is
+    /// spawned or workspace planned. An explicit (non-empty) bucket
+    /// ladder must have all rungs ≥ 1 and its largest rung must cover
+    /// `max_batch`; an empty ladder is fine — it means "derive one
+    /// from the device cost model".
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.workers == 0 {
+            return Err(ConfigError::ZeroWorkers);
+        }
+        if self.max_batch == 0 {
+            return Err(ConfigError::ZeroMaxBatch);
+        }
+        if self.queue_cap == 0 {
+            return Err(ConfigError::ZeroQueueCap);
+        }
+        if self.http_workers == 0 {
+            return Err(ConfigError::ZeroHttpWorkers);
+        }
+        if !self.buckets.is_empty() {
+            if self.buckets.contains(&0) {
+                return Err(ConfigError::ZeroBucket);
+            }
+            let max_bucket = *self.buckets.iter().max().expect("non-empty");
+            if max_bucket < self.max_batch {
+                return Err(ConfigError::LadderTooShort(max_bucket, self.max_batch));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -474,11 +573,25 @@ impl ServeEngine {
     /// Build the worker pool (identically seeded net replicas with
     /// pre-planned forward-only workspace ladders), start the batcher,
     /// and open the submit lanes. All workspace allocation happens
-    /// here; the serving steady state allocates no tensors.
+    /// here; the serving steady state allocates no tensors. A
+    /// structurally invalid `serve` configuration is refused up front
+    /// (see [`ServeConfig::validate`] / [`ConfigError`]).
     pub fn start(cfg: &NetConfig, serve: ServeConfig) -> crate::Result<ServeEngine> {
-        ensure!(serve.workers >= 1, "need at least one serve worker");
-        ensure!(serve.max_batch >= 1, "max_batch must be ≥ 1");
-        ensure!(serve.queue_cap >= 1, "queue_cap must be ≥ 1");
+        Self::start_with_recorder(cfg, serve, Arc::new(Recorder::new()))
+    }
+
+    /// [`ServeEngine::start`] recording into a caller-supplied
+    /// [`Recorder`]. The registry hands every generation of a model the
+    /// *same* recorder, so counters and latency history survive hot
+    /// swaps instead of resetting with each new plan.
+    pub(crate) fn start_with_recorder(
+        cfg: &NetConfig,
+        serve: ServeConfig,
+        stats: Arc<Recorder>,
+    ) -> crate::Result<ServeEngine> {
+        serve
+            .validate()
+            .map_err(|e| crate::err!("invalid serve config: {e}"))?;
 
         // Serve workers share the process-wide GEMM pool (their
         // per-call `threads_per_worker` budgets queue for it) instead
@@ -537,7 +650,6 @@ impl ServeEngine {
         let (work_tx, work_rx) = mpsc::sync_channel::<MicroBatch>(serve.workers);
         let work_rx = Arc::new(Mutex::new(work_rx));
         let stop = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(Recorder::new());
 
         let mut workers = Vec::with_capacity(serve.workers);
         for (w_id, mut net) in nets.into_iter().enumerate() {
@@ -608,6 +720,13 @@ impl ServeEngine {
     /// running).
     pub fn stats(&self) -> ServeReport {
         self.stats.report()
+    }
+
+    /// Live queued depth of each submit lane
+    /// (`[interactive, best_effort]`) — an observability gauge the
+    /// registry surfaces per model in `GET /stats`.
+    pub fn queue_depths(&self) -> [usize; 2] {
+        self.queue.depths()
     }
 
     /// Stop accepting work, drain the lanes, join every thread, and
@@ -932,6 +1051,39 @@ fc   { name: f1 out: 3 std: 0.1 }
             SubmitError::BadSample(3, 4)
         );
         assert!(handle.infer(&[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn serve_config_validation_catches_degenerate_setups() {
+        assert!(ServeConfig::default().validate().is_ok());
+        let bad = |cfg: ServeConfig| cfg.validate().unwrap_err();
+        assert_eq!(bad(ServeConfig { workers: 0, ..Default::default() }), ConfigError::ZeroWorkers);
+        assert_eq!(
+            bad(ServeConfig { max_batch: 0, ..Default::default() }),
+            ConfigError::ZeroMaxBatch
+        );
+        assert_eq!(
+            bad(ServeConfig { queue_cap: 0, ..Default::default() }),
+            ConfigError::ZeroQueueCap
+        );
+        assert_eq!(
+            bad(ServeConfig { http_workers: 0, ..Default::default() }),
+            ConfigError::ZeroHttpWorkers
+        );
+        assert_eq!(
+            bad(ServeConfig { buckets: vec![0, 16], ..Default::default() }),
+            ConfigError::ZeroBucket
+        );
+        assert_eq!(
+            bad(ServeConfig { buckets: vec![1, 4], max_batch: 16, ..Default::default() }),
+            ConfigError::LadderTooShort(4, 16)
+        );
+        // An empty ladder means "derive from the cost model" — valid.
+        assert!(ServeConfig { buckets: Vec::new(), ..Default::default() }.validate().is_ok());
+        // The engine refuses an invalid config with an error, not a
+        // panic or a hang.
+        assert!(ServeEngine::start(&tiny_cfg(), ServeConfig { workers: 0, ..Default::default() })
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,856 @@
+//! Multi-tenant model registry: N named models served out of one
+//! process, sharing the single persistent GEMM compute pool.
+//!
+//! The paper's end-to-end thesis is that throughput tracks delivered
+//! FLOPS once execution is batched and allocation-free; PRs 1–5 built
+//! that machinery for *one* net per process. Production serving (the
+//! ROADMAP's "heavy traffic" north star) multiplexes many models over
+//! the same cores — the many-workloads-one-substrate setting the
+//! framework-benchmarking literature measures. This module adds that
+//! layer without touching the per-model hot path:
+//!
+//! * **[`ModelRegistry`]** owns named entries. Each entry runs its own
+//!   [`ServeEngine`] — net replicas, forward-only bucketed workspace
+//!   ladder, two-lane QoS queue, micro-batcher — while every engine's
+//!   GEMMs share the one process-wide persistent pool
+//!   ([`ServeConfig::gemm_pool_threads`]), so N tenants queue for the
+//!   machine instead of oversubscribing it.
+//! * **Hot swap** ([`ModelRegistry::load`] over an existing name):
+//!   the replacement engine is built, planned, and warmed *off* the
+//!   request path, installed by flipping an `Arc` under a lock held
+//!   only for the flip, and the old generation is drained — every
+//!   request already submitted is answered by the old plan before its
+//!   threads exit. Zero requests are dropped or misrouted; each reply
+//!   carries the generation id it was computed by. Counters and
+//!   latency history survive the swap (all generations of a model
+//!   share one recorder), and [`ServeReport::swaps`] counts the flips.
+//! * **Weighted fair admission** ([`FairAdmission`]): a total
+//!   in-flight capacity is split into per-tenant guaranteed floors in
+//!   proportion to tenant weights (`floor_i = max(1, C·w_i/Σw)`).
+//!   A tenant under its floor is always admitted; above it, it may
+//!   *borrow* idle capacity (work-conserving) but is shed
+//!   ([`RegistryError::AdmissionShed`], counted in
+//!   [`ServeReport::admission_sheds`]) once total capacity is taken —
+//!   so one hot model cannot starve the others' queues no matter how
+//!   hard it floods. The admission slot is held until the reply is
+//!   delivered (released by [`RegistrySubmission`]'s token on drop).
+//!
+//! The HTTP transport routes `POST /v1/{model}/infer`,
+//! `PUT /v1/{model}` (load/replace), and `DELETE /v1/{model}` (retire)
+//! here — see [`HttpServer::bind_registry`](super::HttpServer::bind_registry).
+//!
+//! ```
+//! use cct::serve::registry::{LoadOptions, ModelRegistry, RegistryConfig};
+//! use cct::serve::{InferOptions, ServeConfig};
+//!
+//! let registry = ModelRegistry::new(RegistryConfig {
+//!     serve: ServeConfig { workers: 1, max_batch: 4, max_wait_us: 500, ..Default::default() },
+//!     admission_capacity: 8,
+//! })
+//! .unwrap();
+//! let net = cct::serve::registry::preset_net("tiny").unwrap();
+//! registry.load("alpha", &net, LoadOptions::default()).unwrap();
+//!
+//! let sample = vec![0.5f32; 768]; // one flattened 3×16×16 sample
+//! let reply = registry.infer("alpha", &sample, InferOptions::default()).unwrap();
+//! assert_eq!(reply.logits.len(), 10);
+//!
+//! for (name, report) in registry.shutdown() {
+//!     assert_eq!(name, "alpha");
+//!     assert_eq!(report.completed, 1);
+//! }
+//! ```
+
+use super::stats::Recorder;
+use super::{
+    InferOptions, InferReply, PendingInference, ServeConfig, ServeEngine, ServeReport, SubmitError,
+};
+use crate::net::config::NetConfig;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if another thread panicked while
+/// holding it — the registry's guarded state is plain counters and
+/// handles, always left consistent, so poisoning must not cascade a
+/// client-thread panic into every other tenant.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The built-in `tiny` serving preset (3×16×16 input, 768-float
+/// samples, 10 classes): small enough that registry tests and the CI
+/// smoke build and hot-swap it in milliseconds.
+pub const TINY_PRESET: &str = "
+name: tinyserve
+input: 3 16 16
+conv { name: conv1 out: 16 kernel: 3 pad: 1 std: 0.1 }
+relu { name: relu1 }
+pool { name: pool1 mode: max kernel: 2 stride: 2 }
+fc   { name: fc1 out: 10 std: 0.1 }
+";
+
+/// Resolve a named preset to a parsed net config
+/// (`tiny | cifar | lenet | caffenet64`) — what `cct serve
+/// --model name=preset` and the HTTP `PUT /v1/{model}` body
+/// `preset:NAME` accept.
+pub fn preset_net(name: &str) -> crate::Result<NetConfig> {
+    let text = match name {
+        "tiny" => TINY_PRESET,
+        "cifar" => crate::net::presets::CIFAR10_QUICK,
+        "lenet" => crate::net::presets::LENET,
+        "caffenet64" => crate::net::presets::CAFFENET_64,
+        other => {
+            return Err(crate::err!(
+                "unknown preset '{other}' (tiny|cifar|lenet|caffenet64)"
+            ))
+        }
+    };
+    crate::net::parse_net(text)
+}
+
+/// Registry-wide configuration.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Template engine configuration every model starts from (a
+    /// [`ModelRegistry::load`] may override the seed per load). The
+    /// `gemm_pool_threads` budget is shared by *all* tenants — it
+    /// configures the one process-wide pool.
+    pub serve: ServeConfig,
+    /// Total in-flight request capacity shared by all tenants under
+    /// weighted fair admission. `0` disables admission control (every
+    /// submission goes straight to the model's bounded lanes).
+    pub admission_capacity: usize,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig { serve: ServeConfig::default(), admission_capacity: 0 }
+    }
+}
+
+/// Per-load options for [`ModelRegistry::load`].
+#[derive(Clone, Copy, Debug)]
+pub struct LoadOptions {
+    /// Fair-share weight of this tenant (≥ 1): guaranteed admission
+    /// floors are proportional to weight.
+    pub weight: usize,
+    /// Seed for the model's (identical) worker net replicas; `None`
+    /// uses the registry template's seed. Loading the same config with
+    /// a different seed is the cheapest way to flip a model's weights
+    /// (the hot-swap tests do exactly that).
+    pub seed: Option<u64>,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions { weight: 1, seed: None }
+    }
+}
+
+/// What a [`ModelRegistry::load`] installed.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    /// The model name.
+    pub model: String,
+    /// Plan generation now serving this model (1 for a fresh load,
+    /// incremented by every hot swap).
+    pub generation: u64,
+    /// `true` when a live generation was replaced (hot swap) rather
+    /// than the name being freshly loaded.
+    pub swapped: bool,
+    /// Bucket ladder the new generation pre-planned workspaces at.
+    pub buckets: Vec<usize>,
+    /// Flattened sample length (`c·h·w`) requests must carry.
+    pub sample_len: usize,
+}
+
+/// Why a registry submission was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// No model with that name is loaded (or it was retired).
+    UnknownModel(String),
+    /// Weighted fair admission shed the request: the tenant is over
+    /// its guaranteed floor and total capacity is taken. Retry later —
+    /// the HTTP transport answers `429` + `Retry-After`.
+    AdmissionShed,
+    /// The model's engine refused the submission (lane full, shutting
+    /// down, or a mis-sized sample).
+    Submit(SubmitError),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            RegistryError::AdmissionShed => {
+                write!(f, "tenant over fair-share admission capacity (shed)")
+            }
+            RegistryError::Submit(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Work-conserving weighted fair admission over a shared in-flight
+/// capacity `C`: tenant `i` with weight `w_i` holds a guaranteed floor
+/// `max(1, C·w_i/Σw)` it is *always* admitted under, and may borrow
+/// any idle capacity beyond it while total in-flight stays under `C`.
+/// A tenant over its floor with total capacity taken is shed — which
+/// is exactly the property that keeps a flooding tenant from starving
+/// the others. Total in-flight can transiently exceed `C` (floors are
+/// honored even when borrowers hold the shared pool) but is bounded by
+/// `C + Σ floors`.
+///
+/// Slots are released when the [`AdmissionToken`] drops — i.e. when
+/// the reply has been delivered (or the submission failed), not when
+/// the request was merely enqueued.
+pub struct FairAdmission {
+    capacity: usize,
+    state: Mutex<AdmState>,
+}
+
+#[derive(Default)]
+struct AdmState {
+    /// Tokens currently outstanding across all tenants.
+    total: usize,
+    /// Sum of registered tenant weights.
+    total_weight: usize,
+    tenants: HashMap<String, Tenant>,
+}
+
+struct Tenant {
+    weight: usize,
+    inflight: usize,
+}
+
+fn fair_floor(capacity: usize, weight: usize, total_weight: usize) -> usize {
+    ((capacity * weight) / total_weight.max(1)).max(1)
+}
+
+impl FairAdmission {
+    /// An admission controller over `capacity` shared in-flight slots
+    /// (`0` disables admission: every request is admitted untracked).
+    pub fn new(capacity: usize) -> Self {
+        FairAdmission { capacity, state: Mutex::new(AdmState::default()) }
+    }
+
+    /// The configured shared capacity (`0` = admission disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register `tenant` with `weight` (≥ 1), or update its weight if
+    /// already registered. Floors of all tenants rescale immediately.
+    pub fn register(&self, tenant: &str, weight: usize) {
+        let weight = weight.max(1);
+        let mut g = relock(&self.state);
+        match g.tenants.get_mut(tenant) {
+            Some(t) => {
+                g.total_weight = g.total_weight - t.weight + weight;
+                t.weight = weight;
+            }
+            None => {
+                g.total_weight += weight;
+                g.tenants.insert(tenant.to_string(), Tenant { weight, inflight: 0 });
+            }
+        }
+    }
+
+    /// Remove `tenant`. Its outstanding tokens keep counting against
+    /// the shared total until they drop.
+    pub fn deregister(&self, tenant: &str) {
+        let mut g = relock(&self.state);
+        if let Some(t) = g.tenants.remove(tenant) {
+            g.total_weight = g.total_weight.saturating_sub(t.weight);
+        }
+    }
+
+    /// Try to admit one request for `tenant`: always under the
+    /// tenant's guaranteed floor, opportunistically (borrowing) while
+    /// total in-flight is under capacity, otherwise `None` (shed).
+    pub fn try_admit(self: &Arc<Self>, tenant: &str) -> Option<AdmissionToken> {
+        if self.capacity == 0 {
+            return Some(AdmissionToken { slot: None });
+        }
+        let mut g = relock(&self.state);
+        let (total, total_weight) = (g.total, g.total_weight);
+        let Some(t) = g.tenants.get_mut(tenant) else {
+            // Unregistered (a retire raced this lookup): admit
+            // untracked — the submit fails downstream with
+            // UnknownModel anyway.
+            return Some(AdmissionToken { slot: None });
+        };
+        let floor = fair_floor(self.capacity, t.weight, total_weight);
+        if t.inflight < floor || total < self.capacity {
+            t.inflight += 1;
+            g.total += 1;
+            Some(AdmissionToken { slot: Some((Arc::clone(self), tenant.to_string())) })
+        } else {
+            None
+        }
+    }
+
+    /// The tenant's current guaranteed floor (0 when admission is
+    /// disabled or the tenant is unknown).
+    pub fn floor(&self, tenant: &str) -> usize {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let g = relock(&self.state);
+        match g.tenants.get(tenant) {
+            Some(t) => fair_floor(self.capacity, t.weight, g.total_weight),
+            None => 0,
+        }
+    }
+
+    /// The tenant's registered weight (0 if unknown).
+    pub fn weight_of(&self, tenant: &str) -> usize {
+        relock(&self.state).tenants.get(tenant).map_or(0, |t| t.weight)
+    }
+
+    /// Admission tokens the tenant currently holds (0 when admission
+    /// is disabled).
+    pub fn inflight_of(&self, tenant: &str) -> usize {
+        relock(&self.state).tenants.get(tenant).map_or(0, |t| t.inflight)
+    }
+}
+
+/// One admitted in-flight slot; dropping it releases the slot. Held by
+/// [`RegistrySubmission`] until the reply is delivered.
+pub struct AdmissionToken {
+    slot: Option<(Arc<FairAdmission>, String)>,
+}
+
+impl Drop for AdmissionToken {
+    fn drop(&mut self) {
+        if let Some((adm, tenant)) = self.slot.take() {
+            let mut g = relock(&adm.state);
+            g.total = g.total.saturating_sub(1);
+            if let Some(t) = g.tenants.get_mut(&tenant) {
+                t.inflight = t.inflight.saturating_sub(1);
+            }
+        }
+    }
+}
+
+/// One installed plan generation of a model.
+struct Generation {
+    id: u64,
+    engine: ServeEngine,
+}
+
+/// A named registry entry. All generations of the entry share one
+/// recorder, so counters and latency history survive hot swaps.
+struct ModelEntry {
+    name: String,
+    /// The serving generation; `None` once retired. A hot swap
+    /// replaces the `Arc` under this lock, held only for the flip —
+    /// never while planning the new generation or draining the old.
+    current: Mutex<Option<Arc<Generation>>>,
+    recorder: Arc<Recorder>,
+    /// Id of the most recently installed generation.
+    generation: AtomicU64,
+}
+
+/// Wait for every outstanding submit-path clone of the generation to
+/// drop, then drain its engine: all queued and in-flight requests are
+/// answered *by the old plan* before its threads exit. Submitters hold
+/// the generation `Arc` only across a non-blocking enqueue (never
+/// while waiting for a reply), so the count settles in microseconds
+/// even under sustained load.
+fn drain_generation(mut gen: Arc<Generation>) -> ServeReport {
+    loop {
+        match Arc::try_unwrap(gen) {
+            Ok(g) => return g.engine.shutdown(),
+            Err(back) => {
+                gen = back;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+}
+
+/// An admitted, in-flight registry request: wait on it for the
+/// outcome. The admission slot is released when the wait returns (or
+/// when this value drops).
+pub struct RegistrySubmission {
+    pending: PendingInference,
+    generation: u64,
+    _token: AdmissionToken,
+}
+
+impl RegistrySubmission {
+    /// Plan generation the request was submitted against (the same id
+    /// the HTTP reply carries) — within one generation, identical
+    /// inputs produce bit-identical logits.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Block until the reply arrives — see [`PendingInference::wait`].
+    pub fn wait(self) -> crate::Result<InferReply> {
+        self.pending.wait()
+    }
+
+    /// Block until the request resolves either way — see
+    /// [`PendingInference::wait_outcome`].
+    pub fn wait_outcome(self) -> crate::Result<super::InferOutcome> {
+        self.pending.wait_outcome()
+    }
+}
+
+/// Per-model statistics snapshot, returned by [`ModelRegistry::stats`]
+/// and serialized into the registry's `GET /stats` payload.
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    /// The model name.
+    pub name: String,
+    /// Plan generation currently serving.
+    pub generation: u64,
+    /// Fair-admission weight.
+    pub weight: usize,
+    /// Guaranteed admission floor at the current tenant mix (0 when
+    /// admission is disabled).
+    pub floor: usize,
+    /// Admission tokens currently outstanding for this tenant.
+    pub inflight: usize,
+    /// Live queued depth of the model's submit lanes
+    /// (`[interactive, best_effort]`).
+    pub queue_depths: [usize; 2],
+    /// The model's full serving report (all generations combined).
+    pub report: ServeReport,
+}
+
+/// The multi-tenant model registry: named engines over one shared GEMM
+/// pool, with hot swap and weighted fair admission. See the module
+/// docs for the design; see [`HttpServer::bind_registry`](super::HttpServer::bind_registry)
+/// for the wire surface.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    /// Entries in load order (the first is the default model the
+    /// legacy `POST /infer` routes to). Linear lookup — registries
+    /// hold a handful of models, not thousands.
+    models: RwLock<Vec<Arc<ModelEntry>>>,
+    admission: Arc<FairAdmission>,
+    /// Transport counters when an [`HttpServer`](super::HttpServer)
+    /// fronts the registry (per-model recorders hold serving counters;
+    /// connections are not per-model).
+    http_stats: Arc<Recorder>,
+    /// Serializes control-plane operations (load/retire/shutdown);
+    /// the submit path never takes it.
+    ops: Mutex<()>,
+    closed: AtomicBool,
+}
+
+impl ModelRegistry {
+    /// An empty registry. The template [`ServeConfig`] is validated up
+    /// front ([`ServeConfig::validate`]); models are added with
+    /// [`ModelRegistry::load`].
+    pub fn new(cfg: RegistryConfig) -> crate::Result<ModelRegistry> {
+        cfg.serve
+            .validate()
+            .map_err(|e| crate::err!("invalid registry serve config: {e}"))?;
+        Ok(ModelRegistry {
+            admission: Arc::new(FairAdmission::new(cfg.admission_capacity)),
+            cfg,
+            models: RwLock::new(Vec::new()),
+            http_stats: Arc::new(Recorder::new()),
+            ops: Mutex::new(()),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// The shared admission controller (floors, in-flight gauges).
+    pub fn admission(&self) -> &FairAdmission {
+        &self.admission
+    }
+
+    /// The transport recorder the HTTP frontend records into when it
+    /// serves this registry.
+    pub(crate) fn http_recorder(&self) -> &Recorder {
+        &self.http_stats
+    }
+
+    /// HTTP-transport counters for this registry's frontend (zeros
+    /// when none is attached).
+    pub fn http_report(&self) -> super::HttpReport {
+        self.http_stats.report().http
+    }
+
+    /// Loaded model names, in load order.
+    pub fn model_names(&self) -> Vec<String> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|e| e.name.clone())
+            .collect()
+    }
+
+    /// The model legacy single-model routes (`POST /infer`) resolve
+    /// to: the earliest-loaded one still present.
+    pub fn default_model(&self) -> Option<String> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .first()
+            .map(|e| e.name.clone())
+    }
+
+    fn find(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .find(|e| e.name == name)
+            .map(Arc::clone)
+    }
+
+    /// Load `name` fresh, or hot-swap it if already serving: the new
+    /// engine is built, planned, and warmed here — off the request
+    /// path — then installed with an `Arc` flip, and the replaced
+    /// generation is drained (every request it already accepted is
+    /// answered by the old plan). Returns once the swap is complete
+    /// and the old generation fully retired.
+    pub fn load(&self, name: &str, net: &NetConfig, opts: LoadOptions) -> crate::Result<SwapReport> {
+        crate::ensure!(
+            !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "model name must be non-empty [A-Za-z0-9_-] (got '{name}')"
+        );
+        crate::ensure!(opts.weight >= 1, "model weight must be ≥ 1");
+        crate::ensure!(!self.closed.load(Ordering::Relaxed), "registry is shut down");
+        // One control-plane operation at a time: concurrent PUTs
+        // serialize here; the data plane never takes this lock.
+        let _ops = relock(&self.ops);
+        let existing = self.find(name);
+        let recorder = match &existing {
+            Some(e) => Arc::clone(&e.recorder),
+            None => Arc::new(Recorder::new()),
+        };
+        let mut serve = self.cfg.serve.clone();
+        if let Some(seed) = opts.seed {
+            serve.seed = seed;
+        }
+        // Build + plan + warm the new generation while old traffic
+        // keeps flowing on the old plan.
+        let engine = ServeEngine::start_with_recorder(net, serve, Arc::clone(&recorder))?;
+        let buckets = engine.buckets().to_vec();
+        let sample_len = engine.sample_len();
+        match existing {
+            Some(entry) => {
+                let id = entry.generation.fetch_add(1, Ordering::Relaxed) + 1;
+                let fresh = Arc::new(Generation { id, engine });
+                let old = relock(&entry.current).replace(fresh);
+                self.admission.register(name, opts.weight);
+                recorder.record_swap();
+                // New submissions already route to the new plan; drain
+                // everything the old one accepted before returning.
+                if let Some(old) = old {
+                    drain_generation(old);
+                }
+                Ok(SwapReport {
+                    model: name.to_string(),
+                    generation: id,
+                    swapped: true,
+                    buckets,
+                    sample_len,
+                })
+            }
+            None => {
+                let entry = Arc::new(ModelEntry {
+                    name: name.to_string(),
+                    current: Mutex::new(Some(Arc::new(Generation { id: 1, engine }))),
+                    recorder,
+                    generation: AtomicU64::new(1),
+                });
+                self.admission.register(name, opts.weight);
+                self.models
+                    .write()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(entry);
+                Ok(SwapReport {
+                    model: name.to_string(),
+                    generation: 1,
+                    swapped: false,
+                    buckets,
+                    sample_len,
+                })
+            }
+        }
+    }
+
+    /// Retire `name`: remove it from routing, drain its engine (every
+    /// accepted request is answered first), and return its final
+    /// report. Submissions racing the retire get a clean
+    /// [`RegistryError::UnknownModel`], never a dropped reply.
+    pub fn retire(&self, name: &str) -> crate::Result<ServeReport> {
+        let _ops = relock(&self.ops);
+        let entry = {
+            let mut g = self.models.write().unwrap_or_else(|e| e.into_inner());
+            let pos = g
+                .iter()
+                .position(|e| e.name == name)
+                .ok_or_else(|| crate::err!("unknown model '{name}'"))?;
+            g.remove(pos)
+        };
+        self.admission.deregister(name);
+        let old = relock(&entry.current).take();
+        match old {
+            Some(gen) => Ok(drain_generation(gen)),
+            None => Ok(entry.recorder.report()),
+        }
+    }
+
+    /// Non-blocking submission for `model`: admission check first
+    /// (weighted fair share), then the engine's bounded lanes. The
+    /// returned [`RegistrySubmission`] holds the admission slot until
+    /// its wait resolves.
+    pub fn submit(
+        &self,
+        model: &str,
+        sample: &[f32],
+        opts: InferOptions,
+    ) -> Result<RegistrySubmission, RegistryError> {
+        let entry = self
+            .find(model)
+            .ok_or_else(|| RegistryError::UnknownModel(model.to_string()))?;
+        let Some(token) = self.admission.try_admit(model) else {
+            entry.recorder.record_admission_shed();
+            return Err(RegistryError::AdmissionShed);
+        };
+        // Clone the generation handle under the flip lock, release the
+        // lock immediately: neither the enqueue nor (especially) the
+        // reply wait may hold what a hot swap flips under.
+        let gen = {
+            let cur = relock(&entry.current);
+            match cur.as_ref() {
+                Some(g) => Arc::clone(g),
+                None => return Err(RegistryError::UnknownModel(model.to_string())),
+            }
+        };
+        let pending = gen
+            .engine
+            .handle()
+            .try_infer_with(sample, opts)
+            .map_err(RegistryError::Submit)?;
+        let generation = gen.id;
+        // Drop the generation clone before returning: a concurrent
+        // swap's drain waits for the strong count to settle, and the
+        // reply channel doesn't need it.
+        drop(gen);
+        Ok(RegistrySubmission { pending, generation, _token: token })
+    }
+
+    /// Blocking convenience over [`ModelRegistry::submit`]: submit and
+    /// wait for the reply.
+    pub fn infer(
+        &self,
+        model: &str,
+        sample: &[f32],
+        opts: InferOptions,
+    ) -> crate::Result<InferReply> {
+        let sub = self.submit(model, sample, opts).map_err(|e| crate::err!("{e}"))?;
+        sub.wait()
+    }
+
+    /// Per-model statistics snapshot (the registry keeps serving).
+    pub fn stats(&self) -> Vec<ModelStats> {
+        let entries: Vec<Arc<ModelEntry>> = {
+            let g = self.models.read().unwrap_or_else(|e| e.into_inner());
+            g.iter().map(Arc::clone).collect()
+        };
+        entries
+            .iter()
+            .map(|e| {
+                let (generation, queue_depths) = {
+                    let cur = relock(&e.current);
+                    match cur.as_ref() {
+                        Some(g) => (g.id, g.engine.queue_depths()),
+                        None => (e.generation.load(Ordering::Relaxed), [0, 0]),
+                    }
+                };
+                ModelStats {
+                    name: e.name.clone(),
+                    generation,
+                    weight: self.admission.weight_of(&e.name),
+                    floor: self.admission.floor(&e.name),
+                    inflight: self.admission.inflight_of(&e.name),
+                    queue_depths,
+                    report: e.recorder.report(),
+                }
+            })
+            .collect()
+    }
+
+    /// Retire every model (draining each engine) and return the final
+    /// per-model reports, in load order. Further loads and submissions
+    /// are refused. Idempotent — a second call returns an empty list.
+    pub fn shutdown(&self) -> Vec<(String, ServeReport)> {
+        self.closed.store(true, Ordering::Relaxed);
+        let _ops = relock(&self.ops);
+        let entries: Vec<Arc<ModelEntry>> = {
+            let mut g = self.models.write().unwrap_or_else(|e| e.into_inner());
+            g.drain(..).collect()
+        };
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            self.admission.deregister(&e.name);
+            let report = match relock(&e.current).take() {
+                Some(gen) => drain_generation(gen),
+                None => e.recorder.report(),
+            };
+            out.push((e.name.clone(), report));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY8: &str = "
+name: tinyreg
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+fc   { name: f1 out: 3 std: 0.1 }
+";
+
+    fn small_cfg() -> RegistryConfig {
+        RegistryConfig {
+            serve: ServeConfig { workers: 1, max_batch: 4, max_wait_us: 500, ..Default::default() },
+            admission_capacity: 16,
+        }
+    }
+
+    #[test]
+    fn fair_admission_floors_and_borrowing() {
+        let adm = Arc::new(FairAdmission::new(4));
+        adm.register("a", 1);
+        adm.register("b", 1);
+        assert_eq!(adm.floor("a"), 2);
+        assert_eq!(adm.floor("b"), 2);
+        // `a` borrows the whole capacity while `b` is idle...
+        let a: Vec<_> = (0..4).map(|_| adm.try_admit("a").expect("admit")).collect();
+        assert_eq!(adm.inflight_of("a"), 4);
+        // ...but is shed once over its floor with capacity taken...
+        assert!(adm.try_admit("a").is_none());
+        // ...while `b` is still guaranteed its floor: the borrow is
+        // work-conserving, never starving.
+        let b1 = adm.try_admit("b").expect("guaranteed floor");
+        let _b2 = adm.try_admit("b").expect("guaranteed floor");
+        assert!(adm.try_admit("b").is_none(), "b over floor, capacity taken");
+        // Releasing slots frees shared capacity again.
+        drop(a);
+        drop(b1);
+        assert_eq!(adm.inflight_of("a"), 0);
+        assert_eq!(adm.inflight_of("b"), 1);
+        assert!(adm.try_admit("a").is_some());
+    }
+
+    #[test]
+    fn weighted_floors_scale_with_weight() {
+        let adm = Arc::new(FairAdmission::new(12));
+        adm.register("hot", 2);
+        adm.register("cold", 1);
+        assert_eq!(adm.floor("hot"), 8);
+        assert_eq!(adm.floor("cold"), 4);
+        assert_eq!(adm.weight_of("hot"), 2);
+        adm.deregister("hot");
+        assert_eq!(adm.floor("cold"), 12);
+        assert_eq!(adm.floor("hot"), 0, "deregistered tenant has no floor");
+        // Capacity 0 disables admission: always admitted, untracked.
+        let off = Arc::new(FairAdmission::new(0));
+        off.register("x", 1);
+        assert!(off.try_admit("x").is_some());
+        assert_eq!(off.inflight_of("x"), 0);
+        assert_eq!(off.floor("x"), 0);
+    }
+
+    #[test]
+    fn preset_resolution_and_name_validation() {
+        assert_eq!(preset_net("tiny").unwrap().input, (3, 16, 16));
+        assert!(preset_net("cifar").is_ok());
+        assert!(preset_net("lenet").is_ok());
+        assert!(preset_net("caffenet64").is_ok());
+        assert!(preset_net("nope").is_err());
+        // Bad model names are refused before any engine is built.
+        let reg = ModelRegistry::new(small_cfg()).unwrap();
+        let net = crate::net::parse_net(TINY8).unwrap();
+        assert!(reg.load("", &net, LoadOptions::default()).is_err());
+        assert!(reg.load("a/b", &net, LoadOptions::default()).is_err());
+        assert!(reg
+            .load("x", &net, LoadOptions { weight: 0, seed: None })
+            .is_err());
+        assert!(reg.load("ok-name_1", &net, LoadOptions::default()).is_ok());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn load_infer_swap_retire_round_trip() {
+        let net = crate::net::parse_net(TINY8).unwrap();
+        let reg = ModelRegistry::new(small_cfg()).unwrap();
+        let sw = reg.load("alpha", &net, LoadOptions::default()).unwrap();
+        assert_eq!((sw.generation, sw.swapped, sw.sample_len), (1, false, 64));
+        let sw2 = reg
+            .load("beta", &net, LoadOptions { weight: 2, seed: Some(7) })
+            .unwrap();
+        assert!(!sw2.swapped);
+        assert_eq!(reg.model_names(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(reg.default_model().as_deref(), Some("alpha"));
+
+        let sample = vec![0.25f32; 64];
+        let ra = reg.infer("alpha", &sample, InferOptions::default()).unwrap();
+        let rb = reg.infer("beta", &sample, InferOptions::default()).unwrap();
+        assert_eq!(ra.logits.len(), 3);
+        assert_ne!(ra.logits, rb.logits, "different seeds ⇒ different weights");
+
+        // Hot swap alpha onto beta's seed: same input now returns
+        // beta's logits, and history survives (shared recorder).
+        let sw3 = reg
+            .load("alpha", &net, LoadOptions { weight: 1, seed: Some(7) })
+            .unwrap();
+        assert!(sw3.swapped);
+        assert_eq!(sw3.generation, 2);
+        let ra2 = reg.infer("alpha", &sample, InferOptions::default()).unwrap();
+        assert_eq!(ra2.logits, rb.logits);
+
+        let stats = reg.stats();
+        let alpha = stats.iter().find(|m| m.name == "alpha").unwrap();
+        assert_eq!(alpha.generation, 2);
+        assert_eq!(alpha.report.swaps, 1);
+        assert_eq!(alpha.report.completed, 2, "history survives the swap");
+        // The drained first generation already pushed its steady-state
+        // counter — and it is zero.
+        assert_eq!(alpha.report.worker_steady_allocs, vec![0]);
+        assert!(alpha.weight >= 1 && alpha.floor >= 1);
+
+        assert!(matches!(
+            reg.submit("ghost", &sample, InferOptions::default()),
+            Err(RegistryError::UnknownModel(_))
+        ));
+
+        let rep = reg.retire("beta").unwrap();
+        assert_eq!(rep.completed, 1);
+        assert!(reg.retire("beta").is_err(), "double retire is an error");
+        assert!(reg.infer("beta", &sample, InferOptions::default()).is_err());
+
+        let fin = reg.shutdown();
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].0, "alpha");
+        assert_eq!(fin[0].1.completed, 2);
+        // Both generations' workers reported zero steady-state allocs.
+        assert_eq!(fin[0].1.worker_steady_allocs, vec![0, 0]);
+        // After shutdown everything is refused.
+        assert!(reg.submit("alpha", &sample, InferOptions::default()).is_err());
+        assert!(reg.load("alpha", &net, LoadOptions::default()).is_err());
+        assert!(reg.shutdown().is_empty(), "shutdown is idempotent");
+    }
+}

@@ -135,6 +135,15 @@ pub struct ServeReport {
     /// HTTP-transport connection-pool counters (zeros when no
     /// [`HttpServer`](super::HttpServer) fronts the engine).
     pub http: HttpReport,
+    /// Hot swaps this model has served through (generations installed
+    /// *replacing* a live one; a fresh load counts zero). Only the
+    /// registry ([`ModelRegistry`](super::registry::ModelRegistry))
+    /// records these — a standalone engine always reports 0.
+    pub swaps: u64,
+    /// Requests shed by weighted fair admission (the tenant was over
+    /// its guaranteed floor and total capacity was taken). Only the
+    /// registry records these.
+    pub admission_sheds: u64,
     /// Tensor allocations each worker performed *after* its workspaces
     /// were planned — the steady-state serve loop must report all
     /// zeros (the `tensor::alloc_stats` invariant).
@@ -202,6 +211,8 @@ struct Inner {
     padded_slots: u64,
     http: HttpReport,
     worker_allocs: Vec<u64>,
+    swaps: u64,
+    admission_sheds: u64,
 }
 
 impl Default for Inner {
@@ -217,6 +228,8 @@ impl Default for Inner {
             padded_slots: 0,
             http: HttpReport::default(),
             worker_allocs: Vec::new(),
+            swaps: 0,
+            admission_sheds: 0,
         }
     }
 }
@@ -277,11 +290,19 @@ impl Recorder {
         self.inner.lock().expect("stats poisoned").http.accept_sheds += 1;
     }
 
+    pub(crate) fn record_swap(&self) {
+        self.inner.lock().expect("stats poisoned").swaps += 1;
+    }
+
+    pub(crate) fn record_admission_shed(&self) {
+        self.inner.lock().expect("stats poisoned").admission_sheds += 1;
+    }
+
     pub(crate) fn report(&self) -> ServeReport {
         // Copy the raw numbers out under the lock, then sort/summarize
         // outside it — a live `stats()` snapshot must not stall the
         // workers' recording calls for the duration of a 64 Ki sort.
-        let (all, lanes, rejected, expired, batches, real, padded, http, allocs) = {
+        let (all, lanes, rejected, expired, batches, real, padded, http, allocs, swaps, adm) = {
             let g = self.inner.lock().expect("stats poisoned");
             (
                 g.all.clone(),
@@ -293,6 +314,8 @@ impl Recorder {
                 g.padded_slots,
                 g.http,
                 g.worker_allocs.clone(),
+                g.swaps,
+                g.admission_sheds,
             )
         };
         let wall_s = self.started.elapsed().as_secs_f64();
@@ -312,6 +335,8 @@ impl Recorder {
                 LaneReport { completed: lanes[1].count, latency: lanes[1].summary() },
             ],
             http,
+            swaps,
+            admission_sheds: adm,
             worker_steady_allocs: allocs,
         }
     }
@@ -433,7 +458,12 @@ mod tests {
         r.record_expired();
         r.record_expired();
         r.record_worker_allocs(0);
+        r.record_swap();
+        r.record_admission_shed();
+        r.record_admission_shed();
         let rep = r.report();
+        assert_eq!(rep.swaps, 1);
+        assert_eq!(rep.admission_sheds, 2);
         assert_eq!(rep.completed, 2);
         assert_eq!(rep.rejected, 1);
         assert_eq!(rep.expired, 2);

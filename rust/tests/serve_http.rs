@@ -54,6 +54,10 @@ struct Resp {
     body: String,
     /// The server's `Connection:` header said `close`.
     close: bool,
+    /// `Retry-After` header, when the server sent one (shed paths).
+    retry_after: Option<u64>,
+    /// `Allow` header, when the server sent one (405 responses).
+    allow: Option<String>,
 }
 
 /// A client that can issue several requests over one connection —
@@ -108,6 +112,8 @@ impl Client {
             .unwrap_or_else(|| panic!("unparseable status line: {line:?}"));
         let mut len = 0usize;
         let mut close = false;
+        let mut retry_after = None;
+        let mut allow = None;
         loop {
             let mut h = String::new();
             self.reader.read_line(&mut h).expect("header line");
@@ -121,12 +127,22 @@ impl Client {
                     len = v.parse().expect("response content-length");
                 } else if k == "connection" {
                     close = v.eq_ignore_ascii_case("close");
+                } else if k == "retry-after" {
+                    retry_after = Some(v.parse().expect("retry-after seconds"));
+                } else if k == "allow" {
+                    allow = Some(v.to_string());
                 }
             }
         }
         let mut body = vec![0u8; len];
         self.reader.read_exact(&mut body).expect("response body");
-        Resp { status, body: String::from_utf8_lossy(&body).into_owned(), close }
+        Resp {
+            status,
+            body: String::from_utf8_lossy(&body).into_owned(),
+            close,
+            retry_after,
+            allow,
+        }
     }
 
     /// `true` once the server has closed this connection (EOF).
@@ -279,6 +295,37 @@ fn stats_health_and_errors() {
     assert_eq!(r.status, 400);
     let r = one_shot_get(addr, "/nope");
     assert_eq!(r.status, 404);
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn wrong_method_is_405_with_allow_header() {
+    let (engine, server) = start();
+    let addr = server.local_addr();
+
+    // GET on the POST-only inference route names the allowed method.
+    let mut c = Client::connect(addr);
+    c.send_raw(b"GET /infer HTTP/1.1\r\nHost: cct\r\nConnection: close\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 405, "body: {}", r.body);
+    assert_eq!(r.allow.as_deref(), Some("POST"), "405 must carry Allow");
+
+    // POST on the GET-only stats route, likewise.
+    let mut c = Client::connect(addr);
+    c.send_raw(b"POST /stats HTTP/1.1\r\nHost: cct\r\nConnection: close\r\nContent-Length: 0\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 405, "body: {}", r.body);
+    assert_eq!(r.allow.as_deref(), Some("GET"));
+
+    // Multi-model routes without a registry backend are a clean 404,
+    // not a panic or a misrouted single-model inference.
+    let mut c = Client::connect(addr);
+    c.send_raw(b"GET /v1/alpha HTTP/1.1\r\nHost: cct\r\nConnection: close\r\n\r\n");
+    let r = c.read_response();
+    assert_eq!(r.status, 404, "body: {}", r.body);
+    assert!(r.body.contains("registry"), "{}", r.body);
 
     server.shutdown();
     engine.shutdown();
@@ -468,7 +515,7 @@ fn accept_queue_overflow_sheds_with_503() {
 
     // These connect while the pool and backlog are saturated; at
     // least the tail of them must observe the shed.
-    let mut statuses = Vec::new();
+    let mut responses = Vec::new();
     let mut clients = Vec::new();
     for _ in 0..4 {
         let mut c = Client::connect(addr);
@@ -476,8 +523,9 @@ fn accept_queue_overflow_sheds_with_503() {
         clients.push(c);
     }
     for mut c in clients {
-        statuses.push(c.read_response().status);
+        responses.push(c.read_response());
     }
+    let statuses: Vec<u16> = responses.iter().map(|r| r.status).collect();
     assert!(
         statuses.iter().any(|&s| s == 503),
         "expected at least one accept-queue shed in {statuses:?}"
@@ -486,6 +534,14 @@ fn accept_queue_overflow_sheds_with_503() {
         statuses.iter().all(|&s| s == 200 || s == 503),
         "flood responses must be served or cleanly shed: {statuses:?}"
     );
+    // Every shed tells the client when to come back.
+    for r in responses.iter().filter(|r| r.status == 503) {
+        assert!(
+            r.retry_after.is_some(),
+            "503 accept shed must carry Retry-After: {}",
+            r.body
+        );
+    }
     let _ = loris.read_response(); // 408 once the stall times out
 
     server.shutdown();

@@ -1,0 +1,368 @@
+//! Multi-tenant registry integration tests over the real HTTP
+//! transport: `TcpStream` clients against
+//! [`cct::serve::HttpServer::bind_registry`].
+//!
+//! Covers the `/v1/{model}` wire surface end to end (load, infer,
+//! per-model stats, retire, validation failures, 405/Allow), and the
+//! headline hot-swap guarantee: a client flood riding keep-alive
+//! connections while the model is repeatedly hot-swapped sees *only*
+//! clean outcomes — every response is a 200 (bit-stable within its
+//! plan generation) or an honest backpressure shed with `Retry-After`.
+//! Nothing is dropped, nothing is misrouted, and the steady-state
+//! allocation counters stay at zero through every swap.
+
+use cct::serve::registry::{LoadOptions, ModelRegistry, RegistryConfig};
+use cct::serve::{HttpConfig, HttpServer, ServeConfig};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// `tiny` preset geometry: 3×16×16 input, 10 classes.
+const SAMPLE_LEN: usize = 768;
+
+fn registry(admission_capacity: usize) -> Arc<ModelRegistry> {
+    Arc::new(
+        ModelRegistry::new(RegistryConfig {
+            serve: ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait_us: 200,
+                ..Default::default()
+            },
+            admission_capacity,
+        })
+        .expect("registry config"),
+    )
+}
+
+fn bind(reg: &Arc<ModelRegistry>) -> HttpServer {
+    HttpServer::bind_registry(Arc::clone(reg), "127.0.0.1:0", HttpConfig::default())
+        .expect("bind ephemeral port")
+}
+
+/// One parsed HTTP response, headers included.
+struct Resp {
+    status: u16,
+    body: String,
+    retry_after: Option<u64>,
+    allow: Option<String>,
+}
+
+/// A keep-alive client that can issue arbitrary-method requests over
+/// one connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .expect("client read timeout");
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().expect("clone stream");
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    /// Issue `method path` with optional extra header lines (each
+    /// `\r\n`-terminated) and a body, on the keep-alive connection.
+    fn request(&mut self, method: &str, path: &str, extra: &str, body: &[u8]) -> Resp {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: cct\r\n{extra}Content-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes()).expect("write head");
+        self.writer.write_all(body).expect("write body");
+        self.writer.flush().expect("flush request");
+        self.read_response()
+    }
+
+    fn get(&mut self, path: &str) -> Resp {
+        self.request("GET", path, "", b"")
+    }
+
+    fn read_response(&mut self) -> Resp {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("unparseable status line: {line:?}"));
+        let mut len = 0usize;
+        let mut retry_after = None;
+        let mut allow = None;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("header line");
+            let t = h.trim_end();
+            if t.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = t.split_once(':') {
+                let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
+                if k == "content-length" {
+                    len = v.parse().expect("response content-length");
+                } else if k == "retry-after" {
+                    retry_after = Some(v.parse().expect("retry-after seconds"));
+                } else if k == "allow" {
+                    allow = Some(v.to_string());
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("response body");
+        Resp { status, body: String::from_utf8_lossy(&body).into_owned(), retry_after, allow }
+    }
+}
+
+fn json_sample(value: f32) -> Vec<u8> {
+    let mut parts = Vec::with_capacity(SAMPLE_LEN);
+    for _ in 0..SAMPLE_LEN {
+        parts.push(format!("{value}"));
+    }
+    format!("[{}]", parts.join(",")).into_bytes()
+}
+
+/// Pull the integer after `"<key>":` out of a JSON body.
+fn extract_u64(body: &str, key: &str) -> Option<u64> {
+    body.split(&format!("\"{key}\":"))
+        .nth(1)
+        .and_then(|s| s.split([',', '}']).next())
+        .and_then(|s| s.trim().parse().ok())
+}
+
+/// Pull the `"logits":[...]` array text out of a reply body.
+fn extract_logits(body: &str) -> Option<String> {
+    body.split("\"logits\":[")
+        .nth(1)
+        .and_then(|s| s.split(']').next())
+        .map(|s| s.to_string())
+}
+
+#[test]
+fn registry_http_api_round_trip() {
+    let reg = registry(16);
+    let server = bind(&reg);
+    let addr = server.local_addr();
+    let mut c = Client::connect(addr);
+
+    // Empty registry: the legacy route has nowhere to go.
+    let r = c.request("POST", "/infer", "", &json_sample(0.5));
+    assert_eq!(r.status, 404, "body: {}", r.body);
+    assert!(r.body.contains("no models loaded"), "{}", r.body);
+
+    // Load two tenants over the wire: same architecture, different
+    // seeds (= different weights), beta at twice the fair share.
+    let r = c.request("PUT", "/v1/alpha", "X-Seed: 42\r\n", b"preset:tiny");
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert!(r.body.contains("\"model\":\"alpha\""), "{}", r.body);
+    assert!(r.body.contains("\"swapped\":false"), "{}", r.body);
+    assert_eq!(extract_u64(&r.body, "generation"), Some(1), "{}", r.body);
+    assert_eq!(extract_u64(&r.body, "sample_len"), Some(SAMPLE_LEN as u64), "{}", r.body);
+
+    let r = c.request("PUT", "/v1/beta", "X-Seed: 7\r\nX-Weight: 2\r\n", b"preset:tiny");
+    assert_eq!(r.status, 200, "body: {}", r.body);
+
+    // Model-scoped inference tags each reply with its model and plan
+    // generation; different seeds must answer differently.
+    let ra = c.request("POST", "/v1/alpha/infer", "", &json_sample(0.5));
+    assert_eq!(ra.status, 200, "body: {}", ra.body);
+    assert!(ra.body.starts_with("{\"model\":\"alpha\",\"generation\":1,"), "{}", ra.body);
+    let rb = c.request("POST", "/v1/beta/infer", "", &json_sample(0.5));
+    assert_eq!(rb.status, 200, "body: {}", rb.body);
+    assert_ne!(
+        extract_logits(&ra.body),
+        extract_logits(&rb.body),
+        "different seeds must serve different weights"
+    );
+
+    // The legacy un-scoped route serves the default (first) model.
+    let r = c.request("POST", "/infer", "", &json_sample(0.5));
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert!(r.body.contains("\"model\":\"alpha\""), "{}", r.body);
+    assert_eq!(extract_logits(&r.body), extract_logits(&ra.body), "default must route to alpha");
+
+    // Per-model stats and the aggregate registry stats payload.
+    let r = c.get("/v1/alpha");
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert!(r.body.contains("\"completed\":2"), "{}", r.body);
+    assert!(r.body.contains("\"weight\":1"), "{}", r.body);
+    let r = c.get("/stats");
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert!(r.body.contains("\"models\":{"), "{}", r.body);
+    assert!(r.body.contains("\"alpha\":{"), "{}", r.body);
+    assert!(r.body.contains("\"beta\":{"), "{}", r.body);
+    assert!(r.body.contains("\"admission\":{\"capacity\":16}"), "{}", r.body);
+    assert!(r.body.contains("\"http\":{"), "{}", r.body);
+
+    // Wrong methods name what is allowed.
+    let r = c.request("GET", "/v1/alpha/infer", "", b"");
+    assert_eq!(r.status, 405, "body: {}", r.body);
+    assert_eq!(r.allow.as_deref(), Some("POST"));
+    let r = c.request("POST", "/v1/alpha", "", b"preset:tiny");
+    assert_eq!(r.status, 405, "body: {}", r.body);
+    assert_eq!(r.allow.as_deref(), Some("PUT, DELETE, GET"));
+
+    // Validation failures are clean 4xx, never a wedged registry.
+    let r = c.request("PUT", "/v1/gamma", "", b"preset:nope");
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    let r = c.request("PUT", "/v1/gamma", "X-Seed: pi\r\n", b"preset:tiny");
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    let r = c.request("PUT", "/v1/bad.name", "", b"preset:tiny");
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    let r = c.request("PUT", "/v1/gamma", "", b"");
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    let r = c.request("POST", "/v1/ghost/infer", "", &json_sample(0.5));
+    assert_eq!(r.status, 404, "body: {}", r.body);
+
+    // Retire beta: drained, reported, and gone from routing.
+    let r = c.request("DELETE", "/v1/beta", "", b"");
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert!(r.body.contains("\"retired\":true"), "{}", r.body);
+    assert!(r.body.contains("\"completed\":1"), "{}", r.body);
+    let r = c.request("POST", "/v1/beta/infer", "", &json_sample(0.5));
+    assert_eq!(r.status, 404, "body: {}", r.body);
+    let r = c.get("/v1/beta");
+    assert_eq!(r.status, 404, "body: {}", r.body);
+    let r = c.request("DELETE", "/v1/beta", "", b"");
+    assert_eq!(r.status, 404, "body: {}", r.body);
+
+    server.shutdown();
+    let reports = reg.shutdown();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].0, "alpha");
+    assert_eq!(reports[0].1.completed, 2);
+    assert!(reports[0].1.worker_steady_allocs.iter().all(|&a| a == 0));
+}
+
+#[test]
+fn hot_swap_under_load_drops_nothing() {
+    // The tentpole guarantee: flood one model from keep-alive clients
+    // while hot-swapping it repeatedly. Every response must be a 200
+    // or an honest shed (429 + Retry-After) — never a drop, a 5xx, or
+    // logits from the wrong plan generation.
+    let reg = registry(32);
+    let server = bind(&reg);
+    let addr = server.local_addr();
+
+    let seed0 = 100u64;
+    reg.load(
+        "m",
+        &cct::serve::registry::preset_net("tiny").unwrap(),
+        LoadOptions { weight: 1, seed: Some(seed0) },
+    )
+    .expect("initial load");
+
+    const FLOODERS: usize = 3;
+    const SWAPS: usize = 4;
+    let flood_for = Duration::from_secs(2);
+
+    let results: Vec<(u16, Option<u64>, Option<u64>, Option<String>)> =
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for _ in 0..FLOODERS {
+                handles.push(scope.spawn(move || {
+                    let mut c = Client::connect(addr);
+                    let body = json_sample(0.5);
+                    let mut out = Vec::new();
+                    let t0 = Instant::now();
+                    while t0.elapsed() < flood_for {
+                        let r = c.request("POST", "/v1/m/infer", "", &body);
+                        out.push((
+                            r.status,
+                            extract_u64(&r.body, "generation"),
+                            r.retry_after,
+                            extract_logits(&r.body),
+                        ));
+                    }
+                    out
+                }));
+            }
+
+            // Hot-swap the model under the flood: each PUT builds,
+            // plans, and warms a new engine off the request path, then
+            // flips it in and drains the old generation.
+            let mut swapper = Client::connect(addr);
+            for i in 0..SWAPS {
+                std::thread::sleep(Duration::from_millis(150));
+                let seed = seed0 + 1 + i as u64;
+                let r = swapper.request(
+                    "PUT",
+                    "/v1/m",
+                    &format!("X-Seed: {seed}\r\n"),
+                    b"preset:tiny",
+                );
+                assert_eq!(r.status, 200, "swap {i} failed: {}", r.body);
+                assert!(r.body.contains("\"swapped\":true"), "{}", r.body);
+                assert_eq!(extract_u64(&r.body, "generation"), Some(2 + i as u64));
+            }
+
+            handles.into_iter().flat_map(|h| h.join().expect("flooder")).collect()
+        });
+
+    assert!(!results.is_empty());
+    let oks = results.iter().filter(|r| r.0 == 200).count();
+    assert!(oks > 0, "flood produced no successful replies");
+    for (status, _, retry_after, _) in &results {
+        assert!(
+            *status == 200 || *status == 429,
+            "hot swap must never drop or 5xx a request, got {status}"
+        );
+        if *status == 429 {
+            assert!(retry_after.is_some(), "shed responses must carry Retry-After");
+        }
+    }
+
+    // Within one plan generation, identical inputs produce identical
+    // logits; across generations (different seeds) they differ. Either
+    // violation would mean a request was misrouted mid-swap.
+    let mut per_gen: HashMap<u64, String> = HashMap::new();
+    for (status, generation, _, logits) in &results {
+        if *status != 200 {
+            continue;
+        }
+        let generation = generation.expect("200 replies carry a generation");
+        let logits = logits.clone().expect("200 replies carry logits");
+        match per_gen.get(&generation) {
+            Some(seen) => assert_eq!(
+                seen, &logits,
+                "generation {generation} answered with two different logit vectors"
+            ),
+            None => {
+                per_gen.insert(generation, logits);
+            }
+        }
+    }
+    assert!(
+        per_gen.len() >= 2,
+        "flood observed only generations {:?} across {SWAPS} swaps",
+        per_gen.keys().collect::<Vec<_>>()
+    );
+    let distinct: std::collections::HashSet<&String> = per_gen.values().collect();
+    assert_eq!(
+        distinct.len(),
+        per_gen.len(),
+        "two generations with different seeds answered identically (misroute)"
+    );
+
+    server.shutdown();
+    let reports = reg.shutdown();
+    assert_eq!(reports.len(), 1);
+    let (name, report) = &reports[0];
+    assert_eq!(name, "m");
+    assert_eq!(report.swaps, SWAPS as u64);
+    assert_eq!(report.completed, oks as u64, "every 200 is a completion, nothing dropped");
+    // Every generation's workers ran allocation-free after warmup —
+    // (SWAPS + 1) generations × 2 workers each.
+    assert_eq!(report.worker_steady_allocs.len(), (SWAPS + 1) * 2);
+    assert!(
+        report.worker_steady_allocs.iter().all(|&a| a == 0),
+        "steady-state allocations during hot swaps: {:?}",
+        report.worker_steady_allocs
+    );
+}
