@@ -1,0 +1,617 @@
+//! Hogwild!-style asynchronous data-parallel training with a bounded
+//! staleness gate (the CcT README's named next step: DimmWitted's
+//! statistical- vs hardware-efficiency trade-off).
+//!
+//! Where [`CnnCoordinator`](super::CnnCoordinator) is a barrier
+//! machine — spawn p workers, join, merge, broadcast, repeat —
+//! [`AsyncCoordinator`] is a scheduler over **long-lived** replica
+//! workers: each worker thread lives for the whole `run`, loops
+//! rounds against its own planned workspace, and shares the PR 5
+//! persistent GEMM pool for its inner parallelism. What the workers do
+//! per round depends on the staleness bound `S`:
+//!
+//! * **`S = 0`** — the synchronous semantics, kept bit-identical to
+//!   [`CnnCoordinator::step`](super::CnnCoordinator::step): workers
+//!   compute their shard's gradients in lockstep rounds and the
+//!   scheduler thread replays the exact
+//!   `merge_update_broadcast` the
+//!   sync coordinator runs (same weighted mean, same solver state,
+//!   same thread budget, same dropout seeds). The only thing that
+//!   changes is thread lifetime: no per-round spawn/join.
+//! * **`S > 0`** — asynchronous SGD against a
+//!   [`SharedSgd`](crate::solver::SharedSgd) sharded-lock master
+//!   model: each round a worker snapshots the master into its
+//!   replica, computes gradients on its shard, and folds them back
+//!   with the momentum update — no barrier, no merge. A worker about
+//!   to start round `r` is admitted only once `r − min(clock) ≤ S`
+//!   over all workers' completed-round clocks (the stale-synchronous-
+//!   parallel gate); the lag actually observed at every admission is
+//!   recorded in [`AsyncReport::max_observed_lag`], so tests can
+//!   assert the bound was honored rather than trust the gate.
+//!
+//! Zero steady-state allocation carries over from the sync path:
+//! workspaces, the shared model, and the momentum history are all
+//! planned before the workers spawn; after the first round nothing on
+//! the round loop materializes a tensor or grows a packing arena
+//! ([`AsyncReport::steady_tensor_allocs`] /
+//! [`AsyncReport::steady_arena_growth`] report the measured counters).
+
+use super::{merge_update_broadcast, partitioner, scheduler};
+use crate::ensure;
+use crate::layers::ExecCtx;
+use crate::net::config::{build_net, NetConfig};
+use crate::net::{Net, Workspace};
+use crate::rng::Pcg64;
+use crate::solver::{SgdSolver, SharedSgd, SolverConfig};
+use crate::tensor::{alloc_stats, Tensor};
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Configuration for [`AsyncCoordinator`].
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncConfig {
+    /// Replica workers (like the sync coordinator's `workers`; capped
+    /// by the batch size at run time — extras stay idle).
+    pub workers: usize,
+    /// Total GEMM thread budget, divided evenly among workers.
+    pub total_threads: usize,
+    /// Staleness bound `S`: the most rounds any worker may run ahead
+    /// of the slowest. `0` = synchronous merge, bit-identical to
+    /// [`CnnCoordinator`](super::CnnCoordinator).
+    pub staleness: usize,
+    /// Replica initialization seed (identical across replicas).
+    pub seed: u64,
+}
+
+/// What one [`AsyncCoordinator::run`] did, with the instrumentation
+/// the determinism/stress tests assert on.
+#[derive(Clone, Debug)]
+pub struct AsyncReport {
+    /// Rounds executed (per worker).
+    pub rounds: usize,
+    /// Workers that actually ran (`min(workers, batch)`).
+    pub active_workers: usize,
+    /// The staleness bound the run was governed by.
+    pub staleness: usize,
+    /// Per-round loss, shard-size-weighted across workers. At `S = 0`
+    /// this is exactly the sync coordinator's per-step loss.
+    pub round_loss: Vec<f64>,
+    /// Last entry of `round_loss`.
+    pub final_loss: f64,
+    /// Highest `r − min(clock)` observed at any worker admission;
+    /// `≤ staleness` by construction, recorded so tests can verify it.
+    pub max_observed_lag: usize,
+    /// Solver applications: merges at `S = 0`, per-worker
+    /// [`SharedSgd`] applications at `S > 0`.
+    pub updates: usize,
+    /// Wall-clock of the whole run.
+    pub wall_s: f64,
+    /// Tensors materialized on worker/scheduler threads after round 0
+    /// (must be 0: the hot loop runs entirely in planned buffers).
+    pub steady_tensor_allocs: u64,
+    /// Packing-arena growth events after round 0 (must be 0).
+    pub steady_arena_growth: u64,
+}
+
+/// One replica's mutable state. A worker holds its slot's lock for
+/// the compute phase of each round; at `S = 0` the scheduler locks
+/// every slot between rounds for the merge — phase-exclusive access
+/// enforced by the mutex, no raw pointers.
+struct Slot {
+    net: Net,
+    ws: Option<Workspace>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// `S = 0` round barrier: workers arrive after computing round `r`'s
+/// gradients; the scheduler merges once all arrived, then publishes
+/// version `r + 1` to release round `r + 1`.
+struct RoundBarrier {
+    /// (arrived-this-round, published version)
+    state: Mutex<(usize, usize)>,
+    arrived: Condvar,
+    version: Condvar,
+}
+
+impl RoundBarrier {
+    fn new() -> Self {
+        RoundBarrier { state: Mutex::new((0, 0)), arrived: Condvar::new(), version: Condvar::new() }
+    }
+
+    /// Worker side: block until round `r` is open.
+    fn wait_round(&self, r: usize) {
+        let mut g = lock(&self.state);
+        while g.1 != r {
+            g = self.version.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Worker side: gradients for the current round are ready.
+    fn arrive(&self) {
+        let mut g = lock(&self.state);
+        g.0 += 1;
+        self.arrived.notify_all();
+    }
+
+    /// Scheduler side: block until all `active` workers arrived, then
+    /// reset the arrival count (no worker can re-arrive before the
+    /// next version is published).
+    fn wait_all(&self, active: usize) {
+        let mut g = lock(&self.state);
+        while g.0 < active {
+            g = self.arrived.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+        g.0 = 0;
+    }
+
+    /// Scheduler side: open the next round.
+    fn publish(&self) {
+        let mut g = lock(&self.state);
+        g.1 += 1;
+        self.version.notify_all();
+    }
+}
+
+/// `S > 0` stale-synchronous-parallel clock board: `clock[w]` counts
+/// worker w's completed rounds.
+struct ClockBoard {
+    clocks: Mutex<Vec<usize>>,
+    bumped: Condvar,
+}
+
+impl ClockBoard {
+    fn new(workers: usize) -> Self {
+        ClockBoard { clocks: Mutex::new(vec![0; workers]), bumped: Condvar::new() }
+    }
+
+    /// Admit the caller to round `r` once `r − min(clock) ≤ s`;
+    /// returns the lag observed at admission.
+    fn admit(&self, r: usize, s: usize) -> usize {
+        let mut g = lock(&self.clocks);
+        loop {
+            let min = *g.iter().min().expect("at least one worker");
+            debug_assert!(r >= min, "a worker admitted past its own clock");
+            if r - min <= s {
+                return r - min;
+            }
+            g = self.bumped.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Record that worker `w` finished a round.
+    fn bump(&self, w: usize) {
+        let mut g = lock(&self.clocks);
+        g[w] += 1;
+        self.bumped.notify_all();
+    }
+}
+
+/// Per-worker results handed back when the long-lived threads join.
+struct WorkerOut {
+    /// Per-round loss on this worker's shard.
+    losses: Vec<f64>,
+    steady_tensor_allocs: u64,
+    steady_arena_growth: u64,
+}
+
+/// Asynchronous data-parallel training coordinator (see the module
+/// docs for the execution model). Replicas and workspaces persist
+/// across [`AsyncCoordinator::run`] calls — plan once, train many.
+pub struct AsyncCoordinator {
+    replicas: Vec<Net>,
+    /// One planned workspace per active worker (parallel to the
+    /// `split_batch` ranges; re-planned when the batch size changes).
+    workspaces: Vec<Workspace>,
+    planned_batch: usize,
+    /// Drives the `S = 0` merge path — the same solver state the sync
+    /// coordinator would hold.
+    solver: SgdSolver,
+    /// The `S > 0` sharded-lock master model (built on first use).
+    shared: Option<SharedSgd>,
+    solver_cfg: SolverConfig,
+    staleness: usize,
+    threads_per_worker: usize,
+    /// Rounds completed across `run` calls — continues the data
+    /// window, dropout seed, and LR schedules.
+    rounds_done: usize,
+}
+
+impl AsyncCoordinator {
+    /// Build `cfg.workers` identically-seeded replicas (same init
+    /// idiom as the sync coordinator, so an `S = 0` run and a
+    /// [`CnnCoordinator`](super::CnnCoordinator) built from the same
+    /// `(cfg, seed)` start from identical weights).
+    pub fn new(net_cfg: &NetConfig, cfg: AsyncConfig, solver_cfg: SolverConfig) -> crate::Result<Self> {
+        ensure!(cfg.workers >= 1, "need at least one worker");
+        let tpw = scheduler::threads_per_worker(cfg.total_threads, cfg.workers);
+        if tpw > 1 {
+            crate::gemm::pool::prewarm();
+        }
+        let mut replicas = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            // identical seed ⇒ identical init across replicas
+            let mut rng = Pcg64::new(cfg.seed);
+            replicas.push(build_net(net_cfg, &mut rng)?);
+        }
+        Ok(AsyncCoordinator {
+            replicas,
+            workspaces: Vec::new(),
+            planned_batch: 0,
+            solver: SgdSolver::new(solver_cfg),
+            shared: None,
+            solver_cfg,
+            staleness: cfg.staleness,
+            threads_per_worker: tpw,
+            rounds_done: 0,
+        })
+    }
+
+    /// Number of worker replicas.
+    pub fn workers(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The staleness bound this coordinator runs under.
+    pub fn staleness(&self) -> usize {
+        self.staleness
+    }
+
+    /// Rounds completed so far (across `run` calls).
+    pub fn rounds_done(&self) -> usize {
+        self.rounds_done
+    }
+
+    /// The coordinated net (replica 0) for evaluation / inspection.
+    /// After a `run` every replica holds the same final weights (the
+    /// last merge broadcast at `S = 0`; a master-model snapshot at
+    /// `S > 0`).
+    pub fn net(&mut self) -> &mut Net {
+        &mut self.replicas[0]
+    }
+
+    /// Train for `rounds` rounds over `(data, labels)`: round `r`
+    /// reads the corpus window
+    /// `[round_start(n, batch, r), … + batch)` (see
+    /// [`partitioner::round_start`]) and splits it across the workers
+    /// exactly like the sync coordinator splits a step's batch.
+    /// Allocation-free on the round loop after round 0.
+    pub fn run(&mut self, data: &Tensor, labels: &[usize], batch: usize, rounds: usize) -> AsyncReport {
+        let n = data.shape().dim0();
+        assert_eq!(labels.len(), n, "labels must parallel the corpus");
+        assert!(rounds >= 1, "need at least one round");
+        assert!(batch >= 1 && batch <= n, "batch {batch} must be in 1..={n}");
+        let p = self.replicas.len();
+        let ranges = partitioner::split_batch(batch, p);
+        let active = ranges.len();
+        let tpw = self.threads_per_worker;
+        let staleness = self.staleness;
+        let base = self.rounds_done;
+        let sizes: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+        // Mirrors the sync coordinator: the merge may use the whole
+        // budget because every worker is blocked at the barrier.
+        let update_threads = tpw * p;
+
+        // Plan once per batch size: one workspace per active worker,
+        // plus the shared master model for S > 0 — all allocation
+        // happens here, before any worker thread exists.
+        if self.planned_batch != batch || self.workspaces.len() != active {
+            self.workspaces =
+                self.replicas.iter().zip(ranges.iter()).map(|(net, r)| net.plan((r.end - r.start).max(1))).collect();
+            self.planned_batch = batch;
+        }
+        if staleness > 0 && self.shared.is_none() {
+            self.shared = Some(SharedSgd::new(&self.replicas[0], self.solver_cfg));
+        }
+        let updates_before = if staleness > 0 { self.shared.as_ref().map_or(0, |s| s.updates()) } else { 0 };
+
+        // Wrap every replica in a slot mutex (idle replicas past
+        // `active` have no workspace and no worker; at S = 0 they
+        // still join the merge broadcast, exactly like the sync
+        // coordinator's idle replicas).
+        let mut workspaces: Vec<Option<Workspace>> =
+            std::mem::take(&mut self.workspaces).into_iter().map(Some).collect();
+        workspaces.resize_with(p, || None);
+        let slots: Vec<Mutex<Slot>> = std::mem::take(&mut self.replicas)
+            .into_iter()
+            .zip(workspaces)
+            .map(|(net, ws)| Mutex::new(Slot { net, ws }))
+            .collect();
+
+        let barrier = RoundBarrier::new();
+        let clocks = ClockBoard::new(active);
+        let max_lag = AtomicUsize::new(0);
+        let shared = self.shared.as_ref();
+        let solver = &mut self.solver;
+
+        let t0 = Instant::now();
+        let (outs, sched_tensor, sched_arena) = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(active);
+            for (w, range) in ranges.iter().enumerate() {
+                let slots = &slots;
+                let barrier = &barrier;
+                let clocks = &clocks;
+                let max_lag = &max_lag;
+                let range = range.clone();
+                handles.push(scope.spawn(move || {
+                    worker_loop(WorkerCtx {
+                        w,
+                        range,
+                        slot: &slots[w],
+                        barrier,
+                        clocks,
+                        max_lag,
+                        shared,
+                        data,
+                        labels,
+                        n,
+                        batch,
+                        base,
+                        rounds,
+                        tpw,
+                        staleness,
+                    })
+                }));
+            }
+
+            // Scheduler side. At S = 0 this thread replays the sync
+            // merge between rounds; at S > 0 the workers are free-
+            // running and there is nothing to schedule — the clock
+            // board *is* the scheduler.
+            let mut sched_tensor = 0u64;
+            let mut sched_arena = 0u64;
+            if staleness == 0 {
+                let mut snap = None;
+                for _ in 0..rounds {
+                    barrier.wait_all(active);
+                    let mut guards: Vec<MutexGuard<'_, Slot>> = slots.iter().map(lock).collect();
+                    let mut nets: Vec<&mut Net> = guards.iter_mut().map(|g| &mut g.net).collect();
+                    merge_update_broadcast(&mut nets, &sizes, solver, update_threads);
+                    drop(guards);
+                    barrier.publish();
+                    // The first merge plans the momentum history;
+                    // everything after must be allocation-free.
+                    if snap.is_none() {
+                        snap = Some((alloc_stats::tensor_allocs(), crate::gemm::pool::arena_allocs()));
+                    }
+                }
+                if let Some((t, a)) = snap {
+                    sched_tensor = alloc_stats::allocs_since(t);
+                    sched_arena = crate::gemm::pool::arena_allocs() - a;
+                }
+            }
+
+            let outs: Vec<WorkerOut> = handles.into_iter().map(|h| h.join().expect("async worker panicked")).collect();
+            (outs, sched_tensor, sched_arena)
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // Move replicas and workspaces back into the coordinator.
+        for slot in slots {
+            let s = slot.into_inner().unwrap_or_else(|p| p.into_inner());
+            self.replicas.push(s.net);
+            if let Some(ws) = s.ws {
+                self.workspaces.push(ws);
+            }
+        }
+        // At S > 0 the master model holds the result: publish it into
+        // every replica so `net()` (and any later S = 0 run) sees it.
+        if staleness > 0 {
+            if let Some(sh) = &self.shared {
+                for net in &mut self.replicas {
+                    sh.snapshot_into(net);
+                }
+            }
+        }
+        self.rounds_done += rounds;
+
+        // Shard-size-weighted per-round loss, summed in worker order —
+        // at S = 0 this reproduces the sync step loss bit-for-bit.
+        let total = sizes.iter().sum::<usize>() as f64;
+        let round_loss: Vec<f64> = (0..rounds)
+            .map(|r| outs.iter().zip(sizes.iter()).map(|(o, &sz)| o.losses[r] * sz as f64).sum::<f64>() / total)
+            .collect();
+        let updates = if staleness == 0 {
+            rounds
+        } else {
+            self.shared.as_ref().map_or(0, |s| s.updates()) - updates_before
+        };
+        AsyncReport {
+            rounds,
+            active_workers: active,
+            staleness,
+            final_loss: *round_loss.last().expect("rounds >= 1"),
+            round_loss,
+            max_observed_lag: max_lag.load(Ordering::Relaxed),
+            updates,
+            wall_s,
+            steady_tensor_allocs: outs.iter().map(|o| o.steady_tensor_allocs).sum::<u64>() + sched_tensor,
+            steady_arena_growth: outs.iter().map(|o| o.steady_arena_growth).sum::<u64>() + sched_arena,
+        }
+    }
+}
+
+/// Everything one long-lived worker thread needs, bundled so the spawn
+/// site stays readable.
+struct WorkerCtx<'a> {
+    w: usize,
+    range: Range<usize>,
+    slot: &'a Mutex<Slot>,
+    barrier: &'a RoundBarrier,
+    clocks: &'a ClockBoard,
+    max_lag: &'a AtomicUsize,
+    shared: Option<&'a SharedSgd>,
+    data: &'a Tensor,
+    labels: &'a [usize],
+    n: usize,
+    batch: usize,
+    base: usize,
+    rounds: usize,
+    tpw: usize,
+    staleness: usize,
+}
+
+/// The long-lived worker body: `rounds` iterations of
+/// (gate → compute → hand off), allocation-free after round 0.
+fn worker_loop(ctx: WorkerCtx<'_>) -> WorkerOut {
+    // This thread submits GEMMs for the whole run: warm its packing
+    // arena now so round 0 doesn't grow it mid-GEMM.
+    crate::gemm::pool::warm_local();
+    // This worker's share of each round's batch: its gradient enters
+    // the master scaled by shard/batch, so one async round moves the
+    // model about as much as one synchronous merged step.
+    let lr_scale = (ctx.range.end - ctx.range.start) as f32 / ctx.batch as f32;
+    let mut losses = Vec::with_capacity(ctx.rounds);
+    let mut snap = None;
+    for r in 0..ctx.rounds {
+        let abs = ctx.base + r;
+        if ctx.staleness == 0 {
+            ctx.barrier.wait_round(r);
+        } else {
+            let lag = ctx.clocks.admit(r, ctx.staleness);
+            ctx.max_lag.fetch_max(lag, Ordering::Relaxed);
+        }
+        {
+            let mut slot = lock(ctx.slot);
+            let Slot { net, ws } = &mut *slot;
+            let ws = ws.as_mut().expect("active worker has a planned workspace");
+            if let Some(shared) = ctx.shared {
+                // Epoch-snapshotted read: one master copy per round.
+                shared.snapshot_into(net);
+            }
+            let start = partitioner::round_start(ctx.n, ctx.batch, abs);
+            let lo = start + ctx.range.start;
+            let hi = start + ctx.range.end;
+            ws.load_input_range(ctx.data, lo);
+            // Same per-round dropout/seed derivation as the sync
+            // coordinator's per-step one — S = 0 parity depends on it.
+            let ectx = ExecCtx { threads: ctx.tpw, seed: 0x5eed ^ abs as u64, ..Default::default() };
+            let loss = net.forward_backward_in(ws, &ctx.labels[lo..hi], &ectx);
+            losses.push(loss);
+            if let Some(shared) = ctx.shared {
+                shared.apply_round(net, abs, lr_scale);
+            }
+        }
+        if ctx.staleness == 0 {
+            ctx.barrier.arrive();
+        } else {
+            ctx.clocks.bump(ctx.w);
+        }
+        if snap.is_none() {
+            snap = Some((alloc_stats::tensor_allocs(), crate::gemm::pool::arena_allocs()));
+        }
+    }
+    let (t, a) = snap.expect("rounds >= 1");
+    WorkerOut {
+        losses,
+        steady_tensor_allocs: alloc_stats::allocs_since(t),
+        steady_arena_growth: crate::gemm::pool::arena_allocs() - a,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CnnCoordinator;
+    use crate::net::config::parse_net;
+
+    const TINY: &str = r#"
+name: tiny
+input: 1 8 8
+conv { name: c1 out: 4 kernel: 3 pad: 1 std: 0.1 }
+relu { name: r1 }
+fc   { name: f1 out: 3 std: 0.1 }
+"#;
+
+    fn corpus(n: usize, seed: u64) -> (Tensor, Vec<usize>) {
+        let mut rng = Pcg64::new(seed);
+        let x = Tensor::randn((n, 1, 8, 8), 0.0, 1.0, &mut rng);
+        let labels = (0..n).map(|i| i % 3).collect();
+        (x, labels)
+    }
+
+    fn solver_cfg() -> SolverConfig {
+        SolverConfig { base_lr: 0.05, momentum: 0.9, weight_decay: 0.0, ..Default::default() }
+    }
+
+    fn async_coord(workers: usize, staleness: usize) -> AsyncCoordinator {
+        let cfg = parse_net(TINY).unwrap();
+        let acfg = AsyncConfig { workers, total_threads: workers, staleness, seed: 7 };
+        AsyncCoordinator::new(&cfg, acfg, solver_cfg()).unwrap()
+    }
+
+    #[test]
+    fn s0_matches_sync_coordinator_bitwise() {
+        let (x, labels) = corpus(12, 3);
+        let batch = 6;
+        let rounds = 4;
+        let mut sync = CnnCoordinator::new(&parse_net(TINY).unwrap(), 2, 2, solver_cfg(), 7).unwrap();
+        let mut sync_losses = Vec::new();
+        for r in 0..rounds {
+            let s = partitioner::round_start(12, batch, r);
+            sync_losses.push(sync.step(&x.slice_samples(s, s + batch), &labels[s..s + batch]));
+        }
+        let mut ac = async_coord(2, 0);
+        let rep = ac.run(&x, &labels, batch, rounds);
+        for (r, (a, b)) in rep.round_loss.iter().zip(sync_losses.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "round {r} loss diverged: {a} vs {b}");
+        }
+        for (pa, pb) in ac.net().params().iter().zip(sync.net().params().iter()) {
+            assert_eq!(pa.data.as_slice(), pb.data.as_slice(), "weights diverged");
+        }
+        assert_eq!(rep.max_observed_lag, 0);
+        assert_eq!(rep.updates, rounds);
+    }
+
+    #[test]
+    fn s_positive_honors_staleness_and_counts_updates() {
+        let (x, labels) = corpus(16, 5);
+        let mut ac = async_coord(4, 2);
+        let rep = ac.run(&x, &labels, 8, 6);
+        assert_eq!(rep.active_workers, 4);
+        assert!(rep.max_observed_lag <= 2, "lag {} > bound 2", rep.max_observed_lag);
+        assert_eq!(rep.updates, 4 * 6);
+        assert!(rep.final_loss.is_finite());
+        // all replicas end on the master snapshot
+        let w0: Vec<f32> = ac.replicas[0].params()[0].data.as_slice().to_vec();
+        for rep in &ac.replicas[1..] {
+            assert_eq!(rep.params()[0].data.as_slice(), &w0[..]);
+        }
+    }
+
+    #[test]
+    fn runs_compose_like_one_long_run_at_s0() {
+        let (x, labels) = corpus(12, 9);
+        let mut one = async_coord(2, 0);
+        let rep_one = one.run(&x, &labels, 6, 6);
+        let mut two = async_coord(2, 0);
+        let a = two.run(&x, &labels, 6, 2);
+        let b = two.run(&x, &labels, 6, 4);
+        let stitched: Vec<f64> = a.round_loss.iter().chain(b.round_loss.iter()).copied().collect();
+        for (r, (x1, x2)) in rep_one.round_loss.iter().zip(stitched.iter()).enumerate() {
+            assert_eq!(x1.to_bits(), x2.to_bits(), "round {r} diverged across run splits");
+        }
+        assert_eq!(two.rounds_done(), 6);
+    }
+
+    #[test]
+    fn workers_capped_by_batch() {
+        // 8 workers, batch 4: only 4 shards exist; idle replicas must
+        // still receive broadcasts (S = 0) / snapshots (S > 0).
+        let (x, labels) = corpus(8, 11);
+        for staleness in [0, 1] {
+            let mut ac = async_coord(8, staleness);
+            let rep = ac.run(&x, &labels, 4, 3);
+            assert_eq!(rep.active_workers, 4);
+            assert!(rep.final_loss.is_finite());
+            let w0: Vec<f32> = ac.replicas[0].params()[0].data.as_slice().to_vec();
+            for r in 1..8 {
+                assert_eq!(ac.replicas[r].params()[0].data.as_slice(), &w0[..], "replica {r} drifted (S={staleness})");
+            }
+        }
+    }
+}

@@ -15,12 +15,19 @@
 //!   aggregation, parameter broadcast; the model is shared, only data
 //!   is partitioned — exactly the paper's "data parallelism within a
 //!   layer (the model is shared)".
+//! * [`hogwild`] — the asynchronous counterpart: long-lived replica
+//!   workers stepping independently against a
+//!   [`SharedSgd`](crate::solver::SharedSgd) model under a bounded
+//!   staleness gate (`S=0` reproduces the synchronous merge
+//!   bit-for-bit via the shared `merge_update_broadcast` merge).
 
+pub mod hogwild;
 pub mod partitioner;
 pub mod scheduler;
 
+pub use hogwild::{AsyncConfig, AsyncCoordinator, AsyncReport};
 pub use partitioner::{conv_partitioned, BatchStrategy, PartitionStats};
-pub use scheduler::{flops_proportional_split, simulate_hybrid_conv, HybridPlan};
+pub use scheduler::{flops_proportional_split, simulate_hybrid_conv, threads_per_worker, HybridPlan};
 
 use crate::ensure;
 use crate::layers::ExecCtx;
@@ -29,6 +36,56 @@ use crate::net::{Net, Workspace};
 use crate::rng::Pcg64;
 use crate::solver::{SgdSolver, SolverConfig};
 use crate::tensor::Tensor;
+
+/// The synchronous merge, shared bit-for-bit by [`CnnCoordinator::step`]
+/// and the async coordinator's `S = 0` mode: average the replica
+/// gradients into replica 0 weighted by partition size, apply one
+/// solver update there, then broadcast the fresh parameters to every
+/// other replica (clearing their gradients).
+///
+/// `sizes[i]` is replica i's partition size this round; replicas past
+/// `sizes.len()` (idle when workers > batch) contribute weight 0 but
+/// still receive the broadcast so all replicas stay synchronized.
+/// Extracting this into one function is what makes the `S = 0` parity
+/// guarantee structural rather than aspirational: both coordinators
+/// run these exact flops in this exact order.
+pub(crate) fn merge_update_broadcast(
+    replicas: &mut [&mut Net],
+    sizes: &[usize],
+    solver: &mut SgdSolver,
+    update_threads: usize,
+) {
+    let total: usize = sizes.iter().sum();
+    {
+        let (head, tail) = replicas.split_at_mut(1);
+        let mut p0 = head[0].params_mut();
+        // scale replica 0 by its own weight
+        let w0 = sizes[0] as f32 / total as f32;
+        for blob in p0.iter_mut() {
+            blob.grad.scale(w0);
+        }
+        for (r, rest) in tail.iter_mut().enumerate() {
+            let w = sizes.get(r + 1).copied().unwrap_or(0) as f32 / total as f32;
+            if w == 0.0 {
+                continue;
+            }
+            for (dst, src) in p0.iter_mut().zip(rest.params_mut()) {
+                dst.grad.axpy(w, &src.grad);
+            }
+        }
+    }
+    solver.step_with_threads(replicas[0], update_threads);
+    {
+        let (head, tail) = replicas.split_at_mut(1);
+        let p0 = head[0].params_mut();
+        for rest in tail.iter_mut() {
+            for (src, dst) in p0.iter().zip(rest.params_mut()) {
+                dst.data.as_mut_slice().copy_from_slice(src.data.as_slice());
+                dst.zero_grad();
+            }
+        }
+    }
+}
 
 /// Data-parallel CNN training coordinator: `workers` net replicas with
 /// identical initialization; each step partitions the batch, runs
@@ -66,7 +123,7 @@ impl CnnCoordinator {
         // Workers that will run threaded GEMMs share the process-wide
         // compute pool; start it (and its per-worker packing arenas)
         // at construction time rather than mid-first-step.
-        if (total_threads / workers).max(1) > 1 {
+        if scheduler::threads_per_worker(total_threads, workers) > 1 {
             crate::gemm::pool::prewarm();
         }
         let mut replicas = Vec::with_capacity(workers);
@@ -80,7 +137,7 @@ impl CnnCoordinator {
             workspaces: Vec::new(),
             planned_batch: 0,
             solver: SgdSolver::new(solver_cfg),
-            threads_per_worker: (total_threads / workers).max(1),
+            threads_per_worker: scheduler::threads_per_worker(total_threads, workers),
             steps: 0,
         })
     }
@@ -150,47 +207,17 @@ impl CnnCoordinator {
             handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
         });
 
-        // Aggregate gradients: replica 0's grad ← mean over replicas
-        // weighted by partition size (each replica's grad is already a
-        // per-sample mean over its own partition).
+        // Aggregate gradients (weighted mean into replica 0), apply
+        // the solver update there, broadcast parameters — the exact
+        // merge the async coordinator replays at S=0. The update may
+        // use the whole configured thread budget: the partition
+        // workers have joined by this point, so the pool is idle.
         let sizes: Vec<usize> = losses.iter().map(|&(_, n)| n).collect();
         let total: usize = sizes.iter().sum();
         assert_eq!(total, b);
-        {
-            let (head, tail) = self.replicas.split_at_mut(1);
-            let mut p0 = head[0].params_mut();
-            // scale replica 0 by its own weight
-            let w0 = sizes[0] as f32 / total as f32;
-            for blob in p0.iter_mut() {
-                blob.grad.scale(w0);
-            }
-            for (r, rest) in tail.iter_mut().enumerate() {
-                let w = sizes.get(r + 1).copied().unwrap_or(0) as f32 / total as f32;
-                if w == 0.0 {
-                    continue;
-                }
-                for (dst, src) in p0.iter_mut().zip(rest.params_mut()) {
-                    dst.grad.axpy(w, &src.grad);
-                }
-            }
-        }
-
-        // Update replica 0, then broadcast parameters to the others
-        // (in-place copy — no tensor churn). The update may use the
-        // whole configured thread budget: the partition workers have
-        // joined by this point, so the pool is idle.
         let update_threads = self.threads_per_worker * self.replicas.len();
-        self.solver.step_with_threads(&mut self.replicas[0], update_threads);
-        {
-            let (head, tail) = self.replicas.split_at_mut(1);
-            let p0 = head[0].params_mut();
-            for rest in tail.iter_mut() {
-                for (src, dst) in p0.iter().zip(rest.params_mut()) {
-                    dst.data.as_mut_slice().copy_from_slice(src.data.as_slice());
-                    dst.zero_grad();
-                }
-            }
-        }
+        let mut refs: Vec<&mut Net> = self.replicas.iter_mut().collect();
+        merge_update_broadcast(&mut refs, &sizes, &mut self.solver, update_threads);
 
         self.steps += 1;
         losses.iter().map(|&(l, n)| l * n as f64).sum::<f64>() / total as f64

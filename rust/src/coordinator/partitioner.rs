@@ -51,6 +51,18 @@ pub fn split_batch(b: usize, p: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Deterministic round → corpus-window mapping shared by the sync and
+/// async training paths: round `r` reads samples
+/// `[round_start(..), round_start(..) + batch)`. Only full windows are
+/// used (a trailing partial window is skipped), so every round sees
+/// exactly `batch` samples and the sync/async loss curves are
+/// comparable sample-for-sample.
+pub fn round_start(total: usize, batch: usize, round: usize) -> usize {
+    assert!(batch >= 1 && batch <= total, "batch {batch} must be in 1..={total}");
+    let windows = total / batch;
+    (round % windows) * batch
+}
+
 /// Execution statistics from a partitioned convolution.
 #[derive(Clone, Copy, Debug)]
 pub struct PartitionStats {
@@ -215,6 +227,23 @@ mod tests {
             // balanced ±1
             let lens: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
             assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn round_start_cycles_over_full_windows() {
+        // 10 samples, batch 3 → windows at 0, 3, 6; the trailing
+        // partial window (sample 9) is skipped and round 3 wraps.
+        assert_eq!(round_start(10, 3, 0), 0);
+        assert_eq!(round_start(10, 3, 1), 3);
+        assert_eq!(round_start(10, 3, 2), 6);
+        assert_eq!(round_start(10, 3, 3), 0);
+        // batch == total: every round reads the whole corpus.
+        assert_eq!(round_start(8, 8, 5), 0);
+        // windows never run past the corpus
+        for r in 0..50 {
+            let s = round_start(13, 4, r);
+            assert!(s + 4 <= 13, "round {r} window {s}..{} overruns", s + 4);
         }
     }
 

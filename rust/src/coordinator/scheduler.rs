@@ -11,6 +11,16 @@
 use crate::device::DeviceSpec;
 use crate::lowering::{ConvShape, LoweringType};
 
+/// Divide a GEMM thread budget evenly among data-parallel workers
+/// (paper §2.2: 16/p threads per partition so all cores stay busy).
+/// Every worker gets at least one thread; the sync and async
+/// coordinators share this so their per-replica GEMM plans — and
+/// therefore their floating-point results — agree exactly.
+pub fn threads_per_worker(total_threads: usize, workers: usize) -> usize {
+    assert!(workers >= 1, "need at least one worker");
+    (total_threads / workers).max(1)
+}
+
 /// Assign each of `b` samples to a device proportionally to its peak
 /// FLOPS. Largest-remainder rounding; every sample is assigned.
 pub fn flops_proportional_split(b: usize, devices: &[DeviceSpec]) -> Vec<usize> {
@@ -126,6 +136,14 @@ mod tests {
 
     fn conv1(b: usize) -> ConvShape {
         ConvShape { n: 227, k: 11, d: 3, o: 96, b, pad: 0, stride: 4 }
+    }
+
+    #[test]
+    fn threads_per_worker_floor_is_one() {
+        assert_eq!(threads_per_worker(16, 4), 4);
+        assert_eq!(threads_per_worker(7, 2), 3); // integer division
+        assert_eq!(threads_per_worker(2, 8), 1); // oversubscribed: floor 1
+        assert_eq!(threads_per_worker(0, 3), 1);
     }
 
     #[test]

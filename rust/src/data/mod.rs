@@ -145,6 +145,19 @@ impl BlobCorpus {
     pub fn eval_batch(&self, n: usize) -> (Tensor, Vec<usize>) {
         (self.images.slice_samples(0, n), self.labels[..n].to_vec())
     }
+
+    /// The whole corpus in generation order, zero-copy — the async
+    /// coordinator's workers read sample windows straight out of this
+    /// tensor (`Workspace::load_input_range`) instead of materializing
+    /// per-batch copies.
+    pub fn samples(&self) -> &Tensor {
+        &self.images
+    }
+
+    /// Labels parallel to [`BlobCorpus::samples`].
+    pub fn labels(&self) -> &[usize] {
+        &self.labels
+    }
 }
 
 #[cfg(test)]

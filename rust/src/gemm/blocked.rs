@@ -228,6 +228,12 @@ pub(crate) unsafe fn compute_block(
     arena: &mut PackArena,
 ) {
     let GemmDims { m, n, k } = dims;
+    // Degenerate tiles (replica workers sharding a tiny batch can ask
+    // for zero rows/cols) are a no-op — and must quick-return before
+    // the rectangle assert, whose `mc_total - 1` would underflow.
+    if mc_total == 0 || nc_total == 0 {
+        return;
+    }
     debug_assert!(nc_total <= bs.nc, "tile wider than the packed-B arena");
     debug_assert!((ic0 + mc_total - 1) * ldc + jc0 + nc_total <= c_len);
     arena.ensure(bs, nc_total);
@@ -608,5 +614,39 @@ mod tests {
         for (i, (x, y)) in whole.iter().zip(tiled.iter()).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "idx {i}: {x} vs {y}");
         }
+    }
+
+    /// Zero-row / zero-column tiles are no-ops: C is untouched and the
+    /// bounds assert must not underflow (async replica workers shard
+    /// tiny batches into degenerate tiles).
+    #[test]
+    fn zero_size_tiles_are_noops() {
+        let dims = GemmDims { m: 8, n: 8, k: 8 };
+        let mut rng = Pcg64::new(99);
+        let mut a = vec![0f32; dims.m * dims.k];
+        let mut b = vec![0f32; dims.k * dims.n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let bs = BlockSizes::default();
+        let mut c = vec![0.75f32; dims.m * dims.n];
+        let before = c.clone();
+        let c_len = c.len();
+        let c_ptr = c.as_mut_ptr();
+        let mut arena = PackArena::new();
+        // (mc_total, nc_total) = (0, n), (m, 0), (0, 0) — including a
+        // zero tile anchored at the very end of C, where the old
+        // rectangle assert underflowed in debug builds.
+        for &(ic0, mc, jc0, nc) in
+            &[(0usize, 0usize, 0usize, 8usize), (0, 8, 0, 0), (0, 0, 0, 0), (8, 0, 8, 0)]
+        {
+            // SAFETY: empty rectangles touch nothing.
+            unsafe {
+                compute_block(
+                    Trans::N, Trans::N, dims, 1.0, &a, &b, c_ptr, c_len, dims.n, ic0, mc, jc0,
+                    nc, bs, &mut arena,
+                );
+            }
+        }
+        assert_eq!(c, before, "zero-size tile wrote to C");
     }
 }

@@ -12,7 +12,12 @@
 //!   micro-panels of A,
 //! * the N dimension into `NC` panels packed into `NR`-column
 //!   micro-panels of B,
-//! * an `MR × NR` register-tiled microkernel does the FLOPs.
+//! * an `MR × NR` register-tiled microkernel does the FLOPs — an
+//!   explicit AVX-512 (`std::arch`) kernel where the CPU supports it
+//!   (`is_x86_feature_detected!("avx512f")`), else a portable
+//!   auto-vectorized fallback. Dispatch is stable for the life of the
+//!   process, so results are deterministic on a given machine — the
+//!   property every bit-parity test in this crate leans on.
 //!
 //! Threading runs on a **persistent worker pool** ([`pool`], PR 5):
 //! GEMM work is decomposed into 2-D MC×NC macro-tiles claimed off a

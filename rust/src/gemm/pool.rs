@@ -820,6 +820,65 @@ mod tests {
         }
     }
 
+    /// Empty and single-element ranges — the degenerate shard sizes
+    /// async replica workers produce when workers ≈ batch — must not
+    /// hang, touch the pool, or run anything twice.
+    #[test]
+    fn parallel_for_empty_and_single_ranges() {
+        let pool = GemmPool::new(2);
+        // ntasks = 0: no calls, returns immediately even on a live pool
+        let hits = AtomicUsize::new(0);
+        pool.parallel_for(4, 0, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0, "empty range ran a task");
+        // ntasks = 1: exactly one inline call (no pool round-trip to hang on)
+        pool.parallel_for(4, 1, &|t| {
+            assert_eq!(t, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "single task must run once");
+        // threads = 0 budget is clamped to serial, not a hang/div-by-zero
+        pool.parallel_for(0, 3, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        // parallel_chunks on empty and single-element totals
+        let mut buf = vec![7f32; 4];
+        parallel_chunks(4, 0, 4, SendMutF32(buf.as_mut_ptr()), &|_, _, _| {
+            panic!("empty total yielded a chunk")
+        });
+        let seen = AtomicUsize::new(0);
+        parallel_chunks(4, 1, 4, SendMutF32(buf.as_mut_ptr()), &|lo, hi, chunk| {
+            assert_eq!((lo, hi), (0, 1));
+            assert_eq!(chunk.len(), 4);
+            seen.fetch_add(1, Ordering::Relaxed);
+            chunk.fill(3.0);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 1);
+        assert!(buf.iter().all(|&x| x == 3.0));
+    }
+
+    /// Single-row / single-column GEMMs through the pool (m == 1 comes
+    /// up when a replica worker's shard is one sample) stay correct.
+    #[test]
+    fn pool_gemm_single_row_and_column() {
+        let pool = GemmPool::new(2);
+        for &(m, n, k) in &[(1usize, 37usize, 24usize), (37, 1, 24), (1, 1, 24)] {
+            let dims = GemmDims { m, n, k };
+            let mut rng = Pcg64::new(601 + (m * 100 + n) as u64);
+            let a = rand_vec(m * k, &mut rng);
+            let b = rand_vec(k * n, &mut rng);
+            let mut c0 = vec![0f32; m * n];
+            let mut c1 = vec![0f32; m * n];
+            gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c0);
+            pool.gemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c1, 4);
+            for (i, (x, y)) in c0.iter().zip(c1.iter()).enumerate() {
+                assert!((x - y).abs() < 1e-4, "({m},{n},{k}) idx {i}: {x} vs {y}");
+            }
+        }
+    }
+
     /// The `threads` budget binds: a job submitted with budget 2 on a
     /// big pool never has more than 2 concurrent executors.
     #[test]

@@ -5,6 +5,7 @@
 //! ```text
 //! cct info                                  # system + device profiles
 //! cct train   [--net NAME] [--steps N] [--batch B] [--workers P] [--lr F]
+//!             [--async] [--staleness S]          # Hogwild-style async solver
 //! cct xla-train [--steps N] [--artifacts DIR]   # AOT train_step via PJRT
 //! cct optimize [--batch B]                  # lowering optimizer report
 //! cct gemm    [--size N] [--iters K]        # GEMM calibration
@@ -20,7 +21,7 @@
 use cct::bail;
 use cct::bench_util::{bench, gflops, Table};
 use cct::error::{Context, Result};
-use cct::coordinator::CnnCoordinator;
+use cct::coordinator::{AsyncConfig, AsyncCoordinator, CnnCoordinator};
 use cct::data::BlobCorpus;
 use cct::device::profiles;
 use cct::gemm::{sgemm, GemmDims, Trans};
@@ -36,7 +37,9 @@ use cct::tensor::Tensor;
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 /// Repeatable flags (`--model a=tiny --model b=cifar`) accumulate in
 /// command-line order; single-valued lookups take the last occurrence
-/// (the usual later-flag-overrides convention).
+/// (the usual later-flag-overrides convention). A flag followed by
+/// another `--flag` (or by nothing) is a bare boolean and stores
+/// `"true"` — `cct train --async --staleness 2` parses as expected.
 struct Args {
     flags: std::collections::HashMap<String, Vec<String>>,
 }
@@ -50,9 +53,16 @@ impl Args {
             let key = argv[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got '{}'", argv[i]))?;
-            let val = argv.get(i + 1).with_context(|| format!("missing value for --{key}"))?;
-            flags.entry(key.to_string()).or_default().push(val.clone());
-            i += 2;
+            match argv.get(i + 1) {
+                Some(val) if !val.starts_with("--") => {
+                    flags.entry(key.to_string()).or_default().push(val.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.entry(key.to_string()).or_default().push("true".to_string());
+                    i += 1;
+                }
+            }
         }
         Ok(Args { flags })
     }
@@ -109,7 +119,9 @@ fn print_help() {
          USAGE: cct <command> [--flag value]...\n\n\
          COMMANDS:\n\
          \x20 info        system info + paper device profiles\n\
-         \x20 train       native-engine training (--net cifar|lenet|caffenet64, --steps, --batch, --workers, --lr, --seed)\n\
+         \x20 train       native-engine training (--net cifar|lenet|caffenet64, --steps, --batch, --workers, --lr, --seed;\n\
+         \x20             --async [--staleness S]: Hogwild-style data-parallel solver — long-lived\n\
+         \x20             worker replicas, S=0 reproduces the synchronous merge bit-for-bit)\n\
          \x20 xla-train   train via the AOT PJRT artifact (--steps, --artifacts)\n\
          \x20 optimize    lowering-optimizer report for CaffeNet layers (--batch)\n\
          \x20 gemm        GEMM calibration (--size, --iters, --threads)\n\
@@ -166,6 +178,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let workers: usize = args.get("workers", 1)?;
     let lr: f32 = args.get("lr", 0.01)?;
     let seed: u64 = args.get("seed", 42)?;
+    let async_mode: bool = args.get("async", false)?;
+    let staleness: usize = args.get("staleness", 0)?;
 
     let (cfg_text, side, channels, classes) = match net_name.as_str() {
         "cifar" => (presets::CIFAR10_QUICK, 32, 3, 10),
@@ -175,10 +189,39 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let cfg = cct::net::parse_net(cfg_text)?;
     let solver = SolverConfig { base_lr: lr, ..Default::default() };
-    let mut coord = CnnCoordinator::new(&cfg, workers, workers, solver, seed)?;
-
-    println!("training {} with {} worker(s), batch {batch}, lr {lr}", cfg.name, workers);
     let mut corpus = BlobCorpus::generate(channels, side, classes, (batch * 8).max(256), 0.25, seed);
+
+    if async_mode {
+        let acfg = AsyncConfig { workers, total_threads: workers, staleness, seed };
+        let mut coord = AsyncCoordinator::new(&cfg, acfg, solver)?;
+        println!(
+            "async training {} with {} worker(s), staleness {staleness}, batch {batch}, lr {lr}",
+            cfg.name, workers
+        );
+        let report = coord.run(corpus.samples(), corpus.labels(), batch, steps);
+        for (r, loss) in report.round_loss.iter().enumerate() {
+            if r % 10 == 0 || r + 1 == report.rounds {
+                println!("round {r:>5}  loss {loss:.4}");
+            }
+        }
+        let ips = (report.rounds * batch) as f64 / report.wall_s.max(1e-9);
+        println!(
+            "{} rounds in {:.2}s ({ips:.1} img/s)  active {}  updates {}  max lag {} (bound {})",
+            report.rounds, report.wall_s, report.active_workers, report.updates, report.max_observed_lag, staleness
+        );
+        println!(
+            "steady-state allocs after warm-up: {} tensor, {} arena",
+            report.steady_tensor_allocs, report.steady_arena_growth
+        );
+        let (ex, ey) = corpus.eval_batch(batch.min(corpus.len()));
+        let ctx = cct::layers::ExecCtx { phase: cct::layers::Phase::Test, ..Default::default() };
+        coord.net().forward_loss(&ex, &ey, &ctx);
+        println!("final train-split accuracy: {:.1}%", coord.net().last_accuracy() * 100.0);
+        return Ok(());
+    }
+
+    let mut coord = CnnCoordinator::new(&cfg, workers, workers, solver, seed)?;
+    println!("training {} with {} worker(s), batch {batch}, lr {lr}", cfg.name, workers);
     let t0 = std::time::Instant::now();
     for step in 0..steps {
         let (x, labels) = corpus.next_batch(batch);

@@ -520,6 +520,13 @@ impl Net {
         self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
     }
 
+    /// All parameter blobs, read-only — snapshot/parity plumbing (the
+    /// async coordinator compares and copies replica weights without
+    /// needing `&mut`). Same blob order as [`Net::params_mut`].
+    pub fn params(&self) -> Vec<&ParamBlob> {
+        self.layers.iter().flat_map(|l| l.params()).collect()
+    }
+
     /// Reset every parameter's gradient accumulator to zero.
     pub fn zero_grads(&mut self) {
         for p in self.params_mut() {

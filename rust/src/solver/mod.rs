@@ -17,6 +17,10 @@ use crate::gemm::pool;
 use crate::layers::ExecCtx;
 use crate::net::{Net, Workspace};
 use crate::tensor::Tensor;
+use std::cell::UnsafeCell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Blob element count above which the momentum update runs striped
 /// over the compute pool.
@@ -188,6 +192,215 @@ impl SgdSolver {
     }
 }
 
+/// Elements per sharded-lock chunk of the shared model. Small enough
+/// that two replicas touching the same multi-million-element fc blob
+/// rarely collide on a lock; large enough that lock traffic is noise
+/// next to the `μ·v + lr·(g + λ·w)` arithmetic it guards.
+const SHARD_CHUNK: usize = 1 << 14;
+
+/// A flat `f32` buffer that hands out `&mut` sub-slices across threads.
+///
+/// Soundness contract: every access to index range `r` goes through
+/// [`SharedSgd`]'s sharded locks — the caller must hold every chunk
+/// lock covering `r` (callers only ever pass ranges inside a single
+/// chunk). Storing `UnsafeCell<f32>` cells (rather than a
+/// `UnsafeCell<Vec<f32>>`) keeps each hand-out confined to its own
+/// elements: no `&mut` to the whole buffer is ever created, so
+/// disjoint chunks may be borrowed concurrently.
+struct SharedBuf {
+    cells: Box<[UnsafeCell<f32>]>,
+}
+
+// SAFETY: cross-thread access is mediated by SharedSgd's chunk locks;
+// disjoint element ranges are independent.
+unsafe impl Sync for SharedBuf {}
+
+impl SharedBuf {
+    fn from_vec(v: Vec<f32>) -> Self {
+        SharedBuf { cells: v.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Mutable view of `r`.
+    ///
+    /// # Safety
+    /// The caller holds the sharded lock covering every index in `r`,
+    /// and `r` lies within a single [`SHARD_CHUNK`]-aligned chunk (so
+    /// one lock suffices).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, r: Range<usize>) -> &mut [f32] {
+        debug_assert!(r.start <= r.end && r.end <= self.cells.len(), "range {r:?} out of bounds");
+        debug_assert!(
+            r.is_empty() || r.start / SHARD_CHUNK == (r.end - 1) / SHARD_CHUNK,
+            "range {r:?} spans chunks — one lock does not cover it"
+        );
+        if r.is_empty() {
+            return &mut [];
+        }
+        std::slice::from_raw_parts_mut(self.cells[r.start].get(), r.end - r.start)
+    }
+}
+
+/// Walk `[start, start+len)` in [`SHARD_CHUNK`]-aligned pieces,
+/// yielding `(lock_index, global_subrange)` — the locking grid is
+/// global (chunk `i` guards flat indices `[i·CHUNK, (i+1)·CHUNK)`),
+/// so a blob that straddles a chunk boundary takes each lock in turn.
+fn for_each_chunk(start: usize, len: usize, mut f: impl FnMut(usize, Range<usize>)) {
+    let end = start + len;
+    let mut lo = start;
+    while lo < end {
+        let hi = end.min((lo / SHARD_CHUNK + 1) * SHARD_CHUNK);
+        f(lo / SHARD_CHUNK, lo..hi);
+        lo = hi;
+    }
+}
+
+/// Per-blob placement inside the flat shared model.
+struct SharedBlob {
+    start: usize,
+    len: usize,
+    lr_mult: f32,
+    decay_mult: f32,
+}
+
+/// Sharded-lock shared model for Hogwild!-style asynchronous SGD.
+///
+/// Holds the master weights `w` and momentum `v` as flat buffers
+/// guarded by a grid of chunk locks (`SHARD_CHUNK` elements each).
+/// Replica workers interact with it twice per round:
+///
+/// * [`SharedSgd::snapshot_into`] — copy the master weights into a
+///   replica (the "epoch-snapshotted read": one consistent-enough view
+///   per round, chunk by chunk, never blocking the whole model);
+/// * [`SharedSgd::apply_round`] — fold the replica's freshly computed
+///   gradients into the master with Caffe's momentum update
+///   `v ← μ·v + lr·(g + λ·w); w ← w − v`, again chunk by chunk.
+///
+/// Because locks are per-chunk, two workers updating a large blob
+/// proceed mostly in parallel; a snapshot taken concurrently with an
+/// update may mix chunk versions — the Hogwild!/DimmWitted trade:
+/// hardware efficiency now, statistical efficiency bounded by the
+/// coordinator's staleness gate. Per-element arithmetic is identical
+/// to [`SgdSolver`]'s serial update, so a single worker applying
+/// rounds serially is bit-identical to `SgdSolver::step`.
+///
+/// Allocation-free after construction: snapshots and updates write
+/// into existing replica tensors and the flat buffers.
+pub struct SharedSgd {
+    cfg: SolverConfig,
+    w: SharedBuf,
+    v: SharedBuf,
+    blobs: Vec<SharedBlob>,
+    locks: Vec<Mutex<()>>,
+    updates: AtomicUsize,
+}
+
+impl SharedSgd {
+    /// Build the shared model from a net's current parameters (the
+    /// identically-seeded replica init), with momentum zeroed.
+    pub fn new(net: &Net, cfg: SolverConfig) -> Self {
+        let params = net.params();
+        let mut blobs = Vec::with_capacity(params.len());
+        let mut flat = Vec::new();
+        for p in &params {
+            let s = p.data.as_slice();
+            blobs.push(SharedBlob { start: flat.len(), len: s.len(), lr_mult: p.lr_mult, decay_mult: p.decay_mult });
+            flat.extend_from_slice(s);
+        }
+        let total = flat.len();
+        let nlocks = total.div_ceil(SHARD_CHUNK).max(1);
+        SharedSgd {
+            cfg,
+            w: SharedBuf::from_vec(flat),
+            v: SharedBuf::from_vec(vec![0.0; total]),
+            blobs,
+            locks: (0..nlocks).map(|_| Mutex::new(())).collect(),
+            updates: AtomicUsize::new(0),
+        }
+    }
+
+    /// Total shared parameters.
+    pub fn len(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Whether the model has no parameters.
+    pub fn is_empty(&self) -> bool {
+        self.w.len() == 0
+    }
+
+    /// Gradient applications so far (across all workers).
+    pub fn updates(&self) -> usize {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    fn chunk_guard(&self, lock: usize) -> std::sync::MutexGuard<'_, ()> {
+        self.locks[lock].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Copy the master weights into `net`'s parameter blobs, chunk by
+    /// chunk under the sharded locks. The copy is per-chunk atomic
+    /// (never torn mid-element-range) but may mix chunk versions if an
+    /// update runs concurrently — the sanctioned snapshot semantics.
+    pub fn snapshot_into(&self, net: &mut Net) {
+        let mut params = net.params_mut();
+        debug_assert_eq!(params.len(), self.blobs.len(), "net does not match the shared model");
+        for (meta, p) in self.blobs.iter().zip(params.iter_mut()) {
+            let dst = p.data.as_mut_slice();
+            debug_assert_eq!(dst.len(), meta.len, "blob shape drifted from the shared model");
+            for_each_chunk(meta.start, meta.len, |lock, sub| {
+                let _g = self.chunk_guard(lock);
+                // SAFETY: holding the chunk lock covering `sub`, which
+                // lies inside a single chunk by construction.
+                let src = unsafe { self.w.slice_mut(sub.clone()) };
+                dst[sub.start - meta.start..sub.end - meta.start].copy_from_slice(src);
+            });
+        }
+    }
+
+    /// Apply the gradients accumulated in `net` to the master model
+    /// with the momentum update, using the learning rate for `round`
+    /// scaled by `lr_scale` (per-blob `lr_mult`/`decay_mult`
+    /// respected), then clear the replica's gradients. Chunk-locked:
+    /// concurrent workers serialize only where their chunks collide.
+    ///
+    /// `lr_scale` is the worker's share of the round — its shard size
+    /// over the batch. With p workers each applying `lr/p`-scaled
+    /// updates, one async round moves the model by about as much as
+    /// one synchronous merged step, for any worker count; without it
+    /// the effective learning rate would grow with p and diverge
+    /// where the sync run converges. A single full-batch worker
+    /// passes `1.0` and is then bit-identical to [`SgdSolver::step`].
+    pub fn apply_round(&self, net: &mut Net, round: usize, lr_scale: f32) {
+        let lr = self.cfg.lr_at(round) * lr_scale;
+        let momentum = self.cfg.momentum;
+        let decay = self.cfg.weight_decay;
+        let mut params = net.params_mut();
+        debug_assert_eq!(params.len(), self.blobs.len(), "net does not match the shared model");
+        for (meta, p) in self.blobs.iter().zip(params.iter_mut()) {
+            let local_lr = lr * p.lr_mult;
+            let local_decay = decay * p.decay_mult;
+            let g = p.grad.as_slice();
+            debug_assert_eq!(g.len(), meta.len, "grad shape drifted from the shared model");
+            for_each_chunk(meta.start, meta.len, |lock, sub| {
+                let _guard = self.chunk_guard(lock);
+                // SAFETY: holding the chunk lock covering `sub`.
+                let (w, v) = unsafe { (self.w.slice_mut(sub.clone()), self.v.slice_mut(sub.clone())) };
+                let goff = sub.start - meta.start;
+                for i in 0..w.len() {
+                    v[i] = momentum * v[i] + local_lr * (g[goff + i] + local_decay * w[i]);
+                    w[i] -= v[i];
+                }
+            });
+        }
+        net.zero_grads();
+        self.updates.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,6 +518,126 @@ mod tests {
         }
         let wa = net_a.params_mut()[0].data.as_slice().to_vec();
         assert_eq!(net_b.params_mut()[0].data.as_slice(), &wa[..]);
+    }
+
+    #[test]
+    fn chunk_walk_covers_range_with_global_grid() {
+        // A blob straddling chunk boundaries takes each lock in turn;
+        // the pieces tile the blob exactly and each stays in one chunk.
+        let start = SHARD_CHUNK - 5;
+        let len = 2 * SHARD_CHUNK + 9;
+        let mut expect = start;
+        let mut locks = Vec::new();
+        for_each_chunk(start, len, |lock, sub| {
+            assert_eq!(sub.start, expect);
+            assert!(sub.end > sub.start);
+            assert_eq!(sub.start / SHARD_CHUNK, (sub.end - 1) / SHARD_CHUNK);
+            assert_eq!(lock, sub.start / SHARD_CHUNK);
+            locks.push(lock);
+            expect = sub.end;
+        });
+        assert_eq!(expect, start + len);
+        assert_eq!(locks, vec![0, 1, 2, 3]);
+        // empty range: no pieces
+        for_each_chunk(42, 0, |_, _| panic!("empty range yielded a chunk"));
+    }
+
+    /// A net with one fc blob big enough to straddle several shard
+    /// chunks, so the chunked update path is actually exercised.
+    fn wide_net(rng: &mut Pcg64) -> Net {
+        let layers: Vec<Box<dyn Layer>> = vec![Box::new(FcLayer::new("fc", 4 * SHARD_CHUNK / 16, 16, 0.05, rng))];
+        Net::new("wide", (1, 4, SHARD_CHUNK / 16), layers, vec![false])
+    }
+
+    #[test]
+    fn shared_sgd_serial_rounds_match_sgd_solver_bitwise() {
+        // One worker applying rounds through the sharded-lock path is
+        // the same arithmetic in the same order as SgdSolver::step —
+        // chunking must not perturb a single bit.
+        let cfg = SolverConfig { base_lr: 0.05, momentum: 0.9, weight_decay: 1e-3, policy: LrPolicy::Fixed };
+        let mut rng_a = Pcg64::new(21);
+        let mut net_a = wide_net(&mut rng_a);
+        let mut rng_b = Pcg64::new(21);
+        let mut net_b = wide_net(&mut rng_b);
+        let shared = SharedSgd::new(&net_b, cfg);
+        let mut solver = SgdSolver::new(cfg);
+        let mut grng = Pcg64::new(77);
+        for round in 0..3 {
+            let total: usize = net_a.params().iter().map(|p| p.grad.numel()).sum();
+            let mut fake_grad = vec![0.0f32; total];
+            grng.fill_gaussian(&mut fake_grad, 0.0, 0.1);
+            for net in [&mut net_a, &mut net_b] {
+                let mut off = 0;
+                for p in net.params_mut() {
+                    let n = p.grad.numel();
+                    p.grad.as_mut_slice().copy_from_slice(&fake_grad[off..off + n]);
+                    off += n;
+                }
+            }
+            solver.step(&mut net_a);
+            shared.snapshot_into(&mut net_b); // refresh params; grads untouched
+            shared.apply_round(&mut net_b, round, 1.0);
+        }
+        assert_eq!(shared.updates(), 3);
+        let mut net_c = wide_net(&mut Pcg64::new(21));
+        shared.snapshot_into(&mut net_c);
+        for (pa, pc) in net_a.params().iter().zip(net_c.params().iter()) {
+            let a = pa.data.as_slice();
+            let c = pc.data.as_slice();
+            for i in 0..a.len() {
+                assert_eq!(a[i].to_bits(), c[i].to_bits(), "weight {i} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_sgd_snapshot_restores_master_weights() {
+        let mut rng = Pcg64::new(30);
+        let mut net = linear_net(&mut rng);
+        let cfg = SolverConfig::default();
+        let shared = SharedSgd::new(&net, cfg);
+        let before: Vec<f32> = net.params()[0].data.as_slice().to_vec();
+        // scribble over the replica, then snapshot the master back
+        for p in net.params_mut() {
+            p.data.as_mut_slice().fill(9.0);
+        }
+        shared.snapshot_into(&mut net);
+        assert_eq!(net.params()[0].data.as_slice(), &before[..]);
+        assert_eq!(shared.updates(), 0);
+    }
+
+    #[test]
+    fn shared_sgd_concurrent_updates_all_land() {
+        // Hammer the shared model from several threads; every update
+        // must land (counter) and the weights must stay finite. With a
+        // zero gradient and pure decay, the result is order-independent
+        // and exactly checkable: w · (1 − lr·λ)^rounds.
+        let cfg = SolverConfig { base_lr: 0.1, momentum: 0.0, weight_decay: 0.5, policy: LrPolicy::Fixed };
+        let mut rng = Pcg64::new(31);
+        let net = wide_net(&mut rng);
+        let w0: Vec<f32> = net.params()[0].data.as_slice().to_vec();
+        let shared = SharedSgd::new(&net, cfg);
+        let workers = 4;
+        let rounds = 8;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let shared = &shared;
+                scope.spawn(move || {
+                    let mut replica = wide_net(&mut Pcg64::new(31));
+                    for r in 0..rounds {
+                        shared.snapshot_into(&mut replica);
+                        shared.apply_round(&mut replica, r, 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(shared.updates(), workers * rounds);
+        let mut out = wide_net(&mut Pcg64::new(31));
+        shared.snapshot_into(&mut out);
+        let factor = (1.0 - 0.1 * 0.5_f32).powi((workers * rounds) as i32);
+        for (a, b) in out.params()[0].data.as_slice().iter().zip(w0.iter()) {
+            assert!((a - b * factor).abs() <= 1e-3 * b.abs().max(1.0), "decay drifted: {a} vs {}", b * factor);
+        }
     }
 
     #[test]
