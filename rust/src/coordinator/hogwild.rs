@@ -228,7 +228,15 @@ impl AsyncCoordinator {
     /// `(cfg, seed)` start from identical weights).
     pub fn new(net_cfg: &NetConfig, cfg: AsyncConfig, solver_cfg: SolverConfig) -> crate::Result<Self> {
         ensure!(cfg.workers >= 1, "need at least one worker");
-        let tpw = scheduler::threads_per_worker(cfg.total_threads, cfg.workers);
+        let budget = scheduler::thread_budget(cfg.total_threads, cfg.workers);
+        if budget.oversubscribed() {
+            eprintln!(
+                "cct: async coordinator oversubscribed: {} workers x {} thread(s) over a \
+                 budget of {} ({:.1}x)",
+                cfg.workers, budget.per_worker, cfg.total_threads, budget.oversubscription
+            );
+        }
+        let tpw = budget.per_worker;
         if tpw > 1 {
             crate::gemm::pool::prewarm();
         }
@@ -254,6 +262,13 @@ impl AsyncCoordinator {
     /// Number of worker replicas.
     pub fn workers(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// GEMM/lowering threads each replica worker runs with — shared
+    /// arithmetic with the sync coordinator (see
+    /// [`scheduler::thread_budget`]), so both agree per replica.
+    pub fn threads_per_worker(&self) -> usize {
+        self.threads_per_worker
     }
 
     /// The staleness bound this coordinator runs under.

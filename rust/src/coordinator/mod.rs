@@ -26,8 +26,11 @@ pub mod partitioner;
 pub mod scheduler;
 
 pub use hogwild::{AsyncConfig, AsyncCoordinator, AsyncReport};
-pub use partitioner::{conv_partitioned, BatchStrategy, PartitionStats};
-pub use scheduler::{flops_proportional_split, simulate_hybrid_conv, threads_per_worker, HybridPlan};
+pub use partitioner::{conv_hybrid, conv_partitioned, BatchStrategy, HybridExecStats, PartitionStats};
+pub use scheduler::{
+    flops_proportional_split, simulate_hybrid_conv, thread_budget, threads_per_worker, HybridPlan,
+    ThreadBudget,
+};
 
 use crate::ensure;
 use crate::layers::ExecCtx;
@@ -120,10 +123,18 @@ impl CnnCoordinator {
         seed: u64,
     ) -> crate::Result<Self> {
         ensure!(workers >= 1, "need at least one worker");
+        let budget = scheduler::thread_budget(total_threads, workers);
+        if budget.oversubscribed() {
+            eprintln!(
+                "cct: coordinator oversubscribed: {} workers x {} thread(s) over a budget \
+                 of {} ({:.1}x)",
+                workers, budget.per_worker, total_threads, budget.oversubscription
+            );
+        }
         // Workers that will run threaded GEMMs share the process-wide
         // compute pool; start it (and its per-worker packing arenas)
         // at construction time rather than mid-first-step.
-        if scheduler::threads_per_worker(total_threads, workers) > 1 {
+        if budget.per_worker > 1 {
             crate::gemm::pool::prewarm();
         }
         let mut replicas = Vec::with_capacity(workers);
@@ -137,7 +148,7 @@ impl CnnCoordinator {
             workspaces: Vec::new(),
             planned_batch: 0,
             solver: SgdSolver::new(solver_cfg),
-            threads_per_worker: scheduler::threads_per_worker(total_threads, workers),
+            threads_per_worker: budget.per_worker,
             steps: 0,
         })
     }
@@ -145,6 +156,13 @@ impl CnnCoordinator {
     /// Number of worker replicas.
     pub fn workers(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// GEMM/lowering threads each partition worker runs with — shared
+    /// arithmetic with the async coordinator (see
+    /// [`scheduler::thread_budget`]), so both agree per replica.
+    pub fn threads_per_worker(&self) -> usize {
+        self.threads_per_worker
     }
 
     /// Training steps taken so far.
@@ -297,6 +315,33 @@ fc   { name: f1 out: 3 std: 0.1 }
         }
         assert!(last < first * 0.6, "loss {first} → {last}");
         assert_eq!(c.iterations(), 26);
+    }
+
+    #[test]
+    fn sync_and_async_coordinators_agree_on_thread_budgets() {
+        // The satellite guarantee: per-replica thread budgets are the
+        // same arithmetic in both coordinators, including when
+        // oversubscribed (workers > total_threads).
+        let cfg = parse_net(TINY).unwrap();
+        for (total, workers) in [(16, 4), (7, 2), (2, 8), (1, 1), (0, 3)] {
+            let sync =
+                CnnCoordinator::new(&cfg, workers, total, SolverConfig::default(), 1).unwrap();
+            let hog = AsyncCoordinator::new(
+                &cfg,
+                AsyncConfig { workers, total_threads: total, staleness: 0, seed: 1 },
+                SolverConfig::default(),
+            )
+            .unwrap();
+            assert_eq!(
+                sync.threads_per_worker(),
+                hog.threads_per_worker(),
+                "budgets diverge at total={total} workers={workers}"
+            );
+            assert_eq!(
+                sync.threads_per_worker(),
+                scheduler::thread_budget(total, workers).per_worker
+            );
+        }
     }
 
     #[test]

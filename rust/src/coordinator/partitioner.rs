@@ -7,6 +7,7 @@
 //! threads each, which the paper argues is GEMM-equivalent but also
 //! parallelizes the lowering and every other layer.
 
+use crate::exec::Backend;
 use crate::lowering::{type1, ConvShape};
 use crate::tensor::Tensor;
 use std::ops::Range;
@@ -197,6 +198,121 @@ pub fn conv_partitioned(
     (out, PartitionStats { wall_s: wall, ..stats })
 }
 
+/// What a hybrid (multi-backend) convolution actually did: the
+/// schedule it ran and the per-device wall clocks, in the same terms
+/// as the simulator's [`HybridPlan`](super::scheduler::HybridPlan) so
+/// the fig5 bench can compare measured against predicted directly.
+#[derive(Clone, Debug)]
+pub struct HybridExecStats {
+    /// Samples placed on each backend (from
+    /// [`flops_proportional_split`](super::scheduler::flops_proportional_split)).
+    pub assignment: Vec<usize>,
+    /// Measured seconds each backend spent on its partition
+    /// (transfer-in + compute + transfer-out + sync; 0.0 for backends
+    /// assigned no samples).
+    pub per_device_s: Vec<f64>,
+    /// Measured wall time of the whole operation (all partitions run
+    /// concurrently, so this tracks the slowest device).
+    pub makespan_s: f64,
+    /// Host threads each partition worker was granted.
+    pub threads_per_partition: usize,
+    /// The thread-budget overcommit factor (see
+    /// [`ThreadBudget`](super::scheduler::ThreadBudget)).
+    pub oversubscription: f64,
+}
+
+/// Forward convolution split across an asymmetric backend fleet: each
+/// backend gets the batch fraction
+/// [`flops_proportional_split`](super::scheduler::flops_proportional_split)
+/// assigns from its [`caps()`](Backend::caps), runs its contiguous
+/// sample range concurrently with the others (lower → GEMM → lift via
+/// [`type1::conv_type1_into_on`], bracketed by `transfer_in`/
+/// `transfer_out` charges for off-host devices), and is timed
+/// individually — the paper's §2.3 hybrid execution, for real instead
+/// of in simulation.
+pub fn conv_hybrid(
+    shape: &ConvShape,
+    data: &Tensor,
+    weights: &Tensor,
+    backends: &[&dyn Backend],
+    total_threads: usize,
+) -> (Tensor, HybridExecStats) {
+    let t0 = Instant::now();
+    assert!(!backends.is_empty(), "need at least one backend");
+    assert_eq!(data.shape().dims4(), shape.input_shape(), "data shape mismatch");
+    assert_eq!(weights.shape().dims4(), shape.weight_shape(), "weight shape mismatch");
+
+    let specs: Vec<crate::device::DeviceSpec> =
+        backends.iter().map(|be| be.caps().device_spec()).collect();
+    let assignment = super::scheduler::flops_proportional_split(shape.b, &specs);
+    let active = assignment.iter().filter(|&&bi| bi > 0).count().max(1);
+    let budget = super::scheduler::thread_budget(total_threads, active);
+    let tpw = budget.per_worker;
+
+    let m = shape.m();
+    let chan = shape.o * m * m;
+    let img_stride = shape.d * shape.n * shape.n;
+    let mut out = Tensor::zeros(shape.output_shape());
+    let src = data.as_slice();
+    let weights_s = weights.as_slice();
+
+    // Pre-plan one lowering workspace per active partition on the
+    // coordinating thread (workers never touch the allocator), same
+    // discipline as `conv_partitioned`.
+    let mut workspaces: Vec<Option<type1::Workspace>> = assignment
+        .iter()
+        .map(|&bi| (bi > 0).then(|| type1::Workspace::new(&ConvShape { b: bi, ..*shape })))
+        .collect();
+
+    let per_device_s: Vec<f64> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(backends.len());
+        let mut rest = out.as_mut_slice();
+        let mut lo = 0usize;
+        for ((&bi, ws), &be) in assignment.iter().zip(workspaces.iter_mut()).zip(backends.iter())
+        {
+            let (mine, tail) = rest.split_at_mut(bi * chan);
+            rest = tail;
+            let start = lo;
+            lo += bi;
+            handles.push(scope.spawn(move || {
+                if bi == 0 {
+                    return 0.0;
+                }
+                let ws = ws.as_mut().expect("active partition has a workspace");
+                let sub = ConvShape { b: bi, ..*shape };
+                let dev_t0 = Instant::now();
+                // The model is resident (data-parallel: weights were
+                // broadcast once); only this partition's activations
+                // cross the interconnect.
+                be.transfer_in((bi * img_stride * 4) as u64);
+                type1::conv_type1_into_on(
+                    be,
+                    &sub,
+                    &src[start * img_stride..(start + bi) * img_stride],
+                    weights_s,
+                    tpw,
+                    ws,
+                    mine,
+                );
+                be.transfer_out((bi * chan * 4) as u64);
+                be.sync();
+                dev_t0.elapsed().as_secs_f64()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("hybrid worker panicked")).collect()
+    });
+
+    let makespan_s = t0.elapsed().as_secs_f64();
+    let stats = HybridExecStats {
+        assignment,
+        per_device_s,
+        makespan_s,
+        threads_per_partition: tpw,
+        oversubscription: budget.oversubscription,
+    };
+    (out, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +402,38 @@ mod tests {
         let (_, caffe) = conv_partitioned(&shape, &data, &w, BatchStrategy::CaffeStyle, 1);
         let (_, full) = conv_partitioned(&shape, &data, &w, BatchStrategy::FullBatch, 1);
         assert_eq!(full.lowered_bytes, 8 * caffe.lowered_bytes);
+    }
+
+    #[test]
+    fn hybrid_matches_reference_on_asymmetric_fleet() {
+        use crate::device::profiles;
+        use crate::exec::{cpu, Backend, SimBackend};
+        let (shape, data, w) = problem(9);
+        let want = conv_reference(&shape, &data, &w);
+        // A simulated GPU (zero injected latency) next to the host
+        // pool: data must be identical to the single-device reference
+        // and the split must favor the faster device.
+        let gpu = SimBackend::new(profiles::grid_k520(), 0.0, 1);
+        let fleet: Vec<&dyn Backend> = vec![&gpu, cpu()];
+        let (got, stats) = conv_hybrid(&shape, &data, &w, &fleet, 2);
+        assert!(got.max_abs_diff(&want) < 1e-3, "hybrid diverges by {}", got.max_abs_diff(&want));
+        assert_eq!(stats.assignment.iter().sum::<usize>(), shape.b);
+        assert_eq!(stats.per_device_s.len(), 2);
+        assert!(stats.assignment[0] > stats.assignment[1], "faster device gets more samples");
+        assert!(stats.makespan_s >= 0.0);
+        assert!(gpu.charged_seconds() > 0.0, "sim device must have been consulted");
+    }
+
+    #[test]
+    fn hybrid_single_backend_degenerates_to_full_batch() {
+        use crate::exec::{cpu, Backend};
+        let (shape, data, w) = problem(4);
+        let want = conv_reference(&shape, &data, &w);
+        let fleet: Vec<&dyn Backend> = vec![cpu()];
+        let (got, stats) = conv_hybrid(&shape, &data, &w, &fleet, 1);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+        assert_eq!(stats.assignment, vec![4]);
+        assert_eq!(stats.oversubscription, 1.0);
     }
 
     #[test]

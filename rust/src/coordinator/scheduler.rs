@@ -11,34 +11,87 @@
 use crate::device::DeviceSpec;
 use crate::lowering::{ConvShape, LoweringType};
 
+/// A per-worker thread budget plus how oversubscribed it is: when
+/// `workers > total_threads`, each worker still gets its floor of one
+/// thread, so the fleet collectively asks for `workers` threads out of
+/// a budget of `total_threads`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThreadBudget {
+    /// GEMM/lowering threads each worker may use (≥ 1).
+    pub per_worker: usize,
+    /// `workers · per_worker / total_threads`, clamped to ≥ 1.0 — the
+    /// factor by which the fleet overcommits its budget. `1.0` means
+    /// the budget is respected exactly (or undershot by the integer
+    /// floor, which is *under*-subscription and reported as 1.0).
+    pub oversubscription: f64,
+}
+
+impl ThreadBudget {
+    /// True when the per-worker floor of one thread pushes the fleet
+    /// past its total budget (`oversubscription > 1`).
+    pub fn oversubscribed(&self) -> bool {
+        self.oversubscription > 1.0
+    }
+}
+
 /// Divide a GEMM thread budget evenly among data-parallel workers
-/// (paper §2.2: 16/p threads per partition so all cores stay busy).
-/// Every worker gets at least one thread; the sync and async
-/// coordinators share this so their per-replica GEMM plans — and
-/// therefore their floating-point results — agree exactly.
-pub fn threads_per_worker(total_threads: usize, workers: usize) -> usize {
+/// (paper §2.2: 16/p threads per partition so all cores stay busy),
+/// reporting the oversubscription factor instead of flooring to 1
+/// silently. The sync and async coordinators share this so their
+/// per-replica GEMM plans — and therefore their floating-point
+/// results — agree exactly (pinned by a coordinator test).
+pub fn thread_budget(total_threads: usize, workers: usize) -> ThreadBudget {
     assert!(workers >= 1, "need at least one worker");
-    (total_threads / workers).max(1)
+    let per_worker = (total_threads / workers).max(1);
+    let oversubscription =
+        ((workers * per_worker) as f64 / total_threads.max(1) as f64).max(1.0);
+    ThreadBudget { per_worker, oversubscription }
+}
+
+/// The per-worker thread count alone — [`thread_budget`] for callers
+/// that don't need the oversubscription factor.
+pub fn threads_per_worker(total_threads: usize, workers: usize) -> usize {
+    thread_budget(total_threads, workers).per_worker
 }
 
 /// Assign each of `b` samples to a device proportionally to its peak
 /// FLOPS. Largest-remainder rounding; every sample is assigned.
+///
+/// Edge cases (each pinned by a unit test):
+/// * `b == 0` → every device gets 0.
+/// * Negative/zero-FLOPS devices contribute no weight; if the *whole*
+///   fleet reports zero FLOPS there is no signal to be proportional
+///   to, so the split falls back to even shares instead of dividing
+///   by zero into NaN.
+/// * Remainder ties (e.g. `b < devices.len()` over identical devices)
+///   break by ascending device index, so the rounding order is
+///   deterministic and platform-independent (`total_cmp`, no
+///   `partial_cmp().unwrap()` to panic on NaN).
 pub fn flops_proportional_split(b: usize, devices: &[DeviceSpec]) -> Vec<usize> {
-    assert!(!devices.is_empty());
-    let total: f64 = devices.iter().map(|d| d.peak_gflops).sum();
-    let ideal: Vec<f64> = devices.iter().map(|d| b as f64 * d.peak_gflops / total).collect();
+    assert!(!devices.is_empty(), "need at least one device");
+    let p = devices.len();
+    if b == 0 {
+        return vec![0; p];
+    }
+    let total: f64 = devices.iter().map(|d| d.peak_gflops.max(0.0)).sum();
+    let ideal: Vec<f64> = if total > 0.0 {
+        devices.iter().map(|d| b as f64 * d.peak_gflops.max(0.0) / total).collect()
+    } else {
+        vec![b as f64 / p as f64; p]
+    };
     let mut counts: Vec<usize> = ideal.iter().map(|&x| x.floor() as usize).collect();
     let mut assigned: usize = counts.iter().sum();
-    // distribute the remainder by largest fractional part
-    let mut order: Vec<usize> = (0..devices.len()).collect();
+    // Distribute the remainder by largest fractional part, ties by
+    // device index (ascending) — the pinned rounding order.
+    let mut order: Vec<usize> = (0..p).collect();
     order.sort_by(|&a, &bi| {
-        (ideal[bi] - ideal[bi].floor())
-            .partial_cmp(&(ideal[a] - ideal[a].floor()))
-            .unwrap()
+        let fa = ideal[a] - ideal[a].floor();
+        let fb = ideal[bi] - ideal[bi].floor();
+        fb.total_cmp(&fa).then(a.cmp(&bi))
     });
     let mut i = 0;
     while assigned < b {
-        counts[order[i % order.len()]] += 1;
+        counts[order[i % p]] += 1;
         assigned += 1;
         i += 1;
     }
@@ -144,6 +197,72 @@ mod tests {
         assert_eq!(threads_per_worker(7, 2), 3); // integer division
         assert_eq!(threads_per_worker(2, 8), 1); // oversubscribed: floor 1
         assert_eq!(threads_per_worker(0, 3), 1);
+    }
+
+    #[test]
+    fn thread_budget_reports_oversubscription() {
+        // Exact division: no overcommit.
+        let exact = thread_budget(16, 4);
+        assert_eq!(exact.per_worker, 4);
+        assert_eq!(exact.oversubscription, 1.0);
+        assert!(!exact.oversubscribed());
+        // Undershoot from integer floor (7/2 → 3 each, 6 ≤ 7) is not
+        // oversubscription.
+        assert!(!thread_budget(7, 2).oversubscribed());
+        // 8 workers on a 2-thread budget: floor-of-one makes the fleet
+        // ask for 8 threads — 4× over budget.
+        let over = thread_budget(2, 8);
+        assert_eq!(over.per_worker, 1);
+        assert_eq!(over.oversubscription, 4.0);
+        assert!(over.oversubscribed());
+        // Zero budget: everyone still gets a thread; factor counts all
+        // of them (guarded against division by zero).
+        assert_eq!(thread_budget(0, 3).per_worker, 1);
+        assert_eq!(thread_budget(0, 3).oversubscription, 3.0);
+    }
+
+    fn named(peak: f64) -> DeviceSpec {
+        DeviceSpec { peak_gflops: peak, ..profiles::c4_4xlarge() }
+    }
+
+    #[test]
+    fn split_b_zero_gives_all_zeros() {
+        let devs = vec![profiles::grid_k520(), profiles::c4_4xlarge()];
+        assert_eq!(flops_proportional_split(0, &devs), vec![0, 0]);
+    }
+
+    #[test]
+    fn split_zero_flops_device_gets_nothing() {
+        // A dead device among live ones must not receive samples (and
+        // must not poison the fractions with NaN).
+        let devs = vec![named(1000.0), named(0.0), named(1000.0)];
+        let counts = flops_proportional_split(10, &devs);
+        assert_eq!(counts, vec![5, 0, 5]);
+    }
+
+    #[test]
+    fn split_all_zero_flops_falls_back_to_even() {
+        // No FLOPS signal at all: even largest-remainder split, not
+        // NaN. b=5 over 3 devices → ideal 1.67 each; remainder ties
+        // break by device index (0, then 1).
+        let devs = vec![named(0.0), named(0.0), named(0.0)];
+        let counts = flops_proportional_split(5, &devs);
+        assert_eq!(counts.iter().sum::<usize>(), 5);
+        assert_eq!(counts, vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn split_remainder_ties_break_by_device_index() {
+        // b < devices over identical devices: every fractional part
+        // ties, so the pinned order hands the remainder out to the
+        // lowest-indexed devices first.
+        let devs = vec![named(700.0), named(700.0), named(700.0)];
+        assert_eq!(flops_proportional_split(1, &devs), vec![1, 0, 0]);
+        assert_eq!(flops_proportional_split(2, &devs), vec![1, 1, 0]);
+        // and a negative-peak device is clamped to zero weight, not
+        // allowed to corrupt the total.
+        let weird = vec![named(-50.0), named(700.0)];
+        assert_eq!(flops_proportional_split(4, &weird), vec![0, 4]);
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! The host backend: a thin adapter over the persistent GEMM worker
+//! pool and the threaded lowering kernels. Calling through this is
+//! bit-identical to calling the free functions directly — it *is* the
+//! free functions, reached via one vtable hop.
+
+use super::{Backend, BackendCaps};
+use crate::device::profiles;
+use crate::gemm::{self, pool, GemmDims, Trans};
+use crate::lowering::{type1, ConvShape};
+
+/// The CPU execution backend wrapping the process-wide persistent GEMM
+/// pool (`gemm::pool`) and the Type-1 lowering kernels.
+///
+/// Stateless unit struct: all state lives in the pool itself, so the
+/// one `static` instance [`cpu()`](super::cpu) hands out is shared by
+/// every `ExecCtx::default()` in the process. Parity with the
+/// pre-refactor free-function path — including under pool contention —
+/// is pinned by `tests/backend_parity.rs`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuPoolBackend;
+
+impl Backend for CpuPoolBackend {
+    fn caps(&self) -> BackendCaps {
+        // The local-CPU calibration profile, with the core count taken
+        // from the actual machine (the pool sizes itself the same way).
+        let spec = profiles::local_cpu();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        BackendCaps { name: "cpu-pool".to_string(), cores, ..BackendCaps::from_spec(&spec) }
+    }
+
+    fn sgemm(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        dims: GemmDims,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c: &mut [f32],
+        threads: usize,
+    ) {
+        gemm::sgemm(ta, tb, dims, alpha, a, b, beta, c, threads);
+    }
+
+    fn im2col(&self, shape: &ConvShape, src: &[f32], out: &mut [f32], threads: usize) {
+        type1::lower_batch_slice_threaded(shape, src, out, threads);
+    }
+
+    fn col2im(&self, shape: &ConvShape, d_lowered: &[f32], dst: &mut [f32], threads: usize) {
+        type1::col2im_batch_slice_threaded(shape, d_lowered, dst, threads);
+    }
+
+    fn lift(&self, shape: &ConvShape, r_hat: &[f32], dst: &mut [f32], threads: usize) {
+        type1::lift_slice_threaded(shape, r_hat, dst, threads);
+    }
+
+    fn unlift(&self, shape: &ConvShape, src: &[f32], d_r_hat: &mut [f32], threads: usize) {
+        type1::unlift_slice_threaded(shape, src, d_r_hat, threads);
+    }
+
+    fn parallel_for(&self, threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        pool::parallel_for(threads, ntasks, f);
+    }
+
+    fn alloc_arena(&self) {
+        // Warm this thread's submitter packing arena so planned hot
+        // loops never touch the allocator (same call `Net::plan*` made
+        // directly before the backend seam existed).
+        pool::warm_local();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn caps_describe_a_host_cpu() {
+        let caps = CpuPoolBackend.caps();
+        assert_eq!(caps.kind, crate::device::DeviceKind::Cpu);
+        assert!(caps.cores >= 1);
+        assert!(caps.peak_gflops > 0.0);
+    }
+
+    #[test]
+    fn sgemm_matches_free_function_bitwise() {
+        let mut rng = Pcg64::new(7);
+        let (m, n, k) = (17, 13, 9);
+        let a = Tensor::randn((m, k), 0.0, 1.0, &mut rng);
+        let b = Tensor::randn((k, n), 0.0, 1.0, &mut rng);
+        let dims = GemmDims { m, n, k };
+        let mut want = vec![0.0f32; m * n];
+        gemm::sgemm(Trans::N, Trans::N, dims, 1.0, a.as_slice(), b.as_slice(), 0.0, &mut want, 2);
+        let mut got = vec![0.0f32; m * n];
+        CpuPoolBackend.sgemm(
+            Trans::N,
+            Trans::N,
+            dims,
+            1.0,
+            a.as_slice(),
+            b.as_slice(),
+            0.0,
+            &mut got,
+            2,
+        );
+        assert_eq!(got, want, "backend sgemm must be the free function, bit for bit");
+    }
+
+    #[test]
+    fn parallel_for_visits_every_task_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        CpuPoolBackend.parallel_for(3, hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+}

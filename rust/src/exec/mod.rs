@@ -1,0 +1,214 @@
+//! Pluggable execution backends (the seam behind the paper's §2.3
+//! hybrid CPU/GPU execution).
+//!
+//! Every compute-heavy primitive the layers need — GEMM, im2col
+//! lowering, the lift/unlift reshapes, col2im scatter-add, and the
+//! striped `parallel_for` the solver uses — is routed through the
+//! object-safe [`Backend`] trait instead of free functions. An
+//! [`ExecCtx`](crate::layers::ExecCtx) carries a `&dyn Backend`
+//! handle, so layers, `net::Workspace` planning, the solver, and both
+//! coordinators execute against whatever device the caller picked
+//! without knowing which one it is.
+//!
+//! Three in-tree implementations:
+//!
+//! * [`CpuPoolBackend`] — the host path: delegates to the persistent
+//!   GEMM worker pool and the threaded lowering kernels, bit-identical
+//!   to calling those free functions directly (asserted by
+//!   `tests/backend_parity.rs`). This is what [`cpu()`] hands out and
+//!   what `ExecCtx::default()` uses.
+//! * [`SimBackend`] — profile-derived latency injection over the CPU
+//!   path: computes the same bits, then sleeps until each op has taken
+//!   at least as long as a [`DeviceSpec`]'s analytical model says it
+//!   should (scaled by a calibration factor), including PCIe transfer
+//!   charges for [`DeviceKind::Gpu`] devices. This makes asymmetric
+//!   fleets testable on one box — the fig5 bench runs the
+//!   FLOPS-proportional scheduler against real `SimBackend` executions
+//!   and checks the measured partition ratio against the cost model.
+//! * [`PjrtBackend`] — the stubbed PJRT/XLA artifact layer re-parented
+//!   under the same trait, so a future build that links a real PJRT
+//!   client slots in behind the identical seam.
+//!
+//! ```
+//! use cct::exec::{cpu, Backend};
+//! use cct::layers::ExecCtx;
+//!
+//! let ctx = ExecCtx::on(cpu()); // same as ExecCtx::default()
+//! assert_eq!(ctx.backend.caps().name, "cpu-pool");
+//! ```
+
+mod cpu;
+mod pjrt;
+mod sim;
+
+pub use cpu::CpuPoolBackend;
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+use crate::device::{DeviceKind, DeviceSpec};
+use crate::gemm::{GemmDims, Trans};
+use crate::lowering::ConvShape;
+
+/// Capability descriptor a [`Backend`] reports about itself: the same
+/// constants the analytical [`DeviceSpec`] timing model runs on, so
+/// the scheduler can plan FLOPS-proportional splits over a fleet of
+/// live backend handles exactly as it plans over device profiles.
+#[derive(Clone, Debug)]
+pub struct BackendCaps {
+    /// Backend name (shown in tables and stats).
+    pub name: String,
+    /// CPU (host-resident) or GPU (PCIe-attached — transfers charged).
+    pub kind: DeviceKind,
+    /// Theoretical peak single-precision GFLOP/s.
+    pub peak_gflops: f64,
+    /// Sustained memory bandwidth (GB/s) for lowering/lifting traffic.
+    pub mem_gbps: f64,
+    /// PCIe bandwidth (GB/s); `None` for host-resident backends.
+    pub pcie_gbps: Option<f64>,
+    /// Fixed cost per offloaded kernel invocation (seconds).
+    pub call_overhead_s: f64,
+    /// Physical cores (or a comparable parallel-granularity count).
+    pub cores: usize,
+}
+
+impl BackendCaps {
+    /// Build caps from a device profile (the usual case: a backend
+    /// *is* the executable form of a [`DeviceSpec`]).
+    pub fn from_spec(spec: &DeviceSpec) -> Self {
+        BackendCaps {
+            name: spec.name.clone(),
+            kind: spec.kind,
+            peak_gflops: spec.peak_gflops,
+            mem_gbps: spec.mem_gbps,
+            pcie_gbps: spec.pcie_gbps,
+            call_overhead_s: spec.call_overhead_s,
+            cores: spec.cores,
+        }
+    }
+
+    /// The equivalent [`DeviceSpec`], for feeding a live backend fleet
+    /// to [`flops_proportional_split`](crate::coordinator::scheduler::flops_proportional_split)
+    /// and the makespan simulator.
+    pub fn device_spec(&self) -> DeviceSpec {
+        DeviceSpec {
+            name: self.name.clone(),
+            kind: self.kind,
+            peak_gflops: self.peak_gflops,
+            mem_gbps: self.mem_gbps,
+            pcie_gbps: self.pcie_gbps,
+            call_overhead_s: self.call_overhead_s,
+            cores: self.cores,
+        }
+    }
+}
+
+/// An execution device the layers can run on. Object-safe: everything
+/// takes `&self` and plain slices, so an `&dyn Backend` threads
+/// through [`ExecCtx`](crate::layers::ExecCtx) by copy.
+///
+/// Contract: all implementations must produce **numerically identical
+/// tensors** for the data-path methods (`sgemm`, `im2col`, `col2im`,
+/// `lift`, `unlift`, `parallel_for`) — a backend may differ in *when*
+/// results arrive (latency, transfer charges), never in *what* they
+/// are. `tests/backend_parity.rs` pins this for the in-tree
+/// implementations.
+pub trait Backend: Send + Sync {
+    /// What this backend is: name, kind, and the timing-model
+    /// constants the scheduler plans with.
+    fn caps(&self) -> BackendCaps;
+
+    /// Single-precision GEMM `C = α·op(A)·op(B) + β·C` with up to
+    /// `threads` workers (row-major, same semantics as
+    /// [`gemm::sgemm`](crate::gemm::sgemm)).
+    #[allow(clippy::too_many_arguments)]
+    fn sgemm(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        dims: GemmDims,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c: &mut [f32],
+        threads: usize,
+    );
+
+    /// Batched Type-1 lowering (im2col): write the `b·m² × k²d`
+    /// lowered matrix for `shape` into `out`.
+    fn im2col(&self, shape: &ConvShape, src: &[f32], out: &mut [f32], threads: usize);
+
+    /// Scatter-add the lowered gradient back to image layout
+    /// (col2im); `dst` must be pre-zeroed.
+    fn col2im(&self, shape: &ConvShape, d_lowered: &[f32], dst: &mut [f32], threads: usize);
+
+    /// Reshape the GEMM result `R̂` (rows × o) into NCHW output.
+    fn lift(&self, shape: &ConvShape, r_hat: &[f32], dst: &mut [f32], threads: usize);
+
+    /// Inverse of [`Backend::lift`]: NCHW output gradient → `d_R̂`.
+    fn unlift(&self, shape: &ConvShape, src: &[f32], d_r_hat: &mut [f32], threads: usize);
+
+    /// Run `ntasks` independent tasks with up to `threads` workers
+    /// (the solver's striped parameter updates go through this).
+    fn parallel_for(&self, threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync));
+
+    /// Warm whatever per-thread scratch this backend needs (packing
+    /// arenas, device allocations) so the hot loop never allocates.
+    fn alloc_arena(&self);
+
+    /// Charge moving `bytes` of input *to* the device. Host-resident
+    /// backends do nothing; simulated/offloaded GPUs pay PCIe time.
+    fn transfer_in(&self, bytes: u64) {
+        let _ = bytes;
+    }
+
+    /// Charge moving `bytes` of results back *from* the device.
+    fn transfer_out(&self, bytes: u64) {
+        let _ = bytes;
+    }
+
+    /// Block until all work issued to this backend is complete. The
+    /// in-tree backends execute synchronously, so this is a no-op —
+    /// but partition workers call it before stopping their clocks so
+    /// an asynchronous backend would be timed correctly.
+    fn sync(&self) {}
+}
+
+/// The process-wide host backend: every [`ExecCtx`](crate::layers::ExecCtx)
+/// defaults to this, which keeps the refactored call sites
+/// bit-identical to the pre-`Backend` free-function path.
+pub fn cpu() -> &'static CpuPoolBackend {
+    static CPU: CpuPoolBackend = CpuPoolBackend;
+    &CPU
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn caps_round_trip_through_device_spec() {
+        let spec = profiles::grid_k520();
+        let caps = BackendCaps::from_spec(&spec);
+        let back = caps.device_spec();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.kind, spec.kind);
+        assert_eq!(back.peak_gflops, spec.peak_gflops);
+        assert_eq!(back.pcie_gbps, spec.pcie_gbps);
+        assert_eq!(back.cores, spec.cores);
+    }
+
+    #[test]
+    fn cpu_backend_is_object_safe_and_static() {
+        let be: &dyn Backend = cpu();
+        let caps = be.caps();
+        assert_eq!(caps.name, "cpu-pool");
+        assert_eq!(caps.kind, DeviceKind::Cpu);
+        assert!(caps.pcie_gbps.is_none(), "host backend must not charge PCIe");
+        // default transfer hooks are free no-ops on the host
+        be.transfer_in(1 << 30);
+        be.transfer_out(1 << 30);
+        be.sync();
+    }
+}

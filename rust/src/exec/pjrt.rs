@@ -1,0 +1,130 @@
+//! The stubbed PJRT/XLA artifact layer, re-parented under the
+//! [`Backend`] trait.
+//!
+//! The `runtime` module ships the manifest/artifact plumbing for
+//! AOT-compiled XLA executables but, in this dependency-free build, no
+//! PJRT client is linked — `Artifact::run` always fails with a
+//! descriptive error. [`PjrtBackend::try_new`] therefore *probes* the
+//! store at construction time: it parses the manifest and attempts to
+//! load the first artifact, so in this build it always returns that
+//! error instead of a handle. A future build that links a real PJRT
+//! client makes the probe succeed, and the backend slots in behind
+//! the exact same `exec::Backend` seam the CPU and sim backends use —
+//! no layer, net, solver, or coordinator code changes.
+
+use super::{Backend, BackendCaps};
+use crate::device::DeviceSpec;
+use crate::gemm::{GemmDims, Trans};
+use crate::lowering::ConvShape;
+use crate::runtime::ArtifactStore;
+use crate::Result;
+
+/// A device backed by AOT-compiled XLA artifacts executed through a
+/// PJRT client. Construction only succeeds once a client is actually
+/// linked (never in this build — see module docs), which is what
+/// licenses the unreachable data-path methods below.
+pub struct PjrtBackend {
+    store: ArtifactStore,
+    spec: DeviceSpec,
+}
+
+impl PjrtBackend {
+    /// Open the artifact manifest at `dir` for a device described by
+    /// `spec`, and probe-load the first entry to prove a PJRT client
+    /// is linked. In this dependency-free build the probe always
+    /// fails, so this returns `Err` with the runtime's "no PJRT
+    /// backend is linked" explanation rather than a handle that would
+    /// panic later.
+    pub fn try_new(dir: impl AsRef<std::path::Path>, spec: DeviceSpec) -> Result<Self> {
+        let mut store = ArtifactStore::open(dir)?;
+        let first = match store.names().first() {
+            Some(name) => name.to_string(),
+            None => crate::bail!("artifact manifest declares no entry points"),
+        };
+        store.load(&first)?;
+        Ok(PjrtBackend { store, spec })
+    }
+
+    /// The artifact store this backend executes from.
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+}
+
+/// All data-path methods are unreachable in this build: constructing a
+/// `PjrtBackend` requires the artifact probe in [`PjrtBackend::try_new`]
+/// to succeed, which requires a linked PJRT client.
+impl Backend for PjrtBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps::from_spec(&self.spec)
+    }
+
+    fn sgemm(
+        &self,
+        _ta: Trans,
+        _tb: Trans,
+        _dims: GemmDims,
+        _alpha: f32,
+        _a: &[f32],
+        _b: &[f32],
+        _beta: f32,
+        _c: &mut [f32],
+        _threads: usize,
+    ) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+
+    fn im2col(&self, _shape: &ConvShape, _src: &[f32], _out: &mut [f32], _threads: usize) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+
+    fn col2im(&self, _shape: &ConvShape, _d_lowered: &[f32], _dst: &mut [f32], _threads: usize) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+
+    fn lift(&self, _shape: &ConvShape, _r_hat: &[f32], _dst: &mut [f32], _threads: usize) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+
+    fn unlift(&self, _shape: &ConvShape, _src: &[f32], _d_r_hat: &mut [f32], _threads: usize) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+
+    fn parallel_for(&self, _threads: usize, _ntasks: usize, _f: &(dyn Fn(usize) + Sync)) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+
+    fn alloc_arena(&self) {
+        unreachable!("PjrtBackend cannot be constructed without a linked PJRT client");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn probe_fails_gracefully_without_a_client() {
+        // A well-formed manifest whose artifact can't execute: try_new
+        // must return the runtime's explanatory error, not a handle.
+        let dir = std::env::temp_dir().join(format!("cct-pjrt-probe-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "forward args=8x3x16x16:f32 results=1\n")
+            .unwrap();
+        std::fs::write(dir.join("forward.hlo"), b"not a real executable").unwrap();
+        let err = PjrtBackend::try_new(&dir, profiles::grid_k520()).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("PJRT") || msg.contains("pjrt"),
+            "error should explain the missing client, got: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let err = PjrtBackend::try_new("/nonexistent/path", profiles::grid_k520());
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Simulated device backend: correct bits, modeled time.
+//!
+//! A [`SimBackend`] computes every op on the host CPU path (so results
+//! are numerically identical to [`CpuPoolBackend`](super::CpuPoolBackend)
+//! by construction), then *sleeps* until the op has taken at least
+//! `time_scale ×` the seconds the wrapped [`DeviceSpec`]'s analytical
+//! model assigns to it. The per-op charges are taken from the same
+//! [`CostModel`]/[`DeviceSpec`] formulas the scheduler plans with —
+//! lower/lift at memory bandwidth, GEMM through the efficiency curve,
+//! PCIe transfers for [`DeviceKind::Gpu`](crate::device::DeviceKind::Gpu)
+//! devices — so a lower→GEMM→lift forward conv charges exactly
+//! [`DeviceSpec::conv_seconds`] and an executed fleet reproduces the
+//! makespan simulator's predictions (the fig5 bench gates on this).
+//!
+//! `time_scale` is a calibration knob: the bench picks it large enough
+//! that injected latency dominates the real CPU compute underneath
+//! (so the *measured* asymmetry is the *modeled* asymmetry), and tests
+//! use `0.0` to assert data parity with zero added wall time.
+
+use super::{Backend, BackendCaps};
+use crate::device::DeviceSpec;
+use crate::gemm::{gemm_flops, GemmDims, Trans};
+use crate::lowering::{ConvShape, CostModel, LoweringType};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A simulated asymmetric device: CPU-computed results with
+/// profile-derived latency injection (see module docs).
+#[derive(Debug)]
+pub struct SimBackend {
+    spec: DeviceSpec,
+    time_scale: f64,
+    compute_threads: usize,
+    /// Unscaled model seconds charged so far, in nanoseconds.
+    charged_ns: AtomicU64,
+}
+
+impl SimBackend {
+    /// Simulate `spec`, stretching each op's modeled seconds by
+    /// `time_scale` of real wall time (`0.0` = charge-only, no sleep),
+    /// and running the underlying real computation with at most
+    /// `compute_threads` host threads.
+    pub fn new(spec: DeviceSpec, time_scale: f64, compute_threads: usize) -> Self {
+        assert!(time_scale >= 0.0, "time_scale must be non-negative");
+        assert!(compute_threads >= 1, "need at least one compute thread");
+        SimBackend { spec, time_scale, compute_threads, charged_ns: AtomicU64::new(0) }
+    }
+
+    /// The device profile this backend simulates.
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// The wall-time stretch factor applied to modeled seconds.
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// Total *unscaled* model seconds charged across all ops so far —
+    /// what the device "spent" in its own time, regardless of
+    /// `time_scale`. Tests use this to assert the model was consulted.
+    pub fn charged_seconds(&self) -> f64 {
+        self.charged_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Cap the real computation at this backend's host thread budget.
+    fn host_threads(&self, threads: usize) -> usize {
+        threads.min(self.compute_threads).max(1)
+    }
+
+    /// Record `model_s` device-seconds for an op that started at
+    /// `started`, sleeping off whatever the real computation left of
+    /// the scaled target.
+    fn charge(&self, model_s: f64, started: Instant) {
+        let model_s = model_s.max(0.0);
+        self.charged_ns.fetch_add((model_s * 1e9) as u64, Ordering::Relaxed);
+        if self.time_scale > 0.0 {
+            let target = Duration::from_secs_f64(model_s * self.time_scale);
+            let elapsed = started.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+    }
+
+    /// Seconds to stream `elems` f32s through device memory.
+    fn mem_seconds(&self, elems: u64) -> f64 {
+        (elems * 4) as f64 / (self.spec.mem_gbps * 1e9)
+    }
+}
+
+impl Backend for SimBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps::from_spec(&self.spec)
+    }
+
+    fn sgemm(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        dims: GemmDims,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c: &mut [f32],
+        threads: usize,
+    ) {
+        let t0 = Instant::now();
+        crate::gemm::sgemm(ta, tb, dims, alpha, a, b, beta, c, self.host_threads(threads));
+        // Charged as the model's whole-device GEMM: `dims.m` lowered
+        // rows over all simulated cores — the same call
+        // `DeviceSpec::conv_seconds` makes, so conv charges add up to
+        // the scheduler's prediction exactly.
+        self.charge(self.spec.gemm_seconds(gemm_flops(dims), dims.m, self.spec.cores), t0);
+    }
+
+    fn im2col(&self, shape: &ConvShape, src: &[f32], out: &mut [f32], threads: usize) {
+        let t0 = Instant::now();
+        crate::lowering::type1::lower_batch_slice_threaded(
+            shape,
+            src,
+            out,
+            self.host_threads(threads),
+        );
+        let c = CostModel::new(*shape).cost(LoweringType::Type1);
+        self.charge(self.mem_seconds(c.lower_writes), t0);
+    }
+
+    fn col2im(&self, shape: &ConvShape, d_lowered: &[f32], dst: &mut [f32], threads: usize) {
+        let t0 = Instant::now();
+        crate::lowering::type1::col2im_batch_slice_threaded(
+            shape,
+            d_lowered,
+            dst,
+            self.host_threads(threads),
+        );
+        // Scatter-add re-reads the lowered matrix: same traffic as the
+        // forward lowering wrote.
+        let c = CostModel::new(*shape).cost(LoweringType::Type1);
+        self.charge(self.mem_seconds(c.lower_writes), t0);
+    }
+
+    fn lift(&self, shape: &ConvShape, r_hat: &[f32], dst: &mut [f32], threads: usize) {
+        let t0 = Instant::now();
+        crate::lowering::type1::lift_slice_threaded(shape, r_hat, dst, self.host_threads(threads));
+        let c = CostModel::new(*shape).cost(LoweringType::Type1);
+        self.charge(self.mem_seconds(c.lift_ram_reads), t0);
+    }
+
+    fn unlift(&self, shape: &ConvShape, src: &[f32], d_r_hat: &mut [f32], threads: usize) {
+        let t0 = Instant::now();
+        crate::lowering::type1::unlift_slice_threaded(
+            shape,
+            src,
+            d_r_hat,
+            self.host_threads(threads),
+        );
+        let c = CostModel::new(*shape).cost(LoweringType::Type1);
+        self.charge(self.mem_seconds(c.lift_ram_reads), t0);
+    }
+
+    fn parallel_for(&self, threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        // Elementwise/update work is not part of the conv timing model
+        // the scheduler budgets; run it on the host pool, uncharged.
+        crate::gemm::pool::parallel_for(self.host_threads(threads), ntasks, f);
+    }
+
+    fn alloc_arena(&self) {
+        crate::gemm::pool::warm_local();
+    }
+
+    fn transfer_in(&self, bytes: u64) {
+        let t0 = Instant::now();
+        self.charge(self.spec.transfer_seconds(bytes), t0);
+    }
+
+    fn transfer_out(&self, bytes: u64) {
+        let t0 = Instant::now();
+        self.charge(self.spec.transfer_seconds(bytes), t0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn forward_conv_charges_sum_to_conv_seconds() {
+        // lower + GEMM + lift through the backend must charge exactly
+        // what the scheduler's DeviceSpec::conv_seconds predicts.
+        let spec = profiles::grid_k520();
+        let be = SimBackend::new(spec.clone(), 0.0, 1);
+        let shape = ConvShape { n: 8, k: 3, d: 4, o: 8, b: 6, pad: 1, stride: 1 };
+        let rows = crate::lowering::type1::lowered_rows(&shape);
+        let cols = crate::lowering::type1::lowered_cols(&shape);
+        let src = vec![0.0f32; shape.b * shape.d * shape.n * shape.n];
+        let w = vec![0.0f32; shape.o * cols];
+        let mut lowered = vec![0.0f32; rows * cols];
+        let mut r_hat = vec![0.0f32; rows * shape.o];
+        let mut out = vec![0.0f32; shape.b * shape.o * shape.m() * shape.m()];
+        be.im2col(&shape, &src, &mut lowered, 1);
+        be.sgemm(
+            Trans::N,
+            Trans::T,
+            GemmDims { m: rows, n: shape.o, k: cols },
+            1.0,
+            &lowered,
+            &w,
+            0.0,
+            &mut r_hat,
+            1,
+        );
+        be.lift(&shape, &r_hat, &mut out, 1);
+        let want = spec.conv_seconds(&shape, LoweringType::Type1);
+        let got = be.charged_seconds();
+        // The accumulator truncates each op to whole nanoseconds, so
+        // allow a few ns of slack on top of exact agreement.
+        assert!(
+            (got - want).abs() < 10e-9 + want * 1e-6,
+            "charged {got:.9}s, model says {want:.9}s"
+        );
+    }
+
+    #[test]
+    fn gpu_pays_pcie_but_cpu_does_not() {
+        let gpu = SimBackend::new(profiles::grid_k520(), 0.0, 1);
+        let cpu = SimBackend::new(profiles::g2_host_cpu(), 0.0, 1);
+        gpu.transfer_in(1 << 30);
+        cpu.transfer_in(1 << 30);
+        assert!(gpu.charged_seconds() > 0.0, "GPU transfers must be charged");
+        assert_eq!(cpu.charged_seconds(), 0.0, "host transfers are free");
+    }
+
+    #[test]
+    fn time_scale_injects_real_latency() {
+        // Pick a scale that turns the modeled op into ~30ms of wall
+        // time and check the sleep actually happened.
+        let spec = profiles::grid_k520();
+        let model_s = spec.transfer_seconds(1 << 20);
+        assert!(model_s > 0.0);
+        let be = SimBackend::new(spec, 0.030 / model_s, 1);
+        let t0 = Instant::now();
+        be.transfer_in(1 << 20);
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert!(elapsed >= 0.025, "expected ≥25ms of injected latency, saw {elapsed:.4}s");
+    }
+}

@@ -244,7 +244,8 @@ impl Layer for ConvLayer {
             let LayerScratch { conv, group, .. } = scratch;
             let ws = conv.get_or_insert_with(|| type1::Workspace::new(&gshape));
             if self.cfg.group == 1 {
-                type1::conv_type1_into(
+                type1::conv_type1_into_on(
+                    ctx.backend,
                     &gshape,
                     bottom.as_slice(),
                     self.weights.data.as_slice(),
@@ -263,7 +264,15 @@ impl Layer for ConvLayer {
                     gs.gw[..og * row].copy_from_slice(
                         &self.weights.data.as_slice()[g * og * row..(g + 1) * og * row],
                     );
-                    type1::conv_type1_into(&gshape, &gs.gx, &gs.gw, ctx.threads, ws, &mut gs.gtop);
+                    type1::conv_type1_into_on(
+                        ctx.backend,
+                        &gshape,
+                        &gs.gx,
+                        &gs.gw,
+                        ctx.threads,
+                        ws,
+                        &mut gs.gtop,
+                    );
                     self.scatter_group_out(top.as_mut_slice(), &gs.gtop, b, m * m, g);
                 }
             }
@@ -316,7 +325,8 @@ impl Layer for ConvLayer {
         let LayerScratch { conv, group, .. } = scratch;
         let ws = conv.get_or_insert_with(|| type1::Workspace::new(&gshape));
         if self.cfg.group == 1 {
-            type1::conv_type1_backward_into(
+            type1::conv_type1_backward_into_on(
+                ctx.backend,
                 &gshape,
                 bottom.as_slice(),
                 self.weights.data.as_slice(),
@@ -340,7 +350,8 @@ impl Layer for ConvLayer {
                     &self.weights.data.as_slice()[g * og * row..(g + 1) * og * row],
                 );
                 self.gather_group_out(top_grad.as_slice(), b, m * m, g, &mut gs.gtop);
-                type1::conv_type1_backward_into(
+                type1::conv_type1_backward_into_on(
+                    ctx.backend,
                     &gshape,
                     &gs.gx,
                     &gs.gw,
@@ -392,7 +403,7 @@ mod tests {
     use super::*;
     use crate::lowering::reference::conv_reference;
 
-    fn ctx() -> ExecCtx {
+    fn ctx() -> ExecCtx<'static> {
         ExecCtx::default()
     }
 

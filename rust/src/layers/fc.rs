@@ -4,7 +4,7 @@
 //! buffer and backward accumulates dW with a β=1 GEMM into the blob.
 
 use super::{ExecCtx, Layer, LayerScratch, ParamBlob};
-use crate::gemm::{sgemm, GemmDims, Trans};
+use crate::gemm::{GemmDims, Trans};
 use crate::rng::Pcg64;
 use crate::tensor::{Shape, Tensor};
 
@@ -64,7 +64,7 @@ impl Layer for FcLayer {
         let (b, feats) = self.batch_features(bottom.shape());
         debug_assert_eq!(top.shape().dims2(), (b, self.out_features));
         // y (b, out) = x (b, in) · Wᵀ (in, out)
-        sgemm(
+        ctx.backend.sgemm(
             Trans::N,
             Trans::T,
             GemmDims { m: b, n: self.out_features, k: feats },
@@ -94,7 +94,7 @@ impl Layer for FcLayer {
     ) {
         let (b, feats) = self.batch_features(bottom.shape());
         // dW (out, in) += dyᵀ (out, b) · x (b, in)
-        sgemm(
+        ctx.backend.sgemm(
             Trans::T,
             Trans::N,
             GemmDims { m: self.out_features, n: feats, k: b },
@@ -114,7 +114,7 @@ impl Layer for FcLayer {
             }
         }
         // dx (b, in) = dy (b, out) · W (out, in)
-        sgemm(
+        ctx.backend.sgemm(
             Trans::N,
             Trans::N,
             GemmDims { m: b, n: feats, k: self.out_features },

@@ -47,6 +47,7 @@ pub use pool::{PoolLayer, PoolMode};
 pub use relu::ReluLayer;
 pub use softmax::SoftmaxLossLayer;
 
+use crate::exec::{self, Backend};
 use crate::lowering::{type1, LoweringType, MachineProfile};
 use crate::rng::Pcg64;
 use crate::tensor::{Shape, Tensor};
@@ -70,8 +71,16 @@ pub enum LoweringPolicy {
 }
 
 /// Per-call execution context threaded through the net.
-#[derive(Clone, Copy, Debug)]
-pub struct ExecCtx {
+///
+/// Carries the device handle along with the call parameters: every
+/// GEMM, lowering, and striped update a layer (or the solver) issues
+/// goes through [`ExecCtx::backend`], so the same layer code runs on
+/// the host pool, a simulated GPU, or (in a PJRT-enabled build) a real
+/// accelerator. `Default` pins the process-wide
+/// [`CpuPoolBackend`](crate::exec::CpuPoolBackend), which is
+/// bit-identical to the pre-backend free-function path.
+#[derive(Clone, Copy)]
+pub struct ExecCtx<'e> {
     /// GEMM / lowering threads for this call.
     pub threads: usize,
     /// Train or test semantics (dropout).
@@ -81,20 +90,41 @@ pub struct ExecCtx {
     /// Seed for stochastic layers (dropout); the net derives a fresh
     /// one per step so runs are reproducible.
     pub seed: u64,
+    /// The execution backend all compute primitives are routed to.
+    pub backend: &'e dyn Backend,
 }
 
-impl Default for ExecCtx {
+impl Default for ExecCtx<'_> {
     fn default() -> Self {
         ExecCtx {
             threads: 1,
             phase: Phase::Train,
             lowering: LoweringPolicy::Fixed(LoweringType::Type1),
             seed: 0,
+            backend: exec::cpu(),
         }
     }
 }
 
-impl ExecCtx {
+impl std::fmt::Debug for ExecCtx<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecCtx")
+            .field("threads", &self.threads)
+            .field("phase", &self.phase)
+            .field("lowering", &self.lowering)
+            .field("seed", &self.seed)
+            .field("backend", &self.backend.caps().name)
+            .finish()
+    }
+}
+
+impl<'e> ExecCtx<'e> {
+    /// A default context on the given backend (train phase, one
+    /// thread — override fields with struct-update syntax as usual).
+    pub fn on(backend: &'e dyn Backend) -> Self {
+        ExecCtx { backend, ..Default::default() }
+    }
+
     /// A deterministic RNG for this call, `salt`-separated per layer.
     pub fn rng(&self, salt: u64) -> Pcg64 {
         Pcg64::with_stream(self.seed, salt)

@@ -13,7 +13,9 @@
 //! * **Batching analysis** (batch the lowering + GEMM over the whole
 //!   mini-batch, partition the batch across workers) — [`coordinator`].
 //! * **FLOPS-proportional cross-device scheduling** (CPU+GPU hybrid
-//!   within a single layer) — [`coordinator::scheduler`] over [`device`].
+//!   within a single layer) — [`coordinator::scheduler`] over [`device`],
+//!   executed for real against pluggable [`exec::Backend`]s by
+//!   [`coordinator::partitioner::conv_hybrid`].
 //!
 //! Everything Caffe provided as a substrate is rebuilt in-tree, with
 //! zero external crates (offline-friendly): an error chain ([`error`]),
@@ -60,6 +62,7 @@ pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod error;
+pub mod exec;
 pub mod gemm;
 pub mod layers;
 pub mod lowering;

@@ -25,7 +25,7 @@
 //! bit-identical results to the serial path.
 
 use super::ConvShape;
-use crate::gemm::{pool, sgemm, GemmDims, Trans};
+use crate::gemm::{pool, GemmDims, Trans};
 use crate::tensor::Tensor;
 
 /// Number of columns of the lowered data matrix.
@@ -385,7 +385,24 @@ pub fn conv_type1_with(
 
 /// Allocation-free Type-1 forward: lower → GEMM → lift, entirely in
 /// caller-owned buffers. `out` must hold b·o·m² elements (NCHW).
+/// Runs on the host CPU backend; see [`conv_type1_into_on`] for the
+/// backend-routed form this delegates to.
 pub fn conv_type1_into(
+    shape: &ConvShape,
+    data: &[f32],
+    weights: &[f32],
+    threads: usize,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
+    conv_type1_into_on(crate::exec::cpu(), shape, data, weights, threads, ws, out);
+}
+
+/// [`conv_type1_into`] with every primitive (im2col, GEMM, lift)
+/// routed through `backend` — what conv layers and the hybrid
+/// partitioner call so the same code runs on any device.
+pub fn conv_type1_into_on(
+    backend: &dyn crate::exec::Backend,
     shape: &ConvShape,
     data: &[f32],
     weights: &[f32],
@@ -398,9 +415,9 @@ pub fn conv_type1_into(
     ws.ensure(shape);
     assert!(weights.len() >= shape.o * cols, "weight buffer too small");
 
-    lower_batch_slice_threaded(shape, data, &mut ws.lowered, threads);
+    backend.im2col(shape, data, &mut ws.lowered, threads);
     // R̂ = D̂ · Wᵀ  (W is (o, k²d) row-major ⇒ Trans::T gives (k²d, o)).
-    sgemm(
+    backend.sgemm(
         Trans::N,
         Trans::T,
         GemmDims { m: rows, n: shape.o, k: cols },
@@ -411,7 +428,7 @@ pub fn conv_type1_into(
         &mut ws.r_hat,
         threads,
     );
-    lift_slice_threaded(shape, &ws.r_hat, out, threads);
+    backend.lift(shape, &ws.r_hat, out, threads);
 }
 
 /// Type-1 backward: recompute D̂, then
@@ -456,17 +473,44 @@ pub fn conv_type1_backward_into(
     d_data: &mut [f32],
     d_w: &mut [f32],
 ) {
+    conv_type1_backward_into_on(
+        crate::exec::cpu(),
+        shape,
+        data,
+        weights,
+        d_out,
+        threads,
+        ws,
+        d_data,
+        d_w,
+    );
+}
+
+/// [`conv_type1_backward_into`] with every primitive routed through
+/// `backend` (im2col, unlift, both GEMMs, col2im).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_type1_backward_into_on(
+    backend: &dyn crate::exec::Backend,
+    shape: &ConvShape,
+    data: &[f32],
+    weights: &[f32],
+    d_out: &[f32],
+    threads: usize,
+    ws: &mut Workspace,
+    d_data: &mut [f32],
+    d_w: &mut [f32],
+) {
     let rows = lowered_rows(shape);
     let cols = lowered_cols(shape);
     ws.ensure(shape);
     assert!(d_w.len() >= shape.o * cols, "weight-gradient buffer too small");
     assert!(d_data.len() >= shape.b * shape.d * shape.n * shape.n);
 
-    lower_batch_slice_threaded(shape, data, &mut ws.lowered, threads);
-    unlift_slice_threaded(shape, d_out, &mut ws.r_hat, threads);
+    backend.im2col(shape, data, &mut ws.lowered, threads);
+    backend.unlift(shape, d_out, &mut ws.r_hat, threads);
 
     // dW (o, k²d) += d_R̂ᵀ (o, b·m²) · D̂ (b·m², k²d)
-    sgemm(
+    backend.sgemm(
         Trans::T,
         Trans::N,
         GemmDims { m: shape.o, n: cols, k: rows },
@@ -479,7 +523,7 @@ pub fn conv_type1_backward_into(
     );
 
     // d_D̂ (b·m², k²d) = d_R̂ (b·m², o) · Ŵ (o, k²d); reuse `lowered`.
-    sgemm(
+    backend.sgemm(
         Trans::N,
         Trans::N,
         GemmDims { m: rows, n: cols, k: shape.o },
@@ -492,7 +536,7 @@ pub fn conv_type1_backward_into(
     );
     let img = shape.d * shape.n * shape.n;
     d_data[..shape.b * img].fill(0.0);
-    col2im_batch_slice_threaded(shape, &ws.lowered, d_data, threads);
+    backend.col2im(shape, &ws.lowered, d_data, threads);
 }
 
 #[cfg(test)]

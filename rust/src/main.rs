@@ -8,6 +8,7 @@
 //!             [--async] [--staleness S]          # Hogwild-style async solver
 //! cct xla-train [--steps N] [--artifacts DIR]   # AOT train_step via PJRT
 //! cct optimize [--batch B]                  # lowering optimizer report
+//! cct backends [--batch B] [--artifacts DIR]    # exec::Backend caps + hybrid demo
 //! cct gemm    [--size N] [--iters K]        # GEMM calibration
 //! cct serve-bench [--workers P] [--clients C] [--requests N] [--max-batch B]
 //!                                           # micro-batched vs batch-1 serving
@@ -21,9 +22,10 @@
 use cct::bail;
 use cct::bench_util::{bench, gflops, Table};
 use cct::error::{Context, Result};
-use cct::coordinator::{AsyncConfig, AsyncCoordinator, CnnCoordinator};
+use cct::coordinator::{conv_hybrid, AsyncConfig, AsyncCoordinator, CnnCoordinator};
 use cct::data::BlobCorpus;
 use cct::device::profiles;
+use cct::exec::{Backend, PjrtBackend, SimBackend};
 use cct::gemm::{sgemm, GemmDims, Trans};
 use cct::lowering::{choose_lowering, optimizer, ConvShape, LoweringType, MachineProfile};
 use cct::net::presets;
@@ -102,6 +104,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "xla-train" => cmd_xla_train(&args),
         "optimize" => cmd_optimize(&args),
+        "backends" => cmd_backends(&args),
         "gemm" => cmd_gemm(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "serve" => cmd_serve(&args),
@@ -124,6 +127,9 @@ fn print_help() {
          \x20             worker replicas, S=0 reproduces the synchronous merge bit-for-bit)\n\
          \x20 xla-train   train via the AOT PJRT artifact (--steps, --artifacts)\n\
          \x20 optimize    lowering-optimizer report for CaffeNet layers (--batch)\n\
+         \x20 backends    exec::Backend registry: capability table, a simulated\n\
+         \x20             asymmetric hybrid conv (fig5 scheduler end to end), and a\n\
+         \x20             PJRT artifact probe (--batch, --artifacts DIR)\n\
          \x20 gemm        GEMM calibration (--size, --iters, --threads)\n\
          \x20 serve-bench micro-batched vs batch-1 inference serving (--net tiny|cifar, \n\
          \x20             --workers, --clients, --requests, --max-batch, --wait-us, --queue)\n\
@@ -594,6 +600,62 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
     match cct::gemm::pool::threads_with_prefix("cct-gemm-") {
         Some(n) => println!("gemm pool drained: live pool threads {n}"),
         None => println!("gemm pool drained (procfs unavailable)"),
+    }
+    Ok(())
+}
+
+fn cmd_backends(args: &Args) -> Result<()> {
+    let batch: usize = args.get("batch", 48)?;
+    let artifacts = args.get_str("artifacts", "artifacts");
+
+    // Two simulated paper devices next to the live host pool: same
+    // trait, three very different machines.
+    let sims = [
+        SimBackend::new(profiles::grid_k520(), 0.0, 1),
+        SimBackend::new(profiles::g2_host_cpu(), 0.0, 1),
+    ];
+    let fleet: Vec<(&dyn Backend, &str)> =
+        vec![(cct::exec::cpu(), "live"), (&sims[0], "sim"), (&sims[1], "sim")];
+    let mut t = Table::new(
+        "Execution backends (exec::Backend)",
+        &["backend", "kind", "peak GFLOP/s", "mem GB/s", "pcie GB/s", "cores"],
+    );
+    for (be, tag) in &fleet {
+        let c = be.caps();
+        t.row(&[
+            format!("{} ({tag})", c.name),
+            format!("{:?}", c.kind),
+            format!("{}", c.peak_gflops),
+            format!("{}", c.mem_gbps),
+            c.pcie_gbps.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            c.cores.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Drive the fig5 hybrid scheduler end to end over the simulated
+    // asymmetric pair: one conv batch FLOPS-split across both devices.
+    let shape = ConvShape::simple(16, 3, 8, 16, batch);
+    let mut rng = Pcg64::new(11);
+    let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let weights = Tensor::randn(shape.weight_shape(), 0.0, 0.1, &mut rng);
+    let pair: Vec<&dyn Backend> = vec![&sims[0], &sims[1]];
+    let (_, stats) = conv_hybrid(&shape, &data, &weights, &pair, pair.len());
+    println!(
+        "\nhybrid conv b={batch} on [{}, {}]: split {:?}, makespan {:.3} ms, charged {:.3}/{:.3} device-ms",
+        sims[0].spec().name,
+        sims[1].spec().name,
+        stats.assignment,
+        stats.makespan_s * 1e3,
+        sims[0].charged_seconds() * 1e3,
+        sims[1].charged_seconds() * 1e3,
+    );
+
+    // PJRT probe: report *why* no offload backend is available instead
+    // of failing the whole command.
+    match PjrtBackend::try_new(&artifacts, profiles::k40()) {
+        Ok(be) => println!("pjrt: artifact backend ready ({})", be.caps().name),
+        Err(e) => println!("pjrt probe ('{artifacts}'): unavailable — {e:#}"),
     }
     Ok(())
 }

@@ -291,7 +291,16 @@ impl Net {
     /// }
     /// ```
     pub fn plan(&self, b: usize) -> Workspace {
-        self.plan_impl(b, true)
+        self.plan_impl(b, true, crate::exec::cpu())
+    }
+
+    /// [`Net::plan`] against an explicit backend: the planning-time
+    /// arena warm-up goes through
+    /// [`Backend::alloc_arena`](crate::exec::Backend::alloc_arena), so
+    /// a device backend can size its own scratch. The workspace layout
+    /// itself is backend-independent.
+    pub fn plan_on(&self, b: usize, backend: &dyn crate::exec::Backend) -> Workspace {
+        self.plan_impl(b, true, backend)
     }
 
     /// Plan a *forward-only* [`Workspace`] for batch size `b`: same
@@ -301,18 +310,19 @@ impl Net {
     /// Running a backward pass through such a workspace panics
     /// (checked via [`Workspace::has_gradient_arena`]).
     pub fn plan_forward(&self, b: usize) -> Workspace {
-        self.plan_impl(b, false)
+        self.plan_impl(b, false, crate::exec::cpu())
     }
 
-    fn plan_impl(&self, b: usize, with_grads: bool) -> Workspace {
-        // Planning also sizes the GEMM substrate: warm this thread's
-        // packing arena so steady-state steps allocate nothing — not
+    fn plan_impl(&self, b: usize, with_grads: bool, backend: &dyn crate::exec::Backend) -> Workspace {
+        // Planning also sizes the compute substrate: let the backend
+        // warm its per-thread scratch (for the CPU pool, this thread's
+        // packing arena) so steady-state steps allocate nothing — not
         // even packing buffers. (The shared compute pool itself starts
         // lazily on the first `threads > 1` GEMM, or eagerly via
         // `gemm::pool::prewarm()` in callers that know they'll run
         // threaded — the serve engine, the coordinator — so purely
         // single-threaded users never pay for idle pool workers.)
-        crate::gemm::pool::warm_local();
+        backend.alloc_arena();
         let (c, h, w) = self.input_dims;
         let mut cur = Shape::from((b, c, h, w));
         let mut slots = vec![Tensor::zeros(cur)];

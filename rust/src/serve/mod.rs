@@ -657,9 +657,13 @@ impl ServeEngine {
             // thread itself never allocates a tensor.
             let workspaces: Vec<(usize, Workspace)> =
                 buckets.iter().map(|&b| (b, net.plan_forward(b))).collect();
+            // Serve workers pin the host pool backend explicitly: the
+            // shared persistent GEMM pool is the device this engine's
+            // thread budget (`gemm_pool_threads`) was sized for.
             let ctx = ExecCtx {
                 threads: serve.threads_per_worker.max(1),
                 phase: Phase::Test,
+                backend: crate::exec::cpu(),
                 ..Default::default()
             };
             let rx = Arc::clone(&work_rx);

@@ -13,6 +13,7 @@
 //! chunks are disjoint and the arithmetic per element unchanged, so
 //! pooled and serial updates are bit-identical.
 
+use crate::exec::Backend;
 use crate::gemm::pool;
 use crate::layers::ExecCtx;
 use crate::net::{Net, Workspace};
@@ -30,6 +31,7 @@ const POOL_UPDATE_MIN: usize = 1 << 16;
 /// large blobs when the caller's thread budget allows. Bit-identical
 /// to the serial loop (chunks are disjoint, per-element arithmetic
 /// unchanged).
+#[allow(clippy::too_many_arguments)]
 fn momentum_update(
     momentum: f32,
     lr: f32,
@@ -38,6 +40,7 @@ fn momentum_update(
     w: &mut [f32],
     v: &mut [f32],
     threads: usize,
+    backend: &dyn Backend,
 ) {
     let n = w.len();
     if n < POOL_UPDATE_MIN || threads <= 1 {
@@ -51,7 +54,7 @@ fn momentum_update(
     let per = n.div_ceil(nchunks);
     let wp = pool::SendMutF32(w.as_mut_ptr());
     let vp = pool::SendMutF32(v.as_mut_ptr());
-    pool::parallel_for(threads, nchunks, &|t| {
+    backend.parallel_for(threads, nchunks, &|t| {
         let lo = t * per;
         let hi = ((t + 1) * per).min(n);
         // SAFETY: chunks are disjoint index ranges of w and v, which
@@ -139,6 +142,13 @@ impl SgdSolver {
     /// elements stripe their update over the shared compute pool,
     /// bit-identically to the serial loop.
     pub fn step_with_threads(&mut self, net: &mut Net, threads: usize) {
+        self.step_with_backend(net, threads, crate::exec::cpu());
+    }
+
+    /// [`SgdSolver::step_with_threads`] with the striped updates
+    /// routed through `backend` — what [`SgdSolver::train_step`] and
+    /// friends call with their `ExecCtx`'s backend handle.
+    pub fn step_with_backend(&mut self, net: &mut Net, threads: usize, backend: &dyn Backend) {
         let lr = self.cfg.lr_at(self.iter);
         let momentum = self.cfg.momentum;
         let decay = self.cfg.weight_decay;
@@ -157,6 +167,7 @@ impl SgdSolver {
                 p.data.as_mut_slice(),
                 v.as_mut_slice(),
                 threads,
+                backend,
             );
             p.zero_grad();
         }
@@ -170,7 +181,7 @@ impl SgdSolver {
         let mut step_ctx = *ctx;
         step_ctx.seed = ctx.seed.wrapping_add(self.iter as u64); // fresh dropout mask per step
         let loss = net.forward_backward(data, labels, &step_ctx);
-        self.step_with_threads(net, ctx.threads);
+        self.step_with_backend(net, ctx.threads, ctx.backend);
         loss
     }
 
@@ -187,7 +198,7 @@ impl SgdSolver {
         let mut step_ctx = *ctx;
         step_ctx.seed = ctx.seed.wrapping_add(self.iter as u64);
         let loss = net.forward_backward_in(ws, labels, &step_ctx);
-        self.step_with_threads(net, ctx.threads);
+        self.step_with_backend(net, ctx.threads, ctx.backend);
         loss
     }
 }
