@@ -1,0 +1,775 @@
+//! The audit checks: each one scans the per-line code/comment views
+//! produced by [`crate::audit::lexer`] and reports [`Finding`]s.
+//!
+//! All checks skip `#[cfg(test)]` item spans — test code may use
+//! `SeqCst` counters, allocate freely, and take locks in any order
+//! without polluting the production-invariant report.
+
+use super::lexer::{find_word, is_ident_char, lex, Line};
+
+/// One audit violation, anchored to a file and 1-indexed line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path of the offending file (as given to the check).
+    pub path: String,
+    /// 1-indexed line number.
+    pub line: usize,
+    /// Short check identifier (`safety`, `ordering`, `hot-alloc`,
+    /// `lock-order`, `atomic-pairing`, `claim-map`).
+    pub check: &'static str,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.check, self.message)
+    }
+}
+
+/// A lexed source file with its `#[cfg(test)]` spans marked.
+pub struct SourceFile {
+    /// Path the file was read from (used in findings).
+    pub path: String,
+    /// Per-line code/comment views.
+    pub lines: Vec<Line>,
+    /// `true` for lines inside a `#[cfg(test)]` item span.
+    pub in_test: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Lex `source` and mark its `#[cfg(test)]` item spans.
+    pub fn parse(path: &str, source: &str) -> Self {
+        let lines = lex(source);
+        let in_test = mark_test_spans(&lines);
+        SourceFile { path: path.to_string(), lines, in_test }
+    }
+
+    fn finding(&self, line0: usize, check: &'static str, message: String) -> Finding {
+        Finding { path: self.path.clone(), line: line0 + 1, check, message }
+    }
+}
+
+/// Mark every line belonging to an item annotated `#[cfg(test)]`
+/// (attribute line through the item's closing brace).
+fn mark_test_spans(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    for i in 0..lines.len() {
+        let code = lines[i].code.trim();
+        if !(code.starts_with("#[") && code.contains("cfg(test)")) {
+            continue;
+        }
+        if let Some(end) = item_span_end(lines, i) {
+            for flag in in_test.iter_mut().take(end + 1).skip(i) {
+                *flag = true;
+            }
+        }
+    }
+    in_test
+}
+
+/// Find the last line of the item starting at (or just after) line
+/// `start`: scan for the first `{` and brace-match it. Returns `None`
+/// for brace-less items (`#[attr] use x;` or trait-method signatures)
+/// and for unbalanced input.
+fn item_span_end(lines: &[Line], start: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut opened = false;
+    for (j, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if opened && depth == 0 {
+                        return Some(j);
+                    }
+                }
+                ';' if !opened && depth == 0 => return None,
+                _ => {}
+            }
+        }
+        // Safety valve: an attribute followed by 20 lines with no brace
+        // is not a block item we know how to span.
+        if !opened && j > start + 20 {
+            return None;
+        }
+    }
+    None
+}
+
+/// Comment markers that satisfy the `unsafe` contract requirement.
+fn has_safety_marker(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// How many lines of comments/attributes to walk up looking for a
+/// `SAFETY:` contract above an `unsafe` site.
+const SAFETY_WALKUP: usize = 40;
+
+/// Check 1 — every `unsafe` keyword (block, fn, impl, trait) outside
+/// test code must carry a `// SAFETY:` contract comment or a
+/// `/// # Safety` doc section, on the same line or in the contiguous
+/// comment/attribute block directly above it.
+pub fn check_safety_contracts(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for i in 0..file.lines.len() {
+        if file.in_test[i] || find_word(&file.lines[i].code, "unsafe").is_none() {
+            continue;
+        }
+        if has_safety_marker(&file.lines[i].comment) {
+            continue;
+        }
+        let mut ok = false;
+        let mut steps = 0usize;
+        let mut j = i;
+        while j > 0 && steps < SAFETY_WALKUP {
+            j -= 1;
+            steps += 1;
+            let line = &file.lines[j];
+            if has_safety_marker(&line.comment) {
+                ok = true;
+                break;
+            }
+            if line.has_code() {
+                let t = line.code.trim();
+                // Attributes between the contract and the item are
+                // fine (`#[target_feature(...)]`, `#[inline]`, ...).
+                if t.starts_with("#[") || t.starts_with("#!") {
+                    continue;
+                }
+                break;
+            }
+            if line.comment.is_empty() {
+                // Blank line: the contract must adjoin its site.
+                break;
+            }
+        }
+        if !ok {
+            out.push(file.finding(
+                i,
+                "safety",
+                "`unsafe` without a `// SAFETY:` contract (or `/// # Safety` section) directly above"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// How many preceding lines an `// ordering:` justification may sit
+/// above its `Relaxed` use (lets one comment cover a short cluster).
+const ORDERING_WALKUP: usize = 3;
+
+/// Check 2 — every `Ordering::Relaxed` outside test code must carry an
+/// `// ordering:` justification on the same line or within the
+/// preceding [`ORDERING_WALKUP`] lines.
+pub fn check_ordering_justifications(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for i in 0..file.lines.len() {
+        if file.in_test[i] || find_word(&file.lines[i].code, "Relaxed").is_none() {
+            continue;
+        }
+        // Imports of the ordering enum are not uses of it.
+        if file.lines[i].code.trim().starts_with("use ") {
+            continue;
+        }
+        let justified = (i.saturating_sub(ORDERING_WALKUP)..=i)
+            .any(|j| file.lines[j].comment.contains("ordering:"));
+        if !justified {
+            out.push(file.finding(
+                i,
+                "ordering",
+                "`Ordering::Relaxed` without an `// ordering:` justification nearby".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Atomic accessor methods recognized by the pairing check, with
+/// whether each is a read side, a write side, or (RMW) both.
+const ATOMIC_OPS: &[(&str, bool, bool)] = &[
+    (".load(", true, false),
+    (".store(", false, true),
+    (".swap(", true, true),
+    (".fetch_add(", true, true),
+    (".fetch_sub(", true, true),
+    (".fetch_max(", true, true),
+    (".fetch_min(", true, true),
+    (".fetch_and(", true, true),
+    (".fetch_or(", true, true),
+    (".fetch_xor(", true, true),
+    (".compare_exchange(", true, true),
+    (".compare_exchange_weak(", true, true),
+];
+
+/// The memory-ordering name used by one atomic access.
+fn ordering_of(rest: &str) -> Option<&'static str> {
+    ["SeqCst", "AcqRel", "Acquire", "Release", "Relaxed"]
+        .into_iter()
+        .filter_map(|o| find_word(rest, o).map(|at| (at, o)))
+        .min_by_key(|&(at, _)| at)
+        .map(|(_, o)| o)
+}
+
+/// The receiver identifier immediately before an atomic method call
+/// (`self.shared.tasks_done.load(..)` → `tasks_done`).
+fn field_before(code: &str, dot_at: usize) -> String {
+    code[..dot_at]
+        .chars()
+        .rev()
+        .take_while(|&c| is_ident_char(c))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect()
+}
+
+/// Check 3b — per-field Acquire/Release pairing: a field read with an
+/// Acquire-class load must have a Release-class publisher somewhere in
+/// the same file, and vice versa. (Scoped to `gemm/pool.rs`, where the
+/// job-publication protocol lives; other files use mutex-mediated or
+/// purely-statistical atomics.)
+pub fn check_acquire_release_pairing(file: &SourceFile) -> Vec<Finding> {
+    #[derive(Default)]
+    struct FieldUse {
+        acquire_load: Option<usize>,
+        release_write: Option<usize>,
+    }
+    let mut fields: std::collections::BTreeMap<String, FieldUse> =
+        std::collections::BTreeMap::new();
+    for i in 0..file.lines.len() {
+        if file.in_test[i] {
+            continue;
+        }
+        let code = &file.lines[i].code;
+        for &(op, is_read, is_write) in ATOMIC_OPS {
+            let mut from = 0usize;
+            while let Some(rel) = code[from..].find(op) {
+                let at = from + rel;
+                let field = field_before(code, at);
+                from = at + op.len();
+                if field.is_empty() {
+                    continue;
+                }
+                let Some(order) = ordering_of(&code[at..]) else { continue };
+                let entry = fields.entry(field).or_default();
+                if is_read && matches!(order, "Acquire" | "AcqRel" | "SeqCst") {
+                    entry.acquire_load.get_or_insert(i);
+                }
+                if is_write && matches!(order, "Release" | "AcqRel" | "SeqCst") {
+                    entry.release_write.get_or_insert(i);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (field, used) in fields {
+        match (used.acquire_load, used.release_write) {
+            (Some(line), None) => out.push(file.finding(
+                line,
+                "atomic-pairing",
+                format!("`{field}` has an Acquire-class load but no Release-class write in this file"),
+            )),
+            (None, Some(line)) => out.push(file.finding(
+                line,
+                "atomic-pairing",
+                format!("`{field}` has a Release-class write but no Acquire-class load in this file"),
+            )),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Allocating calls denied inside steady-state hot regions.
+const DENIED_ALLOCS: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    ".to_vec",
+    ".clone()",
+    "Box::new",
+    ".collect",
+    "String::from",
+    ".to_string",
+    "format!",
+];
+
+/// Whether a denied allocation on line `i` is waived by an
+/// `// audit: allow(alloc, <reason>)` on the same or previous line.
+fn alloc_allowed(file: &SourceFile, i: usize) -> bool {
+    let here = &file.lines[i].comment;
+    if here.contains("audit: allow(alloc") {
+        return true;
+    }
+    i > 0 && file.lines[i - 1].comment.contains("audit: allow(alloc")
+}
+
+/// Check 3a — the hot-path allocation lint. Hot regions are:
+///
+/// * explicit `// audit: hot-begin(<label>)` .. `// audit: hot-end(<label>)`
+///   marker spans (an unmatched begin extends to end of file), and
+/// * the body of every function whose name contains `_into` (the
+///   plan-once/run-many convention: `*_into` entry points are the
+///   steady-state, preallocated paths).
+///
+/// Denied tokens inside a hot region need an
+/// `// audit: allow(alloc, <reason>)` waiver on the same or the
+/// immediately preceding line.
+pub fn check_hot_path_allocs(file: &SourceFile) -> Vec<Finding> {
+    let n = file.lines.len();
+    let mut hot = vec![false; n];
+    // Explicit marker spans.
+    let mut open_at: Option<usize> = None;
+    for i in 0..n {
+        let c = &file.lines[i].comment;
+        if c.contains("audit: hot-begin(") {
+            open_at = Some(i);
+        }
+        if let Some(start) = open_at {
+            for flag in hot.iter_mut().take(i + 1).skip(start) {
+                *flag = true;
+            }
+        }
+        if c.contains("audit: hot-end(") {
+            open_at = None;
+        }
+    }
+    if open_at.is_some() {
+        for flag in hot.iter_mut() {
+            *flag = true;
+        }
+    }
+    // `*_into` function bodies.
+    for i in 0..n {
+        if file.in_test[i] {
+            continue;
+        }
+        let code = &file.lines[i].code;
+        let Some(fn_at) = find_word(code, "fn") else { continue };
+        let after = &code[fn_at + 2..];
+        let name: String =
+            after.trim_start().chars().take_while(|&c| is_ident_char(c)).collect();
+        if !name.contains("_into") {
+            continue;
+        }
+        if let Some(end) = item_span_end(&file.lines, i) {
+            for flag in hot.iter_mut().take(end + 1).skip(i) {
+                *flag = true;
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for i in 0..n {
+        if !hot[i] || file.in_test[i] {
+            continue;
+        }
+        for tok in DENIED_ALLOCS {
+            if file.lines[i].code.contains(tok) && !alloc_allowed(file, i) {
+                out.push(file.finding(
+                    i,
+                    "hot-alloc",
+                    format!(
+                        "allocating call `{tok}` in a steady-state hot region (annotate \
+                         `// audit: allow(alloc, <reason>)` if intended)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// One entry of the declared lock hierarchy: acquiring `pattern` in a
+/// file whose path ends with `path_suffix` takes a lock at `level`.
+/// Lower levels are outer — holding a lock at level L, code may only
+/// acquire locks at level ≥ L.
+pub struct LockRule {
+    /// Only lines in files whose path ends with this apply.
+    pub path_suffix: &'static str,
+    /// Code substring that acquires the lock.
+    pub pattern: &'static str,
+    /// Hierarchy level (0 = outermost).
+    pub level: u8,
+    /// Name used in findings.
+    pub name: &'static str,
+}
+
+impl LockRule {
+    /// Compact constructor so lock tables read one rule per line.
+    pub const fn new(
+        path_suffix: &'static str,
+        pattern: &'static str,
+        level: u8,
+        name: &'static str,
+    ) -> Self {
+        LockRule { path_suffix, pattern, level, name }
+    }
+}
+
+/// The crate's declared lock hierarchy:
+/// registry (0) → serve engine (1) → GEMM pool (2) → solver shards (3).
+///
+/// Lexical and intra-file by construction: each pattern only ranks in
+/// its own file, so cross-module call chains are covered by each
+/// module holding its own end of the contract (the registry never
+/// calls back up into itself from pool code, and a violation inside
+/// any one module is caught directly).
+pub fn default_lock_table() -> &'static [LockRule] {
+    const T: &[LockRule] = &[
+        LockRule::new("serve/registry.rs", "relock(", 0, "registry ops/flip lock"),
+        LockRule::new("serve/registry.rs", ".models.", 0, "registry model table"),
+        LockRule::new("serve/lanes.rs", "self.state.lock(", 1, "engine lane queue"),
+        LockRule::new("serve/mod.rs", "rx.lock(", 1, "engine work queue"),
+        LockRule::new("serve/http.rs", "rx.lock(", 1, "http conn queue"),
+        LockRule::new("gemm/pool.rs", "lock_ctrl(", 2, "pool ctrl"),
+        LockRule::new("gemm/pool.rs", ".ctrl.lock(", 2, "pool ctrl"),
+        LockRule::new("gemm/pool.rs", ".run_lock.", 2, "pool run lock"),
+        LockRule::new("gemm/pool.rs", "GLOBAL.lock(", 2, "global pool registry"),
+        LockRule::new("solver/mod.rs", "chunk_guard(", 3, "solver chunk shard"),
+        LockRule::new("solver/mod.rs", ".locks[", 3, "solver chunk shard"),
+    ];
+    T
+}
+
+/// Check 4 — declared-lock-hierarchy violations: within a function,
+/// acquiring a lock at a strictly lower level while one at a higher
+/// level is held (per the brace structure) is flagged. Waive a
+/// deliberate inversion with `// audit: allow(lock-order, <reason>)`.
+pub fn check_lock_hierarchy(file: &SourceFile, table: &[LockRule]) -> Vec<Finding> {
+    let rules: Vec<&LockRule> =
+        table.iter().filter(|r| file.path.ends_with(r.path_suffix)).collect();
+    if rules.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    // (level, name, release_depth): the guard dies when the brace depth
+    // drops below `release_depth`.
+    let mut held: Vec<(u8, &'static str, i64)> = Vec::new();
+    let mut depth: i64 = 0;
+    for i in 0..file.lines.len() {
+        let code = &file.lines[i].code;
+        if file.in_test[i] {
+            // Keep depth bookkeeping through test spans so production
+            // code after them still tracks correctly.
+            for c in code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if depth <= 0 {
+                held.clear();
+            }
+            continue;
+        }
+        // Columns at which a ranked acquisition happens on this line.
+        let mut acquisitions: Vec<(usize, &LockRule)> = Vec::new();
+        for rule in &rules {
+            let mut from = 0usize;
+            while let Some(rel) = code[from..].find(rule.pattern) {
+                let at = from + rel;
+                from = at + rule.pattern.len();
+                // A function *definition* whose name matches the
+                // pattern is not an acquisition.
+                if code[..at].trim_end().ends_with("fn") {
+                    continue;
+                }
+                acquisitions.push((at, rule));
+            }
+        }
+        acquisitions.sort_by_key(|&(at, _)| at);
+        let waived = file.lines[i].comment.contains("audit: allow(lock-order")
+            || (i > 0 && file.lines[i - 1].comment.contains("audit: allow(lock-order"));
+        let mut next = acquisitions.iter().peekable();
+        for (col, c) in code.char_indices() {
+            while let Some(&&(at, rule)) = next.peek() {
+                if at > col {
+                    break;
+                }
+                next.next();
+                if !waived {
+                    for &(hlevel, hname, _) in &held {
+                        if rule.level < hlevel {
+                            out.push(file.finding(
+                                i,
+                                "lock-order",
+                                format!(
+                                    "acquires {} (level {}) while holding {} (level {}) — \
+                                     violates the declared hierarchy",
+                                    rule.name, rule.level, hname, hlevel
+                                ),
+                            ));
+                            break;
+                        }
+                    }
+                }
+                held.push((rule.level, rule.name, depth));
+            }
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    held.retain(|&(_, _, rd)| depth >= rd);
+                }
+                _ => {}
+            }
+        }
+        // Trailing acquisitions after the last char (pattern at line end).
+        for &(_, rule) in next {
+            if !waived {
+                for &(hlevel, hname, _) in &held {
+                    if rule.level < hlevel {
+                        out.push(file.finding(
+                            i,
+                            "lock-order",
+                            format!(
+                                "acquires {} (level {}) while holding {} (level {}) — \
+                                 violates the declared hierarchy",
+                                rule.name, rule.level, hname, hlevel
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+            held.push((rule.level, rule.name, depth));
+        }
+        if depth <= 0 {
+            // Back at item level: nothing survives across functions.
+            held.clear();
+        }
+    }
+    out
+}
+
+/// Check 5 — claim-map cross-check: every `BENCH_*.json` artifact the
+/// CI workflow mentions must have a claim-map row (its name) in the
+/// README.
+pub fn check_claim_map(ci_path: &str, ci_text: &str, readme_text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, line) in ci_text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(at) = rest.find("BENCH_") {
+            let tail = &rest[at..];
+            let name_len = tail
+                .char_indices()
+                .take_while(|&(_, c)| is_ident_char(c) || c == '.')
+                .last()
+                .map(|(idx, c)| idx + c.len_utf8())
+                .unwrap_or(0);
+            let name = tail[..name_len].trim_end_matches('.');
+            rest = &tail["BENCH_".len()..];
+            if !name.ends_with(".json") {
+                continue;
+            }
+            if seen.insert(name.to_string()) && !readme_text.contains(name) {
+                out.push(Finding {
+                    path: ci_path.to_string(),
+                    line: i + 1,
+                    check: "claim-map",
+                    message: format!("CI artifact `{name}` has no claim-map row in README.md"),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Run every per-file check on `file`. The Acquire/Release pairing
+/// check is scoped to `gemm/pool.rs` (see
+/// [`check_acquire_release_pairing`]).
+pub fn audit_source(file: &SourceFile) -> Vec<Finding> {
+    let mut out = check_safety_contracts(file);
+    out.extend(check_ordering_justifications(file));
+    out.extend(check_hot_path_allocs(file));
+    out.extend(check_lock_hierarchy(file, default_lock_table()));
+    if file.path.ends_with("gemm/pool.rs") {
+        out.extend(check_acquire_release_pairing(file));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::parse("fixture.rs", src)
+    }
+
+    #[test]
+    fn unsafe_without_contract_is_flagged_with_line() {
+        let src = "fn f() {\n    let x = unsafe { *p };\n}\n";
+        let f = check_safety_contracts(&parse(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].check, "safety");
+    }
+
+    #[test]
+    fn unsafe_with_contract_passes() {
+        let src = "fn f() {\n    // SAFETY: p is valid for reads.\n    let x = unsafe { *p };\n}\n";
+        assert!(check_safety_contracts(&parse(src)).is_empty());
+        let same_line = "fn f() {\n    let x = unsafe { *p }; // SAFETY: p is valid.\n}\n";
+        assert!(check_safety_contracts(&parse(same_line)).is_empty());
+    }
+
+    #[test]
+    fn doc_safety_section_satisfies_unsafe_fn() {
+        let src = "/// Does things.\n///\n/// # Safety\n/// Caller checks bounds.\n#[inline]\nunsafe fn g(p: *const u8) {}\n";
+        assert!(check_safety_contracts(&parse(src)).is_empty());
+    }
+
+    #[test]
+    fn second_unsafe_impl_needs_its_own_contract() {
+        let src = "// SAFETY: pointers outlive the run.\nunsafe impl Send for J {}\nunsafe impl Sync for J {}\n";
+        let f = check_safety_contracts(&parse(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_in_test_module_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { unsafe { danger() } }\n}\n";
+        assert!(check_safety_contracts(&parse(src)).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_string_literal_is_not_a_site() {
+        let src = "fn f() { let s = \"unsafe\"; }\n";
+        assert!(check_safety_contracts(&parse(src)).is_empty());
+    }
+
+    #[test]
+    fn relaxed_without_justification_is_flagged_with_line() {
+        let src = "fn f(a: &AtomicUsize) {\n    a.store(1, Ordering::Relaxed);\n}\n";
+        let f = check_ordering_justifications(&parse(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].check, "ordering");
+    }
+
+    #[test]
+    fn relaxed_with_justification_passes() {
+        let src = "fn f(a: &AtomicUsize) {\n    // ordering: stat counter, no reader depends on it.\n    a.store(1, Ordering::Relaxed);\n}\n";
+        assert!(check_ordering_justifications(&parse(src)).is_empty());
+        // One comment may cover a short cluster within the walk-up.
+        let cluster = "fn f(a: &AtomicUsize, b: &AtomicUsize) {\n    // ordering: reset under the ctrl lock.\n    a.store(0, Ordering::Relaxed);\n    b.store(0, Ordering::Relaxed);\n}\n";
+        assert!(check_ordering_justifications(&parse(cluster)).is_empty());
+    }
+
+    #[test]
+    fn relaxed_import_is_not_a_use() {
+        let src = "use std::sync::atomic::Ordering::Relaxed;\n";
+        assert!(check_ordering_justifications(&parse(src)).is_empty());
+    }
+
+    #[test]
+    fn hot_region_vec_new_is_flagged_with_line() {
+        let src = "// audit: hot-begin(kernel)\nfn step() {\n    let v = Vec::new();\n}\n// audit: hot-end(kernel)\n";
+        let f = check_hot_path_allocs(&parse(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].check, "hot-alloc");
+    }
+
+    #[test]
+    fn hot_region_alloc_waived_by_annotation() {
+        let src = "// audit: hot-begin(kernel)\nfn step() {\n    // audit: allow(alloc, one-time growth at plan time)\n    let v = Vec::new();\n}\n// audit: hot-end(kernel)\n";
+        assert!(check_hot_path_allocs(&parse(src)).is_empty());
+    }
+
+    #[test]
+    fn into_fn_bodies_are_hot() {
+        let src = "fn forward_into(&self, out: &mut [f32]) {\n    let tmp = data.to_vec();\n}\nfn plan(&self) {\n    let v = Vec::new();\n}\n";
+        let f = check_hot_path_allocs(&parse(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn outside_hot_regions_allocs_are_fine() {
+        let src = "fn setup() {\n    let v = Vec::new();\n    let s = format!(\"x\");\n}\n";
+        assert!(check_hot_path_allocs(&parse(src)).is_empty());
+    }
+
+    #[test]
+    fn out_of_order_lock_pair_is_flagged_with_line() {
+        const TABLE: &[LockRule] = &[
+            LockRule::new("fixture.rs", ".outer.lock(", 0, "outer"),
+            LockRule::new("fixture.rs", ".inner.lock(", 1, "inner"),
+        ];
+        let bad = "fn f(&self) {\n    let g = self.inner.lock();\n    let h = self.outer.lock();\n}\n";
+        let f = check_lock_hierarchy(&parse(bad), TABLE);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].check, "lock-order");
+
+        let good = "fn f(&self) {\n    let g = self.outer.lock();\n    let h = self.inner.lock();\n}\n";
+        assert!(check_lock_hierarchy(&parse(good), TABLE).is_empty());
+    }
+
+    #[test]
+    fn lock_released_at_block_end_is_not_held() {
+        const TABLE: &[LockRule] = &[
+            LockRule::new("fixture.rs", ".outer.lock(", 0, "outer"),
+            LockRule::new("fixture.rs", ".inner.lock(", 1, "inner"),
+        ];
+        // The inner-lock block closes before the outer acquisition.
+        let src = "fn f(&self) {\n    {\n        let g = self.inner.lock();\n    }\n    let h = self.outer.lock();\n}\n";
+        assert!(check_lock_hierarchy(&parse(src), TABLE).is_empty());
+    }
+
+    #[test]
+    fn same_level_nesting_is_allowed() {
+        const TABLE: &[LockRule] = &[
+            LockRule::new("fixture.rs", ".a.lock(", 0, "a"),
+            LockRule::new("fixture.rs", ".b.lock(", 0, "b"),
+        ];
+        let src = "fn f(&self) {\n    let g = self.a.lock();\n    let h = self.b.lock();\n}\n";
+        assert!(check_lock_hierarchy(&parse(src), TABLE).is_empty());
+    }
+
+    #[test]
+    fn pairing_acquire_load_without_release_write_is_flagged() {
+        let src = "fn f(s: &S) {\n    let d = s.done.load(Ordering::Acquire);\n    s.done.store(1, Ordering::Relaxed);\n}\n";
+        let mut file = parse(src);
+        file.path = "gemm/pool.rs".to_string();
+        let f = check_acquire_release_pairing(&file);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].check, "atomic-pairing");
+    }
+
+    #[test]
+    fn pairing_acqrel_rmw_satisfies_both_sides() {
+        let src = "fn f(s: &S) {\n    let d = s.done.load(Ordering::Acquire);\n    s.done.fetch_add(1, Ordering::AcqRel);\n    s.next.fetch_add(1, Ordering::Relaxed);\n}\n";
+        let mut file = parse(src);
+        file.path = "gemm/pool.rs".to_string();
+        assert!(check_acquire_release_pairing(&file).is_empty());
+    }
+
+    #[test]
+    fn claim_map_missing_row_is_flagged() {
+        let ci = "      - run: python3 bench.py > BENCH_gemm.json\n      - run: python3 other.py > BENCH_missing.json\n";
+        let readme = "| fig2 | BENCH_gemm.json | gemm ≥ naive |\n";
+        let f = check_claim_map("ci.yml", ci, readme);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("BENCH_missing.json"));
+    }
+
+    #[test]
+    fn allocs_in_test_spans_inside_hot_markers_are_exempt() {
+        let src = "// audit: hot-begin(x)\n#[cfg(test)]\nmod tests {\n    fn t() { let v = Vec::new(); }\n}\n// audit: hot-end(x)\n";
+        assert!(check_hot_path_allocs(&parse(src)).is_empty());
+    }
+}

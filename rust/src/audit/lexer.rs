@@ -1,0 +1,388 @@
+//! A minimal, dependency-free lexer for the audit pass.
+//!
+//! [`lex`] splits a Rust source file into per-line *code* and *comment*
+//! views:
+//!
+//! * the **code** view keeps every code character in its original
+//!   column, blanks the contents of string/char literals (so braces or
+//!   keywords inside `"..."` never confuse token or brace matching),
+//!   and blanks comments entirely;
+//! * the **comment** view holds the text of `//`/`///`/`//!` line
+//!   comments and (possibly nested) `/* ... */` block comments, which
+//!   is where the audit conventions (`SAFETY:`, `ordering:`,
+//!   `audit: allow(...)`) live.
+//!
+//! The lexer is deliberately forgiving: it never panics on malformed
+//! input, it just stops classifying at end of file. It understands
+//! escapes in string literals, raw strings (`r"..."`, `r#"..."#`,
+//! byte variants), nested block comments, and the char-literal vs.
+//! lifetime ambiguity of `'`.
+
+/// One source line, split into its code and comment text.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code with literal contents and comments blanked (same columns).
+    pub code: String,
+    /// Concatenated comment text appearing on this line.
+    pub comment: String,
+}
+
+impl Line {
+    /// Whether the code view holds anything but whitespace.
+    pub fn has_code(&self) -> bool {
+        !self.code.trim().is_empty()
+    }
+}
+
+/// Lexer state between characters.
+enum State {
+    /// Plain code.
+    Code,
+    /// Inside `// ...` (ends at newline).
+    LineComment,
+    /// Inside `/* ... */`, tracking nesting depth.
+    BlockComment(usize),
+    /// Inside a `"..."` string literal.
+    Str,
+    /// Inside a raw string; the payload is the `#` count of the opener.
+    RawStr(usize),
+    /// Inside a `'...'` char/byte literal.
+    CharLit,
+}
+
+/// Split `source` into per-line code/comment views. Total: any input
+/// produces one [`Line`] per `\n`-separated source line.
+pub fn lex(source: &str) -> Vec<Line> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    // Push `cur` and reset at every newline, whatever the state.
+    macro_rules! newline {
+        () => {{
+            lines.push(std::mem::take(&mut cur));
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            newline!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    cur.code.push(' ');
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    cur.code.push(' ');
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur.code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && is_raw_string_start(&chars, i) {
+                    // Emit the prefix (r / br / rb#...#) then enter the
+                    // raw string at its opening quote.
+                    let (hashes, quote_at) = raw_string_open(&chars, i);
+                    for &p in &chars[i..quote_at] {
+                        cur.code.push(p);
+                    }
+                    cur.code.push('"');
+                    state = State::RawStr(hashes);
+                    i = quote_at + 1;
+                } else if c == '\'' {
+                    if is_char_literal(&chars, i) {
+                        state = State::CharLit;
+                        cur.code.push('\'');
+                        i += 1;
+                    } else {
+                        // A lifetime (or loop label): plain code.
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                cur.code.push(' ');
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    cur.code.push(' ');
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    if depth <= 1 {
+                        state = State::Code;
+                    } else {
+                        state = State::BlockComment(depth - 1);
+                    }
+                    cur.code.push(' ');
+                    cur.code.push(' ');
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char (handles \" and \\).
+                    cur.code.push(' ');
+                    if let Some(&e) = chars.get(i + 1) {
+                        if e != '\n' {
+                            cur.code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    state = State::Code;
+                    cur.code.push('"');
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw_string(&chars, i, hashes) {
+                    cur.code.push('"');
+                    for _ in 0..hashes {
+                        cur.code.push('#');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if chars.get(i + 1).is_some() {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    state = State::Code;
+                    cur.code.push('\'');
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Final line without a trailing newline.
+    if cur.has_code() || !cur.comment.is_empty() || !cur.code.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Whether position `i` (an `r` or `b`) starts a raw string literal
+/// (`r"`, `r#"`, `br"`, `br#"`, ...) rather than an identifier. Also
+/// requires that the previous char is not an identifier char, so
+/// `warr"x"` (not valid Rust anyway) and `foobr` never misfire.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return false;
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) != Some(&'r') {
+            return false;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// For a confirmed raw-string start at `i`, return the opener's `#`
+/// count and the index of its opening quote.
+fn raw_string_open(chars: &[char], i: usize) -> (usize, usize) {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // the 'r'
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (hashes, j)
+}
+
+/// Whether the `"` at `i` closes a raw string opened with `hashes` `#`s.
+fn closes_raw_string(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|h| chars.get(i + h) == Some(&'#'))
+}
+
+/// Disambiguate `'` between a char literal and a lifetime: `'\...` is
+/// always a char literal; `'x'` (closing quote two ahead) is a char
+/// literal; everything else (`'a>`, `'static`, `'outer:`) is a
+/// lifetime or loop label.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// `true` for characters that may appear in a Rust identifier.
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find `needle` in `code` at a word boundary: the characters on both
+/// sides of the match (if any) must not be identifier characters.
+/// Returns the byte offset of the first such match.
+pub fn find_word(code: &str, needle: &str) -> Option<usize> {
+    if needle.is_empty() {
+        return None;
+    }
+    let mut from = 0usize;
+    while let Some(rel) = code[from..].find(needle) {
+        let at = from + rel;
+        let before_ok = !code[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !code[at + needle.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + needle.len();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_blanked_but_quotes_kept() {
+        let lines = lex("let s = \"unsafe { vec![] }\";");
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].code.contains("let s = \""));
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("vec!"));
+        // Columns preserved: same length as the input.
+        assert_eq!(lines[0].code.chars().count(), "let s = \"unsafe { vec![] }\";".chars().count());
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let lines = lex(r#"let s = "a\"unsafe\"b"; let t = 1;"#);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"fn main() { Ordering::Relaxed }\"#; let u = 2;";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("Relaxed"));
+        assert!(lines[0].code.contains("let u = 2;"));
+    }
+
+    #[test]
+    fn multiline_raw_strings_blank_every_line() {
+        let src = "let s = r#\"line one\nunsafe line two\n\"#;\nlet done = 3;";
+        let lines = lex(src);
+        assert_eq!(lines.len(), 4);
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[3].code.contains("let done = 3;"));
+    }
+
+    #[test]
+    fn line_comments_captured() {
+        let lines = lex("let x = 1; // SAFETY: fine\nlet y = 2;");
+        assert!(lines[0].comment.contains("SAFETY: fine"));
+        assert!(!lines[0].code.contains("SAFETY"));
+        assert!(lines[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        let lines = lex(src);
+        assert!(lines[0].code.contains('a'));
+        assert!(lines[0].code.contains('b'));
+        assert!(!lines[0].code.contains("still"));
+        assert!(lines[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn block_comment_spanning_lines() {
+        let src = "code1 /* comment\nmore comment */ code2";
+        let lines = lex(src);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].code.contains("code1"));
+        assert!(lines[1].code.contains("code2"));
+        assert!(lines[1].comment.contains("more comment"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let lines = lex("let c = '{'; fn f<'a>(x: &'a str) {} let q = '\\'';");
+        let code = &lines[0].code;
+        // The '{' literal is blanked: brace counting over code must
+        // balance on this line.
+        let open = code.matches('{').count();
+        let close = code.matches('}').count();
+        assert_eq!(open, close);
+        assert!(code.contains("<'a>"), "lifetimes stay in code: {code}");
+    }
+
+    #[test]
+    fn find_word_respects_boundaries() {
+        assert!(find_word("unsafe fn f()", "unsafe").is_some());
+        assert!(find_word("deny(unsafe_op_in_unsafe_fn)", "unsafe").is_none());
+        assert!(find_word("my_unsafe_thing", "unsafe").is_none());
+        assert!(find_word("x.unsafe()", "unsafe").is_some());
+    }
+
+    #[test]
+    fn doc_comments_are_comments() {
+        let lines = lex("/// # Safety\n/// caller checks bounds\nunsafe fn g() {}");
+        assert!(lines[0].comment.contains("# Safety"));
+        assert!(lines[2].code.contains("unsafe fn g"));
+    }
+}

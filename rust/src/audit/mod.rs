@@ -1,0 +1,118 @@
+//! `cct-audit` — the in-tree soundness gate.
+//!
+//! A dependency-free static-analysis pass over this crate's own
+//! sources (`rust/src/**/*.rs`), enforcing project invariants that
+//! rustc and clippy cannot express. Run it locally with
+//! `cargo run --bin cct-audit`; CI runs it as a blocking job. The
+//! checks:
+//!
+//! 1. **`safety`** — every `unsafe` block / fn / `unsafe impl` carries
+//!    a contract comment.
+//! 2. **`ordering`** — every `Ordering::Relaxed` carries a
+//!    justification.
+//! 3. **`atomic-pairing`** — per atomic field in `gemm/pool.rs`, an
+//!    Acquire-class load must pair with a Release-class publisher (and
+//!    vice versa).
+//! 4. **`hot-alloc`** — no allocating calls inside declared
+//!    steady-state regions or `*_into` bodies, unless waived.
+//! 5. **`lock-order`** — nested lock acquisitions must respect the
+//!    declared hierarchy: registry (0) → engine (1) → pool (2) →
+//!    solver shards (3).
+//! 6. **`claim-map`** — every `BENCH_*.json` CI artifact has a
+//!    claim-map row in the README.
+//!
+//! Test code (`#[cfg(test)]` item spans) is exempt from all checks.
+//!
+//! # Comment conventions
+//!
+//! The audit reads these markers out of comment text (never out of
+//! code, so string literals can't fake or break them):
+//!
+//! * `// SAFETY: <contract>` — directly above (or trailing) an
+//!   `unsafe` site; the contract states the invariants that make the
+//!   operation sound and who upholds them. For `unsafe fn`, a
+//!   `/// # Safety` doc section is equivalent. Attribute lines between
+//!   the comment and the item are fine; a blank line breaks the
+//!   association. Each `unsafe impl` of a pair needs its own contract.
+//! * `// ordering: <why this ordering suffices>` — on the same line as
+//!   an `Ordering::Relaxed` use or within the 3 lines above it (one
+//!   comment may cover a small cluster of related accesses). Typical
+//!   sound justifications: the atomic is a statistic no control flow
+//!   depends on; the access is mediated by a mutex that provides the
+//!   happens-before edge; it is an RMW claim counter whose atomicity,
+//!   not ordering, is load-bearing; or a flag polled in a loop whose
+//!   consumers re-check under a lock.
+//! * `// audit: hot-begin(<label>)` / `// audit: hot-end(<label>)` —
+//!   bracket a steady-state region in which allocating calls are
+//!   denied (the static complement of the runtime
+//!   `tensor::alloc_stats` zero-alloc gate).
+//! * `// audit: allow(alloc, <reason>)` — waives the hot-path
+//!   allocation lint for the same or the next line (e.g. a
+//!   `Range<usize>::clone()`, which is a stack copy, not a heap
+//!   allocation).
+//! * `// audit: allow(lock-order, <reason>)` — waives the lock
+//!   hierarchy check for an acquisition that is deliberate and
+//!   documented.
+
+pub mod checks;
+pub mod lexer;
+
+pub use checks::{
+    audit_source, check_acquire_release_pairing, check_claim_map, check_hot_path_allocs,
+    check_lock_hierarchy, check_ordering_justifications, check_safety_contracts,
+    default_lock_table, Finding, LockRule, SourceFile,
+};
+
+use std::path::{Path, PathBuf};
+
+/// Collect every `.rs` file under `dir`, sorted for deterministic
+/// reports. I/O errors on individual entries are skipped (the caller
+/// errors out only if the root itself is missing).
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Audit the whole repository rooted at `root` (the directory holding
+/// `Cargo.toml`): every source file under `rust/src`, plus the
+/// CI-artifact ↔ README claim-map cross-check when both
+/// `.github/workflows/ci.yml` and `README.md` exist. Returns every
+/// finding, sorted by file and line; an empty vector means the tree is
+/// clean.
+pub fn audit_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(format!("source root {} is not a directory", src_root.display()));
+    }
+    let mut files = Vec::new();
+    rs_files(&src_root, &mut files);
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", src_root.display()));
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        // Report paths relative to the repo root for stable output.
+        let rel = path.strip_prefix(root).unwrap_or(path);
+        let file = SourceFile::parse(&rel.to_string_lossy(), &text);
+        findings.extend(audit_source(&file));
+    }
+    let ci_path = root.join(".github").join("workflows").join("ci.yml");
+    let readme_path = root.join("README.md");
+    if let (Ok(ci), Ok(readme)) =
+        (std::fs::read_to_string(&ci_path), std::fs::read_to_string(&readme_path))
+    {
+        findings.extend(check_claim_map(".github/workflows/ci.yml", &ci, &readme));
+    }
+    findings.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+    Ok(findings)
+}

@@ -1,0 +1,33 @@
+//! `cct-audit` — run the in-tree soundness audit and exit non-zero on
+//! any finding. See [`cct::audit`] for the checks and the comment
+//! conventions they read.
+//!
+//! Usage: `cargo run --bin cct-audit [REPO_ROOT]` (defaults to the
+//! crate's own manifest directory, i.e. this repository).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    match cct::audit::audit_tree(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("cct-audit: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("cct-audit: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("cct-audit: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -441,6 +441,8 @@ impl AsyncCoordinator {
             staleness,
             final_loss: *round_loss.last().expect("rounds >= 1"),
             round_loss,
+            // ordering: read after every worker joined; the joins
+            // provide the happens-before for this statistic.
             max_observed_lag: max_lag.load(Ordering::Relaxed),
             updates,
             wall_s,
@@ -488,6 +490,9 @@ fn worker_loop(ctx: WorkerCtx<'_>) -> WorkerOut {
             ctx.barrier.wait_round(r);
         } else {
             let lag = ctx.clocks.admit(r, ctx.staleness);
+            // ordering: max-statistic only — fetch_max atomicity keeps
+            // concurrent maxima from clobbering each other; no control
+            // flow reads it until after the joins.
             ctx.max_lag.fetch_max(lag, Ordering::Relaxed);
         }
         {

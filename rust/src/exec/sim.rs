@@ -60,6 +60,8 @@ impl SimBackend {
     /// what the device "spent" in its own time, regardless of
     /// `time_scale`. Tests use this to assert the model was consulted.
     pub fn charged_seconds(&self) -> f64 {
+        // ordering: accounting counter read after the run; the
+        // thread-join that ended the run provides the happens-before.
         self.charged_ns.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
@@ -73,6 +75,8 @@ impl SimBackend {
     /// the scaled target.
     fn charge(&self, model_s: f64, started: Instant) {
         let model_s = model_s.max(0.0);
+        // ordering: RMW atomicity keeps concurrent charges from losing
+        // increments; nothing is published through the counter.
         self.charged_ns.fetch_add((model_s * 1e9) as u64, Ordering::Relaxed);
         if self.time_scale > 0.0 {
             let target = Duration::from_secs_f64(model_s * self.time_scale);

@@ -54,9 +54,22 @@
 //! ([`serve::HttpServer`]) puts a wire protocol in front of it. See
 //! `examples/serve.rs` and the `serve` / `serve-bench` CLI
 //! subcommands.
+//!
+//! ## Soundness gates
+//!
+//! The unsafe core (raw-pointer GEMM microkernels, the pool's shared
+//! job queue, Hogwild shared buffers) is held to a standing audit:
+//! the in-tree [`audit`] pass (`cargo run --bin cct-audit`) enforces
+//! `SAFETY:` contracts, ordering justifications, hot-path
+//! allocation-freedom, and the declared lock hierarchy, while CI runs
+//! Miri, ThreadSanitizer, and AddressSanitizer over the same code.
+//! `unsafe_op_in_unsafe_fn` is denied crate-wide, so every unsafe
+//! operation sits in an explicit, contract-carrying `unsafe {}` block.
 
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod audit;
 pub mod bench_util;
 pub mod coordinator;
 pub mod data;

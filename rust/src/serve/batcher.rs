@@ -151,6 +151,9 @@ pub(crate) fn run(
     'outer: loop {
         // Wait for the first (non-expired) request of the next batch.
         let first = loop {
+            // ordering: drain flag polled every queue wait; a late
+            // observation only delays drain by one bounded pop timeout,
+            // and queue data travels through the queue's own mutex.
             let draining = stop.load(Ordering::Relaxed);
             let wait = if draining { DRAIN_GRACE } else { IDLE_TICK };
             match queue.pop(wait) {
@@ -182,6 +185,8 @@ pub(crate) fn run(
         let window = Duration::from_micros(policy.window_us(ewma_gap_us));
         let deadline = requests[0].enqueued + window;
         while requests.len() < policy.max_batch {
+            // ordering: same polled drain flag as above — bounded
+            // staleness, no data published through it.
             if stop.load(Ordering::Relaxed) {
                 // Draining: take what is queued or lands within the
                 // grace window, but don't wait out the policy clock.

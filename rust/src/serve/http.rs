@@ -248,10 +248,14 @@ enum Budget {
 
 impl Shared {
     fn stopped(&self) -> bool {
+        // ordering: polled stop flag — the accept/handler loops only
+        // need to see it eventually; joins do the real ordering.
         self.stop.load(Ordering::Relaxed)
     }
 
     fn budget_spent(&self) -> bool {
+        // ordering: advisory peek for the accept loop's early-exit;
+        // the authoritative claim is the fetch_add below.
         self.cfg.max_requests > 0 && self.served.load(Ordering::Relaxed) >= self.cfg.max_requests
     }
 
@@ -261,7 +265,10 @@ impl Shared {
         if self.cfg.max_requests == 0 {
             return Budget::Granted { last: false };
         }
-        let prev = self.served.fetch_add(1, Ordering::SeqCst);
+        // ordering: RMW atomicity gives each claimant a unique number,
+        // which is all Granted/Exhausted/last depend on; no other data
+        // rides on the counter.
+        let prev = self.served.fetch_add(1, Ordering::Relaxed);
         if prev >= self.cfg.max_requests {
             Budget::Exhausted
         } else {
@@ -395,6 +402,7 @@ impl HttpServer {
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
+        // ordering: polled flag; the joins below provide the ordering.
         self.shared.stop.store(true, Ordering::Relaxed);
         // Joining the accept thread drops the channel sender; handlers
         // then drain any queued sockets and exit. Handlers parked on
@@ -429,16 +437,23 @@ fn accept_loop(
                 // Count the socket as waiting *before* it can be
                 // picked up: if the handler's decrement could precede
                 // this increment, the counter would wrap and the
-                // fairness yield would fire spuriously.
+                // fairness yield would fire spuriously. That invariant
+                // is program order (send happens after the increment,
+                // and a handler only decrements what it received), not
+                // memory order.
+                // ordering: fairness gauge — RMW atomicity keeps the
+                // count exact; readers only compare it to zero.
                 shared.waiting.fetch_add(1, Ordering::Relaxed);
                 match conn_tx.try_send(stream) {
                     Ok(()) => {}
                     Err(TrySendError::Full(stream)) => {
+                        // ordering: undo of the claim above, same gauge.
                         shared.waiting.fetch_sub(1, Ordering::Relaxed);
                         backend.http_stats().record_http_shed();
                         shed_overflow(stream);
                     }
                     Err(TrySendError::Disconnected(_)) => {
+                        // ordering: undo of the claim above, same gauge.
                         shared.waiting.fetch_sub(1, Ordering::Relaxed);
                         break;
                     }
@@ -471,6 +486,9 @@ fn handler_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, backend: &Backend, shared:
         // on recv, the rest queue on the lock (the std pool idiom).
         let job = { rx.lock().expect("http conn queue poisoned").recv() };
         let Ok(stream) = job else { break };
+        // ordering: fairness gauge decrement — the channel recv that
+        // delivered the socket already ordered it after the accept
+        // thread's increment.
         shared.waiting.fetch_sub(1, Ordering::Relaxed);
         backend.http_stats().record_http_conn_opened();
         let _ = serve_connection(stream, backend, shared);
@@ -524,6 +542,8 @@ fn wait_for_request(
                 // idle for at least one tick while accepted sockets
                 // wait for a handler — yield the pool slot instead of
                 // pinning it for the rest of the idle budget.
+                // ordering: heuristic probe of the gauge; a stale read
+                // costs one extra idle tick at worst.
                 if shared.waiting.load(Ordering::Relaxed) > 0 {
                     return Ok(NextRequest::IdleTimeout);
                 }

@@ -446,6 +446,9 @@ impl ServeHandle {
         if sample.len() != self.sample_len {
             return Err(SubmitError::BadSample(sample.len(), self.sample_len));
         }
+        // ordering: advisory fast-fail; a submission racing shutdown
+        // is still answered or cleanly errored via the queue's own
+        // close protocol, which the queue mutex orders.
         if self.stop.load(Ordering::Relaxed) {
             return Err(SubmitError::Closed);
         }
@@ -739,6 +742,8 @@ impl ServeEngine {
     /// [`ServeHandle::infer`] during the drain gets either its answer
     /// or a clean shutdown error — never a hang.
     pub fn shutdown(mut self) -> ServeReport {
+        // ordering: the batcher polls this flag; the joins below are
+        // the synchronization that makes the drain complete.
         self.stop.store(true, Ordering::Relaxed);
         // The batcher sees the flag, drains both lanes (answering
         // everything queued), then exits and closes the work channel.
@@ -765,6 +770,7 @@ impl ServeEngine {
 /// drains gracefully and returns the final report.
 impl Drop for ServeEngine {
     fn drop(&mut self) {
+        // ordering: same polled flag + join protocol as `shutdown`.
         self.stop.store(true, Ordering::Relaxed);
         self.queue.close();
         if let Some(b) = self.batcher.take() {
@@ -926,6 +932,9 @@ pub fn closed_loop(engine: &ServeEngine, clients: usize, total: usize) -> f64 {
                 let mut rng = Pcg64::new(0xc11e47 + c as u64);
                 let mut sample = vec![0f32; len];
                 rng.fill_uniform(&mut sample, -1.0, 1.0);
+                // ordering: work-claim counter — fetch_add atomicity
+                // hands each request number to one client; nothing is
+                // published through it.
                 while next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) < total {
                     handle.infer(&sample).expect("inference request failed");
                 }

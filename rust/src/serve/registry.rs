@@ -524,10 +524,19 @@ impl ModelRegistry {
             "model name must be non-empty [A-Za-z0-9_-] (got '{name}')"
         );
         crate::ensure!(opts.weight >= 1, "model weight must be ≥ 1");
+        // ordering: advisory fast-fail only; the authoritative check
+        // is the re-read under the ops lock below.
         crate::ensure!(!self.closed.load(Ordering::Relaxed), "registry is shut down");
         // One control-plane operation at a time: concurrent PUTs
         // serialize here; the data plane never takes this lock.
         let _ops = relock(&self.ops);
+        // Re-check now that the lock is held: a shutdown that won the
+        // ops lock between the advisory check and our acquisition has
+        // already drained the table, and a load slipping past here
+        // would install an engine nothing will ever retire.
+        // ordering: the ops mutex orders this load after shutdown's
+        // store (which is sequenced before shutdown takes the lock).
+        crate::ensure!(!self.closed.load(Ordering::Relaxed), "registry is shut down");
         let existing = self.find(name);
         let recorder = match &existing {
             Some(e) => Arc::clone(&e.recorder),
@@ -544,6 +553,8 @@ impl ModelRegistry {
         let sample_len = engine.sample_len();
         match existing {
             Some(entry) => {
+                // ordering: only ever bumped under the ops lock, which
+                // provides the happens-before between swaps.
                 let id = entry.generation.fetch_add(1, Ordering::Relaxed) + 1;
                 let fresh = Arc::new(Generation { id, engine });
                 let old = relock(&entry.current).replace(fresh);
@@ -672,6 +683,8 @@ impl ModelRegistry {
                     let cur = relock(&e.current);
                     match cur.as_ref() {
                         Some(g) => (g.id, g.engine.queue_depths()),
+                        // ordering: stats snapshot — a stale generation
+                        // number is as good as any point-in-time read.
                         None => (e.generation.load(Ordering::Relaxed), [0, 0]),
                     }
                 };
@@ -692,6 +705,9 @@ impl ModelRegistry {
     /// per-model reports, in load order. Further loads and submissions
     /// are refused. Idempotent — a second call returns an empty list.
     pub fn shutdown(&self) -> Vec<(String, ServeReport)> {
+        // ordering: loads re-check this under the ops lock taken just
+        // below, and the lock provides the happens-before; the store
+        // itself only needs to be visible eventually for fast-fails.
         self.closed.store(true, Ordering::Relaxed);
         let _ops = relock(&self.ops);
         let entries: Vec<Arc<ModelEntry>> = {

@@ -1,0 +1,64 @@
+//! The audit audits itself: the checked-in tree must be clean, and the
+//! cross-file claim-map check must see the real CI workflow and README.
+//!
+//! These are the same assertions CI's blocking `cargo run --bin
+//! cct-audit` job makes; running them under `cargo test` means a
+//! violation fails fast locally, with the same file:line report.
+
+use cct::audit::{audit_tree, check_claim_map};
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The real source tree passes every audit check. If this fails, the
+/// findings printed below are exactly what `cargo run --bin cct-audit`
+/// would report — fix the code or annotate per the conventions in
+/// `cct::audit`'s module docs.
+#[test]
+fn checked_in_tree_is_clean() {
+    let findings = audit_tree(repo_root()).expect("audit walk failed");
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(findings.is_empty(), "{} audit finding(s) — see stderr", findings.len());
+}
+
+/// Every `BENCH_*.json` artifact named in the CI workflow has a
+/// claim-map row in the README (the audit's cross-file check, run
+/// against the real files so drift fails a test, not just the binary).
+#[test]
+fn ci_bench_artifacts_have_readme_claim_rows() {
+    let ci = std::fs::read_to_string(repo_root().join(".github/workflows/ci.yml"))
+        .expect("CI workflow must exist");
+    let readme =
+        std::fs::read_to_string(repo_root().join("README.md")).expect("README must exist");
+    let findings = check_claim_map(".github/workflows/ci.yml", &ci, &readme);
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(findings.is_empty(), "CI bench artifacts missing README claim-map rows");
+    // The check has teeth: it must actually be reading BENCH names out
+    // of the workflow, not passing vacuously on an empty extraction.
+    assert!(ci.contains("BENCH_"), "expected at least one BENCH_*.json artifact in CI");
+}
+
+/// A deliberately broken corpus produces findings with the right
+/// check names — end-to-end through the same public API the binary
+/// uses, complementing the per-check unit tests in `cct::audit`.
+#[test]
+fn violations_are_reported_by_check_name() {
+    use cct::audit::SourceFile;
+    let src = "\
+fn f(p: *const u8, a: &std::sync::atomic::AtomicUsize) {
+    let x = unsafe { *p };
+    a.store(1, std::sync::atomic::Ordering::Relaxed);
+}
+";
+    let file = SourceFile::parse("fixture.rs", src);
+    let findings = cct::audit::audit_source(&file);
+    let checks: Vec<&str> = findings.iter().map(|f| f.check).collect();
+    assert!(checks.contains(&"safety"), "missing safety finding: {findings:?}");
+    assert!(checks.contains(&"ordering"), "missing ordering finding: {findings:?}");
+}

@@ -106,6 +106,39 @@ fn contended_pool_results_are_deterministic() {
     });
 }
 
+/// Multiple submitter threads share ONE pool object and submit
+/// concurrently — the publication path the soundness CI's TSan job
+/// watches: each job's results must be published to its submitter by
+/// the `tasks_done` Acquire/Release handshake, and the run lock must
+/// keep jobs from interleaving. Any missing happens-before edge shows
+/// up as a data race under TSan or as a bitwise mismatch here.
+#[test]
+#[cfg_attr(miri, ignore = "heavy cross-thread schedule space; covered by the lib-level pool tests")]
+fn shared_pool_submitters_race_safely() {
+    let pool = GemmPool::new(3);
+    let dims = GemmDims { m: 190, n: 96, k: 64 };
+    let mut rng = Pcg64::new(7007);
+    let a = rand_vec(dims.m * dims.k, &mut rng);
+    let b = rand_vec(dims.k * dims.n, &mut rng);
+    let mut want = vec![0f32; dims.m * dims.n];
+    gemm_blocked(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut want, BlockSizes::default());
+
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let (pool, a, b, want) = (&pool, &a, &b, &want);
+            scope.spawn(move || {
+                for _ in 0..6 {
+                    let mut c = vec![0f32; dims.m * dims.n];
+                    pool.gemm(Trans::N, Trans::N, dims, 1.0, a, b, 0.0, &mut c, 4);
+                    for (i, (x, y)) in want.iter().zip(c.iter()).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(), "idx {i} under submitter contention");
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// The spawn-per-call baseline and the pool agree (they are compared
 /// head-to-head by the fig2 bench, so both must stay correct).
 #[test]
@@ -153,6 +186,7 @@ fn steady_state_is_allocation_free() {
 /// counting live threads with this pool's unique name prefix.
 #[cfg(target_os = "linux")]
 #[test]
+#[cfg_attr(miri, ignore = "asserts on procfs thread names, which Miri's isolation hides")]
 fn pool_workers_join_on_drop() {
     let pool = GemmPool::new(3);
     let prefix = pool.thread_name_prefix();
