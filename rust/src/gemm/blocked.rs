@@ -40,7 +40,7 @@ pub const NR: usize = 32;
 
 /// Cache-blocking parameters (tunable; defaults sized for a ~32 KiB L1 /
 /// 1 MiB L2 / shared L3 x86 cache hierarchy).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockSizes {
     /// M-panel rows (A panel resident in L2).
     pub mc: usize,
@@ -60,6 +60,54 @@ impl Default for BlockSizes {
         // panel against MR-row A micro-panels, so the truly hot set is
         // the strip plus an MR·KC·4B ≈ 12 KiB A micro-panel.
         BlockSizes { mc: 128, kc: 384, nc: 4096 }
+    }
+}
+
+/// Which register-tiled microkernel the blocked GEMM should run.
+///
+/// Both kernels accumulate the same MR×NR tile over the same k order,
+/// but the AVX-512 kernel uses fused multiply-adds, so the two can
+/// differ in the last ulps (normal GEMM tolerance). Any *fixed* choice
+/// is bitwise deterministic call-to-call — the property the autotuner
+/// ([`crate::gemm::tune`]) relies on when it times kernels against
+/// each other and caches one winner per shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Runtime dispatch: AVX-512 when the CPU supports it (the
+    /// pre-autotuner default).
+    Auto,
+    /// Prefer the explicit AVX-512 kernel. Falls back to the portable
+    /// kernel when `avx512f` is not detected, so a tune cache recorded
+    /// on a wider machine stays safe to load anywhere.
+    Avx512,
+    /// Force the portable auto-vectorized kernel.
+    Portable,
+}
+
+impl KernelChoice {
+    /// Whether this choice resolves to the AVX-512 kernel on the
+    /// current CPU ([`Avx512`](Self::Avx512) and [`Auto`](Self::Auto)
+    /// both require runtime detection to say yes).
+    #[inline]
+    pub fn use_avx512(self) -> bool {
+        match self {
+            KernelChoice::Portable => false,
+            KernelChoice::Auto | KernelChoice::Avx512 => avx512_available(),
+        }
+    }
+}
+
+/// Runtime `avx512f` detection (always `false` off x86-64 and under
+/// Miri, which cannot read CPUID).
+#[inline]
+pub fn avx512_available() -> bool {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        std::arch::is_x86_feature_detected!("avx512f")
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    {
+        false
     }
 }
 
@@ -153,7 +201,8 @@ impl Default for PackArena {
 
 /// C ← α·op(A)·op(B) + β·C (row-major, contiguous). Single-threaded;
 /// packing runs in the calling thread's planned arena (no per-call
-/// allocation once warm).
+/// allocation once warm). Equivalent to [`gemm_blocked_with`] with
+/// [`KernelChoice::Auto`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_blocked(
     ta: Trans,
@@ -165,6 +214,24 @@ pub fn gemm_blocked(
     beta: f32,
     c: &mut [f32],
     bs: BlockSizes,
+) {
+    gemm_blocked_with(ta, tb, dims, alpha, a, b, beta, c, bs, KernelChoice::Auto);
+}
+
+/// [`gemm_blocked`] with an explicit microkernel choice — the
+/// strategy-carrying entry point the autotuner dispatches through.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked_with(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    bs: BlockSizes,
+    kernel: KernelChoice,
 ) {
     let GemmDims { m, n, k } = dims;
 
@@ -193,7 +260,9 @@ pub fn gemm_blocked(
             // above and this thread is the only writer for the whole
             // call; the [0,m)×[jc,jc+nc) rectangle is in bounds.
             unsafe {
-                compute_block(ta, tb, dims, alpha, a, b, c_ptr, c_len, n, 0, m, jc, nc, bs, arena);
+                compute_block(
+                    ta, tb, dims, alpha, a, b, c_ptr, c_len, n, 0, m, jc, nc, bs, kernel, arena,
+                );
             }
             jc += nc;
         }
@@ -229,6 +298,7 @@ pub(crate) unsafe fn compute_block(
     jc0: usize,
     nc_total: usize,
     bs: BlockSizes,
+    kernel: KernelChoice,
     arena: &mut PackArena,
 ) {
     let GemmDims { m, n, k } = dims;
@@ -264,6 +334,7 @@ pub(crate) unsafe fn compute_block(
                     ldc,
                     ic,
                     jc0,
+                    kernel,
                 );
             }
             ic += mc;
@@ -353,6 +424,7 @@ unsafe fn macro_kernel(
     ldc: usize,
     ic: usize,
     jc: usize,
+    kernel: KernelChoice,
 ) {
     let mpanels = mc.div_ceil(MR);
     let npanels = nc.div_ceil(NR);
@@ -368,6 +440,7 @@ unsafe fn macro_kernel(
             unsafe {
                 micro_kernel(
                     apanel, bpanel, kc, c, c_len, ldc, ic + p * MR, jc + q * NR, rows, cols,
+                    kernel,
                 );
             }
         }
@@ -397,16 +470,19 @@ unsafe fn micro_kernel(
     col0: usize,
     rows: usize,
     cols: usize,
+    kernel: KernelChoice,
 ) {
     // Miri cannot evaluate `is_x86_feature_detected!` (it reads
-    // CPUID) or interpret AVX-512 intrinsics; it always takes the
-    // portable kernel, which is the path whose raw-pointer writes the
-    // interpreter can actually check.
-    #[cfg(all(target_arch = "x86_64", not(miri)))]
-    {
-        if std::arch::is_x86_feature_detected!("avx512f") {
-            // SAFETY: feature checked; panel sizes are MR·kc / NR·kc by
-            // construction; C bounds guaranteed by the caller.
+    // CPUID) or interpret AVX-512 intrinsics; `use_avx512()` is
+    // unconditionally false there, so it always takes the portable
+    // kernel — the path whose raw-pointer writes the interpreter can
+    // actually check.
+    if kernel.use_avx512() {
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        {
+            // SAFETY: `use_avx512()` returning true implies runtime
+            // `avx512f` detection succeeded; panel sizes are MR·kc /
+            // NR·kc by construction; C bounds guaranteed by the caller.
             unsafe {
                 micro_kernel_avx512(apanel, bpanel, kc, c, c_len, ldc, row0, col0, rows, cols);
             }
@@ -646,7 +722,7 @@ mod tests {
                 unsafe {
                     compute_block(
                         Trans::N, Trans::N, dims, 1.5, &a, &b, c_ptr, c_len, dims.n, ic0, mc,
-                        jc0, nc, bs, &mut arena,
+                        jc0, nc, bs, KernelChoice::Auto, &mut arena,
                     );
                 }
             }
@@ -683,7 +759,7 @@ mod tests {
             unsafe {
                 compute_block(
                     Trans::N, Trans::N, dims, 1.0, &a, &b, c_ptr, c_len, dims.n, ic0, mc, jc0,
-                    nc, bs, &mut arena,
+                    nc, bs, KernelChoice::Auto, &mut arena,
                 );
             }
         }

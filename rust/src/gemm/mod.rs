@@ -28,14 +28,22 @@
 //! still reproduces the paper's "thin matrix" pathology: batch-1
 //! lowerings hand each strip a sliver, so adding threads hurts).
 //!
+//! Strategy selection (block sizes, microkernel, pool vs inline) can
+//! be overridden per shape by the runtime autotuner ([`tune`], PR 10):
+//! measured at plan/prewarm time, consulted by [`sgemm`] on every
+//! dispatch through a lock-free-when-untuned cache lookup.
+//!
 //! All matrices are row-major and contiguous.
 
 mod blocked;
 mod naive;
 pub mod pool;
 mod threaded;
+pub mod tune;
 
-pub use blocked::{arena_growth_count, gemm_blocked, BlockSizes, PackArena};
+pub use blocked::{
+    arena_growth_count, avx512_available, gemm_blocked, gemm_blocked_with, BlockSizes, KernelChoice, PackArena,
+};
 pub use naive::gemm_naive;
 pub use pool::GemmPool;
 pub use threaded::{gemm_spawn, gemm_threaded};
@@ -80,6 +88,12 @@ pub fn gemm_flops(d: GemmDims) -> u64 {
 /// every kernel: `m == 0` or `n == 0` touches nothing, and `k == 0`
 /// only applies the β scaling of C (A and B are never read, so their
 /// slices may be empty).
+///
+/// When the autotuner ([`tune`]) holds a decision for this
+/// `(m, k, n, threads)` key, dispatch runs the tuned strategy instead
+/// of the analytic default — same kernels, different knobs. The lookup
+/// itself is a relaxed atomic load in an untuned process; it never
+/// measures or allocates.
 #[allow(clippy::too_many_arguments)]
 pub fn sgemm(
     ta: Trans,
@@ -96,7 +110,17 @@ pub fn sgemm(
     let GemmDims { m, n, k } = dims;
     if m * n * k <= 8 * 8 * 8 {
         gemm_naive(ta, tb, dims, alpha, a, b, beta, c);
-    } else if threads <= 1 {
+        return;
+    }
+    if let Some(s) = tune::lookup(dims, threads) {
+        if threads <= 1 || !s.use_pool {
+            gemm_blocked_with(ta, tb, dims, alpha, a, b, beta, c, s.bs, s.kernel);
+        } else {
+            pool::sgemm_pooled_with(ta, tb, dims, alpha, a, b, beta, c, threads, s.bs, s.kernel);
+        }
+        return;
+    }
+    if threads <= 1 {
         gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, BlockSizes::default());
     } else {
         pool::sgemm_pooled(ta, tb, dims, alpha, a, b, beta, c, threads);

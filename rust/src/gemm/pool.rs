@@ -42,7 +42,7 @@
 //! data-parallel chunks on the same threads (no extra spawns anywhere
 //! on the training or serving hot path).
 
-use super::blocked::{compute_block, warm_tls_arena, BlockSizes, PackArena, NR};
+use super::blocked::{compute_block, warm_tls_arena, BlockSizes, KernelChoice, PackArena, NR};
 use super::{gemm_naive, GemmDims, Trans};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -88,6 +88,7 @@ struct GemmJob {
     tile_n: usize,
     tiles_m: usize,
     bs: BlockSizes,
+    kernel: KernelChoice,
 }
 
 /// A generic data-parallel region: `f(t)` for `t in 0..ntasks`, each
@@ -244,6 +245,31 @@ impl GemmPool {
         c: &mut [f32],
         threads: usize,
     ) {
+        self.gemm_with(ta, tb, dims, alpha, a, b, beta, c, threads, BlockSizes::default(), KernelChoice::Auto);
+    }
+
+    /// [`GemmPool::gemm`] with an explicit tuned strategy (block sizes
+    /// + microkernel). Every execution path — pooled tiles, the inline
+    /// busy-pool fallback, the worker re-entry fallback — runs the same
+    /// `(bs, kernel)` pair, so results per strategy are bit-identical
+    /// regardless of which path a call takes. Tile strategies must stay
+    /// within the default-[`BlockSizes`] arena footprint (the capacity
+    /// workers plan at spawn); the autotuner's candidate set does.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn gemm_with(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        dims: GemmDims,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c: &mut [f32],
+        threads: usize,
+        bs: BlockSizes,
+        kernel: KernelChoice,
+    ) {
         super::validate(ta, tb, dims, a, b, c);
         let GemmDims { m, n, k } = dims;
         if m == 0 || n == 0 || k == 0 {
@@ -251,14 +277,13 @@ impl GemmPool {
             gemm_naive(ta, tb, dims, alpha, a, b, beta, c);
             return;
         }
-        let bs = BlockSizes::default();
         let par = threads.max(1).min(self.workers() + 1);
         let (tile_m, tile_n) = plan_tiles(m, n, par, bs);
         let tiles_m = m.div_ceil(tile_m);
         let tiles_n = n.div_ceil(tile_n);
         let ntiles = tiles_m * tiles_n;
         if par == 1 || ntiles == 1 || in_pool_worker() {
-            super::gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, bs);
+            super::gemm_blocked_with(ta, tb, dims, alpha, a, b, beta, c, bs, kernel);
             return;
         }
         // Pool busy with another submitter's job? Contribute this
@@ -267,7 +292,7 @@ impl GemmPool {
         // of useful work, never more (and the result is bit-identical
         // either way).
         let Some(serialize) = self.try_serialize() else {
-            super::gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, bs);
+            super::gemm_blocked_with(ta, tb, dims, alpha, a, b, beta, c, bs, kernel);
             return;
         };
         let job = Job {
@@ -289,6 +314,7 @@ impl GemmPool {
                 tile_n,
                 tiles_m,
                 bs,
+                kernel,
             }),
         };
         self.run(serialize, job);
@@ -532,7 +558,7 @@ fn run_tile(g: &GemmJob, t: usize, arena: &mut PackArena) {
         }
         compute_block(
             g.ta, g.tb, g.dims, g.alpha, a, b, g.c, g.c_len, n, ic0, mc_total, jc0, nc_total,
-            g.bs, arena,
+            g.bs, g.kernel, arena,
         );
     }
 }
@@ -650,16 +676,36 @@ pub fn sgemm_pooled(
     c: &mut [f32],
     threads: usize,
 ) {
+    sgemm_pooled_with(ta, tb, dims, alpha, a, b, beta, c, threads, BlockSizes::default(), KernelChoice::Auto);
+}
+
+/// [`sgemm_pooled`] with an explicit tuned strategy — the pool-side
+/// dispatch target of [`crate::gemm::tune`]. Falls back to the inline
+/// blocked kernel (same strategy) when called from a pool worker.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sgemm_pooled_with(
+    ta: Trans,
+    tb: Trans,
+    dims: GemmDims,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+    bs: BlockSizes,
+    kernel: KernelChoice,
+) {
     if in_pool_worker() {
         let GemmDims { m, n, k } = dims;
         if m == 0 || n == 0 || k == 0 {
             gemm_naive(ta, tb, dims, alpha, a, b, beta, c);
         } else {
-            super::gemm_blocked(ta, tb, dims, alpha, a, b, beta, c, BlockSizes::default());
+            super::gemm_blocked_with(ta, tb, dims, alpha, a, b, beta, c, bs, kernel);
         }
         return;
     }
-    global().gemm(ta, tb, dims, alpha, a, b, beta, c, threads);
+    global().gemm_with(ta, tb, dims, alpha, a, b, beta, c, threads, bs, kernel);
 }
 
 /// Run `f(t)` for `t in 0..ntasks` with a parallelism budget of

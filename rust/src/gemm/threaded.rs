@@ -14,12 +14,15 @@
 //! on thin outputs (§2.2, Fig 2(b): with b=1 the strips are slivers
 //! and adding threads *hurts*).
 
-use super::{gemm_blocked, gemm_naive, pool, BlockSizes, GemmDims, Trans};
+use super::{gemm_blocked, gemm_blocked_with, gemm_naive, pool, tune, BlockSizes, GemmDims, Trans};
 
 /// C ← α·op(A)·op(B) + β·C with up to `threads`-way parallelism on the
 /// process-wide persistent pool (see [`crate::gemm::pool`]). Kept as
 /// the stable multi-threaded entry point; results are bit-identical to
-/// [`gemm_blocked`] with default [`BlockSizes`].
+/// [`gemm_blocked`] with default [`BlockSizes`] — unless the autotuner
+/// ([`crate::gemm::tune`]) holds a decision for this shape, in which
+/// case the tuned `(blocks, kernel, pool)` strategy runs instead (then
+/// results are bit-identical to that fixed strategy, call to call).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_threaded(
     ta: Trans,
@@ -32,6 +35,15 @@ pub fn gemm_threaded(
     c: &mut [f32],
     threads: usize,
 ) {
+    if let Some(s) = tune::lookup(dims, threads) {
+        if threads <= 1 || !s.use_pool {
+            // The blocked kernel handles degenerate dims (β pass only).
+            gemm_blocked_with(ta, tb, dims, alpha, a, b, beta, c, s.bs, s.kernel);
+        } else {
+            pool::sgemm_pooled_with(ta, tb, dims, alpha, a, b, beta, c, threads, s.bs, s.kernel);
+        }
+        return;
+    }
     pool::sgemm_pooled(ta, tb, dims, alpha, a, b, beta, c, threads);
 }
 

@@ -1,0 +1,906 @@
+//! Shape-keyed runtime GEMM autotuner (the ROADMAP's "stop trusting
+//! the analytic cost model alone" item).
+//!
+//! The paper's cost model (Fig 6) predicts lowering/GEMM time from
+//! operation counts and a [`MachineProfile`]; the benchmarking
+//! literature (Shi et al., Bahrampour et al.) shows measured per-shape
+//! behavior routinely diverges from such predictions. This module
+//! closes the loop: per **(m, k, n, threads)** key it measures the
+//! candidate execution strategies once —
+//!
+//! * cache [`BlockSizes`] variants (all within the default packing
+//!   arena footprint, so tuned strategies never regrow planned
+//!   arenas),
+//! * microkernel ([`KernelChoice`]: AVX-512 vs portable),
+//! * pool vs inline execution,
+//!
+//! — picks the winner by wall clock, and caches the [`Decision`] in a
+//! process-global table. [`crate::gemm::sgemm`] and
+//! [`crate::gemm::gemm_threaded`] consult the cache on every dispatch
+//! (a lock-free fast path when nothing is tuned); the lowering
+//! optimizer consults recorded conv timings via
+//! [`lowering_seconds`] / [`crate::lowering::choose_lowering_tuned`].
+//!
+//! **Measurement only ever happens at plan/prewarm time** — via
+//! [`tune_gemm`] / [`tune_conv`] / [`tune_hint`] (which
+//! `net::Workspace` planning drives through `Layer::tune_hints`) —
+//! never on the serve/train hot path. [`lookup`] reads an atomic and,
+//! only when entries exist, a `RwLock`-guarded map: no allocation, no
+//! clock.
+//!
+//! ## Environment variables
+//!
+//! | Variable | Effect |
+//! |---|---|
+//! | `CCT_TUNE=off\|on\|force` | [`TuneMode`]: disable lookups / tune at plan time / re-measure even on cache hits |
+//! | `CCT_TUNE_CACHE=path` | JSON persistence: loaded on first cache access, rewritten after each tuning call |
+//! | `CCT_TUNE_BUDGET_MS=n` | soft measurement budget per tuned key (default 250 ms) |
+//!
+//! With `CCT_TUNE` unset, lookups are enabled but nothing measures and
+//! the cache stays empty unless a persisted file or an explicit
+//! [`tune_gemm`]/[`tune_conv`] call fills it — so the default process
+//! behaves exactly like the pre-autotuner crate. See `docs/TUNING.md`
+//! for the operational guide.
+//!
+//! [`MachineProfile`]: crate::lowering::MachineProfile
+
+use super::blocked::{avx512_available, warm_tls_arena, BlockSizes, KernelChoice, MR, NR};
+use super::{gemm_blocked_with, pool, GemmDims, Trans};
+use crate::lowering::{conv_forward, ConvShape, LoweringType};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+/// Autotuner activation mode (the `CCT_TUNE` env var, or [`set_mode`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Never consult or populate the cache: every GEMM dispatches the
+    /// analytic default strategy, bit-identical to the pre-autotuner
+    /// crate (`CCT_TUNE=off`).
+    Off,
+    /// Consult the cache on every dispatch; plan-time measurement runs
+    /// only when the mode was chosen *explicitly* (env var present or
+    /// [`set_mode`] called) — an unset environment stays measurement-
+    /// free (`CCT_TUNE=on`).
+    On,
+    /// Like [`On`](Self::On), but re-measure even on a cache hit,
+    /// ignoring stale persisted decisions (`CCT_TUNE=force`).
+    Force,
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_ON: u8 = 2;
+const MODE_FORCE: u8 = 3;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+static EXPLICIT: AtomicBool = AtomicBool::new(false);
+
+fn encode_mode(m: TuneMode) -> u8 {
+    match m {
+        TuneMode::Off => MODE_OFF,
+        TuneMode::On => MODE_ON,
+        TuneMode::Force => MODE_FORCE,
+    }
+}
+
+fn decode_mode(v: u8) -> TuneMode {
+    match v {
+        MODE_OFF => TuneMode::Off,
+        MODE_FORCE => TuneMode::Force,
+        _ => TuneMode::On,
+    }
+}
+
+fn parse_mode(s: &str) -> TuneMode {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" | "false" | "no" => TuneMode::Off,
+        "force" => TuneMode::Force,
+        _ => TuneMode::On,
+    }
+}
+
+/// Current autotuner mode. The first call parses `CCT_TUNE`; every
+/// later call is a single atomic load.
+pub fn mode() -> TuneMode {
+    // ordering: a monotonic latch consulted for dispatch only; no
+    // other data is published through it.
+    let v = MODE.load(Ordering::Relaxed);
+    if v != MODE_UNSET {
+        return decode_mode(v);
+    }
+    let (m, explicit) = match std::env::var("CCT_TUNE") {
+        Ok(s) => (parse_mode(&s), true),
+        Err(_) => (TuneMode::On, false),
+    };
+    if explicit {
+        // ordering: advisory flag gating future plan-time tuning; a
+        // racing reader at worst skips one tuning opportunity.
+        EXPLICIT.store(true, Ordering::Relaxed);
+    }
+    // ordering: racing first calls compute the same env-derived value,
+    // so whichever store lands is correct.
+    MODE.store(encode_mode(m), Ordering::Relaxed);
+    m
+}
+
+/// Override the autotuner mode programmatically (takes precedence over
+/// `CCT_TUNE`). Also marks the mode as explicitly chosen, which is
+/// what allows plan-time measurement under [`TuneMode::On`].
+pub fn set_mode(m: TuneMode) {
+    // ordering: independent advisory flags; readers only gate whether
+    // *future* tuning work runs (see `mode`).
+    EXPLICIT.store(true, Ordering::Relaxed);
+    MODE.store(encode_mode(m), Ordering::Relaxed);
+}
+
+/// Whether plan-time auto-tuning (the `net::Workspace` planning hook)
+/// should measure: yes under `force`, yes under an *explicitly chosen*
+/// `on`, never when off or when the environment never opted in —
+/// keeping default processes free of measurement entirely.
+pub fn auto_tune_enabled() -> bool {
+    match mode() {
+        TuneMode::Off => false,
+        TuneMode::Force => true,
+        // ordering: advisory flag written by mode()/set_mode; a stale
+        // read only delays tuning by one plan.
+        TuneMode::On => EXPLICIT.load(Ordering::Relaxed),
+    }
+}
+
+/// Cache key: one GEMM problem shape plus its thread budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    /// Rows of op(A) and C.
+    pub m: usize,
+    /// Inner (contraction) dimension.
+    pub k: usize,
+    /// Columns of op(B) and C.
+    pub n: usize,
+    /// Thread budget of the dispatch site (clamped to ≥ 1).
+    pub threads: usize,
+}
+
+impl TuneKey {
+    /// Key for a problem at a thread budget (`0` and `1` share an
+    /// entry, matching the dispatcher's clamp).
+    pub fn new(dims: GemmDims, threads: usize) -> Self {
+        TuneKey { m: dims.m, k: dims.k, n: dims.n, threads: threads.max(1) }
+    }
+}
+
+/// One executable GEMM strategy: the exact knobs
+/// [`crate::gemm::sgemm`] dispatches on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmStrategy {
+    /// Cache-blocking parameters (always within the default packing
+    /// arena footprint — tuned strategies never regrow planned arenas).
+    pub bs: BlockSizes,
+    /// Microkernel choice (safe to persist: [`KernelChoice::Avx512`]
+    /// falls back to portable where the CPU lacks the feature).
+    pub kernel: KernelChoice,
+    /// Schedule MC×NC tiles on the persistent pool (`true`) or run the
+    /// whole problem inline on the calling thread (`false`).
+    pub use_pool: bool,
+}
+
+impl GemmStrategy {
+    /// The analytic default the crate used before the autotuner: default
+    /// block sizes, runtime kernel dispatch, pool iff multi-threaded.
+    pub fn default_for(threads: usize) -> Self {
+        GemmStrategy { bs: BlockSizes::default(), kernel: KernelChoice::Auto, use_pool: threads > 1 }
+    }
+}
+
+/// A cached tuning outcome: the winning strategy plus the measured
+/// times that justified it (winner vs the analytic default, same rep
+/// count). `seconds <= default_seconds` always holds — ties favor the
+/// default — so tuned dispatch never loses to the analytic choice on
+/// the machine that measured it.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// The winning strategy.
+    pub strategy: GemmStrategy,
+    /// Best wall-clock seconds observed for the winner.
+    pub seconds: f64,
+    /// Best wall-clock seconds observed for the analytic default.
+    pub default_seconds: f64,
+}
+
+/// A layer-supplied tuning hint: the GEMM or conv problem the layer
+/// will execute, collected by `net::Workspace` planning through
+/// `Layer::tune_hints` and measured at plan time.
+#[derive(Clone, Copy, Debug)]
+pub enum TuneHint {
+    /// A bare GEMM of these dimensions (fully-connected layers).
+    Gemm(GemmDims),
+    /// A convolution: tunes the lowering choice and its lowered GEMM.
+    Conv(ConvShape),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct LowerKey {
+    shape: ConvShape,
+    ty: LoweringType,
+    threads: usize,
+}
+
+struct Cache {
+    gemm: HashMap<TuneKey, Decision>,
+    lowering: HashMap<LowerKey, f64>,
+}
+
+/// Fast-path hint for [`lookup`]: 0 = cache not initialized yet,
+/// 1 = initialized and known empty, 2 = may contain entries.
+const STATE_UNINIT: u8 = 0;
+const STATE_EMPTY: u8 = 1;
+const STATE_FILLED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+static CACHE: OnceLock<RwLock<Cache>> = OnceLock::new();
+
+fn cache() -> &'static RwLock<Cache> {
+    CACHE.get_or_init(|| {
+        let mut c = Cache { gemm: HashMap::new(), lowering: HashMap::new() };
+        let mut loaded = 0usize;
+        if let Ok(path) = std::env::var("CCT_TUNE_CACHE") {
+            if !path.is_empty() {
+                if let Ok(text) = std::fs::read_to_string(&path) {
+                    loaded = load_into(&mut c, &text);
+                }
+            }
+        }
+        // ordering: advisory fast-path hint; the map itself is
+        // published by the RwLock (and OnceLock init).
+        STATE.store(if loaded > 0 { STATE_FILLED } else { STATE_EMPTY }, Ordering::Relaxed);
+        RwLock::new(c)
+    })
+}
+
+fn read_cache() -> std::sync::RwLockReadGuard<'static, Cache> {
+    cache().read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn write_cache() -> std::sync::RwLockWriteGuard<'static, Cache> {
+    cache().write().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// audit: hot-begin(tune-lookup) — consulted on every sgemm dispatch:
+// an untuned process must pay one atomic load + branch, and nothing
+// here may allocate or read the clock.
+
+/// The cached strategy for `(dims, threads)`, if one exists and the
+/// mode permits lookups. This is the dispatch fast path: a single
+/// relaxed atomic load answers the common "nothing tuned" case; only
+/// processes that actually hold tuned entries take the shared read
+/// lock. Never measures, never allocates.
+pub fn lookup(dims: GemmDims, threads: usize) -> Option<GemmStrategy> {
+    // ordering: advisory hint written by the insert/clear paths; a
+    // stale EMPTY read just dispatches the default strategy once more.
+    let state = STATE.load(Ordering::Relaxed);
+    if state == STATE_EMPTY {
+        return None;
+    }
+    if mode() == TuneMode::Off {
+        return None;
+    }
+    // STATE_UNINIT falls through: the first dispatch initializes the
+    // cache (loading any persisted file) exactly once.
+    let guard = read_cache();
+    guard.gemm.get(&TuneKey::new(dims, threads)).map(|d| d.strategy)
+}
+
+// audit: hot-end(tune-lookup)
+
+/// The measured wall-clock seconds recorded for a conv
+/// `(shape, type, threads)` key, if [`tune_conv`] (or
+/// [`record_lowering_seconds`]) has run for it. Read-only — safe on
+/// the forward path, which is where the lowering policy consults it.
+pub fn lowering_seconds(shape: &ConvShape, ty: LoweringType, threads: usize) -> Option<f64> {
+    // ordering: same advisory hint as `lookup`.
+    if STATE.load(Ordering::Relaxed) == STATE_EMPTY {
+        return None;
+    }
+    let guard = read_cache();
+    guard.lowering.get(&LowerKey { shape: *shape, ty, threads: threads.max(1) }).copied()
+}
+
+/// Record a measured conv time for `(shape, type, threads)` — the
+/// calibration feed for [`crate::lowering::CostModel::calibrated`] and
+/// [`crate::lowering::choose_lowering_tuned`].
+pub fn record_lowering_seconds(shape: &ConvShape, ty: LoweringType, threads: usize, seconds: f64) {
+    let mut guard = write_cache();
+    guard.lowering.insert(LowerKey { shape: *shape, ty, threads: threads.max(1) }, seconds);
+    drop(guard);
+    // ordering: publish the fast-path hint after the insert; readers
+    // that race it and still see EMPTY just miss once (benign).
+    STATE.store(STATE_FILLED, Ordering::Relaxed);
+}
+
+/// Number of cached GEMM decisions.
+pub fn cached_gemm_entries() -> usize {
+    read_cache().gemm.len()
+}
+
+/// Number of recorded conv lowering measurements.
+pub fn cached_lowering_entries() -> usize {
+    read_cache().lowering.len()
+}
+
+/// Drop every cached decision and measurement (tests and benches;
+/// `CCT_TUNE=force` re-measures without needing this).
+pub fn clear() {
+    let mut guard = write_cache();
+    guard.gemm.clear();
+    guard.lowering.clear();
+    drop(guard);
+    // ordering: advisory fast-path hint; the cleared maps are behind
+    // the lock.
+    STATE.store(STATE_EMPTY, Ordering::Relaxed);
+}
+
+/// Soft measurement budget per tuned key (`CCT_TUNE_BUDGET_MS`,
+/// default 250 ms): bounds how many timed reps each candidate gets.
+fn budget_seconds() -> f64 {
+    if let Ok(v) = std::env::var("CCT_TUNE_BUDGET_MS") {
+        if let Ok(ms) = v.trim().parse::<f64>() {
+            if ms > 0.0 {
+                return ms / 1000.0;
+            }
+        }
+    }
+    0.25
+}
+
+/// Candidate block sizes. Every entry fits inside the default
+/// [`BlockSizes`] packing-arena footprint (asserted in tests), so a
+/// tuned strategy can never make a warmed arena regrow — the pool
+/// workers' planned-once guarantee survives tuning.
+const BLOCK_CANDIDATES: [BlockSizes; 5] = [
+    BlockSizes { mc: 128, kc: 384, nc: 4096 }, // the analytic default
+    BlockSizes { mc: 64, kc: 384, nc: 4096 },  // smaller A panel (L2-light)
+    BlockSizes { mc: 128, kc: 192, nc: 4096 }, // shallow K panels
+    BlockSizes { mc: 256, kc: 192, nc: 4096 }, // tall A panel, shallow K
+    BlockSizes { mc: 64, kc: 768, nc: 2048 },  // deep K, narrow N (thin shapes)
+];
+
+/// Whether a strategy's packing needs fit the default-arena capacity
+/// (the validity gate for persisted cache files).
+fn strategy_fits_arena(bs: BlockSizes) -> bool {
+    let d = BlockSizes::default();
+    let a_need = bs.mc.div_ceil(MR) * MR * bs.kc;
+    let b_need = bs.kc * bs.nc.div_ceil(NR) * NR;
+    let a_cap = d.mc.div_ceil(MR) * MR * d.kc;
+    let b_cap = d.kc * d.nc.div_ceil(NR) * NR;
+    bs.mc > 0 && bs.kc > 0 && bs.nc >= NR && a_need <= a_cap && b_need <= b_cap
+}
+
+fn candidate_strategies(threads: usize) -> Vec<GemmStrategy> {
+    let kernels: &[KernelChoice] =
+        if avx512_available() { &[KernelChoice::Auto, KernelChoice::Portable] } else { &[KernelChoice::Auto] };
+    let pools: &[bool] = if threads > 1 { &[true, false] } else { &[false] };
+    let default = GemmStrategy::default_for(threads);
+    let mut out = vec![default];
+    for &bs in &BLOCK_CANDIDATES {
+        for &kernel in kernels {
+            for &use_pool in pools {
+                let s = GemmStrategy { bs, kernel, use_pool };
+                if s != default {
+                    out.push(s);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Execute one strategy (the same code paths [`crate::gemm::sgemm`]
+/// dispatches tuned calls through).
+fn run_strategy(s: &GemmStrategy, threads: usize, dims: GemmDims, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if s.use_pool && threads > 1 {
+        pool::sgemm_pooled_with(Trans::N, Trans::N, dims, 1.0, a, b, 0.0, c, threads, s.bs, s.kernel);
+    } else {
+        gemm_blocked_with(Trans::N, Trans::N, dims, 1.0, a, b, 0.0, c, s.bs, s.kernel);
+    }
+}
+
+/// Measure the candidate strategies for `(dims, threads)`, cache the
+/// winner, and return the [`Decision`]. Returns the cached decision
+/// without re-measuring unless the mode is [`TuneMode::Force`].
+/// **Plan/prewarm-time only**: this allocates scratch operands and
+/// reads the clock.
+///
+/// Problems at or below the naive-dispatch threshold (`m·n·k ≤ 512`)
+/// and degenerate shapes return the default strategy uncached — the
+/// dispatcher never routes them through a tuned strategy.
+///
+/// # Examples
+///
+/// ```
+/// use cct::gemm::{tune, GemmDims};
+///
+/// tune::set_mode(tune::TuneMode::On);
+/// let dims = GemmDims { m: 64, n: 48, k: 32 };
+/// let first = tune::tune_gemm(dims, 1);
+/// // The decision is cached: tuning again reuses it, and the
+/// // dispatcher can see it.
+/// let again = tune::tune_gemm(dims, 1);
+/// assert_eq!(first.strategy, again.strategy);
+/// assert!(tune::lookup(dims, 1).is_some());
+/// // Ties favor the analytic default, so the winner never measured
+/// // slower than it.
+/// assert!(first.seconds <= first.default_seconds);
+/// ```
+pub fn tune_gemm(dims: GemmDims, threads: usize) -> Decision {
+    let key = TuneKey::new(dims, threads);
+    let default = GemmStrategy::default_for(key.threads);
+    let GemmDims { m, n, k } = dims;
+    if m == 0 || n == 0 || k == 0 || m * n * k <= 8 * 8 * 8 {
+        return Decision { strategy: default, seconds: 0.0, default_seconds: 0.0 };
+    }
+    if mode() != TuneMode::Force {
+        if let Some(d) = read_cache().gemm.get(&key) {
+            return *d;
+        }
+    }
+    // Deterministic scratch operands (keyed seed, no wall-clock
+    // entropy) so tuning itself is reproducible up to timer noise.
+    let seed = (m as u64) ^ ((k as u64) << 20) ^ ((n as u64) << 40) ^ ((key.threads as u64) << 56);
+    let mut rng = Pcg64::new(seed | 1);
+    let mut a = vec![0f32; m * k];
+    let mut b = vec![0f32; k * n];
+    rng.fill_uniform(&mut a, -1.0, 1.0);
+    rng.fill_uniform(&mut b, -1.0, 1.0);
+    let mut c = vec![0f32; m * n];
+    // Plan before measuring: warm this thread's arena, and the pool if
+    // any pooled candidate will run.
+    warm_tls_arena();
+    if key.threads > 1 {
+        pool::prewarm();
+    }
+    let candidates = candidate_strategies(key.threads);
+    // Calibrate the rep count off one untimed + one timed default run
+    // so the whole key stays within the measurement budget.
+    run_strategy(&default, key.threads, dims, &a, &b, &mut c);
+    let t0 = Instant::now();
+    run_strategy(&default, key.threads, dims, &a, &b, &mut c);
+    let est = t0.elapsed().as_secs_f64();
+    let per_candidate = budget_seconds() / candidates.len() as f64;
+    let reps = if est > 0.0 { ((per_candidate / est) as usize).clamp(1, 5) } else { 3 };
+    let mut default_seconds = est;
+    let mut best = (default, f64::INFINITY);
+    for s in &candidates {
+        let mut t_min = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            run_strategy(s, key.threads, dims, &a, &b, &mut c);
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < t_min {
+                t_min = dt;
+            }
+        }
+        if *s == default {
+            // The default is measured first; strict `<` below means a
+            // challenger must beat it outright. Ties keep the analytic
+            // choice, so tuned dispatch never loses to it.
+            default_seconds = t_min.min(est);
+            best = (default, default_seconds);
+        } else if t_min < best.1 {
+            best = (*s, t_min);
+        }
+    }
+    let decision = Decision { strategy: best.0, seconds: best.1, default_seconds };
+    let mut guard = write_cache();
+    guard.gemm.insert(key, decision);
+    drop(guard);
+    // ordering: publish the fast-path hint after the insert; a racing
+    // reader that still sees EMPTY misses once (benign).
+    STATE.store(STATE_FILLED, Ordering::Relaxed);
+    autosave();
+    decision
+}
+
+/// Measure the admissible lowering strategies for one conv shape at a
+/// thread budget, record their times (see [`lowering_seconds`]), tune
+/// the Type-1 lowered GEMM as a side effect, and return the fastest
+/// type. **Plan/prewarm-time only** — allocates tensors and reads the
+/// clock. Padded/strided shapes measure Type 1 alone (the only
+/// admissible blocking).
+pub fn tune_conv(shape: &ConvShape, threads: usize) -> LoweringType {
+    let threads = threads.max(1);
+    // The Type-1 lowered GEMM is the multiply every conv dispatch
+    // actually runs; tune it first so the conv measurements below (and
+    // later real forwards) use the tuned strategy.
+    let ms = shape.m();
+    let g = GemmDims { m: shape.b * ms * ms, n: shape.o, k: shape.k * shape.k * shape.d };
+    let _ = tune_gemm(g, threads);
+    let admissible: &[LoweringType] =
+        if shape.supports_all_lowerings() { &LoweringType::ALL } else { &[LoweringType::Type1] };
+    let seed = (shape.n as u64) ^ ((shape.d as u64) << 16) ^ ((shape.o as u64) << 32) ^ ((shape.b as u64) << 48);
+    let mut rng = Pcg64::new(seed | 1);
+    let data = Tensor::randn(shape.input_shape(), 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(shape.weight_shape(), 0.0, 1.0, &mut rng);
+    let mut best = (LoweringType::Type1, f64::INFINITY);
+    for &ty in admissible {
+        // One untimed warm run, then min-of-2.
+        let _ = conv_forward(ty, shape, &data, &w, threads);
+        let mut t_min = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            let out = conv_forward(ty, shape, &data, &w, threads);
+            let dt = t0.elapsed().as_secs_f64();
+            drop(out);
+            if dt < t_min {
+                t_min = dt;
+            }
+        }
+        record_lowering_seconds(shape, ty, threads, t_min);
+        // Strict `<`: paper-order iteration means ties keep Type 1.
+        if t_min < best.1 {
+            best = (ty, t_min);
+        }
+    }
+    autosave();
+    best.0
+}
+
+/// Measure and cache decisions for one layer hint (the plan-time entry
+/// point `net::Workspace` drives).
+pub fn tune_hint(hint: &TuneHint, threads: usize) {
+    match hint {
+        TuneHint::Gemm(d) => {
+            let _ = tune_gemm(*d, threads);
+        }
+        TuneHint::Conv(s) => {
+            let _ = tune_conv(s, threads);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON persistence (dependency-free, own format)
+// ---------------------------------------------------------------------
+
+fn kernel_name(k: KernelChoice) -> &'static str {
+    match k {
+        KernelChoice::Auto => "auto",
+        KernelChoice::Avx512 => "avx512",
+        KernelChoice::Portable => "portable",
+    }
+}
+
+fn parse_kernel(s: &str) -> KernelChoice {
+    match s {
+        "avx512" => KernelChoice::Avx512,
+        "portable" => KernelChoice::Portable,
+        _ => KernelChoice::Auto,
+    }
+}
+
+fn parse_ty(s: &str) -> Option<LoweringType> {
+    match s {
+        "type1" => Some(LoweringType::Type1),
+        "type2" => Some(LoweringType::Type2),
+        "type3" => Some(LoweringType::Type3),
+        _ => None,
+    }
+}
+
+/// Render the cache as the JSON document `save_to` writes (entries
+/// sorted for stable diffs; see `docs/TUNING.md` for the format).
+fn render_json(c: &Cache) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"gemm\": [");
+    let mut gemm: Vec<_> = c.gemm.iter().collect();
+    gemm.sort_by_key(|(k, _)| (k.m, k.k, k.n, k.threads));
+    for (i, (k, d)) in gemm.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(
+            s,
+            "{sep}\n    {{\"m\":{},\"k\":{},\"n\":{},\"threads\":{},\"mc\":{},\"kc\":{},\"nc\":{},\
+             \"kernel\":\"{}\",\"pool\":{},\"seconds\":{},\"default_seconds\":{}}}",
+            k.m,
+            k.k,
+            k.n,
+            k.threads,
+            d.strategy.bs.mc,
+            d.strategy.bs.kc,
+            d.strategy.bs.nc,
+            kernel_name(d.strategy.kernel),
+            d.strategy.use_pool,
+            d.seconds,
+            d.default_seconds
+        );
+    }
+    s.push_str("\n  ],\n  \"lowering\": [");
+    let mut low: Vec<_> = c.lowering.iter().collect();
+    low.sort_by_key(|(k, _)| (k.shape.n, k.shape.k, k.shape.d, k.shape.o, k.shape.b, k.threads, format!("{}", k.ty)));
+    for (i, (k, secs)) in low.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(
+            s,
+            "{sep}\n    {{\"n\":{},\"k\":{},\"d\":{},\"o\":{},\"b\":{},\"pad\":{},\"stride\":{},\
+             \"threads\":{},\"ty\":\"{}\",\"seconds\":{}}}",
+            k.shape.n, k.shape.k, k.shape.d, k.shape.o, k.shape.b, k.shape.pad, k.shape.stride, k.threads, k.ty, secs
+        );
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
+/// The `[...]` body following `"key":` in `text` (empty on absence —
+/// entry objects are flat, so the first `]` closes the section).
+fn section<'a>(text: &'a str, key: &str) -> &'a str {
+    let Some(kpos) = text.find(key) else { return "" };
+    let rest = &text[kpos + key.len()..];
+    let Some(open) = rest.find('[') else { return "" };
+    let rest = &rest[open + 1..];
+    match rest.find(']') {
+        Some(close) => &rest[..close],
+        None => "",
+    }
+}
+
+/// The raw `"field":value` text of one flat JSON object body.
+fn field<'a>(obj: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\":");
+    let start = obj.find(&pat)? + pat.len();
+    let rest = obj[start..].trim_start();
+    let end = rest.find(',').unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+fn field_usize(obj: &str, name: &str) -> Option<usize> {
+    field(obj, name)?.parse().ok()
+}
+
+fn field_f64(obj: &str, name: &str) -> Option<f64> {
+    field(obj, name)?.parse().ok()
+}
+
+fn field_str<'a>(obj: &'a str, name: &str) -> Option<&'a str> {
+    Some(field(obj, name)?.trim_matches('"'))
+}
+
+/// Parse a persisted document into `c`, skipping malformed entries and
+/// any strategy the planned arenas could not run. Returns entries
+/// loaded.
+fn load_into(c: &mut Cache, text: &str) -> usize {
+    let mut n = 0usize;
+    for piece in section(text, "\"gemm\"").split('}') {
+        let Some(open) = piece.find('{') else { continue };
+        let obj = &piece[open + 1..];
+        let parsed = (|| {
+            let key = TuneKey {
+                m: field_usize(obj, "m")?,
+                k: field_usize(obj, "k")?,
+                n: field_usize(obj, "n")?,
+                threads: field_usize(obj, "threads")?.max(1),
+            };
+            let bs = BlockSizes {
+                mc: field_usize(obj, "mc")?,
+                kc: field_usize(obj, "kc")?,
+                nc: field_usize(obj, "nc")?,
+            };
+            if !strategy_fits_arena(bs) {
+                return None;
+            }
+            let strategy = GemmStrategy {
+                bs,
+                kernel: parse_kernel(field_str(obj, "kernel")?),
+                use_pool: field(obj, "pool")? == "true",
+            };
+            let seconds = field_f64(obj, "seconds")?;
+            let default_seconds = field_f64(obj, "default_seconds")?;
+            Some((key, Decision { strategy, seconds, default_seconds }))
+        })();
+        if let Some((key, d)) = parsed {
+            c.gemm.insert(key, d);
+            n += 1;
+        }
+    }
+    for piece in section(text, "\"lowering\"").split('}') {
+        let Some(open) = piece.find('{') else { continue };
+        let obj = &piece[open + 1..];
+        let parsed = (|| {
+            let shape = ConvShape {
+                n: field_usize(obj, "n")?,
+                k: field_usize(obj, "k")?,
+                d: field_usize(obj, "d")?,
+                o: field_usize(obj, "o")?,
+                b: field_usize(obj, "b")?,
+                pad: field_usize(obj, "pad")?,
+                stride: field_usize(obj, "stride")?,
+            };
+            let ty = parse_ty(field_str(obj, "ty")?)?;
+            let threads = field_usize(obj, "threads")?.max(1);
+            let seconds = field_f64(obj, "seconds")?;
+            Some((LowerKey { shape, ty, threads }, seconds))
+        })();
+        if let Some((key, secs)) = parsed {
+            c.lowering.insert(key, secs);
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Write the whole cache to `path` as JSON (the `CCT_TUNE_CACHE`
+/// format; entry order is sorted, so files diff cleanly).
+pub fn save_to(path: &str) -> std::io::Result<()> {
+    let text = render_json(&read_cache());
+    std::fs::write(path, text)
+}
+
+/// Merge a persisted cache file into the process cache. Malformed
+/// entries and strategies outside the planned-arena footprint are
+/// skipped; a missing file is an error. Returns entries loaded.
+pub fn load_from(path: &str) -> std::io::Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let mut guard = write_cache();
+    let n = load_into(&mut guard, &text);
+    let filled = !guard.gemm.is_empty() || !guard.lowering.is_empty();
+    drop(guard);
+    if filled {
+        // ordering: advisory fast-path hint, published after the
+        // inserts; the RwLock carries the data.
+        STATE.store(STATE_FILLED, Ordering::Relaxed);
+    }
+    Ok(n)
+}
+
+/// Rewrite `CCT_TUNE_CACHE` (if set) after a tuning call — persistence
+/// is best-effort and never fails the tuning path.
+fn autosave() {
+    if let Ok(path) = std::env::var("CCT_TUNE_CACHE") {
+        if !path.is_empty() {
+            let _ = save_to(&path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{gemm_naive, sgemm};
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(parse_mode("off"), TuneMode::Off);
+        assert_eq!(parse_mode("0"), TuneMode::Off);
+        assert_eq!(parse_mode(" FALSE "), TuneMode::Off);
+        assert_eq!(parse_mode("no"), TuneMode::Off);
+        assert_eq!(parse_mode("force"), TuneMode::Force);
+        assert_eq!(parse_mode("on"), TuneMode::On);
+        assert_eq!(parse_mode("anything"), TuneMode::On);
+    }
+
+    #[test]
+    fn candidates_fit_planned_arenas() {
+        for s in candidate_strategies(8) {
+            assert!(strategy_fits_arena(s.bs), "{:?} exceeds the default arena footprint", s.bs);
+        }
+        assert!(!strategy_fits_arena(BlockSizes { mc: 1024, kc: 1024, nc: 8192 }));
+        assert!(!strategy_fits_arena(BlockSizes { mc: 0, kc: 384, nc: 4096 }));
+    }
+
+    /// Tuning a small shape caches a decision whose strategy `sgemm`
+    /// then dispatches — and the result stays within tolerance of the
+    /// naive kernel (Miri-shrunk: single-threaded, inline-only).
+    #[test]
+    fn tuned_dispatch_matches_naive() {
+        let dims = if cfg!(miri) { GemmDims { m: 10, n: 9, k: 8 } } else { GemmDims { m: 34, n: 21, k: 18 } };
+        let d = tune_gemm(dims, 1);
+        assert!(!d.strategy.use_pool, "threads=1 must never pick the pool");
+        assert!(d.seconds <= d.default_seconds, "winner measured slower than the default");
+        assert_eq!(lookup(dims, 1), Some(d.strategy), "decision not visible to dispatch");
+        let mut rng = Pcg64::new(42);
+        let mut a = vec![0f32; dims.m * dims.k];
+        let mut b = vec![0f32; dims.k * dims.n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let mut want = vec![0f32; dims.m * dims.n];
+        let mut got = vec![0f32; dims.m * dims.n];
+        gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut want);
+        sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut got, 1);
+        for (x, y) in want.iter().zip(got.iter()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    /// Repeated dispatch of a tuned key is bitwise stable (the fixed
+    /// cached strategy is deterministic call-to-call).
+    #[test]
+    fn tuned_dispatch_is_bitwise_stable() {
+        let dims = if cfg!(miri) { GemmDims { m: 12, n: 11, k: 10 } } else { GemmDims { m: 27, n: 33, k: 19 } };
+        let _ = tune_gemm(dims, 1);
+        let mut rng = Pcg64::new(43);
+        let mut a = vec![0f32; dims.m * dims.k];
+        let mut b = vec![0f32; dims.k * dims.n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let mut c0 = vec![0f32; dims.m * dims.n];
+        let mut c1 = vec![0f32; dims.m * dims.n];
+        sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c0, 1);
+        sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut c1, 1);
+        for (x, y) in c0.iter().zip(c1.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// Shapes the dispatcher sends to the naive kernel are returned
+    /// uncached with the default strategy.
+    #[test]
+    fn tiny_and_degenerate_shapes_stay_uncached() {
+        for dims in [GemmDims { m: 2, n: 2, k: 2 }, GemmDims { m: 0, n: 8, k: 8 }, GemmDims { m: 8, n: 8, k: 0 }] {
+            let d = tune_gemm(dims, 1);
+            assert_eq!(d.strategy, GemmStrategy::default_for(1));
+            assert!(lookup(dims, 1).is_none(), "{dims:?} must not be cached");
+        }
+    }
+
+    /// render → parse round-trips every entry exactly (in memory; the
+    /// file-backed round trip lives in `rust/tests/gemm_tune.rs`).
+    #[test]
+    fn json_round_trip_in_memory() {
+        let mut c = Cache { gemm: HashMap::new(), lowering: HashMap::new() };
+        c.gemm.insert(
+            TuneKey { m: 100, k: 50, n: 60, threads: 2 },
+            Decision {
+                strategy: GemmStrategy {
+                    bs: BlockSizes { mc: 64, kc: 384, nc: 4096 },
+                    kernel: KernelChoice::Portable,
+                    use_pool: true,
+                },
+                seconds: 0.5,
+                default_seconds: 0.625,
+            },
+        );
+        c.gemm.insert(
+            TuneKey { m: 8464, k: 2400, n: 256, threads: 8 },
+            Decision { strategy: GemmStrategy::default_for(8), seconds: 0.0625, default_seconds: 0.0625 },
+        );
+        c.lowering.insert(
+            LowerKey { shape: ConvShape::simple(13, 3, 8, 6, 4), ty: LoweringType::Type3, threads: 2 },
+            0.25,
+        );
+        let text = render_json(&c);
+        let mut back = Cache { gemm: HashMap::new(), lowering: HashMap::new() };
+        assert_eq!(load_into(&mut back, &text), 3);
+        for (k, d) in &c.gemm {
+            let got = back.gemm.get(k).expect("gemm entry lost");
+            assert_eq!(got.strategy, d.strategy);
+            assert_eq!(got.seconds, d.seconds);
+            assert_eq!(got.default_seconds, d.default_seconds);
+        }
+        for (k, s) in &c.lowering {
+            assert_eq!(back.lowering.get(k), Some(s), "lowering entry lost");
+        }
+    }
+
+    /// Oversized block sizes in a (possibly hand-edited) cache file are
+    /// rejected at load — a loaded strategy can never regrow arenas.
+    #[test]
+    fn load_rejects_oversized_strategies() {
+        let text = "{\"gemm\": [{\"m\":10,\"k\":10,\"n\":10,\"threads\":1,\"mc\":4096,\"kc\":4096,\
+                    \"nc\":65536,\"kernel\":\"auto\",\"pool\":false,\"seconds\":0.1,\"default_seconds\":0.1}],\
+                    \"lowering\": []}";
+        let mut c = Cache { gemm: HashMap::new(), lowering: HashMap::new() };
+        assert_eq!(load_into(&mut c, text), 0);
+        assert!(c.gemm.is_empty());
+    }
+
+    /// Malformed documents parse to zero entries instead of panicking.
+    #[test]
+    fn load_tolerates_garbage() {
+        let mut c = Cache { gemm: HashMap::new(), lowering: HashMap::new() };
+        for text in ["", "{}", "not json at all", "{\"gemm\": [", "{\"gemm\": [{\"m\":}], \"lowering\": []}"] {
+            let _ = load_into(&mut c, text);
+        }
+        assert!(c.gemm.is_empty() && c.lowering.is_empty());
+    }
+}

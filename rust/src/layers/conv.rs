@@ -91,7 +91,7 @@ impl ConvLayer {
         }
     }
 
-    fn pick_lowering(&self, shape: &ConvShape, policy: &LoweringPolicy) -> LoweringType {
+    fn pick_lowering(&self, shape: &ConvShape, policy: &LoweringPolicy, threads: usize) -> LoweringType {
         match policy {
             LoweringPolicy::Fixed(ty) => {
                 if shape.supports_all_lowerings() {
@@ -100,7 +100,10 @@ impl ConvLayer {
                     LoweringType::Type1
                 }
             }
-            LoweringPolicy::Auto(prof) => optimizer::choose_lowering(shape, prof),
+            // Measured-cost argmin when the autotuner recorded this
+            // shape at plan time; analytic cost model otherwise. Reads
+            // cached timings only — never measures on this path.
+            LoweringPolicy::Auto(prof) => optimizer::choose_lowering_tuned(shape, prof, threads),
         }
     }
 
@@ -227,6 +230,12 @@ impl Layer for ConvLayer {
         scratch
     }
 
+    fn tune_hints(&self, in_shape: &Shape) -> Vec<crate::gemm::tune::TuneHint> {
+        let (b, _, h, _) = in_shape.dims4();
+        // One per-group geometry covers all groups (they share it).
+        vec![crate::gemm::tune::TuneHint::Conv(self.group_shape(b, h))]
+    }
+
     fn forward_into(
         &mut self,
         bottom: &Tensor,
@@ -236,7 +245,7 @@ impl Layer for ConvLayer {
     ) {
         let (b, _, n, _) = bottom.shape().dims4();
         let gshape = self.group_shape(b, n);
-        let ty = self.pick_lowering(&gshape, &ctx.lowering);
+        let ty = self.pick_lowering(&gshape, &ctx.lowering, ctx.threads);
         let m = gshape.m();
         debug_assert_eq!(*top.shape(), self.out_shape(bottom.shape()));
 

@@ -54,6 +54,13 @@ impl Layer for FcLayer {
         Shape::from((b, self.out_features))
     }
 
+    fn tune_hints(&self, in_shape: &Shape) -> Vec<crate::gemm::tune::TuneHint> {
+        let (b, feats) = self.batch_features(in_shape);
+        // The forward GEMM; backward's transposed shapes share its k·n
+        // scale and benefit from the same warm cache entry family.
+        vec![crate::gemm::tune::TuneHint::Gemm(GemmDims { m: b, n: self.out_features, k: feats })]
+    }
+
     fn forward_into(
         &mut self,
         bottom: &Tensor,

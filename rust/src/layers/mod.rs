@@ -227,6 +227,16 @@ pub trait Layer: Send {
         LayerScratch::default()
     }
 
+    /// The GEMM / conv problems this layer will execute for `in_shape`,
+    /// as autotuner hints ([`crate::gemm::tune::TuneHint`]). Workspace
+    /// planning measures these at plan time (when the autotuner is
+    /// explicitly enabled — see [`crate::gemm::tune::auto_tune_enabled`])
+    /// so the serve/train hot path only ever *reads* tuned decisions.
+    /// Layers without a dominant GEMM return none.
+    fn tune_hints(&self, _in_shape: &Shape) -> Vec<crate::gemm::tune::TuneHint> {
+        Vec::new()
+    }
+
     /// Forward pass writing into `top` (preallocated to
     /// `out_shape(bottom)`); must not allocate tensors.
     fn forward_into(

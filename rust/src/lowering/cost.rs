@@ -100,6 +100,44 @@ impl CostModel {
         let m = s.m() as u64;
         2 * s.b as u64 * s.o as u64 * s.k as u64 * s.k as u64 * s.d as u64 * m * m
     }
+
+    /// Predicted *and* measured cost of one strategy: the analytic
+    /// Fig 6 estimate alongside the autotuner's wall-clock measurement
+    /// for the same `(shape, type, threads)` key, when one has been
+    /// recorded ([`crate::gemm::tune::tune_conv`]). This is the
+    /// calibration view the fig6 bench tabulates.
+    pub fn calibrated(
+        &self,
+        ty: LoweringType,
+        prof: &super::optimizer::MachineProfile,
+        threads: usize,
+    ) -> CalibratedCost {
+        CalibratedCost {
+            predicted_s: super::optimizer::estimate_seconds(&self.shape, ty, prof),
+            measured_s: crate::gemm::tune::lowering_seconds(&self.shape, ty, threads),
+        }
+    }
+}
+
+/// One strategy's analytic time estimate next to the autotuner's
+/// measurement of the same problem (absent until [`tune_conv`] has run
+/// for the shape — measurement only ever happens at plan/prewarm time).
+///
+/// [`tune_conv`]: crate::gemm::tune::tune_conv
+#[derive(Clone, Copy, Debug)]
+pub struct CalibratedCost {
+    /// Analytic estimate ([`super::optimizer::estimate_seconds`]).
+    pub predicted_s: f64,
+    /// Autotuner wall-clock measurement, if recorded.
+    pub measured_s: Option<f64>,
+}
+
+impl CalibratedCost {
+    /// measured / predicted, when a measurement exists: > 1 means the
+    /// analytic model is optimistic for this shape.
+    pub fn ratio(&self) -> Option<f64> {
+        self.measured_s.map(|m| m / self.predicted_s.max(1e-12))
+    }
 }
 
 #[cfg(test)]

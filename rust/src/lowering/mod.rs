@@ -35,8 +35,8 @@ pub mod type1;
 pub mod type2;
 pub mod type3;
 
-pub use cost::{CostModel, LoweringCost};
-pub use optimizer::{choose_lowering, MachineProfile};
+pub use cost::{CalibratedCost, CostModel, LoweringCost};
+pub use optimizer::{choose_lowering, choose_lowering_tuned, MachineProfile};
 
 use crate::tensor::Tensor;
 
@@ -67,7 +67,7 @@ impl std::fmt::Display for LoweringType {
 }
 
 /// Geometry of one convolution (square spatial dims, as in the paper).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ConvShape {
     /// Input spatial size (n×n).
     pub n: usize,

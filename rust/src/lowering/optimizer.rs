@@ -66,6 +66,38 @@ pub fn choose_lowering(shape: &ConvShape, prof: &MachineProfile) -> LoweringType
         .unwrap()
 }
 
+/// Measured-cost argmin: like [`choose_lowering`], but prefers the
+/// autotuner's wall-clock measurements ([`crate::gemm::tune`]) over the
+/// analytic estimate. Falls back to the analytic argmin unless *every*
+/// admissible strategy for this `(shape, threads)` key has been
+/// measured — a partial measurement set would bias the comparison
+/// toward whatever happened to be tuned. Never consults the clock
+/// itself, so it is safe on the serve/train hot path.
+pub fn choose_lowering_tuned(shape: &ConvShape, prof: &MachineProfile, threads: usize) -> LoweringType {
+    if !shape.supports_all_lowerings() {
+        return LoweringType::Type1;
+    }
+    let mut best: Option<(LoweringType, f64)> = None;
+    for ty in LoweringType::ALL {
+        let Some(s) = crate::gemm::tune::lowering_seconds(shape, ty, threads) else {
+            return choose_lowering(shape, prof);
+        };
+        let better = match best {
+            None => true,
+            // Strict `<` so earlier (paper-order, Type 1 first) entries
+            // win ties — the analytic-friendly default.
+            Some((_, b)) => s < b,
+        };
+        if better {
+            best = Some((ty, s));
+        }
+    }
+    match best {
+        Some((ty, _)) => ty,
+        None => LoweringType::Type1,
+    }
+}
+
 /// The paper's single-ratio heuristic: pick Type 3 when
 /// d/o exceeds `threshold`, Type 1 otherwise. The paper observes the
 /// crossover where the lowered-data savings (k²) outweigh the GEMM

@@ -329,7 +329,17 @@ impl Net {
         let mut bound = Vec::with_capacity(self.layers.len() + 1);
         bound.push(0);
         let mut scratch = Vec::with_capacity(self.layers.len());
+        // Plan-time autotuning: when the autotuner is explicitly
+        // enabled (CCT_TUNE=on/force or tune::set_mode), measure each
+        // layer's GEMM/conv problems now so steady-state steps only
+        // *read* tuned decisions. A no-op in a default environment.
+        let tune_at_plan = crate::gemm::tune::auto_tune_enabled();
         for l in &self.layers {
+            if tune_at_plan {
+                for hint in l.tune_hints(&cur) {
+                    crate::gemm::tune::tune_hint(&hint, crate::gemm::pool::default_threads());
+                }
+            }
             scratch.push(l.plan_scratch(&cur));
             let out = l.out_shape(&cur);
             if l.in_place() {

@@ -1,0 +1,149 @@
+//! Integration tests for the shape-keyed GEMM autotuner (PR 10):
+//! numeric parity of tuned vs untuned dispatch, cache persistence
+//! round-trips, and `CCT_TUNE=off` determinism.
+//!
+//! These tests flip the process-global tune mode, which the lib's unit
+//! tests never do — that is why they live in their own test binary
+//! (own process), serialized through a local mutex.
+
+use cct::gemm::{gemm_blocked, gemm_naive, sgemm, tune, BlockSizes, GemmDims, Trans};
+use cct::rng::Pcg64;
+use std::sync::{Mutex, PoisonError};
+
+/// Serializes tests: each one mutates the global tune mode and cache.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn rand_operands(dims: GemmDims, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(seed);
+    let mut a = vec![0f32; dims.m * dims.k];
+    let mut b = vec![0f32; dims.k * dims.n];
+    rng.fill_uniform(&mut a, -1.0, 1.0);
+    rng.fill_uniform(&mut b, -1.0, 1.0);
+    (a, b)
+}
+
+/// Shapes chosen to stress every edge path: prime dims (all blocking
+/// remainders non-trivial), a single-row problem, a single-column
+/// problem.
+const AWKWARD: [GemmDims; 3] = [
+    GemmDims { m: 37, n: 29, k: 41 },
+    GemmDims { m: 1, n: 257, k: 31 },
+    GemmDims { m: 127, n: 1, k: 64 },
+];
+
+#[test]
+fn tuned_matches_untuned_on_awkward_shapes() {
+    let _g = guard();
+    tune::set_mode(tune::TuneMode::On);
+    for (i, &dims) in AWKWARD.iter().enumerate() {
+        let (a, b) = rand_operands(dims, 900 + i as u64);
+        // Untuned reference (mode off → analytic default path).
+        tune::set_mode(tune::TuneMode::Off);
+        let mut want = vec![0.25f32; dims.m * dims.n];
+        sgemm(Trans::N, Trans::N, dims, 1.1, &a, &b, 0.4, &mut want, 1);
+        // Tune, then dispatch through the cached decision.
+        tune::set_mode(tune::TuneMode::On);
+        let d = tune::tune_gemm(dims, 1);
+        assert!(d.seconds <= d.default_seconds, "{dims:?}: winner slower than default");
+        let mut got = vec![0.25f32; dims.m * dims.n];
+        sgemm(Trans::N, Trans::N, dims, 1.1, &a, &b, 0.4, &mut got, 1);
+        for (x, y) in want.iter().zip(got.iter()) {
+            assert!((x - y).abs() < 1e-3, "{dims:?}: {x} vs {y}");
+        }
+        // A fixed cached strategy is bitwise deterministic call-to-call.
+        let mut again = vec![0.25f32; dims.m * dims.n];
+        sgemm(Trans::N, Trans::N, dims, 1.1, &a, &b, 0.4, &mut again, 1);
+        for (x, y) in got.iter().zip(again.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{dims:?}: tuned dispatch not reproducible");
+        }
+    }
+}
+
+#[test]
+fn degenerate_dims_quick_return_under_tuning() {
+    let _g = guard();
+    tune::set_mode(tune::TuneMode::On);
+    for &(m, n, k) in &[(0usize, 8usize, 8usize), (8, 0, 8), (8, 8, 0)] {
+        let dims = GemmDims { m, n, k };
+        let _ = tune::tune_gemm(dims, 1); // must not panic or cache
+        assert!(tune::lookup(dims, 1).is_none());
+        let mut c = vec![7f32; m * n];
+        sgemm(Trans::N, Trans::N, dims, 1.0, &[], &[], 1.0, &mut c, 1);
+        assert!(c.iter().all(|&x| x == 7.0), "({m},{n},{k}) touched C");
+    }
+}
+
+#[test]
+fn cache_file_round_trips_identical_decisions() {
+    let _g = guard();
+    tune::set_mode(tune::TuneMode::On);
+    let shapes = [GemmDims { m: 53, n: 37, k: 23 }, GemmDims { m: 19, n: 71, k: 43 }];
+    let before: Vec<_> = shapes
+        .iter()
+        .map(|&d| (d, tune::tune_gemm(d, 1).strategy))
+        .collect();
+    let path = std::env::temp_dir().join("cct_tune_cache_roundtrip.json");
+    let path = path.to_str().expect("temp path is utf-8");
+    tune::save_to(path).expect("cache file written");
+    tune::clear();
+    for &(d, _) in &before {
+        assert!(tune::lookup(d, 1).is_none(), "clear() left {d:?} cached");
+    }
+    let loaded = tune::load_from(path).expect("cache file reloads");
+    assert!(loaded >= shapes.len(), "expected ≥ {} entries, loaded {loaded}", shapes.len());
+    for (d, strategy) in before {
+        assert_eq!(tune::lookup(d, 1), Some(strategy), "{d:?}: decision changed across the round trip");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn off_mode_is_bitwise_identical_to_untuned_default() {
+    let _g = guard();
+    tune::set_mode(tune::TuneMode::On);
+    // Ensure a cached decision exists so Off actually has something to
+    // ignore.
+    let dims = GemmDims { m: 61, n: 47, k: 29 };
+    let _ = tune::tune_gemm(dims, 1);
+    tune::set_mode(tune::TuneMode::Off);
+    let (a, b) = rand_operands(dims, 1234);
+    let mut via_sgemm = vec![0f32; dims.m * dims.n];
+    sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut via_sgemm, 1);
+    let mut via_blocked = vec![0f32; dims.m * dims.n];
+    gemm_blocked(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut via_blocked, BlockSizes::default());
+    for (x, y) in via_sgemm.iter().zip(via_blocked.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "CCT_TUNE=off must run the analytic default exactly");
+    }
+    tune::set_mode(tune::TuneMode::On);
+}
+
+#[test]
+// Dispatches to the process-wide pool, whose workers outlive the
+// harness — a thread leak under Miri.
+#[cfg_attr(miri, ignore)]
+fn threaded_tuned_dispatch_matches_naive() {
+    let _g = guard();
+    tune::set_mode(tune::TuneMode::On);
+    let dims = GemmDims { m: 131, n: 67, k: 73 };
+    let d = tune::tune_gemm(dims, 4);
+    assert!(d.seconds <= d.default_seconds);
+    assert_eq!(tune::lookup(dims, 4), Some(d.strategy));
+    let (a, b) = rand_operands(dims, 4321);
+    let mut want = vec![0f32; dims.m * dims.n];
+    gemm_naive(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut want);
+    let mut got = vec![0f32; dims.m * dims.n];
+    sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut got, 4);
+    for (x, y) in want.iter().zip(got.iter()) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+    // Bitwise stable across repeated tuned dispatches, pooled or not.
+    let mut again = vec![0f32; dims.m * dims.n];
+    sgemm(Trans::N, Trans::N, dims, 1.0, &a, &b, 0.0, &mut again, 4);
+    for (x, y) in got.iter().zip(again.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
